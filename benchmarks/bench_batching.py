@@ -1,0 +1,97 @@
+"""Paper §2.2.1 claim: cross-request batching "can boost throughput
+substantially, but it has to be managed carefully to avoid unduly
+hurting latency."
+
+Measured on a real JAX matmul servable (the accelerator stand-in):
+throughput (examples/s) and per-request latency with batching disabled
+vs. enabled at several max_batch_size settings, under 16 concurrent
+single-example clients.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.batching import BatchingOptions, BatchingSession, \
+    SharedBatchScheduler
+
+D = 256
+
+
+def make_model():
+    w1 = jnp.asarray(np.random.default_rng(0).standard_normal((D, 4 * D)),
+                     jnp.float32)
+    w2 = jnp.asarray(np.random.default_rng(1).standard_normal((4 * D, D)),
+                     jnp.float32)
+
+    @jax.jit
+    def fn(x):
+        return jnp.tanh(x @ w1) @ w2
+
+    # warm the compile cache for every bucket size
+    for b in (1, 2, 4, 8, 16, 32):
+        fn(jnp.zeros((b, D))).block_until_ready()
+    return fn
+
+
+def drive(run_one, n_clients=16, n_per_client=40):
+    lat = []
+    lock = threading.Lock()
+
+    def client():
+        rng = np.random.default_rng(threading.get_ident() % 2**31)
+        for _ in range(n_per_client):
+            x = rng.standard_normal((1, D)).astype(np.float32)
+            t0 = time.perf_counter()
+            run_one(x)
+            dt = time.perf_counter() - t0
+            with lock:
+                lat.append(dt)
+
+    ts = [threading.Thread(target=client) for _ in range(n_clients)]
+    t0 = time.perf_counter()
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    wall = time.perf_counter() - t0
+    total = n_clients * n_per_client
+    lat = np.asarray(lat) * 1e3
+    return total / wall, float(np.percentile(lat, 50)), \
+        float(np.percentile(lat, 99))
+
+
+def main(report):
+    fn = make_model()
+
+    # unbatched: every request executes alone (still thread-safe)
+    gil = threading.Lock()
+
+    def unbatched(x):
+        with gil:
+            np.asarray(fn(jnp.asarray(x)))
+    qps0, p50_0, p99_0 = drive(unbatched)
+    report("batching_off_qps", 1e6 / qps0,
+           f"{qps0:,.0f} ex/s p50={p50_0:.2f}ms p99={p99_0:.2f}ms")
+
+    for max_bs in (8, 32):
+        sched = SharedBatchScheduler()
+        sched.start()
+        sess = BatchingSession(
+            f"m-bs{max_bs}", lambda x: fn(jnp.asarray(x)), sched,
+            BatchingOptions(max_batch_size=max_bs,
+                            batch_timeout_s=0.002))
+        qps, p50, p99 = drive(lambda x: sess.run(x))
+        stats = sched.stats()[f"m-bs{max_bs}"]
+        merged = stats["enqueued"] / max(stats["batches"], 1)
+        report(f"batching_bs{max_bs}_qps", 1e6 / qps,
+               f"{qps:,.0f} ex/s p50={p50:.2f}ms p99={p99:.2f}ms "
+               f"avg_merge={merged:.1f} speedup={qps/qps0:.2f}x")
+        sess.close()
+        sched.stop()
+
+
+if __name__ == "__main__":
+    main(lambda *a: print(*a))

@@ -1,0 +1,128 @@
+"""Paper §3.1 (TFS²): Controller bin-packing quality and Router hedged-
+request tail-latency reduction [21].
+
+Packing: place a fleet of models with varied RAM estimates onto jobs;
+report placement success and capacity utilization spread.
+
+Hedging: replicas inject a heavy latency tail (base 1ms, 50ms tail at
+10%); compare client p99 with hedging off vs. on.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (CallableLoader, RawDictServable, ResourceEstimate,
+                        ServableId)
+from repro.hosted import (AdmissionError, Autoscaler, AutoscalerConfig,
+                          Controller, LatencyModel, Router, ServingJob,
+                          Synchronizer, TransactionalStore)
+
+
+def loader_factory(name, version, ref, ram):
+    sid = ServableId(name, version)
+    return CallableLoader(
+        sid, lambda: RawDictServable(sid, {"v": version}, ram_bytes=ram),
+        ResourceEstimate(ram_bytes=ram))
+
+
+def bench_binpack(report):
+    rng = np.random.default_rng(0)
+    jobs = {f"job-{i}": ServingJob(f"job-{i}", capacity_bytes=10_000)
+            for i in range(8)}
+    store = TransactionalStore()
+    ctrl = Controller(store, {j: 10_000 for j in jobs})
+    placed = rejected = 0
+    sizes = rng.integers(200, 2_000, 60)
+    t0 = time.perf_counter()
+    for i, ram in enumerate(sizes):
+        try:
+            ctrl.add_model(f"m{i}", int(ram))
+            placed += 1
+        except AdmissionError:
+            rejected += 1
+    dt = time.perf_counter() - t0
+    reserved = [store.get(f"jobs/job-{i}")["reserved"] for i in range(8)]
+    util = np.asarray(reserved) / 10_000
+    report("binpack_place_60_models", dt / 60 * 1e6,
+           f"placed={placed} rejected={rejected} "
+           f"util mean={util.mean()*100:.0f}% "
+           f"spread={util.max()-util.min():.2f} "
+           f"txn_conflicts={store.conflicts}")
+    for j in jobs.values():
+        j.shutdown()
+
+
+def bench_hedging(report):
+    def latency_factory(i):
+        return LatencyModel(base_s=0.001, tail_s=0.05, tail_prob=0.10,
+                            seed=i)
+    jobs = {"job-a": ServingJob("job-a", 10_000,
+                                latency_factory=latency_factory,
+                                min_replicas=3)}
+    store = TransactionalStore()
+    ctrl = Controller(store, {"job-a": 10_000})
+    ctrl.add_model("m", 100)
+    sync = Synchronizer("dc", ctrl, jobs, loader_factory)
+    sync.sync_once()
+
+    # 10% tail probability: unhedged p95 sits in the 50ms tail; hedged
+    # requires BOTH replicas tailing (1%), so p95 collapses to
+    # hedge_delay + base. (p99 is exactly the double-tail boundary.)
+    for hedge, label in ((None, "off"), (0.004, "on")):
+        router = Router(sync, jobs, hedge_delay_s=hedge)
+        lat = []
+        for _ in range(1000):
+            t0 = time.perf_counter()
+            router.infer("m", "v", method="lookup")
+            lat.append(time.perf_counter() - t0)
+        lat = np.asarray(lat) * 1e3
+        p50, p95 = np.percentile(lat, 50), np.percentile(lat, 95)
+        extra = ""
+        if hedge is not None:
+            extra = (f" hedged={router.stats['hedged']}"
+                     f" wins={router.stats['hedge_wins']}")
+        report(f"hedging_{label}_p95", p95 * 1e3,
+               f"p50={p50:.1f}ms p95={p95:.1f}ms over 1000 reqs{extra}")
+        router.shutdown()
+    for j in jobs.values():
+        j.shutdown()
+
+
+def bench_autoscale(report):
+    jobs = {"job-a": ServingJob("job-a", 10_000, min_replicas=1,
+                                max_replicas=8)}
+    store = TransactionalStore()
+    ctrl = Controller(store, {"job-a": 10_000})
+    ctrl.add_model("m", 100)
+    sync = Synchronizer("dc", ctrl, jobs, loader_factory)
+    sync.sync_once()
+    router = Router(sync, jobs, hedge_delay_s=None)
+    scaler = Autoscaler(jobs, AutoscalerConfig(target_qps_per_replica=200))
+    # load burst
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < 0.5:
+        router.infer("m", "v", method="lookup")
+    scaler.tick()
+    n_burst = jobs["job-a"].num_replicas()
+    sync.sync_once()  # replicas must converge to serving the model
+    # idle
+    time.sleep(0.3)
+    scaler.tick()
+    n_idle = jobs["job-a"].num_replicas()
+    report("autoscale_replicas", n_burst,
+           f"burst->{n_burst} replicas, idle->{n_idle} (reactive scaling)")
+    router.shutdown()
+    for j in jobs.values():
+        j.shutdown()
+
+
+def main(report):
+    bench_binpack(report)
+    bench_hedging(report)
+    bench_autoscale(report)
+
+
+if __name__ == "__main__":
+    main(lambda *a: print(*a))

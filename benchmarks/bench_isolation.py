@@ -1,0 +1,141 @@
+"""Paper §2.1.2/§4 claim: model loads must not spike inference tail
+latency ("we have been able to rein in tail latency substantially while
+other models or versions are loading, compared to our initial naive
+implementation").
+
+Setup: clients hammer a loaded servable while other servables load
+continuously in the background. Two manager variants are compared:
+
+  * TFS (paper design): isolated load pool, RCU lookup, deferred free on
+    the manager thread.
+  * naive: a lock-coupled manager where lookups share one mutex with the
+    (slow) load path — the "naive implementation" strawman the paper
+    measured against.
+
+Report p50/p99/p999 inference latency with background loads, per design.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import (AspiredVersion, AspiredVersionsManager,
+                        CallableLoader, RawDictServable, ResourceEstimate,
+                        ServableId)
+
+
+class NaiveLockManager:
+    """Strawman: one big lock shared by lookups and loads."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._models = {}
+
+    def load(self, name, factory, load_time_s):
+        with self._lock:                       # load holds THE lock
+            time.sleep(load_time_s)
+            self._models[name] = factory()
+
+    def call(self, name, method, arg):
+        with self._lock:
+            return self._models[name].call(method, arg)
+
+
+def _stats(lat, stall_ms=5.0):
+    lat = np.asarray(lat) * 1e6
+    stalls = int(np.sum(lat > stall_ms * 1e3))
+    return (np.percentile(lat, 50), np.percentile(lat, 99),
+            float(lat.max()), stalls)
+
+
+def run_tfs(duration_s=3.0, load_time_s=0.05):
+    mgr = AspiredVersionsManager(num_load_threads=2)
+    sid = ServableId("hot", 1)
+    mgr.set_aspired_versions("hot", [AspiredVersion(
+        sid, CallableLoader(sid, lambda: RawDictServable(sid, {"v": 1}),
+                            ResourceEstimate(ram_bytes=10)))])
+    assert mgr.await_idle()
+    mgr.start(interval_s=0.01)
+
+    stop = threading.Event()
+
+    def churn():
+        v = 0
+        while not stop.is_set():
+            v += 1
+            sid2 = ServableId("cold", v)
+            def factory(sid2=sid2):
+                time.sleep(load_time_s)        # slow load on load pool
+                return RawDictServable(sid2, {"v": sid2.version})
+            mgr.set_aspired_versions("cold", [AspiredVersion(
+                sid2, CallableLoader(sid2, factory,
+                                     ResourceEstimate(ram_bytes=10)))])
+            time.sleep(load_time_s / 2)
+
+    churner = threading.Thread(target=churn, daemon=True)
+    churner.start()
+    lat = []
+    t_end = time.perf_counter() + duration_s
+    while time.perf_counter() < t_end:
+        t0 = time.perf_counter()
+        with mgr.get_servable_handle("hot") as s:
+            s.call("lookup", "v")
+        lat.append(time.perf_counter() - t0)
+    stop.set()
+    churner.join(timeout=2)
+    mgr.stop()
+    mgr.shutdown()
+    return _stats(lat)
+
+
+def run_naive(duration_s=3.0, load_time_s=0.05):
+    mgr = NaiveLockManager()
+    sid = ServableId("hot", 1)
+    mgr.load("hot", lambda: RawDictServable(sid, {"v": 1}), 0.0)
+    stop = threading.Event()
+
+    def churn():
+        v = 0
+        while not stop.is_set():
+            v += 1
+            sid2 = ServableId("cold", v)
+            mgr.load("cold",
+                     lambda sid2=sid2: RawDictServable(sid2, {"v": 1}),
+                     load_time_s)
+            time.sleep(load_time_s / 2)
+
+    churner = threading.Thread(target=churn, daemon=True)
+    churner.start()
+    lat = []
+    t_end = time.perf_counter() + duration_s
+    while time.perf_counter() < t_end:
+        t0 = time.perf_counter()
+        mgr.call("hot", "lookup", "v")
+        lat.append(time.perf_counter() - t0)
+    stop.set()
+    churner.join(timeout=2)
+    return _stats(lat)
+
+
+def main(report):
+    # Rare 50 ms lock-stalls vanish below p99 over millions of fast
+    # lookups — the honest tail metric is max latency + #stalls >5 ms
+    # (each stall is one inference request blocked behind a load).
+    p50, p99, pmax, pstalls = run_tfs()
+    report("isolation_tfs_max_us", pmax,
+           f"p50={p50:.1f}us p99={p99:.1f}us max={pmax/1e3:.2f}ms "
+           f"stalls>5ms={pstalls} (isolated load pool, RCU lookups)")
+    n50, n99, nmax, nstalls = run_naive()
+    report("isolation_naive_max_us", nmax,
+           f"p50={n50:.1f}us p99={n99:.1f}us max={nmax/1e3:.2f}ms "
+           f"stalls>5ms={nstalls} (lock-coupled strawman)")
+    report("isolation_stall_reduction", nstalls - pstalls,
+           f"{nstalls} naive stalls vs {pstalls} TFS stalls; "
+           f"max lat {nmax/max(pmax,1e-9):.0f}x worse when lookups "
+           "share the load lock")
+
+
+if __name__ == "__main__":
+    main(lambda *a: print(*a))

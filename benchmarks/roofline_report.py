@@ -1,0 +1,107 @@
+"""Assemble the roofline table (deliverable g) from dry-run JSONL records.
+
+Per (arch × shape) on the single-pod mesh: the three analytic roofline
+terms, the dominant bottleneck, MODEL_FLOPS/HLO ratio, HBM residency,
+and one-line bottleneck commentary. Markdown output for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def load(path: str) -> List[Dict]:
+    recs = []
+    seen = {}
+    for line in open(path):
+        r = json.loads(line)
+        seen[(r["arch"], r["shape"], r["mesh"])] = r  # last wins
+    return list(seen.values())
+
+
+MOVE_HINTS = {
+    "compute": ("more chips or lower-precision matmuls; compute term is "
+                "the floor — good"),
+    "memory": ("decode: raise batch (amortize param/cache streaming); "
+               "train: fewer remat re-touches / fused attention"),
+    "collective": ("overlap collectives with compute, shard-map a2a for "
+                   "MoE, avoid per-step FSDP param gathers"),
+}
+
+
+def table(recs: List[Dict], mesh: str = "single") -> str:
+    rows = ["| arch | shape | Tc (ms) | Tm (ms) | Tx (ms) | dominant | "
+            "useful/HLO | resid GiB | fits | note |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skip | — | — | — | {r['why'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR "
+                        f"{r['error'][:50]} |")
+            continue
+        useful = (r["an_model_flops_chip"] / r["an_flops_chip"]
+                  if r.get("an_flops_chip") else 0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['an_t_compute_s']*1e3:.2f} "
+            f"| {r['an_t_memory_s']*1e3:.2f} "
+            f"| {r['an_t_collective_s']*1e3:.2f} "
+            f"| **{r['dominant']}** "
+            f"| {useful:.2f} "
+            f"| {r['an_residency_bytes']/2**30:.1f} "
+            f"| {'Y' if r.get('fits_hbm_analytic') else 'N'} "
+            f"| {MOVE_HINTS[r['dominant']][:48]} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(recs: List[Dict]) -> List[Dict]:
+    """worst roofline fraction, most collective-bound, most
+    paper-representative (decode — the serving path)."""
+    ok = [r for r in recs if r["status"] == "ok" and r["mesh"] == "single"]
+
+    def frac(r):  # useful fraction of the dominant-term bound
+        tdom = max(r["an_t_compute_s"], r["an_t_memory_s"],
+                   r["an_t_collective_s"])
+        return r["an_model_flops_chip"] / 197e12 / tdom
+
+    worst = min(ok, key=frac)
+    coll = max(ok, key=lambda r: r["an_t_collective_s"] /
+               max(r["an_t_compute_s"], r["an_t_memory_s"], 1e-12))
+    decode = [r for r in ok if r["shape"] == "decode_32k"]
+    rep = max(decode, key=lambda r: r["an_t_collective_s"])
+    out, seen = [], set()
+    ranked = sorted(ok, key=lambda r: -r["an_t_collective_s"])
+    for r in (worst, coll, rep, *ranked):
+        key = (r["arch"], r["shape"])
+        if key not in seen:
+            seen.add(key)
+            out.append(r)
+        if len(out) == 3:
+            break
+    return out
+
+
+def main(report=None):
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        "results/dryrun_v2.jsonl"
+    recs = load(path)
+    print(table(recs))
+    print("\nHillclimb picks:")
+    for r in pick_hillclimb(recs):
+        print(f"  {r['arch']} × {r['shape']} (dom={r['dominant']})")
+    if report:
+        ok = [r for r in recs if r["status"] == "ok"]
+        report("dryrun_combos_ok", len(ok),
+               f"{len(ok)} compiled, "
+               f"{sum(r['status']=='skipped' for r in recs)} documented "
+               "skips")
+
+
+if __name__ == "__main__":
+    main()

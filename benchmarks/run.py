@@ -1,0 +1,39 @@
+"""Benchmark harness: one module per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV. Roofline terms (deliverable g)
+come from the dry-run JSONL via benchmarks/roofline_report.py.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    rows = []
+
+    def report(name, us_per_call, derived=""):
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+    from benchmarks import (bench_batching, bench_generation,
+                            bench_hosted, bench_isolation, bench_lookup,
+                            bench_serving_engine, bench_transitions)
+    modules = [bench_lookup, bench_isolation, bench_batching,
+               bench_transitions, bench_hosted, bench_serving_engine,
+               bench_generation]
+    failures = 0
+    for mod in modules:
+        try:
+            mod.main(report)
+        except Exception:
+            failures += 1
+            print(f"BENCH FAILURE in {mod.__name__}:", file=sys.stderr)
+            traceback.print_exc()
+    print(f"\n# {len(rows)} rows, {failures} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""End-to-end driver (deliverable b): TRAIN a model on the synthetic
+pipeline for a few hundred steps, emit checkpoints as numbered servable
+versions DURING training, and have a ModelServer pick each one up live —
+the full train->convey->serve loop TF-Serving §2.1 is designed around.
+
+Run:        PYTHONPATH=src python examples/train_then_serve.py
+Full-size:  PYTHONPATH=src python examples/train_then_serve.py --big
+            (--big trains a ~100M-param dense model; several hours on
+             CPU, minutes on one accelerator — same code path.)
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.launch.train import train_loop
+from repro.serving.server import ModelServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--big", action="store_true",
+                    help="~100M params (accelerator recommended)")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.big:
+        cfg = get_config("xlstm-125m")        # ~125M assigned arch
+        steps = args.steps or 300
+        bs, seq = 8, 512
+    else:
+        cfg = get_config("tfs-classifier", smoke=True).with_overrides(
+            num_layers=2, d_model=128, d_ff=256, vocab_size=512)
+        steps = args.steps or 150
+        bs, seq = 16, 64
+
+    base = tempfile.mkdtemp(prefix="tfs-e2e-")
+    print(f"training {cfg.name} ({cfg.param_counts()['total']/1e6:.1f}M "
+          f"params) for {steps} steps; emitting versions to {base}")
+    _, losses, info = train_loop(
+        cfg, steps=steps, batch_size=bs, seq_len=seq, out_dir=base,
+        servable_name="lm", emit_every=max(steps // 3, 1),
+        learning_rate=3e-3)
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"(uniform {info['uniform_nats']:.2f}, "
+          f"markov floor ~{info['structure_nats']:.2f})")
+    assert last < first * 0.7, "model failed to learn the synthetic LM"
+
+    server = ModelServer({"lm": os.path.join(base, "lm")},
+                         cfg_for=lambda n: cfg)
+    server.start_sync()
+    print("serving versions:", server.available_models())
+    prompt = np.random.randint(0, 64, (2, 32))
+    toks = server.generate("lm", tokens=prompt, max_new=16)
+    print("generated continuation:", toks[0])
+    # the trained model should keep generating inside the Markov alphabet
+    assert toks.max() < 64, "trained model left the data alphabet"
+    server.stop()
+    print("OK: trained, conveyed, served.")
+
+
+if __name__ == "__main__":
+    main()

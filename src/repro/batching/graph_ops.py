@@ -1,0 +1,61 @@
+"""In-graph Batch/Unbatch (paper §2.2.1, second wrapper).
+
+Paper: "special Batch and Unbatch ops that can be inserted into a
+TensorFlow graph around a set of regular ops... it can be used to batch
+just the GPU/TPU portion of a graph, batch the body of a sequence
+model's while-loop, or independently batch multiple subgraphs e.g. the
+encode and decode phases of a sequence-to-sequence model."
+
+JAX adaptation: a ``BatchedSection`` wraps one jit-compatible function
+``fn``. Per-request Python code calls ``section(x)`` wherever the
+Batch→ops→Unbatch sandwich would sit in the TF graph; concurrent calls
+across request threads are merged (concat along axis 0), executed once,
+and scattered back. Unlike BatchingSession — which batches a whole
+model — a request may pass through several sections (e.g. ``encode`` and
+``decode``), each batching independently, which is exactly the
+flexibility the paper claims for in-graph batching.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+from repro.batching.queue import BatchingOptions
+from repro.batching.scheduler import SharedBatchScheduler
+from repro.batching.session import BatchingSession
+
+
+class BatchedSection:
+    """``fn`` batched across concurrent request threads.
+
+    Implemented on the same core batching queue/scheduler primitives —
+    the paper's point that the core library is templated and reusable.
+    """
+
+    _counter = 0
+
+    def __init__(self, fn: Callable[[Any], Any],
+                 scheduler: SharedBatchScheduler,
+                 options: Optional[BatchingOptions] = None,
+                 name: Optional[str] = None):
+        if name is None:
+            BatchedSection._counter += 1
+            name = f"section-{fn.__name__}-{BatchedSection._counter}"
+        self._session = BatchingSession(name, fn, scheduler, options)
+
+    def __call__(self, inputs: Any, timeout_s: float = 30.0) -> Any:
+        return self._session.run(inputs, timeout_s)
+
+    def close(self) -> None:
+        self._session.close()
+
+
+def batch_section(scheduler: SharedBatchScheduler,
+                  options: Optional[BatchingOptions] = None):
+    """Decorator form::
+
+        @batch_section(shared_scheduler)
+        def decode_body(x): ...
+    """
+    def wrap(fn):
+        return BatchedSection(fn, scheduler, options)
+    return wrap

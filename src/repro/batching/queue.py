@@ -1,0 +1,173 @@
+"""Templated inter-request batching queues (paper §2.2.1).
+
+"TensorFlow-Serving comes with a core library of batching primitives that
+is templatized on the type of request being batched... supports multiple
+batching queues, to batch requests for multiple servables or versions
+separately, and schedule them in a round-robin fashion onto a single
+shared device."
+
+The queue is generic over the task payload; merging/executing is supplied
+by the owner (a BatchingSession for tensor requests, or anything else).
+
+TPU adaptation: merged batch sizes are padded up to a fixed bucket ladder
+(powers of two by default) so the merged computation hits a small set of
+compiled shapes instead of recompiling per batch size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Generic, List, Optional, Sequence, TypeVar
+
+T = TypeVar("T")
+
+
+def pow2_buckets(max_batch_size: int) -> List[int]:
+    out, b = [], 1
+    while b < max_batch_size:
+        out.append(b)
+        b *= 2
+    out.append(max_batch_size)
+    return out
+
+
+@dataclasses.dataclass
+class BatchingOptions:
+    max_batch_size: int = 32
+    # Max time the *oldest* task may wait before the batch is closed even
+    # if not full. The knob trading throughput against tail latency.
+    batch_timeout_s: float = 0.002
+    # Upper bound on open batches queued behind the scheduler; beyond it
+    # enqueue fails fast (load shedding) instead of growing unboundedly.
+    max_enqueued_batches: int = 64
+    # Pad merged batches up to a bucket (TPU shape-stability adaptation).
+    pad_to_buckets: bool = True
+
+    def buckets(self) -> List[int]:
+        return pow2_buckets(self.max_batch_size)
+
+    def bucket_for(self, n: int) -> int:
+        if not self.pad_to_buckets:
+            return n
+        for b in self.buckets():
+            if n <= b:
+                return b
+        return self.max_batch_size
+
+
+class QueueFullError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class BatchTask(Generic[T]):
+    """One enqueued request: payload + a future-like completion slot."""
+
+    payload: T
+    size: int                      # #examples this task contributes
+    enqueue_t: float = dataclasses.field(default_factory=time.monotonic)
+    _event: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    result: Any = None
+    error: Optional[BaseException] = None
+
+    def set_result(self, result: Any) -> None:
+        self.result = result
+        self._event.set()
+
+    def set_error(self, error: BaseException) -> None:
+        self.error = error
+        self._event.set()
+
+    def wait(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError("batched request timed out")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+
+@dataclasses.dataclass
+class Batch(Generic[T]):
+    tasks: List[BatchTask]
+    created_t: float
+
+    @property
+    def size(self) -> int:
+        return sum(t.size for t in self.tasks)
+
+    def age_s(self) -> float:
+        return time.monotonic() - self.created_t
+
+
+class BatchingQueue(Generic[T]):
+    """Accumulates tasks into batches for one (servable, version).
+
+    Thread-safe enqueue; the scheduler thread pops *closed* batches. A
+    batch closes when (a) full to ``max_batch_size``, or (b) its oldest
+    task exceeds ``batch_timeout_s``.
+    """
+
+    def __init__(self, name: str, options: BatchingOptions):
+        self.name = name
+        self.options = options
+        self._lock = threading.Lock()
+        self._open: Optional[Batch] = None
+        self._closed: deque = deque()
+        self.stats = {"enqueued": 0, "batches": 0, "shed": 0,
+                      "padded_examples": 0}
+
+    def enqueue(self, payload: T, size: int = 1) -> BatchTask:
+        if size > self.options.max_batch_size:
+            raise ValueError(
+                f"task size {size} > max_batch_size "
+                f"{self.options.max_batch_size}")
+        task = BatchTask(payload=payload, size=size)
+        with self._lock:
+            if len(self._closed) >= self.options.max_enqueued_batches:
+                self.stats["shed"] += 1
+                raise QueueFullError(self.name)
+            if (self._open is not None and
+                    self._open.size + size > self.options.max_batch_size):
+                self._closed.append(self._open)
+                self._open = None
+            if self._open is None:
+                self._open = Batch(tasks=[], created_t=time.monotonic())
+                self.stats["batches"] += 1
+            self._open.tasks.append(task)
+            self.stats["enqueued"] += 1
+            if self._open.size == self.options.max_batch_size:
+                self._closed.append(self._open)
+                self._open = None
+        return task
+
+    def _timeout_expired(self) -> bool:
+        return (self._open is not None and self._open.tasks and
+                self._open.age_s() >= self.options.batch_timeout_s)
+
+    def pop_ready_batch(self, *, force: bool = False) -> Optional[Batch]:
+        """Next closed batch; also closes the open batch on timeout or
+        ``force`` (used at shutdown / by the round-robin scheduler when
+        the device is idle anyway)."""
+        with self._lock:
+            if not self._closed and (force or self._timeout_expired()):
+                if self._open is not None and self._open.tasks:
+                    self._closed.append(self._open)
+                    self._open = None
+            if self._closed:
+                return self._closed.popleft()
+        return None
+
+    def has_work(self) -> bool:
+        with self._lock:
+            return bool(self._closed) or (
+                self._open is not None and bool(self._open.tasks))
+
+    def pending_tasks(self) -> int:
+        with self._lock:
+            n = sum(b.size for b in self._closed)
+            if self._open is not None:
+                n += self._open.size
+            return n

@@ -1,0 +1,154 @@
+"""SharedBatchScheduler: many queues, one device (paper §2.2.1).
+
+Round-robin across a *dynamic* set of BatchingQueues (added/removed as
+servable versions come and go), executing each popped batch on a single
+shared executor thread — the stand-in for "a single shared device e.g.
+GPU". Round-robin gives cross-model interleaving so one hot model cannot
+starve others (the paper's tail-latency protection across models).
+"""
+from __future__ import annotations
+
+import itertools
+import logging
+import threading
+from typing import Callable, Dict, Generic, Optional, TypeVar
+
+from repro.batching.queue import Batch, BatchingOptions, BatchingQueue
+
+log = logging.getLogger(__name__)
+T = TypeVar("T")
+
+# Executes one merged batch; must complete every task in the batch.
+BatchProcessor = Callable[[Batch], None]
+
+
+class SharedBatchScheduler(Generic[T]):
+    def __init__(self, *, num_device_threads: int = 1,
+                 idle_wait_s: float = 0.0005):
+        self._lock = threading.Lock()
+        self._queues: Dict[str, BatchingQueue] = {}
+        self._processors: Dict[str, BatchProcessor] = {}
+        self._rr: Optional[itertools.cycle] = None
+        self._rr_keys = ()
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        self._idle_wait_s = idle_wait_s
+        self._threads = [
+            threading.Thread(target=self._run, daemon=True,
+                             name=f"tfs-batch-device-{i}")
+            for i in range(num_device_threads)]
+        self._started = False
+
+    # -- dynamic queue management (versions come and go) -----------------
+    def add_queue(self, name: str, options: BatchingOptions,
+                  processor: BatchProcessor) -> BatchingQueue:
+        q = BatchingQueue(name, options)
+        with self._lock:
+            if name in self._queues:
+                raise KeyError(f"queue {name!r} exists")
+            self._queues[name] = q
+            self._processors[name] = processor
+            self._rebuild_rr()
+        return q
+
+    def remove_queue(self, name: str, *, drain: bool = True) -> None:
+        with self._lock:
+            q = self._queues.pop(name, None)
+            proc = self._processors.pop(name, None)
+            self._rebuild_rr()
+        if q is None:
+            return
+        if drain:
+            while True:
+                batch = q.pop_ready_batch(force=True)
+                if batch is None:
+                    break
+                self._process(q, proc, batch)
+
+    def _rebuild_rr(self) -> None:
+        self._rr_keys = tuple(self._queues)
+
+    # -- device loop ------------------------------------------------------
+    def start(self) -> None:
+        if not self._started:
+            self._started = True
+            for t in self._threads:
+                t.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            if t.is_alive():
+                t.join(timeout=5)
+
+    def _run(self) -> None:
+        rr_pos = 0
+        while not self._stop.is_set():
+            with self._lock:
+                keys = self._rr_keys
+            if not keys:
+                self._stop.wait(self._idle_wait_s)
+                continue
+            did_work = False
+            # One full round-robin sweep starting after the last-served
+            # queue: every queue gets a turn before any queue gets two.
+            n = len(keys)
+            for i in range(n):
+                key = keys[(rr_pos + i) % n]
+                with self._lock:
+                    q = self._queues.get(key)
+                    proc = self._processors.get(key)
+                if q is None:
+                    continue
+                batch = q.pop_ready_batch()
+                if batch is not None:
+                    self._process(q, proc, batch)
+                    rr_pos = (rr_pos + i + 1) % n
+                    did_work = True
+                    break
+            if not did_work:
+                # No closed batch anywhere. If the device is idle, run a
+                # partial batch rather than waiting out the timeout
+                # (latency optimization: idle device => no reason to wait),
+                # preferring the queue with the most pending work.
+                best = None
+                with self._lock:
+                    queues = list(self._queues.items())
+                for key, q in queues:
+                    pending = q.pending_tasks()
+                    if pending and (best is None or pending > best[2]):
+                        best = (key, q, pending)
+                if best is not None:
+                    key, q, _ = best
+                    batch = q.pop_ready_batch(force=True)
+                    if batch is not None:
+                        with self._lock:
+                            proc = self._processors.get(key)
+                        self._process(q, proc, batch)
+                        continue
+                self._stop.wait(self._idle_wait_s)
+
+    def _process(self, q: BatchingQueue, proc: Optional[BatchProcessor],
+                 batch: Batch) -> None:
+        if proc is None:  # queue removed without drain; fail tasks
+            for task in batch.tasks:
+                task.set_error(RuntimeError("queue removed"))
+            return
+        try:
+            padded = q.options.bucket_for(batch.size)
+            q.stats["padded_examples"] += padded - batch.size
+            proc(batch)
+        except BaseException as exc:
+            log.warning("batch processor for %s failed: %s", q.name, exc)
+            for task in batch.tasks:
+                if not task._event.is_set():
+                    task.set_error(exc)
+
+    # -- introspection -----------------------------------------------------
+    def queue_names(self):
+        with self._lock:
+            return list(self._queues)
+
+    def stats(self):
+        with self._lock:
+            return {name: dict(q.stats) for name, q in self._queues.items()}

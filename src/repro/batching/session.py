@@ -1,0 +1,98 @@
+"""BatchingSession: tensor-level wrapper over the batching core (§2.2.1).
+
+Paper: "an implementation of TensorFlow's Session abstraction that
+batches multiple Run() calls together, concatenating their input
+tensors, and then forwards to the wrapped Session's Run()".
+
+Here the wrapped "Session" is any jit-compiled function mapping a pytree
+of arrays with a leading batch dim to a pytree of arrays with the same
+leading batch dim. Individual ``run()`` calls (from many request
+threads) are merged by concatenation along axis 0, padded up to a bucket
+size for shape stability, executed once, and split back per task.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.batching.queue import Batch, BatchingOptions, BatchTask
+from repro.batching.scheduler import SharedBatchScheduler
+
+
+def _concat_and_pad(payloads, pad_to: int):
+    """Concatenate pytrees of arrays along axis 0 and zero-pad to pad_to."""
+    leaves_list = [jax.tree_util.tree_flatten(p)[0] for p in payloads]
+    treedef = jax.tree_util.tree_flatten(payloads[0])[1]
+    merged = []
+    for parts in zip(*leaves_list):
+        arr = np.concatenate([np.asarray(x) for x in parts], axis=0)
+        n = arr.shape[0]
+        if pad_to > n:
+            pad_width = [(0, pad_to - n)] + [(0, 0)] * (arr.ndim - 1)
+            arr = np.pad(arr, pad_width)  # zero padding; masked downstream
+        merged.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, merged)
+
+
+def _split(outputs, sizes):
+    """Split a pytree of arrays along axis 0 into per-task pytrees."""
+    leaves, treedef = jax.tree_util.tree_flatten(outputs)
+    offsets = np.cumsum([0] + list(sizes))
+    out = []
+    for i, size in enumerate(sizes):
+        lo, hi = offsets[i], offsets[i] + size
+        out.append(jax.tree_util.tree_unflatten(
+            treedef, [leaf[lo:hi] for leaf in leaves]))
+    return out
+
+
+class BatchingSession:
+    """Merges concurrent ``run()`` calls into single executions of ``fn``.
+
+    One BatchingSession per (servable, version); many sessions share one
+    SharedBatchScheduler (= one device). ``fn`` must accept the merged
+    (padded) input pytree and return an output pytree whose leaves all
+    have the padded batch dim first.
+    """
+
+    def __init__(self, name: str, fn: Callable[[Any], Any],
+                 scheduler: SharedBatchScheduler,
+                 options: Optional[BatchingOptions] = None):
+        self.name = name
+        self._fn = fn
+        self._scheduler = scheduler
+        self.options = options or BatchingOptions()
+        self._queue = scheduler.add_queue(name, self.options, self._process)
+
+    def run(self, inputs: Any, timeout_s: float = 30.0) -> Any:
+        """Blocking per-request call, safe from many threads."""
+        task = self.submit(inputs)
+        return task.wait(timeout_s)
+
+    def submit(self, inputs: Any) -> BatchTask:
+        size = int(jax.tree_util.tree_leaves(inputs)[0].shape[0])
+        return self._queue.enqueue(inputs, size=size)
+
+    def close(self, *, drain: bool = True) -> None:
+        self._scheduler.remove_queue(self.name, drain=drain)
+
+    # -- executed on the shared device thread ---------------------------
+    def _process(self, batch: Batch) -> None:
+        sizes = [t.size for t in batch.tasks]
+        total = sum(sizes)
+        padded = self.options.bucket_for(total)
+        merged = _concat_and_pad([t.payload for t in batch.tasks], padded)
+        try:
+            outputs = self._fn(merged)
+            outputs = jax.tree_util.tree_map(np.asarray, outputs)
+        except BaseException as exc:
+            for t in batch.tasks:
+                t.set_error(exc)
+            return
+        per_task = _split(outputs, sizes)
+        for t, out in zip(batch.tasks, per_task):
+            t.set_result(out)

@@ -1,0 +1,23 @@
+"""Config registry: ``get_config(arch_id)`` / ``--arch <id>``."""
+from repro.configs.archs import ARCHS, ASSIGNED, SMOKE_ARCHS
+from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
+                                shape_applicable)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    table = SMOKE_ARCHS if smoke else ARCHS
+    key = arch[:-len("-smoke")] if arch.endswith("-smoke") else arch
+    if arch.endswith("-smoke"):
+        table = SMOKE_ARCHS
+    if key not in table:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return table[key]
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+__all__ = ["ARCHS", "ASSIGNED", "INPUT_SHAPES", "InputShape",
+           "ModelConfig", "SMOKE_ARCHS", "get_config", "list_archs",
+           "shape_applicable"]

@@ -1,0 +1,148 @@
+"""The 10 assigned architectures (+ the paper-era classifier servable).
+
+Every CONFIG is the exact assigned full-size architecture (dry-run only
+on CPU); every SMOKE is a reduced same-family variant (≤2 layers,
+d_model ≤ 512, ≤ 4 experts) runnable on one CPU device.
+"""
+from repro.configs.base import ModelConfig
+
+# -- dense ------------------------------------------------------------------
+
+H2O_DANUBE_3_4B = ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    num_layers=24, d_model=3840, num_heads=32, num_kv_heads=8,
+    d_ff=10240, vocab_size=32000, window=4096, rope_theta=10_000.0,
+    train_microbatch=4,
+    source="arXiv:2401.16818 (llama+mistral mix, sliding-window attn)")
+
+QWEN2_72B = ModelConfig(
+    name="qwen2-72b", family="dense",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=29568, vocab_size=152064, qkv_bias=True, rope_theta=1e6,
+    fsdp=True, train_microbatch=4,   # §Perf H-C: mb 16->4 = 3.3x fewer
+    # FSDP gather bytes/step; seq-parallel carries keep memory in budget
+    source="arXiv:2407.10671 (GQA, QKV bias)")
+
+STARCODER2_7B = ModelConfig(
+    name="starcoder2-7b", family="dense",
+    num_layers=32, d_model=4608, num_heads=36, num_kv_heads=4,
+    d_ff=18432, vocab_size=49152, act="gelu", rope_theta=1e5,
+    fsdp=True, train_microbatch=4,
+    source="arXiv:2402.19173 (GQA, RoPE)")
+
+GRANITE_8B = ModelConfig(
+    name="granite-8b", family="dense",
+    num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=49152, rope_theta=10_000.0,
+    fsdp=True, train_microbatch=4,
+    source="arXiv:2405.04324 (llama-arch, code)")
+
+# -- hybrid -----------------------------------------------------------------
+
+JAMBA_1_5_LARGE = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    num_layers=72, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=24576, vocab_size=65536,
+    pattern=("mamba", "mamba", "mamba", "attn",
+             "mamba", "mamba", "mamba", "mamba"),
+    ffn_pattern=("mlp", "moe", "mlp", "moe", "mlp", "moe", "mlp", "moe"),
+    num_experts=16, top_k=2, rope_theta=10_000.0, fsdp=True,
+    train_microbatch=8, moe_impl="a2a",
+    source="arXiv:2403.19887 (Mamba:attn 7:1 interleave, MoE 16e top-2)")
+
+# -- ssm --------------------------------------------------------------------
+
+XLSTM_125M = ModelConfig(
+    name="xlstm-125m", family="ssm",
+    num_layers=12, d_model=768, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    pattern=("mlstm", "slstm"), ffn_pattern=("none", "none"),
+    tensor_parallel=False,  # §Perf H-D: 125M params pay 13x more in TP
+    # collectives than the pure-DP grad all-reduce; batch over all axes
+    source="arXiv:2405.04517 (sLSTM + mLSTM blocks, 1:1 interleave)")
+
+# -- moe --------------------------------------------------------------------
+
+PHI35_MOE = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=6400, vocab_size=32064,
+    ffn_pattern=("moe",), num_experts=16, top_k=2, rope_theta=10_000.0,
+    fsdp=True, train_microbatch=4, moe_impl="a2a",
+    source="hf:microsoft/Phi-3.5-MoE-instruct (16 experts top-2)")
+
+QWEN3_MOE_30B = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=4,
+    head_dim=128, d_ff=768, vocab_size=151936,
+    ffn_pattern=("moe",), num_experts=128, top_k=8, rope_theta=1e6,
+    fsdp=True, train_microbatch=4, moe_impl="a2a",  # §Perf H-A
+    source="hf:Qwen/Qwen3-30B-A3B (128 fine-grained experts top-8)")
+
+# -- vlm --------------------------------------------------------------------
+
+QWEN2_VL_72B = ModelConfig(
+    name="qwen2-vl-72b", family="vlm",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=29568, vocab_size=152064, qkv_bias=True, rope_theta=1e6,
+    mrope_sections=(16, 24, 24), input_kind="embeddings", fsdp=True,
+    train_microbatch=4,
+    source="arXiv:2409.12191 (M-RoPE, dynamic resolution; ViT stubbed)")
+
+# -- audio ------------------------------------------------------------------
+
+HUBERT_XLARGE = ModelConfig(
+    name="hubert-xlarge", family="audio",
+    num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+    d_ff=5120, vocab_size=504, causal=False, input_kind="embeddings",
+    act="gelu",
+    train_microbatch=2,
+    source="arXiv:2106.07447 (encoder-only; conv frontend stubbed)")
+
+# -- the paper's own canonical servable (classification/regression) ---------
+
+TFS_CLASSIFIER = ModelConfig(
+    name="tfs-classifier", family="dense",
+    num_layers=4, d_model=256, num_heads=4, num_kv_heads=4,
+    d_ff=1024, vocab_size=1000, rope_theta=10_000.0,
+    source="TF-Serving paper §2.2: canonical classify/regress servable")
+
+
+def _smoke(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: ≤2 layers, d_model≤512, ≤4 experts."""
+    kw = dict(
+        name=cfg.name + "-smoke",
+        d_model=256, num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2 if cfg.num_kv_heads <
+                         cfg.num_heads else 4),
+        head_dim=64,
+        d_ff=512 if cfg.d_ff else 0,
+        vocab_size=512,
+        attn_chunk=64, ssm_chunk=16, mlstm_chunk=32, loss_chunk=64,
+        fsdp=False, train_microbatch=1,
+    )
+    if cfg.num_experts:
+        kw.update(num_experts=4, top_k=min(cfg.top_k, 2))
+    if cfg.window:
+        kw.update(window=16)
+    if cfg.mrope_sections:
+        kw.update(mrope_sections=(8, 12, 12))
+    if len(cfg.pattern) > 2:  # jamba: keep the family mix, 2 layers
+        kw.update(pattern=("mamba", "attn"), ffn_pattern=("mlp", "moe"),
+                  num_layers=2)
+    elif len(cfg.pattern) == 2:
+        kw.update(num_layers=2)
+    else:
+        kw.update(num_layers=2)
+    return cfg.with_overrides(**kw)
+
+
+ARCHS = {c.name: c for c in [
+    H2O_DANUBE_3_4B, QWEN2_72B, STARCODER2_7B, JAMBA_1_5_LARGE,
+    XLSTM_125M, GRANITE_8B, PHI35_MOE, QWEN3_MOE_30B, QWEN2_VL_72B,
+    HUBERT_XLARGE, TFS_CLASSIFIER,
+]}
+
+SMOKE_ARCHS = {name: _smoke(cfg) for name, cfg in ARCHS.items()}
+
+ASSIGNED = [n for n in ARCHS if n != "tfs-classifier"]

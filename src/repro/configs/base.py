@@ -1,0 +1,189 @@
+"""Config system: ModelConfig + input-shape definitions.
+
+Every assigned architecture has a module ``configs/<id>.py`` exporting
+``CONFIG`` (full-size, dry-run only) and ``SMOKE_CONFIG`` (reduced: ≤2
+periods, d_model ≤ 512, ≤4 experts — runnable on CPU). Architectures are
+selectable by id via ``repro.configs.get_config``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense|moe|ssm|hybrid|vlm|audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 => d_model // num_heads
+    source: str = ""                  # citation (paper / model card)
+
+    # Layer pattern: mixer type per slot within one repeating period, and
+    # the FFN kind that follows each mixer. len(pattern) must divide
+    # num_layers; scan-over-layers runs over periods.
+    pattern: Tuple[str, ...] = ("attn",)          # attn|mamba|mlstm|slstm
+    ffn_pattern: Tuple[str, ...] = ("mlp",)       # mlp|moe|none
+
+    # Attention
+    rope_theta: float = 1e6
+    window: Optional[int] = None                  # sliding-window size
+    qkv_bias: bool = False
+    mrope_sections: Optional[Tuple[int, ...]] = None  # (t,h,w) pairs split
+    causal: bool = True                           # False => encoder
+
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (Mamba)
+    ssm_d_state: int = 16
+    ssm_d_conv: int = 4
+    ssm_expand: int = 2
+
+    # xLSTM
+    lstm_expand: int = 2
+
+    # IO
+    input_kind: str = "tokens"                    # tokens|embeddings
+    act: str = "silu"
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+
+    # Execution knobs
+    attention_impl: str = "xla"       # xla|pallas|pallas_interpret
+    attn_chunk: int = 1024
+    ssm_chunk: int = 128
+    mlstm_chunk: int = 512
+    moe_impl: str = "gspmd"           # gspmd|a2a
+    remat: bool = True
+    # Sharding strategy knobs (see models/shardings.py)
+    fsdp: bool = False                # shard params on data axis too
+    loss_chunk: int = 1024            # vocab-proj chunking in training
+    # Tensor parallelism on/off: small models (≤~1B) pay more in TP
+    # all-reduces than they save; False = pure data parallelism with the
+    # batch sharded across ALL mesh axes and weights replicated (H-D).
+    tensor_parallel: bool = True
+    # Decode 2D tensor parallelism: replicate the (small) decode batch
+    # and let the (data, model)-sharded weights drive partial-sum
+    # compute — removes the per-token FSDP param gather (§Perf H-B).
+    decode_2d: bool = False
+    # Gradient accumulation: split the global batch into k microbatches
+    # per optimizer step. The activation-memory knob: remat saves one
+    # (B_loc/k, S, D) carry per period, so HBM residency scales 1/k.
+    train_microbatch: int = 1
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // self.num_heads)
+        assert self.num_layers % len(self.pattern) == 0, \
+            (self.name, self.num_layers, self.pattern)
+        assert len(self.pattern) == len(self.ffn_pattern)
+        if "attn" in self.pattern:
+            assert self.num_heads % self.num_kv_heads == 0
+
+    @property
+    def num_periods(self) -> int:
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def is_decoder(self) -> bool:
+        return self.causal
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter accounting (Controller RAM estimation, roofline) ----
+    def param_counts(self) -> dict:
+        """Analytic parameter counts: total and active-per-token."""
+        d, f, hd = self.d_model, self.d_ff, self.head_dim
+        hq, hk = self.num_heads, self.num_kv_heads
+        counts = {"embed": 0, "attn": 0, "mlp": 0, "moe_total": 0,
+                  "moe_active": 0, "ssm": 0, "lstm": 0}
+        if self.input_kind == "tokens":
+            counts["embed"] += self.vocab_size * d
+        counts["embed"] += d * self.vocab_size  # lm/output head
+        per_attn = d * hd * (hq + 2 * hk) + hq * hd * d
+        gate = 1 if self.act == "silu" else 0
+        per_mlp = d * f * (2 + gate) if f else 0
+        per_moe = (self.num_experts * d * f * (2 + gate) +
+                   d * self.num_experts)
+        per_moe_active = (self.top_k * d * f * (2 + gate) +
+                          d * self.num_experts)
+        di = self.ssm_expand * d
+        n = self.ssm_d_state
+        dt_rank = math.ceil(d / 16)
+        per_mamba = (d * 2 * di + self.ssm_d_conv * di +
+                     di * (dt_rank + 2 * n) + dt_rank * di + di * n +
+                     2 * di + di * d)
+        dil = self.lstm_expand * d
+        per_mlstm = d * 2 * dil + 4 * dil + 3 * dil * dil + \
+            2 * dil * max(self.num_heads, 1) + dil * d
+        per_slstm = d * 4 * d + (d // max(self.num_heads, 1)) * 4 * d + d * d
+        for slot, (mix, ffn) in enumerate(zip(self.pattern,
+                                              self.ffn_pattern)):
+            reps = self.num_periods
+            if mix == "attn":
+                counts["attn"] += reps * per_attn
+            elif mix == "mamba":
+                counts["ssm"] += reps * per_mamba
+            elif mix == "mlstm":
+                counts["lstm"] += reps * per_mlstm
+            elif mix == "slstm":
+                counts["lstm"] += reps * per_slstm
+            if ffn == "mlp":
+                counts["mlp"] += reps * per_mlp
+            elif ffn == "moe":
+                counts["moe_total"] += reps * per_moe
+                counts["moe_active"] += reps * per_moe_active
+        counts["total"] = (counts["embed"] + counts["attn"] + counts["mlp"]
+                           + counts["moe_total"] + counts["ssm"]
+                           + counts["lstm"])
+        counts["active"] = (counts["total"] - counts["moe_total"]
+                            + counts["moe_active"])
+        return counts
+
+    def param_bytes(self, bytes_per_param: int = 2) -> int:
+        return self.param_counts()["total"] * bytes_per_param
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # train|prefill|decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Which (arch, shape) pairs run — mirrors DESIGN.md's skip table."""
+    if shape.kind == "decode":
+        if not cfg.causal:
+            return False, "encoder-only: no autoregressive decode step"
+        if shape.name == "long_500k":
+            full_attn = ("attn" in cfg.pattern and cfg.window is None)
+            if cfg.family in ("dense", "moe", "vlm") and full_attn:
+                return False, ("pure full-attention arch: long_500k "
+                               "requires sub-quadratic attention")
+    return True, ""

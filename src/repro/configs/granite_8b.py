@@ -1,0 +1,4 @@
+"""Config module for ``GRANITE_8B`` — see configs/archs.py for the definition."""
+from repro.configs.archs import GRANITE_8B as CONFIG, SMOKE_ARCHS
+
+SMOKE_CONFIG = SMOKE_ARCHS[CONFIG.name]

@@ -1,0 +1,4 @@
+"""Config module for ``H2O_DANUBE_3_4B`` — see configs/archs.py for the definition."""
+from repro.configs.archs import H2O_DANUBE_3_4B as CONFIG, SMOKE_ARCHS
+
+SMOKE_CONFIG = SMOKE_ARCHS[CONFIG.name]

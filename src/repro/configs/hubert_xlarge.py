@@ -1,0 +1,4 @@
+"""Config module for ``HUBERT_XLARGE`` — see configs/archs.py for the definition."""
+from repro.configs.archs import HUBERT_XLARGE as CONFIG, SMOKE_ARCHS
+
+SMOKE_CONFIG = SMOKE_ARCHS[CONFIG.name]

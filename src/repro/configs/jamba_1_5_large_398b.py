@@ -1,0 +1,4 @@
+"""Config module for ``JAMBA_1_5_LARGE`` — see configs/archs.py for the definition."""
+from repro.configs.archs import JAMBA_1_5_LARGE as CONFIG, SMOKE_ARCHS
+
+SMOKE_CONFIG = SMOKE_ARCHS[CONFIG.name]

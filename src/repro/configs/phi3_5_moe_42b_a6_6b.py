@@ -1,0 +1,4 @@
+"""Config module for ``PHI35_MOE`` — see configs/archs.py for the definition."""
+from repro.configs.archs import PHI35_MOE as CONFIG, SMOKE_ARCHS
+
+SMOKE_CONFIG = SMOKE_ARCHS[CONFIG.name]

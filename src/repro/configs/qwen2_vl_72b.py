@@ -1,0 +1,4 @@
+"""Config module for ``QWEN2_VL_72B`` — see configs/archs.py for the definition."""
+from repro.configs.archs import QWEN2_VL_72B as CONFIG, SMOKE_ARCHS
+
+SMOKE_CONFIG = SMOKE_ARCHS[CONFIG.name]

@@ -1,0 +1,4 @@
+"""Config module for ``QWEN3_MOE_30B`` — see configs/archs.py for the definition."""
+from repro.configs.archs import QWEN3_MOE_30B as CONFIG, SMOKE_ARCHS
+
+SMOKE_CONFIG = SMOKE_ARCHS[CONFIG.name]

@@ -1,0 +1,4 @@
+"""Config module for ``STARCODER2_7B`` — see configs/archs.py for the definition."""
+from repro.configs.archs import STARCODER2_7B as CONFIG, SMOKE_ARCHS
+
+SMOKE_CONFIG = SMOKE_ARCHS[CONFIG.name]

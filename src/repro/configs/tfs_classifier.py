@@ -1,0 +1,4 @@
+"""Config module for ``TFS_CLASSIFIER`` — see configs/archs.py for the definition."""
+from repro.configs.archs import TFS_CLASSIFIER as CONFIG, SMOKE_ARCHS
+
+SMOKE_CONFIG = SMOKE_ARCHS[CONFIG.name]

@@ -1,0 +1,4 @@
+"""Config module for ``XLSTM_125M`` — see configs/archs.py for the definition."""
+from repro.configs.archs import XLSTM_125M as CONFIG, SMOKE_ARCHS
+
+SMOKE_CONFIG = SMOKE_ARCHS[CONFIG.name]

@@ -1,0 +1,38 @@
+"""TF-Serving lifecycle library, reproduced in Python/JAX (paper §2.1).
+
+Canonical wiring::
+
+    source  = FileSystemSource({"mnist": "/models/mnist"})
+    adapter = JaxModelSourceAdapter(...)          # path -> Loader
+    manager = AspiredVersionsManager()
+    chain(source, adapter).set_aspired_versions_callback(
+        manager.set_aspired_versions)
+    source.poll(); manager.await_idle()
+    with manager.get_servable_handle("mnist") as m:
+        out = m.call("predict", batch)
+"""
+from repro.core.adapter import FnSourceAdapter, SourceAdapter, chain
+from repro.core.loader import CallableLoader, ErrorInjectingLoader, Loader
+from repro.core.manager import (AspiredVersionsManager, ManagerEvent,
+                                NotFoundError)
+from repro.core.rcu import RcuMap
+from repro.core.servable import (RawDictServable, ResourceEstimate, Servable,
+                                 ServableHandle, ServableId, ServableState)
+from repro.core.source import (AspiredVersion, FileSystemSource,
+                               ServableVersionPolicy, Source, SourceRouter,
+                               StaticSource)
+from repro.core.version_policy import (AvailabilityPreservingPolicy,
+                                       PendingAction, ResourcePreservingPolicy,
+                                       ServablePicture,
+                                       VersionTransitionPolicy)
+
+__all__ = [
+    "AspiredVersion", "AspiredVersionsManager", "AvailabilityPreservingPolicy",
+    "CallableLoader", "ErrorInjectingLoader", "FileSystemSource",
+    "FnSourceAdapter", "Loader", "ManagerEvent", "NotFoundError",
+    "PendingAction", "RawDictServable", "RcuMap", "ResourceEstimate",
+    "ResourcePreservingPolicy", "Servable", "ServableHandle", "ServableId",
+    "ServablePicture", "ServableState", "ServableVersionPolicy", "Source",
+    "SourceAdapter", "SourceRouter", "StaticSource",
+    "VersionTransitionPolicy", "chain",
+]

@@ -1,0 +1,59 @@
+"""SourceAdapters (paper §2.1): transform aspired-version payloads.
+
+An adapter is simultaneously a sink (receives ``AspiredVersion[T_in]``)
+and a Source (emits ``AspiredVersion[T_out]``). The canonical chain is
+FileSystemSource (T=path) → ModelSourceAdapter (T=Loader) → Manager.
+The paper notes production use of *chains* of adapters; composition here
+is just ``a.set_aspired_versions_callback(b)``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Generic, Sequence, TypeVar
+
+from repro.core.loader import Loader
+from repro.core.source import AspiredVersion, Source
+
+T_in = TypeVar("T_in")
+T_out = TypeVar("T_out")
+
+
+class SourceAdapter(Source[T_out], Generic[T_in, T_out]):
+    """Maps each incoming version's payload with ``convert``."""
+
+    def __init__(self) -> None:
+        super().__init__()
+
+    def convert(self, version: AspiredVersion) -> AspiredVersion:
+        raise NotImplementedError
+
+    # Sink side: this object is itself an AspiredVersionsCallback.
+    def __call__(self, name: str,
+                 versions: Sequence[AspiredVersion]) -> None:
+        self._emit(name, [self.convert(v) for v in versions])
+
+
+class FnSourceAdapter(SourceAdapter[T_in, T_out]):
+    """Adapter from a plain function ``(AspiredVersion)->AspiredVersion``."""
+
+    def __init__(self, fn: Callable[[AspiredVersion], AspiredVersion]):
+        super().__init__()
+        self._fn = fn
+
+    def convert(self, version: AspiredVersion) -> AspiredVersion:
+        return self._fn(version)
+
+
+def chain(source: Source, *stages) -> Source:
+    """Wire ``source -> stages[0] -> ... -> stages[-1]``; returns the tail.
+
+    Every stage must be a SourceAdapter (callable sink + Source). The
+    returned tail is what you connect to a Manager::
+
+        tail = chain(fs_source, path_to_loader_adapter)
+        tail.set_aspired_versions_callback(manager.set_aspired_versions)
+    """
+    upstream: Source = source
+    for stage in stages:
+        upstream.set_aspired_versions_callback(stage)
+        upstream = stage
+    return upstream

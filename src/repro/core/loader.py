@@ -1,0 +1,71 @@
+"""Loader API (paper §2.1): knows how to load/unload one servable version.
+
+A Loader is emitted by a SourceAdapter and consumed by the Manager. It
+carries a resource estimate *before* load (so the manager can gate on
+RAM) and materializes the servable on ``load()``.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, Optional
+
+from repro.core.servable import ResourceEstimate, Servable, ServableId
+
+
+class Loader(abc.ABC):
+    """One loadable servable version."""
+
+    def __init__(self, servable_id: ServableId):
+        self.id = servable_id
+
+    @abc.abstractmethod
+    def estimate_resources(self) -> ResourceEstimate:
+        """RAM estimate prior to load (used for gating / bin-packing)."""
+
+    @abc.abstractmethod
+    def load(self) -> Servable:
+        """Materialize the servable. Runs on a *load* thread."""
+
+    def unload(self, servable: Servable) -> None:
+        """Release. Runs on a *manager* (unload-executor) thread."""
+        servable.unload()
+
+
+class CallableLoader(Loader):
+    """Wraps a factory fn — the simplest possible Loader, used heavily in
+    tests and by the RPC Source in hosted mode."""
+
+    def __init__(self, servable_id: ServableId,
+                 factory: Callable[[], Servable],
+                 estimate: Optional[ResourceEstimate] = None):
+        super().__init__(servable_id)
+        self._factory = factory
+        self._estimate = estimate or ResourceEstimate(ram_bytes=0)
+
+    def estimate_resources(self) -> ResourceEstimate:
+        return self._estimate
+
+    def load(self) -> Servable:
+        return self._factory()
+
+
+class ErrorInjectingLoader(Loader):
+    """Test/robustness-validation helper: fails ``load`` deterministically.
+
+    Mirrors the paper's §3.2 "robustness validation (ensuring a model
+    does not induce a server to crash)" — the manager must survive loader
+    failures and park the version in ERROR state.
+    """
+
+    def __init__(self, servable_id: ServableId,
+                 exc: Exception = None,
+                 estimate: Optional[ResourceEstimate] = None):
+        super().__init__(servable_id)
+        self._exc = exc or RuntimeError(f"injected load failure for {servable_id}")
+        self._estimate = estimate or ResourceEstimate(ram_bytes=0)
+
+    def estimate_resources(self) -> ResourceEstimate:
+        return self._estimate
+
+    def load(self) -> Servable:
+        raise self._exc

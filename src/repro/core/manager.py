@@ -1,0 +1,444 @@
+"""AspiredVersionsManager (paper §2.1.2).
+
+Sequences loading/unloading of servable versions and provides wait-free,
+reference-counted access for inference threads. Encapsulates the paper's
+performance lessons:
+
+  * RCU map for servable lookup — inference threads never take the
+    manager mutex (``core/rcu.py``).
+  * Ref-counted handles; memory is freed on the manager's dedicated
+    unload executor, never on an inference thread.
+  * Isolated load vs. inference thread pools: loads run on their own
+    small pool so deserialization/compilation cannot steal inference
+    CPUs (inference threads are the *caller's* threads here, plus the
+    batching library's executor).
+  * One-time widened pool for the initial load wave, to speed start-up.
+  * Explicit memory release on unload (``jax.Array.delete``-style via
+    ``Servable.unload``), the analogue of "releasing memory to the OS".
+
+Reconciliation is explicit (``reconcile()``) or background
+(``start(interval_s)``); tests use the explicit form for determinism.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import threading
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.loader import Loader
+from repro.core.rcu import RcuMap
+from repro.core.servable import (
+    ServableHandle, ServableId, ServableState, _RefCountedEntry)
+from repro.core.source import AspiredVersion
+from repro.core.version_policy import (
+    AvailabilityPreservingPolicy, PendingAction, ServablePicture,
+    VersionTransitionPolicy)
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass(frozen=True)
+class ManagerEvent:
+    t: float
+    kind: str            # load_start/load_done/load_error/unload_start/...
+    servable: ServableId
+    detail: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class _ServingSnapshot:
+    """Immutable per-servable view published through the RCU map."""
+
+    versions: Tuple[int, ...]                     # sorted ascending
+    entries: Dict[int, _RefCountedEntry]          # READY entries only
+    primary: int                                  # version handles default to
+
+    def with_entry(self, version: int,
+                   entry: _RefCountedEntry) -> "_ServingSnapshot":
+        entries = dict(self.entries)
+        entries[version] = entry
+        versions = tuple(sorted(entries))
+        return _ServingSnapshot(versions, entries, max(versions))
+
+    def without_version(self, version: int) -> Optional["_ServingSnapshot"]:
+        entries = {v: e for v, e in self.entries.items() if v != version}
+        if not entries:
+            return None
+        versions = tuple(sorted(entries))
+        return _ServingSnapshot(versions, entries, max(versions))
+
+
+class _ManagedVersion:
+    """Lifecycle record for one (name, version). Guarded by manager mutex."""
+
+    __slots__ = ("loader", "state", "entry", "error", "ram_bytes")
+
+    def __init__(self, loader: Loader):
+        self.loader = loader
+        self.state = ServableState.NEW
+        self.entry: Optional[_RefCountedEntry] = None
+        self.error: Optional[BaseException] = None
+        self.ram_bytes = loader.estimate_resources().ram_bytes
+
+
+class NotFoundError(KeyError):
+    pass
+
+
+class AspiredVersionsManager:
+    def __init__(
+        self,
+        *,
+        transition_policy: Optional[VersionTransitionPolicy] = None,
+        num_load_threads: int = 2,
+        num_initial_load_threads: Optional[int] = None,
+        ram_budget_bytes: Optional[int] = None,
+        on_event: Optional[Callable[[ManagerEvent], None]] = None,
+        max_event_log: int = 10_000,
+    ):
+        self._policy = transition_policy or AvailabilityPreservingPolicy()
+        self._mutex = threading.RLock()
+        self._aspired: Dict[str, Dict[int, Loader]] = {}
+        self._managed: Dict[str, Dict[int, _ManagedVersion]] = {}
+        self._serving: RcuMap[str, _ServingSnapshot] = RcuMap()
+
+        self._num_load_threads = num_load_threads
+        self._num_initial_load_threads = (
+            num_initial_load_threads
+            if num_initial_load_threads is not None else num_load_threads)
+        self._load_pool = ThreadPoolExecutor(
+            max_workers=max(num_load_threads, self._num_initial_load_threads),
+            thread_name_prefix="tfs-load")
+        # Initial wave may use all workers; afterwards we self-throttle to
+        # num_load_threads via the semaphore (paper: "one-time use of all
+        # threads to load the initial set").
+        self._initial_wave = True
+        self._load_slots = threading.Semaphore(num_load_threads)
+        # Single dedicated unload executor — THE manager thread on which
+        # all servable memory is freed.
+        self._unload_pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="tfs-manager-unload")
+
+        self._ram_budget = ram_budget_bytes
+        self._ram_committed = 0      # READY + LOADING estimates
+
+        self._pending_ops = 0        # in-flight loads+unloads
+        self._idle = threading.Condition(self._mutex)
+
+        self._events: deque = deque(maxlen=max_event_log)
+        self._on_event = on_event
+
+        self._bg_thread: Optional[threading.Thread] = None
+        self._bg_stop = threading.Event()
+
+    # ------------------------------------------------------------------
+    # Aspired-versions sink (connect a Source/adapter chain to this).
+    # ------------------------------------------------------------------
+    def set_aspired_versions(
+            self, name: str,
+            versions: Sequence[AspiredVersion]) -> None:
+        """Idempotent full-list aspiration for one servable (T=Loader)."""
+        with self._mutex:
+            self._aspired[name] = {
+                v.id.version: v.data for v in versions}
+            for v in versions:
+                if not isinstance(v.data, Loader):
+                    raise TypeError(
+                        f"Manager requires T=Loader, got {type(v.data)!r}"
+                        " — insert a SourceAdapter upstream")
+
+    # Convenience so the manager itself can be used as the callback.
+    __call__ = set_aspired_versions
+
+    # ------------------------------------------------------------------
+    # Reconciliation
+    # ------------------------------------------------------------------
+    def reconcile(self) -> int:
+        """One reconciliation step; returns #actions scheduled."""
+        scheduled = 0
+        with self._mutex:
+            names = set(self._aspired) | set(self._managed)
+            for name in names:
+                for action in self._plan_servable(name):
+                    self._start_action(name, action)
+                    scheduled += 1
+            if self._initial_wave and scheduled:
+                # The first reconcile that schedules work is the initial
+                # wave; subsequent ones are throttled.
+                self._initial_wave = False
+        return scheduled
+
+    def _plan_servable(self, name: str) -> List[PendingAction]:
+        aspired = self._aspired.get(name, {})
+        managed = self._managed.setdefault(name, {})
+
+        ready, loading, unloading, to_unload = [], [], [], []
+        for ver, mv in managed.items():
+            if mv.state is ServableState.READY:
+                ready.append(ver)
+                if ver not in aspired:
+                    to_unload.append(ver)
+            elif mv.state is ServableState.LOADING:
+                loading.append(ver)
+            elif mv.state is ServableState.UNLOADING:
+                unloading.append(ver)
+
+        to_load = []
+        for ver, loader in aspired.items():
+            mv = managed.get(ver)
+            if mv is None or mv.state is ServableState.DISABLED:
+                if self._ram_admits(loader):
+                    to_load.append(ver)
+                else:
+                    self._event("load_deferred_ram", ServableId(name, ver),
+                                f"budget={self._ram_budget}")
+            # ERROR state: do not auto-retry; a *new* aspiration of the
+            # same version after clear_error() will reload.
+
+        pic = ServablePicture(
+            ready_versions=ready, loading_versions=loading,
+            unloading_versions=unloading, to_load=to_load,
+            to_unload=to_unload)
+        return self._policy.actions(pic)
+
+    def _ram_admits(self, loader: Loader) -> bool:
+        if self._ram_budget is None:
+            return True
+        est = loader.estimate_resources()
+        return self._ram_committed + est.peak_ram_bytes <= self._ram_budget
+
+    def _start_action(self, name: str, action: PendingAction) -> None:
+        # Called under mutex.
+        managed = self._managed[name]
+        if action.kind == "load":
+            loader = self._aspired[name][action.version]
+            mv = _ManagedVersion(loader)
+            mv.state = ServableState.LOADING
+            managed[action.version] = mv
+            self._ram_committed += mv.ram_bytes
+            self._pending_ops += 1
+            sid = ServableId(name, action.version)
+            self._event("load_start", sid)
+            self._load_pool.submit(self._do_load, name, action.version,
+                                   self._initial_wave)
+        elif action.kind == "unload":
+            mv = managed[action.version]
+            mv.state = ServableState.UNLOADING
+            self._pending_ops += 1
+            sid = ServableId(name, action.version)
+            self._event("unload_start", sid)
+            # 1) unpublish from RCU (readers with the new snapshot can no
+            # longer find it); 2) stop issuing handles; 3) drain + free on
+            # the manager unload thread. Unpublish-first matters: a READY
+            # entry visible in the *current* snapshot must always be
+            # acquirable, so readers only need to retry on snapshot change
+            # (see get_servable_handle).
+            entry = mv.entry
+            assert entry is not None
+            snap = self._serving.get(name)
+            if snap is not None:
+                new_snap = snap.without_version(action.version)
+                if new_snap is None:
+                    self._serving.remove(name)
+                else:
+                    self._serving.insert(name, new_snap)
+            entry.begin_unload()
+            self._unload_pool.submit(self._do_unload, name, action.version)
+        else:  # pragma: no cover
+            raise ValueError(action.kind)
+
+    # ---- load path (load-pool threads) --------------------------------
+    def _do_load(self, name: str, version: int,
+                 initial_wave: bool = False) -> None:
+        sid = ServableId(name, version)
+        # Initial wave: all pool threads load in parallel (paper's one-time
+        # start-up acceleration). Afterwards loads self-throttle to
+        # num_load_threads so they cannot saturate the process.
+        throttled = not initial_wave
+        if throttled:
+            self._load_slots.acquire()
+        try:
+            with self._mutex:
+                mv = self._managed[name][version]
+            t0 = time.monotonic()
+            servable = mv.loader.load()
+            dt = time.monotonic() - t0
+            entry = _RefCountedEntry(servable)
+            with self._mutex:
+                mv.entry = entry
+                mv.state = ServableState.READY
+                snap = self._serving.get(name)
+                if snap is None:
+                    snap = _ServingSnapshot((version,), {version: entry},
+                                            version)
+                else:
+                    snap = snap.with_entry(version, entry)
+                self._serving.insert(name, snap)
+                self._event("load_done", sid, f"{dt*1e3:.1f}ms")
+        except BaseException as exc:  # robustness: never crash the server
+            log.warning("load failed for %s: %s", sid, exc)
+            with self._mutex:
+                mv = self._managed[name][version]
+                mv.state = ServableState.ERROR
+                mv.error = exc
+                self._ram_committed -= mv.ram_bytes
+                self._event("load_error", sid, repr(exc))
+        finally:
+            if throttled:
+                self._load_slots.release()
+            with self._mutex:
+                self._pending_ops -= 1
+                self._idle.notify_all()
+
+    # ---- unload path (THE manager unload thread) -----------------------
+    def _do_unload(self, name: str, version: int) -> None:
+        sid = ServableId(name, version)
+        with self._mutex:
+            mv = self._managed[name][version]
+            entry = mv.entry
+        assert entry is not None
+        # Wait for in-flight handles to drain; the paper's refcount makes
+        # the *last releasing thread* signal, and this manager thread —
+        # not an inference thread — performs the expensive free.
+        entry.drained.wait()
+        try:
+            mv.loader.unload(entry.servable)  # release memory to the OS
+        except BaseException as exc:  # pragma: no cover
+            log.warning("unload error for %s: %s", sid, exc)
+        with self._mutex:
+            mv.state = ServableState.DISABLED
+            mv.entry = None
+            self._ram_committed -= mv.ram_bytes
+            self._event("unload_done", sid)
+            self._pending_ops -= 1
+            self._idle.notify_all()
+
+    # ------------------------------------------------------------------
+    # Inference-side API — wait-free lookup + refcounted handles.
+    # ------------------------------------------------------------------
+    def get_servable_handle(self, name: str,
+                            version: Optional[int] = None
+                            ) -> ServableHandle:
+        """Wait-free lookup: RCU snapshot read + refcount CAS.
+
+        A reader may hold a snapshot that predates a version transition
+        (old entry already UNLOADING, new version published in a newer
+        snapshot). RCU read-retry: on acquire failure, re-read; a READY
+        entry in the *current* snapshot is always acquirable because the
+        manager unpublishes before begin_unload. Retries are bounded by
+        the publish rate, never by lock-holding — still wait-free in
+        practice. Raises NotFoundError if no READY version matches."""
+        prev = None
+        while True:
+            snap = self._serving.get(name)
+            if snap is prev:  # stable snapshot, definitive miss
+                break
+            if snap is not None:
+                if version is None:
+                    # Prefer primary (= newest READY).
+                    for v in (snap.primary, *reversed(snap.versions)):
+                        entry = snap.entries.get(v)
+                        if entry is not None:
+                            h = entry.try_acquire()
+                            if h is not None:
+                                return h
+                else:
+                    entry = snap.entries.get(version)
+                    if entry is not None:
+                        h = entry.try_acquire()
+                        if h is not None:
+                            return h
+            prev = snap
+        raise NotFoundError(f"no READY servable {name!r} version={version}")
+
+    def list_available(self) -> Dict[str, Tuple[int, ...]]:
+        return {name: snap.versions
+                for name, snap in self._serving.snapshot().items()}
+
+    def state_of(self, name: str, version: int) -> Optional[ServableState]:
+        with self._mutex:
+            mv = self._managed.get(name, {}).get(version)
+            return mv.state if mv else None
+
+    def error_of(self, name: str, version: int) -> Optional[BaseException]:
+        with self._mutex:
+            mv = self._managed.get(name, {}).get(version)
+            return mv.error if mv else None
+
+    def clear_error(self, name: str, version: int) -> None:
+        """Forget an ERROR version so a future aspiration reloads it."""
+        with self._mutex:
+            managed = self._managed.get(name, {})
+            mv = managed.get(version)
+            if mv is not None and mv.state is ServableState.ERROR:
+                del managed[version]
+
+    @property
+    def ram_committed_bytes(self) -> int:
+        with self._mutex:
+            return self._ram_committed
+
+    # ------------------------------------------------------------------
+    # Background reconciliation & test support
+    # ------------------------------------------------------------------
+    def start(self, interval_s: float = 0.05) -> None:
+        def run():
+            while not self._bg_stop.wait(interval_s):
+                try:
+                    self.reconcile()
+                except Exception:  # pragma: no cover
+                    log.exception("reconcile failed")
+
+        self._bg_stop.clear()
+        self._bg_thread = threading.Thread(
+            target=run, name="tfs-manage-loop", daemon=True)
+        self._bg_thread.start()
+
+    def stop(self) -> None:
+        self._bg_stop.set()
+        if self._bg_thread is not None:
+            self._bg_thread.join(timeout=5)
+            self._bg_thread = None
+
+    def await_idle(self, timeout_s: float = 10.0) -> bool:
+        """Block until no in-flight ops AND a reconcile schedules nothing.
+
+        Drives reconciliation itself, so works without ``start()``.
+        """
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            scheduled = self.reconcile()
+            with self._mutex:
+                if scheduled == 0 and self._pending_ops == 0:
+                    return True
+                self._idle.wait(timeout=min(
+                    0.25, max(0.0, deadline - time.monotonic())))
+        return False
+
+    def shutdown(self) -> None:
+        self.stop()
+        # Un-aspire everything, drain, then stop pools.
+        with self._mutex:
+            names = list(self._aspired)
+        for name in names:
+            self.set_aspired_versions(name, [])
+        self.await_idle()
+        self._load_pool.shutdown(wait=True)
+        self._unload_pool.shutdown(wait=True)
+
+    # ------------------------------------------------------------------
+    def _event(self, kind: str, sid: ServableId, detail: str = "") -> None:
+        ev = ManagerEvent(time.monotonic(), kind, sid, detail)
+        self._events.append(ev)
+        if self._on_event is not None:
+            try:
+                self._on_event(ev)
+            except Exception:  # pragma: no cover
+                log.exception("on_event callback failed")
+
+    def events(self) -> List[ManagerEvent]:
+        return list(self._events)

@@ -1,0 +1,75 @@
+"""Read-copy-update map for wait-free servable lookup (paper §2.1.2).
+
+The paper: "Read-copy-update data structure to ensure wait-free access to
+servables by inference threads." Inference threads must never block on a
+lock held by the (slow) lifecycle path.
+
+Adaptation to Python: readers dereference ``self._snapshot`` — a single
+attribute pointing at an *immutable* dict. Attribute load is atomic under
+CPython, so the read path takes no lock and never observes a partially
+updated map. Writers copy the current snapshot, mutate the copy, and
+publish it with one reference assignment, serialized by a writer lock.
+This is exactly RCU's grace-period-free publish side; the grace period
+(safe reclamation of the old snapshot) is handled by Python GC, and safe
+reclamation of *servables* is handled by the refcounted handles, not by
+the map.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Generic, Iterator, Optional, Tuple, TypeVar
+
+K = TypeVar("K")
+V = TypeVar("V")
+
+
+class RcuMap(Generic[K, V]):
+    __slots__ = ("_snapshot", "_writer_lock")
+
+    def __init__(self) -> None:
+        self._snapshot: Dict[K, V] = {}
+        self._writer_lock = threading.Lock()
+
+    # ---- read side: wait-free, no locks -------------------------------
+    def get(self, key: K) -> Optional[V]:
+        return self._snapshot.get(key)
+
+    def snapshot(self) -> Dict[K, V]:
+        """Current immutable snapshot. Callers must not mutate it."""
+        return self._snapshot
+
+    def __contains__(self, key: K) -> bool:
+        return key in self._snapshot
+
+    def __len__(self) -> int:
+        return len(self._snapshot)
+
+    def items(self) -> Iterator[Tuple[K, V]]:
+        return iter(self._snapshot.items())
+
+    # ---- write side: copy, mutate copy, publish ------------------------
+    def insert(self, key: K, value: V) -> None:
+        with self._writer_lock:
+            new = dict(self._snapshot)
+            new[key] = value
+            self._snapshot = new
+
+    def remove(self, key: K) -> Optional[V]:
+        with self._writer_lock:
+            if key not in self._snapshot:
+                return None
+            new = dict(self._snapshot)
+            old = new.pop(key)
+            self._snapshot = new
+            return old
+
+    def update_many(self, inserts: Dict[K, V] = None,
+                    removes=()) -> None:
+        """Single atomic publish covering several changes."""
+        with self._writer_lock:
+            new = dict(self._snapshot)
+            for k in removes:
+                new.pop(k, None)
+            if inserts:
+                new.update(inserts)
+            self._snapshot = new

@@ -1,0 +1,192 @@
+"""Servable primitives: the black-box objects TF-Serving manages.
+
+Paper §2.1: "these modules treat models as black boxes called servables,
+which could be anything" — models, lookup tables, vocabularies. The
+manager never introspects a servable beyond its declared resource
+estimate; it only loads, serves handles to, and unloads it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+import time
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class ServableId:
+    """(name, version) — the unit of lifecycle management."""
+
+    name: str
+    version: int
+
+    def __str__(self) -> str:
+        return f"{self.name}@v{self.version}"
+
+
+class ServableState(enum.Enum):
+    """Lifecycle states tracked by the manager (paper Fig. 1 chain)."""
+
+    NEW = "new"                # aspired, not yet approved for load
+    LOADING = "loading"        # loader.load() running on a load thread
+    READY = "ready"            # serving traffic; handles may be issued
+    UNLOADING = "unloading"    # draining handles, then freeing memory
+    ERROR = "error"            # load failed; retained for debugging
+    DISABLED = "disabled"      # unloaded; terminal
+
+
+@dataclasses.dataclass
+class ResourceEstimate:
+    """RAM estimate used by load gating and by the TFS^2 Controller.
+
+    ``ram_bytes`` is the steady-state footprint (params + any persistent
+    cache); ``transient_ram_bytes`` is extra memory needed only during
+    load (e.g. deserialization double-buffering). The availability-
+    preserving policy must fit old + new + transient simultaneously.
+    """
+
+    ram_bytes: int
+    transient_ram_bytes: int = 0
+
+    @property
+    def peak_ram_bytes(self) -> int:
+        return self.ram_bytes + self.transient_ram_bytes
+
+
+class Servable:
+    """Base black box. Subclasses hold whatever payload they want.
+
+    The only contract: ``unload()`` releases the payload's memory, and is
+    guaranteed by the manager to run on a *manager* thread — never on an
+    inference thread (paper §2.1.2, "freeing of memory ... occurs in a
+    manager thread"). ``call(method, request)`` is the generic inference
+    entry used by RPC handlers for model servables.
+    """
+
+    def __init__(self, servable_id: ServableId):
+        self.id = servable_id
+
+    def call(self, method: str, request: Any) -> Any:  # pragma: no cover
+        raise NotImplementedError(f"{type(self).__name__} is not callable")
+
+    def unload(self) -> None:
+        """Release memory. Runs on a manager thread only."""
+
+    def resource_estimate(self) -> ResourceEstimate:
+        return ResourceEstimate(ram_bytes=0)
+
+
+class RawDictServable(Servable):
+    """Non-model servable, e.g. a feature-transform lookup table.
+
+    Exists to honor the paper's point that servables "do not need to be
+    machine learning models at all".
+    """
+
+    def __init__(self, servable_id: ServableId, table: dict,
+                 ram_bytes: int = 0):
+        super().__init__(servable_id)
+        self.table: Optional[dict] = table
+        self._ram = ram_bytes or len(table) * 64
+
+    def call(self, method: str, request: Any) -> Any:
+        if method != "lookup":
+            raise ValueError(f"unknown method {method!r}")
+        assert self.table is not None, "servable already unloaded"
+        return self.table.get(request)
+
+    def unload(self) -> None:
+        self.table = None
+
+    def resource_estimate(self) -> ResourceEstimate:
+        return ResourceEstimate(ram_bytes=self._ram)
+
+
+class ServableHandle:
+    """Ref-counted access to a READY servable (paper §2.1.2).
+
+    Inference threads acquire a handle, run inference, and release it.
+    The manager may mark a servable as unloading at any time; the actual
+    ``unload()`` runs only after the last handle is released, and it runs
+    on the *manager's* unload executor — the releasing inference thread
+    merely decrements a counter and (if last) signals an event. This is
+    the paper's "custom reference-counted servable handles that ensure
+    the freeing of memory ... occurs in a manager thread".
+
+    Use as a context manager::
+
+        with manager.get_servable_handle(name) as servable:
+            out = servable.call("predict", batch)
+    """
+
+    __slots__ = ("_entry", "_released")
+
+    def __init__(self, entry: "_RefCountedEntry"):
+        self._entry = entry
+        self._released = False
+
+    @property
+    def servable(self) -> Servable:
+        return self._entry.servable
+
+    @property
+    def id(self) -> ServableId:
+        return self._entry.servable.id
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._entry.dec_ref()
+
+    def __enter__(self) -> Servable:
+        return self._entry.servable
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __del__(self):  # safety net; correct code releases explicitly
+        if not self._released:
+            self.release()
+
+
+class _RefCountedEntry:
+    """Internal refcount wrapper stored in the manager's RCU map."""
+
+    __slots__ = ("servable", "_count", "_lock", "drained", "state",
+                 "load_time_s")
+
+    def __init__(self, servable: Servable):
+        self.servable = servable
+        self._count = 0
+        self._lock = threading.Lock()
+        # Set once refcount hits zero *after* the manager marked the
+        # entry UNLOADING. The unload executor waits on it.
+        self.drained = threading.Event()
+        self.state = ServableState.READY
+        self.load_time_s = time.monotonic()
+
+    def try_acquire(self) -> Optional[ServableHandle]:
+        with self._lock:
+            if self.state is not ServableState.READY:
+                return None
+            self._count += 1
+        return ServableHandle(self)
+
+    def dec_ref(self) -> None:
+        with self._lock:
+            self._count -= 1
+            if self._count == 0 and self.state is ServableState.UNLOADING:
+                self.drained.set()
+
+    def begin_unload(self) -> None:
+        """Mark UNLOADING; no new handles will be issued."""
+        with self._lock:
+            self.state = ServableState.UNLOADING
+            if self._count == 0:
+                self.drained.set()
+
+    @property
+    def ref_count(self) -> int:
+        with self._lock:
+            return self._count

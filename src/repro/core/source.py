@@ -1,0 +1,205 @@
+"""Sources and the aspired-versions API (paper §2.1, §2.1.1).
+
+The aspired-versions API is uni-directional and idempotent: a Source
+calls ``set_aspired_versions(servable_name, [versions...])`` with the
+*complete* list of versions it wants memory-resident. Versions absent
+from the list are implicitly un-aspired. A Source never needs to know
+what is currently loaded.
+
+The API is "templated by the type of data T passed with each version":
+a file-system Source emits ``T = str`` (paths); after the SourceAdapter
+chain, the Manager requires ``T = Loader``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import threading
+from typing import Callable, Dict, Generic, List, Optional, Sequence, TypeVar
+
+from repro.core.servable import ServableId
+
+T = TypeVar("T")
+
+
+@dataclasses.dataclass(frozen=True)
+class AspiredVersion(Generic[T]):
+    """One (version, payload) pair flowing through the aspired-versions API."""
+
+    id: ServableId
+    data: T
+
+
+# The callback every Source/SourceAdapter/SourceRouter pushes into.
+# Args: servable name, full list of aspired versions for that servable.
+AspiredVersionsCallback = Callable[[str, Sequence[AspiredVersion]], None]
+
+
+class Source(Generic[T]):
+    """Base source: owns a downstream callback and pushes aspirations."""
+
+    def __init__(self) -> None:
+        self._callback: Optional[AspiredVersionsCallback] = None
+        self._lock = threading.Lock()
+
+    def set_aspired_versions_callback(
+            self, callback: AspiredVersionsCallback) -> None:
+        with self._lock:
+            self._callback = callback
+
+    def _emit(self, name: str, versions: Sequence[AspiredVersion]) -> None:
+        with self._lock:
+            cb = self._callback
+        if cb is not None:
+            cb(name, list(versions))
+
+
+class StaticSource(Source[T]):
+    """Aspires a fixed set once — useful for tests and one-shot servers."""
+
+    def __init__(self, aspirations: Dict[str, Sequence[AspiredVersion]]):
+        super().__init__()
+        self._aspirations = aspirations
+
+    def fire(self) -> None:
+        for name, versions in self._aspirations.items():
+            self._emit(name, versions)
+
+
+@dataclasses.dataclass
+class ServableVersionPolicy:
+    """Which versions of one servable a FileSystemSource aspires.
+
+    Reproduces paper §2.1.1:
+      * ``latest`` (default): aspire the largest-numbered version.
+      * ``canary``: aspire the latest *and* the previous version
+        simultaneously — traffic stays on the older primary while the new
+        one is compared (load new without unloading old).
+      * ``specific``: pin an exact version — this is *rollback* ("switch
+        to aspiring a specific older version").
+      * ``all``: aspire everything present (A/B experimentation).
+    """
+
+    mode: str = "latest"          # latest | canary | specific | all
+    specific_version: Optional[int] = None
+    num_latest: int = 1           # for mode=latest: serve N newest
+
+    def select(self, available: Sequence[int]) -> List[int]:
+        if not available:
+            return []
+        ordered = sorted(available, reverse=True)
+        if self.mode == "latest":
+            return ordered[: self.num_latest]
+        if self.mode == "canary":
+            return ordered[:2]
+        if self.mode == "specific":
+            if self.specific_version in available:
+                return [self.specific_version]
+            return []
+        if self.mode == "all":
+            return list(ordered)
+        raise ValueError(f"unknown version policy mode {self.mode!r}")
+
+
+class FileSystemSource(Source[str]):
+    """Canonical Source: polls directories for numbered version subdirs.
+
+    Configured with servable→directory pairs; each version is a
+    subdirectory whose name is an integer (the TF-Serving convention,
+    e.g. ``/models/mnist/3/``). ``poll()`` scans and emits the full
+    aspired list per servable — idempotent by construction, so callers
+    may poll on a timer thread or manually (tests do the latter).
+    """
+
+    VERSION_RE = re.compile(r"^\d+$")
+
+    def __init__(self, servable_dirs: Dict[str, str],
+                 policies: Optional[Dict[str, ServableVersionPolicy]] = None):
+        super().__init__()
+        self._dirs = dict(servable_dirs)
+        self._policies = dict(policies or {})
+        self._poll_lock = threading.Lock()
+        self._timer: Optional[threading.Timer] = None
+        self._stopped = False
+
+    def policy_for(self, name: str) -> ServableVersionPolicy:
+        return self._policies.setdefault(name, ServableVersionPolicy())
+
+    def set_policy(self, name: str, policy: ServableVersionPolicy) -> None:
+        """Runtime policy switch — how canary→promote and rollback happen."""
+        self._policies[name] = policy
+
+    def add_servable(self, name: str, directory: str,
+                     policy: Optional[ServableVersionPolicy] = None) -> None:
+        self._dirs[name] = directory
+        if policy is not None:
+            self._policies[name] = policy
+
+    def remove_servable(self, name: str) -> None:
+        self._dirs.pop(name, None)
+        self._policies.pop(name, None)
+        self._emit(name, [])  # un-aspire everything
+
+    def list_versions(self, name: str) -> List[int]:
+        directory = self._dirs.get(name)
+        if directory is None or not os.path.isdir(directory):
+            return []
+        out = []
+        for entry in os.listdir(directory):
+            if self.VERSION_RE.match(entry) and \
+                    os.path.isdir(os.path.join(directory, entry)):
+                out.append(int(entry))
+        return sorted(out)
+
+    def poll(self) -> None:
+        with self._poll_lock:
+            for name, directory in list(self._dirs.items()):
+                available = self.list_versions(name)
+                chosen = self.policy_for(name).select(available)
+                versions = [
+                    AspiredVersion(
+                        id=ServableId(name, v),
+                        data=os.path.join(directory, str(v)))
+                    for v in sorted(chosen)
+                ]
+                self._emit(name, versions)
+
+    # -- background polling ------------------------------------------------
+    def start_polling(self, interval_s: float) -> None:
+        self._stopped = False
+
+        def tick():
+            if self._stopped:
+                return
+            self.poll()
+            self._timer = threading.Timer(interval_s, tick)
+            self._timer.daemon = True
+            self._timer.start()
+
+        tick()
+
+    def stop_polling(self) -> None:
+        self._stopped = True
+        if self._timer is not None:
+            self._timer.cancel()
+
+
+class SourceRouter(Generic[T]):
+    """Splits one aspired-versions stream across downstream outputs
+    (paper §2.1: route TensorFlow vs. BananaFlow models differently).
+
+    ``route_fn(name, versions) -> output index``. Each output is itself a
+    Source, so adapters/managers connect to it as usual.
+    """
+
+    def __init__(self, num_outputs: int,
+                 route_fn: Callable[[str, Sequence[AspiredVersion]], int]):
+        self._route_fn = route_fn
+        self.outputs: List[Source[T]] = [Source() for _ in range(num_outputs)]
+
+    def __call__(self, name: str, versions: Sequence[AspiredVersion]) -> None:
+        idx = self._route_fn(name, versions)
+        if not 0 <= idx < len(self.outputs):
+            raise IndexError(f"router returned invalid output {idx}")
+        self.outputs[idx]._emit(name, versions)

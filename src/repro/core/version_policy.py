@@ -1,0 +1,79 @@
+"""Version-transition policies (paper §2.1.2).
+
+AspiredVersionsManager is "parameterized by a version transition policy
+which is one of: (1) an availability-preserving policy that loads a new
+version of a servable before unloading the old one; (2) a resource-
+preserving policy that does the opposite."
+
+The policy is consulted during reconciliation with the current per-
+servable picture and answers one question: which pending actions may
+start *now*.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import List, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class PendingAction:
+    kind: str       # "load" | "unload"
+    version: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ServablePicture:
+    """What the manager knows about one servable at reconcile time."""
+
+    ready_versions: Sequence[int]      # READY (serving)
+    loading_versions: Sequence[int]    # load in flight
+    unloading_versions: Sequence[int]  # unload in flight
+    to_load: Sequence[int]             # aspired, not yet started
+    to_unload: Sequence[int]           # un-aspired, still READY
+
+
+class VersionTransitionPolicy(abc.ABC):
+    name: str = "base"
+
+    @abc.abstractmethod
+    def actions(self, pic: ServablePicture) -> List[PendingAction]:
+        """Actions safe to start now. Called under the manager mutex."""
+
+
+class AvailabilityPreservingPolicy(VersionTransitionPolicy):
+    """Load-before-unload: never drop below the aspired availability.
+
+    Unloads are released only when no load is pending or in flight —
+    i.e. the replacement is already READY. Requires peak RAM for old+new
+    simultaneously (paper: the default for most deployments).
+    """
+
+    name = "availability_preserving"
+
+    def actions(self, pic: ServablePicture) -> List[PendingAction]:
+        out = [PendingAction("load", v) for v in pic.to_load]
+        loads_outstanding = bool(pic.to_load) or bool(pic.loading_versions)
+        if not loads_outstanding:
+            out.extend(PendingAction("unload", v) for v in pic.to_unload)
+        elif pic.ready_versions:
+            # Old versions keep serving while replacements load; nothing
+            # to unload yet.
+            pass
+        return out
+
+
+class ResourcePreservingPolicy(VersionTransitionPolicy):
+    """Unload-before-load: for models so large two versions can't coexist
+    in RAM. Accepts an availability lapse (other replicas / retrying
+    batch clients cover it, per the paper).
+    """
+
+    name = "resource_preserving"
+
+    def actions(self, pic: ServablePicture) -> List[PendingAction]:
+        out = [PendingAction("unload", v) for v in pic.to_unload]
+        unloads_outstanding = bool(pic.to_unload) or bool(pic.unloading_versions)
+        if not unloads_outstanding:
+            out.extend(PendingAction("load", v) for v in pic.to_load)
+        return out

@@ -1,0 +1,81 @@
+"""Deterministic synthetic data pipeline (training substrate).
+
+A seeded, shardable token stream with a repeating-ngram structure so a
+~100M model measurably learns (loss falls well below uniform) in a few
+hundred steps — used by examples/train_e2e.py and the integration tests.
+Batches are (tokens, labels) next-token pairs; for embedding-input
+models the pipeline emits synthetic frame/patch embeddings instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class DataConfig:
+    batch_size: int = 8
+    seq_len: int = 256
+    seed: int = 0
+    # structure: order-2 markov chain over a small alphabet embedded into
+    # the full vocab, so next-token entropy ≪ log(V).
+    alphabet: int = 64
+    determinism: float = 0.9
+
+
+class SyntheticLM:
+    """Order-2 Markov source: next = f(prev2, prev1) w.p. determinism."""
+
+    def __init__(self, cfg: DataConfig, vocab_size: int):
+        self.cfg = cfg
+        self.vocab = vocab_size
+        a = min(cfg.alphabet, vocab_size)
+        rng = np.random.default_rng(cfg.seed)
+        self.table = rng.integers(0, a, size=(a, a)).astype(np.int32)
+        self.alphabet = a
+
+    def sample(self, rng: np.random.Generator, batch: int,
+               seq: int) -> np.ndarray:
+        a = self.alphabet
+        out = np.empty((batch, seq + 1), np.int32)
+        out[:, 0] = rng.integers(0, a, batch)
+        out[:, 1] = rng.integers(0, a, batch)
+        det = rng.random((batch, seq + 1)) < self.cfg.determinism
+        noise = rng.integers(0, a, (batch, seq + 1))
+        for t in range(2, seq + 1):
+            pred = self.table[out[:, t - 2], out[:, t - 1]]
+            out[:, t] = np.where(det[:, t], pred, noise[:, t])
+        return out
+
+    def batches(self, cfg_model: ModelConfig,
+                start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        c = self.cfg
+        step = start_step
+        while True:
+            rng = np.random.default_rng((c.seed, step))
+            toks = self.sample(rng, c.batch_size, c.seq_len)
+            batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+            if cfg_model.input_kind == "embeddings":
+                # stubbed modality frontend: deterministic embeddings per
+                # token id (frozen random codebook)
+                code_rng = np.random.default_rng(c.seed + 1)
+                codebook = code_rng.standard_normal(
+                    (self.vocab, cfg_model.d_model)).astype(np.float32)
+                batch["embeds"] = codebook[batch["tokens"]]
+            step += 1
+            yield batch
+
+    def uniform_nats(self) -> float:
+        return float(np.log(self.vocab))
+
+    def structure_nats(self) -> float:
+        """Entropy floor of the source (approx)."""
+        p = self.cfg.determinism
+        a = self.alphabet
+        h = -(p * np.log(p + 1e-12) +
+              (1 - p) * np.log((1 - p) / a + 1e-12))
+        return float(h)

@@ -1,0 +1,55 @@
+"""Reactive autoscaler (paper §3.1): "a separate system that reactively
+autoscales each serving job (dynamically adding and removing job
+replicas as load fluctuates)". Scaling signal: requests/sec per replica
+over the last tick, with hysteresis to avoid flapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+from repro.hosted.jobs import ServingJob
+
+
+@dataclasses.dataclass
+class AutoscalerConfig:
+    target_qps_per_replica: float = 100.0
+    scale_up_threshold: float = 1.2      # >120% of target -> scale up
+    scale_down_threshold: float = 0.5    # <50% of target  -> scale down
+    max_step: int = 2                    # replicas added/removed per tick
+
+
+class Autoscaler:
+    def __init__(self, jobs: Dict[str, ServingJob],
+                 cfg: AutoscalerConfig = None):
+        self.jobs = jobs
+        self.cfg = cfg or AutoscalerConfig()
+        self._last_tick = time.monotonic()
+        self.decisions = []
+
+    def tick(self) -> Dict[str, int]:
+        """Returns job -> new replica count."""
+        now = time.monotonic()
+        dt = max(now - self._last_tick, 1e-3)
+        self._last_tick = now
+        out = {}
+        for jid, job in self.jobs.items():
+            qps = job.take_request_count() / dt
+            n = job.num_replicas()
+            per_replica = qps / max(n, 1)
+            target = self.cfg.target_qps_per_replica
+            new_n = n
+            if per_replica > target * self.cfg.scale_up_threshold:
+                import math
+                want = math.ceil(qps / target)
+                new_n = min(n + self.cfg.max_step, max(want, n + 1))
+            elif per_replica < target * self.cfg.scale_down_threshold \
+                    and n > job.min_replicas:
+                new_n = max(n - self.cfg.max_step, job.min_replicas,
+                            int(qps / target) or job.min_replicas)
+            if new_n != n:
+                job.scale_to(new_n)
+                self.decisions.append((now, jid, n, new_n, qps))
+            out[jid] = job.num_replicas()
+        return out

@@ -1,0 +1,144 @@
+"""TFS² Controller (paper §3.1): add/remove/update models, estimate RAM,
+assign each model to a serving job by resource fit, honor canary and
+rollback — all state transactional in the Spanner stand-in.
+
+Assignment = best-fit-decreasing bin packing over job RAM capacity (the
+paper says "selects a serving job that has enough memory capacity";
+best-fit keeps headroom balanced for future versions, and canary
+transitions temporarily need 2× a model's RAM on its job).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.hosted.store import TransactionalStore, Txn
+
+log = logging.getLogger(__name__)
+
+
+class AdmissionError(RuntimeError):
+    """No job has enough capacity for the model."""
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    name: str
+    ram_bytes: int                     # Controller's RAM estimate
+    versions: List[int]
+    policy: str = "latest"             # latest | canary | rollback
+    pinned_version: Optional[int] = None
+    loader_ref: Any = None             # how jobs materialize a version
+
+
+class Controller:
+    def __init__(self, store: TransactionalStore,
+                 job_capacities: Dict[str, int]):
+        self.store = store
+        self.store.transact(lambda txn: [
+            txn.put(f"jobs/{jid}", {"capacity": cap, "reserved": 0,
+                                    "models": []})
+            for jid, cap in job_capacities.items()])
+
+    # -- user-facing commands (paper: "add model", "add model version") -----
+    def add_model(self, name: str, ram_bytes: int,
+                  version: int = 1, loader_ref: Any = None) -> str:
+        """Returns the assigned job id. Transactional bin-packing."""
+        def txn_fn(txn: Txn) -> str:
+            if txn.get(f"models/{name}") is not None:
+                raise ValueError(f"model {name!r} exists")
+            # canary headroom: a version transition under the
+            # availability-preserving policy needs old+new resident.
+            need = 2 * ram_bytes
+            jobs = []
+            for key in txn.keys("jobs/"):
+                j = txn.get(key)
+                jobs.append((key, j, j["capacity"] - j["reserved"]))
+            # best fit: smallest remaining capacity that still fits
+            jobs = [j for j in jobs if j[2] >= need]
+            if not jobs:
+                raise AdmissionError(
+                    f"no job fits {name} ({need/1e6:.1f} MB incl. canary"
+                    " headroom)")
+            key, j, _ = min(jobs, key=lambda t: t[2])
+            j["reserved"] += need
+            j["models"].append(name)
+            txn.put(key, j)
+            txn.put(f"models/{name}", dataclasses.asdict(ModelSpec(
+                name=name, ram_bytes=ram_bytes, versions=[version],
+                loader_ref=loader_ref)))
+            return key.split("/", 1)[1]
+
+        return self.store.transact(txn_fn)
+
+    def remove_model(self, name: str) -> None:
+        def txn_fn(txn: Txn):
+            spec = txn.get(f"models/{name}")
+            if spec is None:
+                return
+            for key in txn.keys("jobs/"):
+                j = txn.get(key)
+                if name in j["models"]:
+                    j["models"].remove(name)
+                    j["reserved"] -= 2 * spec["ram_bytes"]
+                    txn.put(key, j)
+            txn.delete(f"models/{name}")
+        self.store.transact(txn_fn)
+
+    def add_version(self, name: str, version: int) -> None:
+        def txn_fn(txn: Txn):
+            spec = txn.get(f"models/{name}")
+            if spec is None:
+                raise KeyError(name)
+            if version not in spec["versions"]:
+                spec["versions"].append(version)
+                spec["versions"].sort()
+            txn.put(f"models/{name}", spec)
+        self.store.transact(txn_fn)
+
+    def set_policy(self, name: str, policy: str,
+                   pinned_version: Optional[int] = None) -> None:
+        """policy: latest | canary | rollback (rollback pins a version)."""
+        assert policy in ("latest", "canary", "rollback")
+        def txn_fn(txn: Txn):
+            spec = txn.get(f"models/{name}")
+            if spec is None:
+                raise KeyError(name)
+            spec["policy"] = policy
+            spec["pinned_version"] = pinned_version
+            txn.put(f"models/{name}", spec)
+        self.store.transact(txn_fn)
+
+    # -- desired state consumed by Synchronizers ---------------------------
+    def desired_state(self) -> Dict[str, Dict]:
+        """job_id -> {model -> {versions, loader_ref}}."""
+        out: Dict[str, Dict] = {}
+        for key in self.store.keys("jobs/"):
+            jid = key.split("/", 1)[1]
+            job = self.store.get(key)
+            models = {}
+            for m in job["models"]:
+                spec = self.store.get(f"models/{m}")
+                if spec is None:
+                    continue
+                versions = sorted(spec["versions"])
+                if spec["policy"] == "latest":
+                    want = versions[-1:]
+                elif spec["policy"] == "canary":
+                    want = versions[-2:]
+                else:  # rollback
+                    want = ([spec["pinned_version"]]
+                            if spec["pinned_version"] in versions else
+                            versions[-1:])
+                models[m] = {"versions": want,
+                             "loader_ref": spec["loader_ref"],
+                             "ram_bytes": spec["ram_bytes"]}
+            out[jid] = models
+        return out
+
+    def job_assignment(self, name: str) -> Optional[str]:
+        for key in self.store.keys("jobs/"):
+            if name in self.store.get(key)["models"]:
+                return key.split("/", 1)[1]
+        return None

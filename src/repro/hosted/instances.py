@@ -1,0 +1,159 @@
+"""TFS² instances & partitions (paper §3.1, last two paragraphs).
+
+"We offer two TFS² instances: (1) a Temp instance where employees ...
+can try them out, and (2) a Prod instance for robust, 24/7 serving of
+production traffic. Within each instance there are several *partitions*
+which represent specialization based on hardware (e.g. we offer
+partitions with TPUs) or geography (e.g. a partition with jobs located
+in South America)."
+
+An ``Instance`` owns one Controller + per-datacenter Synchronizers per
+*partition*; ``Tfs2Service`` is the user-facing front door that routes
+"add model" commands to the right instance/partition by requirements
+(hardware, region) and implements the paper's binary-release flow:
+canary a serving-binary version in Temp before rolling to Prod
+("allows us to canary binary releases in our Temp instance before
+rolling out the release more broadly").
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.hosted.controller import AdmissionError, Controller
+from repro.hosted.jobs import ServingJob
+from repro.hosted.router import Router
+from repro.hosted.store import TransactionalStore
+from repro.hosted.synchronizer import LoaderFactory, Synchronizer
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """Specialization label set: hardware + region (paper's examples)."""
+
+    name: str
+    hardware: str = "cpu"            # cpu | tpu | gpu
+    region: str = "us"
+    job_capacities: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+
+class Partition:
+    def __init__(self, spec: PartitionSpec,
+                 loader_factory: LoaderFactory,
+                 binary_version: str = "v1"):
+        self.spec = spec
+        self.binary_version = binary_version
+        self.jobs = {jid: ServingJob(f"{spec.name}/{jid}", cap)
+                     for jid, cap in spec.job_capacities.items()}
+        self.store = TransactionalStore()
+        self.controller = Controller(
+            self.store, {jid: cap for jid, cap
+                         in spec.job_capacities.items()})
+        self._job_alias = {jid: self.jobs[jid] for jid in self.jobs}
+        self.synchronizer = Synchronizer(
+            spec.region, self.controller, self._job_alias, loader_factory)
+        self.router = Router(self.synchronizer, self._job_alias)
+
+    def matches(self, hardware: Optional[str],
+                region: Optional[str]) -> bool:
+        return ((hardware is None or self.spec.hardware == hardware) and
+                (region is None or self.spec.region == region))
+
+    def set_binary_version(self, version: str) -> None:
+        """Stand-in for restarting serving jobs on a new binary; the
+        paper's point is that hosted + stand-alone run the SAME binary
+        and Temp canaries it first."""
+        self.binary_version = version
+
+    def shutdown(self) -> None:
+        self.router.shutdown()
+        for j in self.jobs.values():
+            j.shutdown()
+
+
+class Instance:
+    """Temp or Prod: a named set of partitions."""
+
+    def __init__(self, name: str, partitions: Sequence[Partition]):
+        self.name = name
+        self.partitions = list(partitions)
+
+    def pick_partition(self, hardware=None, region=None) -> Partition:
+        for p in self.partitions:
+            if p.matches(hardware, region):
+                return p
+        raise AdmissionError(
+            f"no {self.name} partition matches hardware={hardware} "
+            f"region={region}")
+
+    def shutdown(self) -> None:
+        for p in self.partitions:
+            p.shutdown()
+
+
+class Tfs2Service:
+    """The front door: 'just upload your model to it and it gets
+    served'. Routes to Temp or Prod and to a matching partition."""
+
+    def __init__(self, temp: Instance, prod: Instance):
+        self.instances = {"temp": temp, "prod": prod}
+        self._placements: Dict[str, Tuple[str, Partition]] = {}
+
+    # -- user commands ------------------------------------------------------
+    def add_model(self, name: str, ram_bytes: int, *,
+                  instance: str = "temp", hardware: Optional[str] = None,
+                  region: Optional[str] = None,
+                  loader_ref: Any = None) -> str:
+        part = self.instances[instance].pick_partition(hardware, region)
+        job = part.controller.add_model(name, ram_bytes,
+                                        loader_ref=loader_ref)
+        part.synchronizer.sync_once()
+        self._placements[name] = (instance, part)
+        return f"{instance}/{part.spec.name}/{job}"
+
+    def promote_to_prod(self, name: str, ram_bytes: int, *,
+                        hardware: Optional[str] = None,
+                        region: Optional[str] = None,
+                        loader_ref: Any = None) -> str:
+        """The Temp→Prod graduation path."""
+        inst, part = self._placements.get(name, (None, None))
+        if inst != "temp":
+            raise KeyError(f"{name!r} is not serving in temp")
+        dest = self.add_model(name, ram_bytes, instance="prod",
+                              hardware=hardware, region=region,
+                              loader_ref=loader_ref)
+        part.controller.remove_model(name)
+        part.synchronizer.sync_once()
+        return dest
+
+    def infer(self, name: str, request: Any, method: str = "predict",
+              version: Optional[int] = None):
+        inst, part = self._placements[name]
+        return part.router.infer(name, request, method, version)
+
+    def serving_instance(self, name: str) -> Optional[str]:
+        return self._placements.get(name, (None,))[0]
+
+    # -- binary release flow -------------------------------------------------
+    def rollout_binary(self, version: str,
+                       validate: Callable[[Partition], bool]) -> bool:
+        """Canary the serving-binary release in EVERY Temp partition; on
+        success roll to Prod; on failure keep Prod on the old binary."""
+        temp = self.instances["temp"]
+        for part in temp.partitions:
+            part.set_binary_version(version)
+            if not validate(part):
+                log.warning("binary %s failed canary in %s",
+                            version, part.spec.name)
+                return False
+        for part in self.instances["prod"].partitions:
+            part.set_binary_version(version)
+        return True
+
+    def shutdown(self) -> None:
+        for inst in self.instances.values():
+            inst.shutdown()

@@ -1,0 +1,168 @@
+"""Serving jobs: the worker processes of TFS² (paper §3.1, Fig. 2).
+
+Each job runs "the same binary" as stand-alone deployments — here, the
+same AspiredVersionsManager — but with the *RPC-based Source* instead of
+the file-system Source (paper footnote 6): the Synchronizer pushes
+aspired versions over this source and reads load status back.
+
+A ``JobReplica`` optionally injects simulated per-request latency (base +
+heavy tail) so the Router's hedged-request benefit is measurable in
+benchmarks without real hardware contention.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import (AspiredVersion, AspiredVersionsManager,
+                        CallableLoader, NotFoundError, ResourceEstimate,
+                        Servable, ServableId, Source)
+
+
+class RpcSource(Source):
+    """Aspired-versions source driven by Synchronizer RPCs (not polling)."""
+
+    def set_aspired(self, name: str,
+                    versions: Sequence[AspiredVersion]) -> None:
+        self._emit(name, versions)
+
+
+class LatencyModel:
+    """Deterministic-seed latency injection: base + occasional tail."""
+
+    def __init__(self, base_s: float = 0.0, tail_s: float = 0.0,
+                 tail_prob: float = 0.0, seed: int = 0):
+        self.base_s = base_s
+        self.tail_s = tail_s
+        self.tail_prob = tail_prob
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+
+    def sample(self) -> float:
+        with self._lock:
+            tail = self._rng.random() < self.tail_prob
+        return self.base_s + (self.tail_s if tail else 0.0)
+
+
+class JobReplica:
+    """One replica of a serving job: manager + RPC source + stats."""
+
+    def __init__(self, job_id: str, replica_idx: int,
+                 capacity_bytes: int,
+                 latency: Optional[LatencyModel] = None):
+        self.job_id = job_id
+        self.replica_idx = replica_idx
+        self.name = f"{job_id}/r{replica_idx}"
+        self.capacity_bytes = capacity_bytes
+        self.latency = latency or LatencyModel()
+        self.source = RpcSource()
+        self.manager = AspiredVersionsManager(
+            num_load_threads=2, ram_budget_bytes=capacity_bytes)
+        self.source.set_aspired_versions_callback(
+            self.manager.set_aspired_versions)
+        self._req_count = 0
+        self._req_lock = threading.Lock()
+
+    # -- Synchronizer-facing -------------------------------------------------
+    def sync_aspirations(
+            self, aspirations: Dict[str, Sequence[AspiredVersion]]) -> None:
+        for name, versions in aspirations.items():
+            self.source.set_aspired(name, versions)
+        self.manager.await_idle(timeout_s=30)
+
+    def loaded_status(self) -> Dict[str, Tuple[int, ...]]:
+        return self.manager.list_available()
+
+    # -- Router-facing ---------------------------------------------------------
+    def infer(self, model: str, method: str, request: Any,
+              version: Optional[int] = None) -> Any:
+        delay = self.latency.sample()
+        if delay:
+            time.sleep(delay)
+        with self._req_lock:
+            self._req_count += 1
+        with self.manager.get_servable_handle(model, version) as s:
+            return s.call(method, request)
+
+    def take_request_count(self) -> int:
+        with self._req_lock:
+            n = self._req_count
+            self._req_count = 0
+            return n
+
+    def ram_used(self) -> int:
+        return self.manager.ram_committed_bytes
+
+    def shutdown(self) -> None:
+        self.manager.shutdown()
+
+
+class ServingJob:
+    """A job group: N identical replicas (autoscaler adds/removes them)."""
+
+    def __init__(self, job_id: str, capacity_bytes: int,
+                 latency_factory: Callable[[int], LatencyModel] = None,
+                 min_replicas: int = 1, max_replicas: int = 8):
+        self.job_id = job_id
+        self.capacity_bytes = capacity_bytes
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self._latency_factory = latency_factory or (lambda i: LatencyModel())
+        self._lock = threading.Lock()
+        self.replicas: List[JobReplica] = []
+        self._aspirations: Dict[str, Sequence[AspiredVersion]] = {}
+        for _ in range(min_replicas):
+            self._add_replica_locked()
+
+    def _add_replica_locked(self) -> JobReplica:
+        idx = len(self.replicas)
+        r = JobReplica(self.job_id, idx, self.capacity_bytes,
+                       self._latency_factory(idx))
+        self.replicas.append(r)
+        return r
+
+    def scale_to(self, n: int) -> None:
+        n = max(self.min_replicas, min(self.max_replicas, n))
+        with self._lock:
+            while len(self.replicas) < n:
+                r = self._add_replica_locked()
+                r.sync_aspirations(self._aspirations)
+            while len(self.replicas) > n:
+                self.replicas.pop().shutdown()
+
+    def num_replicas(self) -> int:
+        with self._lock:
+            return len(self.replicas)
+
+    def sync_aspirations(self, aspirations) -> None:
+        with self._lock:
+            self._aspirations = dict(aspirations)
+            replicas = list(self.replicas)
+        for r in replicas:
+            r.sync_aspirations(aspirations)
+
+    def loaded_status(self) -> Dict[str, Tuple[int, ...]]:
+        """Intersection across replicas (a model is 'loaded' when every
+        replica can serve it)."""
+        with self._lock:
+            replicas = list(self.replicas)
+        if not replicas:
+            return {}
+        status = replicas[0].loaded_status()
+        for r in replicas[1:]:
+            other = r.loaded_status()
+            status = {m: tuple(v for v in vs if v in other.get(m, ()))
+                      for m, vs in status.items() if m in other}
+        return {m: vs for m, vs in status.items() if vs}
+
+    def take_request_count(self) -> int:
+        with self._lock:
+            return sum(r.take_request_count() for r in self.replicas)
+
+    def shutdown(self) -> None:
+        with self._lock:
+            for r in self.replicas:
+                r.shutdown()
+            self.replicas.clear()

@@ -1,0 +1,81 @@
+"""Router (paper §3.1): forwards inference RPCs to serving-job replicas
+hosting the requested model, with *hedged backup requests* [Dean 2012]
+to cut tail latency from transient replica slowness: the request goes to
+one replica; if no reply within ``hedge_delay_s``, a backup goes to a
+second replica; first reply wins.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Any, Dict, Optional, Tuple
+
+from repro.hosted.jobs import JobReplica, ServingJob
+from repro.hosted.synchronizer import Synchronizer
+
+
+class NoReplicaError(RuntimeError):
+    pass
+
+
+class Router:
+    def __init__(self, synchronizer: Synchronizer,
+                 jobs: Dict[str, ServingJob],
+                 hedge_delay_s: Optional[float] = 0.010,
+                 max_workers: int = 32):
+        self.sync = synchronizer
+        self.jobs = jobs
+        self.hedge_delay_s = hedge_delay_s
+        self._rr = itertools.count()
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="tfs2-router")
+        self.stats = {"requests": 0, "hedged": 0, "hedge_wins": 0}
+        self._stats_lock = threading.Lock()
+
+    def _replicas_for(self, model: str):
+        loaded = self.sync.loaded_status()
+        for jid, models in loaded.items():
+            if model in models and models[model]:
+                job = self.jobs[jid]
+                with job._lock:
+                    return list(job.replicas)
+        return []
+
+    def infer(self, model: str, request: Any, method: str = "predict",
+              version: Optional[int] = None) -> Any:
+        replicas = self._replicas_for(model)
+        if not replicas:
+            raise NoReplicaError(f"model {model!r} not loaded anywhere")
+        with self._stats_lock:
+            self.stats["requests"] += 1
+        start = next(self._rr)
+        primary = replicas[start % len(replicas)]
+
+        if self.hedge_delay_s is None or len(replicas) == 1:
+            return primary.infer(model, method, request, version)
+
+        f1 = self._pool.submit(primary.infer, model, method, request,
+                               version)
+        done, _ = wait([f1], timeout=self.hedge_delay_s)
+        if done:
+            return f1.result()
+        # hedge: backup to the next replica
+        backup = replicas[(start + 1) % len(replicas)]
+        with self._stats_lock:
+            self.stats["hedged"] += 1
+        f2 = self._pool.submit(backup.infer, model, method, request,
+                               version)
+        done, _ = wait([f1, f2], return_when=FIRST_COMPLETED)
+        winner = done.pop()
+        if winner is f2:
+            with self._stats_lock:
+                self.stats["hedge_wins"] += 1
+        try:
+            return winner.result()
+        except BaseException:
+            other = f2 if winner is f1 else f1
+            return other.result()
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=False)

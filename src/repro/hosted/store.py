@@ -1,0 +1,98 @@
+"""Transactional state store — the in-process stand-in for Spanner.
+
+Paper §3.1: "The Controller keeps all its state in Spanner, a globally-
+replicated database system, and manages it transactionally." We
+reproduce the transactional semantics the Controller relies on
+(snapshot reads + optimistic-concurrency commits with read-set
+validation), not the geo-replication.
+"""
+from __future__ import annotations
+
+import copy
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+class TxnConflict(RuntimeError):
+    pass
+
+
+class TransactionalStore:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._data: Dict[str, Tuple[int, Any]] = {}   # key -> (version, val)
+        self.commits = 0
+        self.conflicts = 0
+
+    # -- snapshot reads ----------------------------------------------------
+    def get(self, key: str) -> Optional[Any]:
+        with self._lock:
+            entry = self._data.get(key)
+            return copy.deepcopy(entry[1]) if entry else None
+
+    def keys(self, prefix: str = ""):
+        with self._lock:
+            return sorted(k for k in self._data if k.startswith(prefix))
+
+    # -- transactions --------------------------------------------------------
+    def transact(self, fn: Callable[["Txn"], Any], max_retries: int = 16
+                 ) -> Any:
+        """Run ``fn(txn)``; commit atomically; retry on conflicts."""
+        for _ in range(max_retries):
+            txn = Txn(self)
+            result = fn(txn)
+            if self._commit(txn):
+                return result
+            self.conflicts += 1
+        raise TxnConflict("too many transaction conflicts")
+
+    def _commit(self, txn: "Txn") -> bool:
+        with self._lock:
+            for key, seen_ver in txn.read_versions.items():
+                cur = self._data.get(key)
+                cur_ver = cur[0] if cur else -1
+                if cur_ver != seen_ver:
+                    return False
+            for key, val in txn.writes.items():
+                if val is _DELETED:
+                    self._data.pop(key, None)
+                else:
+                    old = self._data.get(key)
+                    ver = (old[0] + 1) if old else 0
+                    self._data[key] = (ver, copy.deepcopy(val))
+            self.commits += 1
+            return True
+
+
+_DELETED = object()
+
+
+class Txn:
+    def __init__(self, store: TransactionalStore):
+        self._store = store
+        self.read_versions: Dict[str, int] = {}
+        self.writes: Dict[str, Any] = {}
+
+    def get(self, key: str) -> Optional[Any]:
+        if key in self.writes:
+            val = self.writes[key]
+            return None if val is _DELETED else copy.deepcopy(val)
+        with self._store._lock:
+            entry = self._store._data.get(key)
+            self.read_versions[key] = entry[0] if entry else -1
+            return copy.deepcopy(entry[1]) if entry else None
+
+    def keys(self, prefix: str = ""):
+        with self._store._lock:
+            ks = sorted(k for k in self._store._data if k.startswith(prefix))
+            for k in ks:
+                self.read_versions.setdefault(k, self._store._data[k][0])
+        extra = [k for k, v in self.writes.items()
+                 if k.startswith(prefix) and v is not _DELETED]
+        return sorted(set(ks) | set(extra))
+
+    def put(self, key: str, value: Any) -> None:
+        self.writes[key] = value
+
+    def delete(self, key: str) -> None:
+        self.writes[key] = _DELETED

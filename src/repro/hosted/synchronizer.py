@@ -1,0 +1,63 @@
+"""Synchronizer (paper §3.1): one per datacenter. Reads the Controller's
+desired state, instructs each serving job which model versions to keep
+loaded (via the jobs' RPC Sources), and reports successfully-loaded
+models to the Router for request forwarding.
+"""
+from __future__ import annotations
+
+import logging
+import threading
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+from repro.core import AspiredVersion, CallableLoader, ResourceEstimate, \
+    ServableId
+from repro.core.loader import Loader
+from repro.hosted.controller import Controller
+from repro.hosted.jobs import ServingJob
+
+log = logging.getLogger(__name__)
+
+# loader_ref -> Loader factory. In production this dereferences a model
+# store path; in tests it builds CallableLoaders around tiny JAX models.
+LoaderFactory = Callable[[str, int, Any, int], Loader]
+#                        (name, version, loader_ref, ram_bytes)
+
+
+class Synchronizer:
+    def __init__(self, datacenter: str, controller: Controller,
+                 jobs: Dict[str, ServingJob],
+                 loader_factory: LoaderFactory):
+        self.datacenter = datacenter
+        self.controller = controller
+        self.jobs = jobs
+        self.loader_factory = loader_factory
+        self._lock = threading.Lock()
+        self._loaded: Dict[str, Dict[str, Tuple[int, ...]]] = {}
+
+    def sync_once(self) -> Dict[str, Dict[str, Tuple[int, ...]]]:
+        """Push desired state to every job; gather loaded status."""
+        desired = self.controller.desired_state()
+        loaded: Dict[str, Dict[str, Tuple[int, ...]]] = {}
+        for jid, job in self.jobs.items():
+            models = desired.get(jid, {})
+            aspirations = {}
+            for name, info in models.items():
+                aspirations[name] = [
+                    AspiredVersion(
+                        id=ServableId(name, v),
+                        data=self.loader_factory(
+                            name, v, info["loader_ref"],
+                            info["ram_bytes"]))
+                    for v in info["versions"]]
+            # also un-aspire models no longer assigned here
+            for name in job.loaded_status():
+                aspirations.setdefault(name, [])
+            job.sync_aspirations(aspirations)
+            loaded[jid] = job.loaded_status()
+        with self._lock:
+            self._loaded = loaded
+        return loaded
+
+    def loaded_status(self) -> Dict[str, Dict[str, Tuple[int, ...]]]:
+        with self._lock:
+            return dict(self._loaded)

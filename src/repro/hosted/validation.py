@@ -1,0 +1,192 @@
+"""End-to-end ML pipeline steps (paper §3.2): model validation gates and
+training/serving skew detection.
+
+"Other key components include model training, quality validation
+(comparing inference results versus prior trained versions), robustness
+validation (ensuring a model does not induce a server to crash), and
+detection of training/serving skew. Google users can set up pipelines
+consisting of these steps, which inject successful model versions into
+either stand-alone serving jobs or TFS²."
+
+Gates run BEFORE a version is aspired: a ValidationPipeline wraps a
+candidate checkpoint, runs each gate, and only publishes (or promotes)
+the version if all pass — the codified best practice the hosted service
+exists to enforce (§1: "codify best practices such as validating model
+quality before serving a new version").
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.loader import Loader
+from repro.core.servable import Servable
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class GateResult:
+    gate: str
+    passed: bool
+    detail: str = ""
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+class RobustnessGate:
+    """The model must not crash (or NaN) the server on a probe workload.
+
+    Probes: the reference batch, an empty-ish batch, out-of-range-ish
+    token ids clipped by contract, and oversized batch.
+    """
+
+    name = "robustness"
+
+    def __init__(self, probe_batches: Sequence[Dict[str, np.ndarray]]):
+        self.probes = list(probe_batches)
+
+    def run(self, candidate: Servable,
+            baseline: Optional[Servable]) -> GateResult:
+        for i, probe in enumerate(self.probes):
+            try:
+                out = candidate.call("predict", probe)
+            except Exception as exc:
+                return GateResult(self.name, False,
+                                  f"probe {i} raised {exc!r}")
+            arr = np.asarray(out, dtype=np.float32)
+            if not np.all(np.isfinite(arr)):
+                return GateResult(self.name, False,
+                                  f"probe {i} produced non-finite values")
+        return GateResult(self.name, True,
+                          f"{len(self.probes)} probes clean")
+
+
+class QualityGate:
+    """Compare candidate vs the currently-serving version on an eval set
+    (paper: 'comparing inference results versus prior trained
+    versions'). Metric: mean NLL of gold labels; candidate must not
+    regress more than ``max_regression`` nats."""
+
+    name = "quality"
+
+    def __init__(self, eval_batch: Dict[str, np.ndarray],
+                 labels: np.ndarray, max_regression: float = 0.05):
+        self.eval_batch = eval_batch
+        self.labels = labels
+        self.max_regression = max_regression
+
+    @staticmethod
+    def _nll(servable: Servable, batch, labels) -> float:
+        logits = np.asarray(servable.call("predict", batch),
+                            dtype=np.float64)
+        logits -= logits.max(-1, keepdims=True)
+        logp = logits - np.log(np.exp(logits).sum(-1, keepdims=True))
+        gold = np.take_along_axis(logp, labels[..., None], -1)[..., 0]
+        return float(-gold.mean())
+
+    def run(self, candidate: Servable,
+            baseline: Optional[Servable]) -> GateResult:
+        cand = self._nll(candidate, self.eval_batch, self.labels)
+        if baseline is None:
+            return GateResult(self.name, True,
+                              f"no baseline; candidate NLL={cand:.4f}",
+                              {"candidate_nll": cand})
+        base = self._nll(baseline, self.eval_batch, self.labels)
+        ok = cand <= base + self.max_regression
+        return GateResult(
+            self.name, ok,
+            f"candidate NLL={cand:.4f} vs baseline {base:.4f} "
+            f"(max regression {self.max_regression})",
+            {"candidate_nll": cand, "baseline_nll": base})
+
+
+class SkewDetector:
+    """Training/serving skew (paper §2.2, [2]): the distribution of
+    serving-time outputs must match training-time expectations.
+
+    We log per-request prediction histograms at serving time (via the
+    InferenceLog-adjacent hook) and compare against a training-time
+    reference histogram with a chi-square-style distance; distance above
+    threshold flags skew — the classic symptom of a feature-transform
+    mismatch between the training pipeline and the serving path.
+    """
+
+    name = "skew"
+
+    def __init__(self, reference_hist: np.ndarray, threshold: float = 0.2):
+        ref = np.asarray(reference_hist, np.float64)
+        self.reference = ref / ref.sum()
+        self.threshold = threshold
+        self._counts = np.zeros_like(self.reference)
+
+    @staticmethod
+    def histogram_of(logits: np.ndarray, bins: int) -> np.ndarray:
+        preds = np.argmax(logits, axis=-1).reshape(-1)
+        return np.bincount(preds % bins, minlength=bins)
+
+    def observe(self, logits: np.ndarray) -> None:
+        self._counts += self.histogram_of(np.asarray(logits),
+                                          len(self.reference))
+
+    def distance(self) -> float:
+        if self._counts.sum() == 0:
+            return 0.0
+        obs = self._counts / self._counts.sum()
+        m = 0.5 * (obs + self.reference)
+        chi = 0.5 * np.sum((obs - m) ** 2 / np.maximum(m, 1e-12)) + \
+            0.5 * np.sum((self.reference - m) ** 2 /
+                         np.maximum(m, 1e-12))
+        return float(chi)
+
+    def skewed(self) -> bool:
+        return self.distance() > self.threshold
+
+
+class ValidationPipeline:
+    """Run gates against a candidate Loader; publish only on pass.
+
+    ``publish`` is whatever injects the version (e.g. Controller
+    add_version, or moving the checkpoint into the Source directory).
+    """
+
+    def __init__(self, gates: Sequence[Any]):
+        self.gates = list(gates)
+        self.history: List[Tuple[str, List[GateResult]]] = []
+
+    def validate(self, candidate_loader: Loader,
+                 baseline: Optional[Servable] = None
+                 ) -> Tuple[bool, List[GateResult]]:
+        results: List[GateResult] = []
+        candidate = None
+        try:
+            candidate = candidate_loader.load()
+        except Exception as exc:
+            results.append(GateResult("load", False, repr(exc)))
+            self.history.append((str(candidate_loader.id), results))
+            return False, results
+        results.append(GateResult("load", True))
+        for gate in self.gates:
+            res = gate.run(candidate, baseline)
+            results.append(res)
+            if not res.passed:
+                break
+        passed = all(r.passed for r in results)
+        self.history.append((str(candidate_loader.id), results))
+        # candidate was a scratch load for validation; release it
+        try:
+            candidate.unload()
+        except Exception:  # pragma: no cover
+            log.exception("candidate unload failed")
+        return passed, results
+
+    def validate_and_publish(self, candidate_loader: Loader,
+                             publish: Callable[[], Any],
+                             baseline: Optional[Servable] = None):
+        ok, results = self.validate(candidate_loader, baseline)
+        if ok:
+            publish()
+        return ok, results

@@ -1,0 +1,108 @@
+"""GQA decode attention (one query token vs. KV cache) as a Pallas kernel.
+
+The serving hot spot (paper §2.2.1's motivation for batching): decode is
+memory-bound — each step streams the whole KV cache from HBM once. The
+kernel tiles the cache sequence dim; for each (batch, kv-head) the
+*group* of q heads that share that kv head (G = Hq/Hk) rides along as
+the sublane dim of one (G, D) q block, so the streamed K/V block is
+reused G times from VMEM — the GQA arithmetic-intensity win, explicit.
+
+Variable-length batches: ``lengths`` (B,) lives in SMEM via
+PrefetchScalarGridSpec; kv blocks beyond a row's length are masked (and
+compute-skippable — §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(lengths_ref,            # scalar prefetch (SMEM): (B,)
+                   q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr,
+                   *, bk: int, scale: float):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # mask invalid cache slots for this row
+    length = lengths_ref[b]
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < length
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, lengths, *, block_k: int = 512,
+                 scale=None, interpret: bool = False) -> jnp.ndarray:
+    """q: (B,Hq,D); caches: (B,Hk,S,D); lengths: (B,) int32 -> (B,Hq,D)."""
+    b, hq, d = q.shape
+    hk, s = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hk
+    bk = min(block_k, s)
+    assert s % bk == 0, (s, bk)
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hk, g, d)
+
+    grid = (b, hk, s // bk)
+    kernel = functools.partial(_decode_kernel, bk=bk, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d),
+                             lambda b_, h, ki, lens: (b_, h, 0, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda b_, h, ki, lens: (b_, h, ki, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda b_, h, ki, lens: (b_, h, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda b_, h, ki, lens: (b_, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ]),
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, qg, k_cache, v_cache)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,130 @@
+"""Flash attention (prefill) as a Pallas TPU kernel.
+
+TPU adaptation of the FlashAttention blocking: the (Sq, Sk) score matrix
+never leaves VMEM — the grid walks (batch, q-head, q-block) in parallel
+and the kv-block dimension as the innermost *arbitrary* (sequential)
+axis, carrying the running max/denominator/accumulator in VMEM scratch
+across kv steps. Block shapes are multiples of the 128-lane MXU tiling;
+``head_dim`` is padded to 128 by the ops wrapper (e.g. danube's 120).
+
+GQA is handled with zero KV duplication: the k/v BlockSpec index_map
+maps q-head ``h`` to kv-head ``h // group``, so HBM→VMEM traffic for KV
+is 1/group of the MHA equivalent — this is the kernel-level reason GQA
+decode/prefill is memory-bandwidth-cheap on TPU.
+
+Causal and sliding-window masks are applied with iota comparisons; fully
+masked kv blocks still occupy grid steps (structural flops) but their
+contribution is exact-zero. See EXPERIMENTS.md §Perf for the block-skip
+iteration.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr,
+                  *, sq: int, sk: int, bq: int, bk: int, causal: bool,
+                  window: Optional[int], scale: float):
+    qi = pl.program_id(2)        # q block
+    ki = pl.program_id(3)        # kv block (innermost, sequential)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # absolute positions (q aligned to the end of k: offset = sk - sq)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (sk - sq)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                      # rescale old
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    scale: Optional[float] = None,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B,Hq,Sq,D); k,v: (B,Hk,Sk,D) -> (B,Hq,Sq,D).
+
+    D must be 128-aligned (ops.py pads); Sq/Sk padded to block multiples
+    by the wrapper.
+    """
+    b, hq, sq, d = q.shape
+    hk, sk = k.shape[1], k.shape[2]
+    g = hq // hk
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+
+    grid = (b, hq, sq // bq, sk // bk)
+    kernel = functools.partial(
+        _flash_kernel, sq=sq, sk=sk, bq=bq, bk=bk, causal=causal,
+        window=window, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

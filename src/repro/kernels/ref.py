@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_flash_attention(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B,Hq,Sq,D); k,v: (B,Hk,Sk,D); GQA by head grouping.
+
+    Returns (B,Hq,Sq,D) in q.dtype; softmax in f32.
+    """
+    b, hq, sq, d = q.shape
+    hk, sk = k.shape[1], k.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, hk, g, sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf) / math.sqrt(d)
+    q_pos = jnp.arange(sk - sq, sk)[:, None]   # q aligned to end of k
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[None, None, None, :, None], p, 0.0)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def ref_flash_decode(q, k_cache, v_cache, lengths) -> jnp.ndarray:
+    """q: (B,Hq,D); caches: (B,Hk,S,D); lengths: (B,) valid prefix sizes.
+
+    Returns (B,Hq,D).
+    """
+    b, hq, d = q.shape
+    hk, s = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, hk, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg,
+                        k_cache.astype(jnp.float32)) / math.sqrt(d)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]   # (B,S)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)

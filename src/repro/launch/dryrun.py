@@ -1,0 +1,316 @@
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × applicable input shape × mesh), lower + compile
+the real step function against ShapeDtypeStruct inputs, print
+``memory_analysis()`` (does it fit 16 GiB/chip?) and ``cost_analysis()``,
+and extract the three roofline terms (deliverable g). No arrays are ever
+allocated at full scale.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the
+# device count at first backend initialization. 512 placeholder host
+# devices back both production meshes (256 used for single-pod).
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, ASSIGNED, INPUT_SHAPES, get_config, \
+    shape_applicable
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import specs as SP
+from repro.launch.hlo_analysis import dominant_term, roofline_terms
+from repro.launch.roofline import (analytic_dominant, analytic_residency,
+                                   analytic_roofline)
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+from repro.models import model as MD
+from repro.models import shardings as SH
+from repro.models.moe_a2a import mesh_context
+from repro.training.train import make_train_step
+
+
+def _named(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def effective_microbatch(cfg: ModelConfig, shape: InputShape,
+                         mesh) -> int:
+    """Cap grad-accumulation so each microbatch still covers the data
+    axes (b/k >= data-axis size); otherwise the batch can't shard and
+    GSPMD replicates activations — worse than no accumulation."""
+    if shape.kind != "train":
+        return 1
+    axes = SH.best_batch_axes(shape.global_batch, cfg, mesh) or ()
+    dsz = max(SH.axis_size(mesh, axes), 1)
+    k = max(cfg.train_microbatch, 1)
+    while k > 1 and (shape.global_batch % k or
+                     (shape.global_batch // k) % dsz):
+        k //= 2
+    return max(k, 1)
+
+
+def make_shard_act(cfg: ModelConfig, shape: InputShape, mesh,
+                   seq_parallel: bool = True):
+    """Activation constraint at period boundaries.
+
+    Batch on the data axes; with ``seq_parallel``, the *sequence* dim is
+    additionally sharded on ``model`` (Megatron sequence parallelism).
+    The period-boundary residual is exactly what remat keeps resident, so
+    this divides saved-activation HBM by the model-axis size; GSPMD
+    inserts the all-gather before attention / reduce-scatter after the
+    block automatically (same bytes as the TP all-reduce it replaces).
+    """
+    dp = SH.data_axes(mesh)
+    b = shape.global_batch
+    bs = SH.best_batch_axes(b, cfg, mesh)
+    s_len = shape.seq_len if shape.kind != "decode" else 1
+    micro = effective_microbatch(cfg, shape, mesh)
+    b_eff = b // max(micro, 1)
+    bs_eff = SH.best_batch_axes(b_eff, cfg, mesh)
+    seq = ("model" if seq_parallel and cfg.tensor_parallel and
+           s_len % SH.axis_size(mesh, "model") == 0 and s_len > 1
+           else None)
+    ns = NamedSharding(mesh, P(bs_eff if shape.kind == "train" else bs,
+                               seq, None))
+
+    def shard_act(x):
+        return jax.lax.with_sharding_constraint(x, ns)
+
+    return shard_act
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh):
+    """Returns (jitted fn, example args as SDS)."""
+    batch_sds = SP.batch_specs_for(cfg, shape)
+    batch_shard = _named(SH.batch_specs(batch_sds, cfg, mesh), mesh)
+    shard_act = make_shard_act(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        params_sds, opt_sds = SP.train_state_specs(cfg)
+        pspec = SH.param_specs(params_sds, cfg, mesh)
+        p_shard = _named(pspec, mesh)
+        o_shard = _named(
+            jax.tree_util.tree_map(
+                lambda l: P() if l.ndim == 0 else None, opt_sds),
+            mesh)
+        # moments shard like params
+        o_shard = o_shard._replace(
+            mu=_named(SH.param_specs(opt_sds.mu, cfg, mesh), mesh),
+            nu=_named(SH.param_specs(opt_sds.nu, cfg, mesh), mesh))
+        step = make_train_step(cfg, SP.opt_config_for(cfg),
+                               shard_act=shard_act,
+                               microbatch=effective_microbatch(
+                                   cfg, shape, mesh))
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, o_shard, batch_shard),
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1))
+        return fn, (params_sds, opt_sds, batch_sds)
+
+    decode_2d = bool(getattr(cfg, "decode_2d", False)) and         shape.kind == "decode"
+    if decode_2d:
+        # replicate the decode batch; 2D-sharded weights drive
+        # partial-sum compute instead of per-token param gathers
+        batch_shard = _named(jax.tree_util.tree_map(
+            lambda l: P(*([None] * l.ndim)), batch_sds), mesh)
+        # activations D-sharded on data: x(D@data) @ w(D@data, F@model)
+        # contracts a co-sharded dim -> partial-sum all-reduce instead
+        # of gathering the weights
+        dpx = SH.data_axes(mesh)
+        ns_rep = NamedSharding(
+            mesh, P(None, None,
+                    dpx if cfg.d_model % SH.axis_size(mesh, dpx) == 0
+                    else None))
+        shard_act = lambda x: jax.lax.with_sharding_constraint(x, ns_rep)
+    params_sds = SP.params_specs(cfg)
+    p_shard = _named(SH.param_specs(params_sds, cfg, mesh), mesh)
+    cache_sds = SP.cache_specs_for(cfg, shape)
+    c_shard = _named(SH.cache_specs(cache_sds, cfg, mesh,
+                                    decode_2d=decode_2d), mesh)
+
+    cap = MD.attn_cache_capacity(cfg, shape.seq_len)
+    dpax = SH.data_axes(mesh)
+    kv_batch = (None if decode_2d else
+                SH.best_batch_axes(shape.global_batch, cfg, mesh))
+    kv_seq = ("model" if cfg.tensor_parallel and
+              cap % SH.axis_size(mesh, "model") == 0 else None)
+    kv_spec = P(kv_batch, kv_seq, None, None)
+    kv_ns = NamedSharding(mesh, kv_spec)
+
+    def shard_kv(t):
+        return jax.lax.with_sharding_constraint(t, kv_ns)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch, cache):
+            return MD.prefill(params, cfg, batch, cache, shard_act,
+                              shard_kv)
+        fn = jax.jit(prefill_fn,
+                     in_shardings=(p_shard, batch_shard, c_shard),
+                     out_shardings=(None, c_shard),
+                     donate_argnums=(2,))
+        return fn, (params_sds, batch_sds, cache_sds)
+
+    # decode
+    def decode_fn(params, batch, cache):
+        return MD.decode_step(params, cfg, batch, cache, shard_act,
+                              shard_kv)
+    fn = jax.jit(decode_fn,
+                 in_shardings=(p_shard, batch_shard, c_shard),
+                 out_shardings=(None, c_shard),
+                 donate_argnums=(2,))
+    return fn, (params_sds, batch_sds, cache_sds)
+
+
+def parse_overrides(pairs):
+    out = {}
+    for pair in pairs or ():
+        key, val = pair.split("=", 1)
+        for cast in (int, float):
+            try:
+                val = cast(val)
+                break
+            except ValueError:
+                continue
+        if val in ("True", "False"):
+            val = val == "True"
+        out[key] = val
+    return out
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            verbose: bool = True, overrides: Optional[dict] = None,
+            tag: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    shape = INPUT_SHAPES[shape_name]
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "tag": tag,
+                           "overrides": dict(overrides or {})}
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["why"] = why
+        return rec
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.devices.size
+    t0 = time.monotonic()
+    try:
+        with mesh_context(mesh):
+            fn, args = build_step(cfg, shape, mesh)
+            lowered = fn.lower(*args)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+        terms = roofline_terms(compiled, chips)
+        terms.update(analytic_roofline(cfg, shape, mesh_kind))
+        res = analytic_residency(cfg, shape, mesh_kind,
+                                 effective_microbatch(cfg, shape, mesh))
+        terms["an_residency_bytes"] = res["total"]
+        terms["an_residency_parts"] = {
+            k_: round(v / 2**30, 3) for k_, v in res.items()}
+        counts = cfg.param_counts()
+        tokens = shape.global_batch * (
+            shape.seq_len if shape.kind != "decode" else 1)
+        # MODEL_FLOPS: 6·N_active·D for train, 2·N_active·D for fwd-only
+        coef = 6 if shape.kind == "train" else 2
+        model_flops = coef * counts["active"] * tokens
+        terms["model_flops_global"] = model_flops
+        terms["model_flops_per_chip"] = model_flops / chips
+        terms["useful_flops_ratio"] = (
+            model_flops / chips / terms["per_chip_flops"]
+            if terms["per_chip_flops"] else 0.0)
+        rec.update({
+            "status": "ok",
+            "dominant": analytic_dominant(terms),
+            "dominant_hlo_body_once": dominant_term(terms),
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "fits_hbm": bool(terms["peak_bytes"] < HBM_BYTES),
+            "fits_hbm_analytic": bool(terms["an_residency_bytes"]
+                                      < HBM_BYTES),
+            **terms,
+        })
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_kind}] "
+                  f"compile={t_compile:.0f}s "
+                  f"peak={terms['peak_bytes']/2**30:.2f}GiB "
+                  f"res={terms['an_residency_bytes']/2**30:.2f}GiB "
+                  f"Tc={terms['an_t_compute_s']*1e3:.2f}ms "
+                  f"Tm={terms['an_t_memory_s']*1e3:.2f}ms "
+                  f"Tcoll={terms['an_t_collective_s']*1e3:.2f}ms "
+                  f"dom={rec['dominant']}")
+    except Exception as exc:
+        rec["status"] = "error"
+        rec["error"] = f"{type(exc).__name__}: {exc}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_kind}] ERROR: "
+                  f"{rec['error']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id (default: all assigned)")
+    ap.add_argument("--shape", default=None,
+                    help="input shape (default: all four)")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned archs × all shapes")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="key=val",
+                    help="ModelConfig overrides, e.g. --set moe_impl=a2a")
+    ap.add_argument("--tag", default="", help="label for the records")
+    args = ap.parse_args()
+    overrides = parse_overrides(args.set)
+
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = (["single", "multi"] if args.mesh == "both"
+              else [args.mesh])
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_one(arch, shape, mesh_kind,
+                              overrides=overrides, tag=args.tag)
+                results.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        slim = {k: v for k, v in rec.items()
+                                if k != "traceback"}
+                        f.write(json.dumps(slim) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Roofline-term extraction from a compiled (dry-run) executable.
+
+compute term    = per-chip HLO FLOPs / peak FLOP/s
+memory term     = per-chip HLO bytes accessed / HBM bandwidth
+collective term = per-chip collective bytes / ICI link bandwidth
+
+``cost_analysis()`` supplies flops/bytes for the per-device SPMD module.
+Collective bytes are NOT in cost_analysis — we parse the optimized HLO
+text and sum the output-shape bytes of every collective op, classified
+by kind. (Approximation: an all-gather moves ~(n-1)/n of its output per
+chip; we report raw output bytes and note the bound character.)
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g.:  %ag = bf16[2,16]{1,0} all-gather(bf16[1,16] %x), ...
+_OP_RE = re.compile(
+    r"=\s+(\([^)]*\)|[\w\[\],{}: ]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        width = _DTYPE_BYTES.get(dtype)
+        if width is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * width
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of collective output bytes per op kind (per-device module)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_txt, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_txt)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(compiled, num_chips: int) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+
+    mem = compiled.memory_analysis()
+    mem_info = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                       + getattr(mem, "temp_size_in_bytes", 0)),
+    }
+
+    return {
+        "per_chip_flops": flops,
+        "per_chip_bytes": bytes_accessed,
+        "collective_bytes": coll["total"],
+        "collective_ops": coll["count"],
+        "collectives_by_kind": {k: coll[k] for k in _COLLECTIVES},
+        "t_compute_s": flops / PEAK_FLOPS_BF16,
+        "t_memory_s": bytes_accessed / HBM_BW,
+        "t_collective_s": coll["total"] / ICI_BW,
+        **mem_info,
+        "num_chips": num_chips,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    t = {"compute": terms["t_compute_s"], "memory": terms["t_memory_s"],
+         "collective": terms["t_collective_s"]}
+    return max(t, key=t.get)

@@ -1,0 +1,31 @@
+"""Production meshes (TPU v5e).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  512 chips as (pod=2, data=16, model=16) — the ``pod`` axis
+is a pure data-parallel axis across the inter-pod DCN links.
+
+A function, not a module constant: importing this module must never
+touch jax device state (the dry-run sets the 512-device XLA flag before
+any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs (same axis names as single-pod)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# Hardware constants for the roofline (TPU v5e per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (~ per-chip usable)
+HBM_BYTES = 16 * 1024 ** 3        # 16 GiB

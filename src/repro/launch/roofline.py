@@ -1,0 +1,291 @@
+"""Analytic roofline model per (arch × shape × mesh × sharding flags).
+
+Why analytic: XLA's ``cost_analysis()`` counts a while-loop body ONCE,
+so with scan-over-layers (and nested time scans in Mamba/sLSTM) the
+compiled-artifact numbers undercount flops/bytes by ~num_periods× (see
+EXPERIMENTS.md §Dry-run for the L=1/2/4 evidence). The dry-run therefore
+reports BOTH: the raw cost_analysis (flagged body-once) and this model,
+which is the napkin math the §Perf loop iterates on. Cross-checked
+against single-period compiles (where the loop trip count is 1 and
+cost_analysis is exact) in tests/test_roofline.py.
+
+Assumptions (stated, deliberately coarse — roofline wants magnitudes):
+  * flops = 2 × MACs; causal attention does S_eff/2 average key work.
+  * train = fwd + 2×fwd (bwd) + 1×fwd (full remat)  → 4× fwd flops for
+    layer compute; optimizer update ≈ 10 flops/param.
+  * HBM bytes: every layer touches ~14 activation copies of (tok_loc ×
+    d_model) at 2 B (norms, residuals, proj IO, softmax traffic folded
+    in); params/grads/moments streamed once each per step; decode
+    additionally streams the local KV-cache slice once per token.
+  * collectives: ring all-reduce moves 2×size; all-gather/reduce-scatter
+    move (n-1)/n×size ≈ size; sizes are per-chip payload bytes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def _axis_sizes(mesh_kind: str):
+    return {"single": (16, 16, 1), "multi": (16, 16, 2),
+            "host": (1, 1, 1)}[mesh_kind]  # (data, model, pod)
+
+
+def layer_unit_costs(cfg: ModelConfig, s_ctx: int, mode: str) -> Dict:
+    """Per-token fwd flops per *period*, split by type; s_ctx = visible
+    context length (S for train/prefill, cache len for decode)."""
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+    hq, hk = cfg.num_heads, cfg.num_kv_heads
+    gate = 1 if cfg.act == "silu" else 0
+    fl_proj = fl_mix = fl_ffn = 0.0
+    for mix, ffn in zip(cfg.pattern, cfg.ffn_pattern):
+        if mix == "attn":
+            s_eff = min(s_ctx, cfg.window or s_ctx)
+            if mode != "decode" and cfg.causal:
+                s_eff = s_eff / 2  # average causal key count
+            fl_proj += 2 * (d * hd * (hq + 2 * hk) + hq * hd * d)
+            fl_mix += 4 * hq * hd * s_eff
+        elif mix == "mamba":
+            di = cfg.ssm_expand * d
+            n = cfg.ssm_d_state
+            r = math.ceil(d / 16)
+            fl_proj += 2 * (d * 2 * di + di * (r + 2 * n) + r * di
+                            + di * d) + 2 * cfg.ssm_d_conv * di
+            fl_mix += 10 * di * n
+        elif mix == "mlstm":
+            di = cfg.lstm_expand * d
+            dh = di / max(cfg.num_heads, 1)
+            fl_proj += 2 * (2 * d * di + 3 * di * di + di * d)
+            if mode == "decode":
+                fl_mix += 6 * cfg.num_heads * dh * dh
+            else:
+                fl_mix += 4 * di * (s_ctx / 2)     # quadratic parallel form
+        elif mix == "slstm":
+            dh = d / max(cfg.num_heads, 1)
+            fl_proj += 2 * (d * 4 * d + d * d)
+            fl_mix += 2 * cfg.num_heads * dh * 4 * dh
+        if ffn == "mlp":
+            fl_ffn += 2 * (2 + gate) * d * f
+        elif ffn == "moe":
+            fl_ffn += 2 * (2 + gate) * d * f * cfg.top_k \
+                + 2 * d * cfg.num_experts
+    return {"proj": fl_proj, "mix": fl_mix, "ffn": fl_ffn}
+
+
+def analytic_roofline(cfg: ModelConfig, shape: InputShape,
+                      mesh_kind: str = "single") -> Dict[str, float]:
+    dp, mp, pods = _axis_sizes(mesh_kind)
+    chips = dp * mp * pods
+    counts = cfg.param_counts()
+    mode = shape.kind
+    b, s = shape.global_batch, shape.seq_len
+    tokens = b * (s if mode != "decode" else 1)
+    tok_loc = tokens / (dp * pods)          # batch sharded on data axes
+    d = cfg.d_model
+    periods = cfg.num_periods
+
+    # ---------------- FLOPs (per chip) ----------------
+    unit = layer_unit_costs(cfg, s, mode)
+    fwd_layer_flops = tokens * sum(unit.values()) * periods
+    head_flops = tokens * 2 * d * cfg.vocab_size
+    if cfg.input_kind == "tokens":
+        head_flops += tokens * 0  # embed lookup ~free
+    fwd = fwd_layer_flops + head_flops
+    if mode == "train":
+        total = fwd * (4 if cfg.remat else 3) + 10 * counts["total"]
+    else:
+        total = fwd
+    flops_chip = total / chips
+
+    # ---------------- HBM bytes (per chip) ----------------
+    p_bytes = 2  # bf16 params
+    params_local = counts["total"] * p_bytes / (
+        mp * (dp if cfg.fsdp else 1))
+    act_touch = 14 * d * 2 * cfg.num_layers * tok_loc
+    # score/ssm traffic for the mixer at long context
+    if mode != "decode":
+        pass  # folded into act_touch; chunked attention keeps it VMEM-ish
+    bytes_chip = act_touch
+    if mode == "train":
+        big = counts["total"] > 20e9
+        m_bytes = 2 if big else 4
+        # params r+w, grads produce+consume (f32), moments r+w (×2)
+        bytes_chip += params_local * 2 + \
+            counts["total"] * 4 / (mp * (dp if cfg.fsdp else 1)) * 2 + \
+            counts["total"] * m_bytes / (mp * (dp if cfg.fsdp else 1)) * 4
+        bytes_chip += act_touch * 2          # bwd + remat re-touch
+    else:
+        bytes_chip += params_local * _active_frac(cfg)
+    if mode == "decode":
+        # stream the local KV-cache slice once per decoded token
+        n_attn = sum(m == "attn" for m in cfg.pattern) * periods
+        cap = min(s, cfg.window) if cfg.window else s
+        kv_total = (b * cap * cfg.num_kv_heads * cfg.head_dim * 2 *
+                    2 * n_attn)
+        kv_local = kv_total / chips          # sharded on data+model(seq)
+        bytes_chip += kv_local
+        # recurrent states r/w
+        state_bytes = _state_bytes(cfg, b) / (dp * pods)
+        bytes_chip += 2 * state_bytes
+
+    # ---------------- Collective bytes (per chip) ----------------
+    coll = 0.0
+    tp = getattr(cfg, "tensor_parallel", True)
+    if not tp:
+        tok_loc = tokens / chips             # batch over ALL axes
+    act_payload = tok_loc * d * 2            # one (tok_loc, d) tensor, bf16
+    n_tp_layers = cfg.num_layers if tp else 0  # TP all-reduces per layer
+    fwd_coll = 2 * act_payload * n_tp_layers  # ring AR moves 2x
+    k_micro = 1
+    if mode == "train":
+        k_micro = max(min(cfg.train_microbatch,
+                          b // (dp * pods) or 1), 1)
+        coll += fwd_coll * (3 if cfg.remat else 2)   # fwd+bwd(+remat fwd)
+        if cfg.fsdp:
+            # Per-layer param all-gather fwd+bwd + grad reduce-scatter.
+            # Gathers repeat EVERY microbatch (remat prevents hoisting) —
+            # the grad-accum knob trades activation HBM for FSDP traffic.
+            coll += (counts["total"] * 2 / mp * 2) * k_micro                 + counts["total"] * 4 / mp
+        else:
+            # grad all-reduce over the batch axes (whole-param if pure DP)
+            coll += 2 * counts["total"] * 4 / (mp if tp else 1)
+        if pods > 1:
+            coll += 2 * counts["total"] * 4 / (mp * dp)  # cross-pod AR
+    else:
+        coll += fwd_coll
+        if cfg.fsdp and mode != "decode":
+            coll += counts["total"] * 2 / mp
+        if cfg.fsdp and mode == "decode":
+            # GSPMD baseline gathers fsdp params every token (verified in
+            # the HLO inventory); the decode-2D variant removes this.
+            coll += counts["total"] * 2 / mp
+    # MoE cross-shard dispatch+combine. Both the GSPMD gather baseline
+    # and the explicit a2a move O(tokens-per-chip x k x cf x D) bytes;
+    # tokens are spread over the model axis too in either schedule.
+    n_moe = sum(f == "moe" for f in cfg.ffn_pattern) * periods
+    if n_moe:
+        a2a = 4 * (tok_loc / mp) * cfg.top_k * cfg.capacity_factor             * d * 2 * n_moe
+        coll += a2a * (3 if mode == "train" and cfg.remat else
+                       2 if mode == "train" else 1)
+    # logits all-reduce/gather
+    if tp:
+        coll += tok_loc * cfg.vocab_size * 2 / mp
+
+    return {
+        "an_flops_chip": flops_chip,
+        "an_bytes_chip": bytes_chip,
+        "an_coll_chip": coll,
+        "an_t_compute_s": flops_chip / PEAK_FLOPS_BF16,
+        "an_t_memory_s": bytes_chip / HBM_BW,
+        "an_t_collective_s": coll / ICI_BW,
+        "an_model_flops_chip": (6 if mode == "train" else 2)
+        * counts["active"] * tokens / chips,
+    }
+
+
+def _active_frac(cfg: ModelConfig) -> float:
+    c = cfg.param_counts()
+    return c["active"] / c["total"]
+
+
+def _state_bytes(cfg: ModelConfig, batch: int) -> float:
+    total = 0.0
+    d = cfg.d_model
+    for mix in cfg.pattern:
+        if mix == "mamba":
+            di = cfg.ssm_expand * d
+            total += batch * (di * cfg.ssm_d_state * 4 +
+                              (cfg.ssm_d_conv - 1) * di * 2)
+        elif mix == "mlstm":
+            di = cfg.lstm_expand * d
+            dh = di / max(cfg.num_heads, 1)
+            total += batch * cfg.num_heads * (dh * dh + dh + 1) * 4
+        elif mix == "slstm":
+            total += batch * 4 * d * 4
+    return total * cfg.num_periods
+
+
+def analytic_residency(cfg: ModelConfig, shape: InputShape,
+                       mesh_kind: str = "single",
+                       microbatch: int = None) -> Dict[str, float]:
+    """Steady-state HBM residency per chip (bytes), by component.
+
+    Needed because the CPU dry-run backend upcasts bf16 dot operands to
+    f32, materializing phantom copies of weights/KV caches that do not
+    exist on TPU (EXPERIMENTS.md §Dry-run documents the evidence); the
+    compiled ``peak_bytes`` is therefore an upper bound and this model is
+    the TPU-side estimate. Components:
+      params + optimizer state (+f32 grad-accumulation buffer),
+      remat period-boundary carries (seq-sharded), KV cache / SSM state,
+      per-layer transient high-water (attention chunk scores, MoE
+      buffers, loss chunk logits).
+    """
+    dp, mp, pods = _axis_sizes(mesh_kind)
+    chips = dp * mp * pods
+    counts = cfg.param_counts()
+    mode = shape.kind
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    tp = getattr(cfg, "tensor_parallel", True)
+    shard_all = (mp if tp else 1) * (dp * pods if cfg.fsdp else 1)
+
+    params = counts["total"] * 2 / shard_all
+    out = {"params": params}
+    if mode == "train":
+        k = microbatch or cfg.train_microbatch
+        k = max(min(k, b // (dp * pods)), 1)
+        big = counts["total"] > 20e9
+        m_bytes = 2 if big else 4
+        out["opt_state"] = counts["total"] * m_bytes * 2 / shard_all
+        out["grad_accum"] = (counts["total"] * 4 / shard_all
+                             if k > 1 else 0.0)
+        tok_loc = b * s / (dp * pods) / k
+        seq_div = mp if s % mp == 0 else 1
+        out["carries"] = cfg.num_periods * tok_loc * d * 2 / seq_div
+        # transient high-water within one sublayer backward (f32):
+        chunk = min(cfg.attn_chunk, s)
+        heads_loc = max(cfg.num_heads // mp, 1)
+        scores = (b // (dp * pods) // k) * heads_loc * chunk * s * 4
+        ffn_t = tok_loc * max(cfg.d_ff, cfg.ssm_expand * d) * 2 * 3 / mp
+        loss_t = tok_loc * min(cfg.loss_chunk / s, 1.0) *             cfg.vocab_size * 4 / mp
+        if cfg.ffn_pattern and "moe" in cfg.ffn_pattern:
+            cap = s * cfg.top_k * cfg.capacity_factor / cfg.num_experts
+            moe_t = (b // (dp * pods) // k) * max(
+                cfg.num_experts // mp, 1) * cap * max(cfg.d_ff, d) * 4 * 2
+        else:
+            moe_t = 0.0
+        out["transients"] = max(scores, ffn_t, moe_t) + loss_t
+    else:
+        out["opt_state"] = out["grad_accum"] = 0.0
+        out["carries"] = 0.0
+        n_attn = sum(m == "attn" for m in cfg.pattern) * cfg.num_periods
+        cap = min(s, cfg.window) if cfg.window else s
+        kv = b * cap * cfg.num_kv_heads * cfg.head_dim * 2 * 2 * n_attn
+        decode_2d = bool(getattr(cfg, "decode_2d", False)) and             mode == "decode"
+        bdiv = 1 if decode_2d else (
+            dp * pods if b % (dp * pods) == 0 else 1)
+        sdiv = mp if cap % mp == 0 else 1
+        out["kv_cache"] = kv / (bdiv * sdiv)
+        # decode-2D shards recurrent-state feature dims over both axes
+        sdiv_states = (dp * pods * mp) if decode_2d else (
+            dp * pods if b % (dp * pods) == 0 else 1)
+        out["states"] = _state_bytes(cfg, b) / sdiv_states
+        if mode == "prefill":
+            tok_loc = b * s / (dp * pods)
+            chunk = min(cfg.attn_chunk, s)
+            heads_loc = max(cfg.num_heads // mp, 1)
+            out["transients"] = (b // bdiv if b >= bdiv else 1) *                 heads_loc * chunk * s * 4
+        else:
+            out["transients"] = out.get("kv_cache", 0) * 0.05
+    out["total"] = sum(v for k_, v in out.items() if k_ != "total")
+    return out
+
+
+def analytic_dominant(terms: Dict[str, float]) -> str:
+    t = {"compute": terms["an_t_compute_s"],
+         "memory": terms["an_t_memory_s"],
+         "collective": terms["an_t_collective_s"]}
+    return max(t, key=t.get)

@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` builds the exact abstract inputs each step
+function is lowered with; ``state_specs`` does the same for params /
+optimizer state / decode caches. Embedding-input architectures (audio,
+VLM) get frame/patch-embedding stand-ins here — the sanctioned frontend
+stub.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as MD
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train import init_train_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _token_dtype():
+    return jnp.int32
+
+
+def batch_specs_for(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    batch: Dict[str, Any] = {}
+    if cfg.input_kind == "embeddings":
+        batch["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = SDS((b, s), _token_dtype())
+    if cfg.mrope_sections is not None:
+        batch["positions"] = SDS((b, s, len(cfg.mrope_sections)),
+                                 _token_dtype())
+    if shape.kind == "train":
+        batch["labels"] = SDS((b, shape.seq_len), _token_dtype())
+    return batch
+
+
+def opt_config_for(cfg: ModelConfig) -> AdamWConfig:
+    big = cfg.param_counts()["total"] > 20e9
+    return AdamWConfig(moment_dtype="bfloat16" if big else "float32")
+
+
+def train_state_specs(cfg: ModelConfig) -> Tuple[Any, Any]:
+    """(params SDS, opt_state SDS) without allocating."""
+    opt_cfg = opt_config_for(cfg)
+
+    def build():
+        params = MD.init_params(jax.random.PRNGKey(0), cfg)
+        # production runs keep params in the model dtype
+        params = jax.tree_util.tree_map(
+            lambda a: a.astype(jnp.bfloat16)
+            if cfg.dtype == "bfloat16" and a.dtype == jnp.float32 else a,
+            params)
+        return params, adamw_init(opt_cfg, params)
+
+    return jax.eval_shape(build)
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    def build():
+        params = MD.init_params(jax.random.PRNGKey(0), cfg)
+        return jax.tree_util.tree_map(
+            lambda a: a.astype(jnp.bfloat16)
+            if cfg.dtype == "bfloat16" and a.dtype == jnp.float32 else a,
+            params)
+    return jax.eval_shape(build)
+
+
+def cache_specs_for(cfg: ModelConfig, shape: InputShape) -> Any:
+    return jax.eval_shape(
+        lambda: MD.init_cache(cfg, shape.global_batch, shape.seq_len))

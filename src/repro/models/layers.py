@@ -1,0 +1,295 @@
+"""Shared model layers: norms, RoPE / M-RoPE, GQA attention, MLPs.
+
+Pure-JAX (no flax). Parameters are nested dicts of jnp arrays; every
+layer is a pair of functions ``init_*(rng, cfg) -> params`` and a pure
+``apply`` function. Attention comes in three execution paths:
+
+  * ``attention_chunked`` — full-sequence (train/prefill): lax.scan over
+    query chunks so the score matrix never materializes at (S, S); this
+    is the XLA-level flash-attention analogue used for dry-runs, with
+    optional causal + sliding-window masking.
+  * ``attention_decode`` — one query token against a KV cache. Written
+    as plain einsum + stable softmax so GSPMD can partition the KV
+    *sequence* dimension across the ``model`` axis (sequence-parallel
+    flash-decode: the softmax max/sum and the PV reduction become three
+    small all-reduces instead of an all-gather of the cache).
+  * Pallas kernels (``repro.kernels``) — TPU target, selected via
+    ``cfg.attention_impl``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (stddev = scale or 1/sqrt(fan_in))."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0])
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, dtype) *
+            scale)
+
+
+def embed_init(rng, shape, dtype=jnp.float32):
+    return jax.random.normal(rng, shape, dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE and M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for each rotation pair. (head_dim//2,) f32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections: Optional[Tuple[int, ...]] = None
+               ) -> jnp.ndarray:
+    """Rotary embedding.
+
+    x: (B, S, H, D); positions: (B, S) int32 for standard RoPE, or
+    (B, S, 3) for M-RoPE (temporal/height/width component positions,
+    Qwen2-VL §3.1 — each frequency pair is assigned to one component via
+    ``mrope_sections`` which must sum to D//2).
+    """
+    b, s, h, d = x.shape
+    inv = rope_freqs(d, theta)                          # (d/2,)
+    if mrope_sections is None:
+        ang = positions.astype(jnp.float32)[..., None] * inv  # (B,S,d/2)
+    else:
+        assert positions.ndim == 3 and positions.shape[-1] == len(
+            mrope_sections)
+        # section id per frequency pair
+        sec = jnp.repeat(
+            jnp.arange(len(mrope_sections)),
+            jnp.array(mrope_sections),
+            total_repeat_length=d // 2)                 # (d/2,)
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec[None, None, :], (b, s, d // 2)).astype(
+                jnp.int32),
+            axis=-1)                                    # (B,S,d/2)
+        ang = pos * inv
+    cos = jnp.cos(ang)[:, :, None, :]                   # (B,S,1,d/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(rng, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, qkv_bias: bool = False):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, num_heads * head_dim)),
+        "wk": dense_init(ks[1], (d_model, num_kv_heads * head_dim)),
+        "wv": dense_init(ks[2], (d_model, num_kv_heads * head_dim)),
+        "wo": dense_init(ks[3], (num_heads * head_dim, d_model)),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,))
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,))
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,))
+    return p
+
+
+def qkv_project(p, x, num_heads, num_kv_heads, head_dim):
+    b, s, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, num_heads, head_dim)
+    k = k.reshape(b, s, num_kv_heads, head_dim)
+    v = v.reshape(b, s, num_kv_heads, head_dim)
+    return q, k, v
+
+
+def expand_kv(k, g: int):
+    """(B,S,Hk,D) -> (B,S,Hk*g,D) by broadcast (no copy until sliced).
+
+    Flat-head GQA: keeps the q-head dim contiguous so a 16-way ``model``
+    sharding survives even when Hk < mesh size (a (Hk, G) split reshape
+    would cap the sharding at Hk and make GSPMD replicate the scores —
+    the 398 GiB/chip failure mode documented in EXPERIMENTS.md §Perf).
+    KV heads are replicated across ``model``; they are the small tensors.
+    """
+    if g == 1:
+        return k
+    b, s, hk, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :],
+                            (b, s, hk, g, d)).reshape(b, s, hk * g, d)
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,Hq,D), k: (B,Sk,Hk,D) -> scores (B,Hq,Sq,Sk) f32."""
+    g = q.shape[2] // k.shape[2]
+    ke = expand_kv(k, g)
+    return jnp.einsum("bqhd,bshd->bhqs", q, ke,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(probs, v, g: int):
+    """probs: (B,Hq,Sq,Sk), v: (B,Sk,Hk,D) -> (B,Sq,Hq,D)."""
+    ve = expand_kv(v, g)
+    return jnp.einsum("bhqs,bshd->bqhd", probs.astype(ve.dtype), ve)
+
+
+def attention_chunked(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None,
+                      chunk: int = 1024,
+                      q_offset: int = 0) -> jnp.ndarray:
+    """Memory-bounded full-sequence attention via lax.scan over q chunks.
+
+    Never materializes (Sq, Sk); per-step transient is (chunk, Sk) scores
+    (or (chunk, window+chunk) under sliding-window). ``q_offset`` is the
+    absolute position of q[0] relative to k[0] (for chunked prefill
+    against an existing cache).
+    """
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    chunk = min(chunk, sq)
+    if sq % chunk:
+        chunk = sq  # odd sizes (tests): single chunk
+    n_chunks = sq // chunk
+
+    use_window_slicing = (window is not None and window < sk and causal)
+    if use_window_slicing:
+        # Keys visible to q chunk c: absolute [c*chunk + q_offset - window
+        # + 1, c*chunk + q_offset + chunk). Use a static slice width.
+        kwin = window + chunk
+        # pad keys on the left so every slice is in-bounds
+        pad = kwin
+        k_p = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        v_p = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+    qc = q.reshape(b, n_chunks, chunk, hq, d)
+
+    def body(_, ci):
+        qi = qc[:, ci]                                   # (B,chunk,Hq,D)
+        q_pos = ci * chunk + q_offset + jnp.arange(chunk)  # absolute
+        if use_window_slicing:
+            start = ci * chunk + q_offset + chunk - kwin + pad
+            ki = jax.lax.dynamic_slice_in_dim(k_p, start, kwin, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v_p, start, kwin, axis=1)
+            k_pos = start - pad + jnp.arange(kwin)
+        else:
+            ki, vi = k, v
+            k_pos = jnp.arange(sk)
+        s = _gqa_scores(qi, ki) * scale                  # (B,Hq,chunk,Sk')
+        mask = jnp.ones((chunk, k_pos.shape[0]), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        if use_window_slicing:
+            mask &= k_pos[None, :] >= 0                  # mask the pad
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        # fully-masked rows (can't happen causally, but keep NaN-safe)
+        row_ok = jnp.any(mask, axis=-1)                  # (chunk,)
+        p = jnp.where(row_ok[None, None, :, None], p, 0.0)
+        return None, _gqa_out(p, vi, hq // k.shape[2])   # (B,chunk,Hq,D)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    # outs: (n_chunks, B, chunk, Hq, D)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, hq, d)
+
+
+def attention_decode(q, k_cache, v_cache, valid) -> jnp.ndarray:
+    """One-token decode attention against a (possibly sharded) KV cache.
+
+    q: (B,1,Hq,D); caches: (B,S_cache,Hk,D); valid: (B,S_cache) bool —
+    which cache slots hold live keys (computed by the caller from the
+    cache's absolute-position buffer; works for full and ring caches).
+
+    Plain einsum + masked stable softmax: with the cache's S_cache dim
+    sharded on the ``model`` mesh axis, GSPMD turns the max/sum/PV
+    reductions into small all-reduces — sequence-parallel flash-decode.
+    """
+    b, one, hq, d = q.shape
+    s_max = k_cache.shape[1]
+    hk = k_cache.shape[2]
+    g = hq // hk
+    scale = 1.0 / math.sqrt(d)
+    # Grouped (no KV expansion): decode shards the cache SEQUENCE dim on
+    # `model` (heads replicated), so the (Hk,G) split is sharding-safe
+    # here and avoids materializing an (B,S,Hq,D) expanded cache — the
+    # flat-head expand_kv form triggers involuntary SPMD remat of the
+    # whole cache (8x HBM) when S is sharded.
+    qg = q[:, 0].reshape(b, hk, g, d)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                    preferred_element_type=jnp.float32) * scale
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    e = jnp.exp(sc - jax.lax.stop_gradient(m))
+    e = jnp.where(valid[:, None, None, :], e, 0.0)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, hq, d)                      # (B,1,Hq,D)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng, d_model: int, d_ff: int, act: str = "silu"):
+    ks = jax.random.split(rng, 3)
+    p = {"w_in": dense_init(ks[0], (d_model, d_ff)),
+         "w_out": dense_init(ks[1], (d_ff, d_model))}
+    if act == "silu":  # gated (SwiGLU)
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def mlp(p, x, act: str = "silu"):
+    h = x @ p["w_in"].astype(x.dtype)
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    return h @ p["w_out"].astype(x.dtype)

@@ -1,0 +1,133 @@
+"""Mamba (selective SSM) block — the recurrent mixer in Jamba layers.
+
+Faithful Mamba-1 structure (arXiv:2312.00752): in-proj to (x, z), causal
+depthwise conv + SiLU, input-dependent (Δ, B, C), diagonal A, selective
+scan, gated out-proj. TPU adaptation: the CUDA fused selective-scan
+kernel becomes a chunked-remat ``lax.scan`` (see scan_utils) — the same
+recompute-in-backward trick the kernel uses, expressed at the XLA level.
+
+Decode carries ``{"conv": (B,K-1,di), "h": (B,di,N)}``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.scan_utils import causal_depthwise_conv, chunked_remat_scan
+
+
+def init_mamba(rng, d_model: int, *, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dt_rank: Optional[int] = None):
+    di = expand * d_model
+    dt_rank = dt_rank or math.ceil(d_model / 16)
+    ks = jax.random.split(rng, 6)
+    # S4D-real initialization for A; dt bias init so softplus(dt)~[1e-3,0.1]
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (di, 1))
+    dt = jnp.exp(jax.random.uniform(ks[5], (di,)) *
+                 (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * di)),
+        "conv_w": dense_init(ks[1], (d_conv, di), scale=1.0 / math.sqrt(d_conv)),
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * d_state)),
+        "dt_proj": dense_init(ks[3], (dt_rank, di),
+                              scale=dt_rank ** -0.5),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,)),
+        "out_proj": dense_init(ks[4], (di, d_model)),
+    }
+
+
+def _ssm_inputs(p, x):
+    """Shared pre-scan computation. x: (B,S,D)."""
+    di = p["D"].shape[0]
+    d_state = p["A_log"].shape[1]
+    dt_rank = p["x_proj"].shape[1] - 2 * d_state
+
+    xz = x @ p["in_proj"].astype(x.dtype)               # (B,S,2di)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    return x_in, z, di, d_state, dt_rank
+
+
+def _ssm_params(p, xc, dt_rank, d_state):
+    """Input-dependent Δ, B, C from the conv'd activations (f32)."""
+    proj = (xc @ p["x_proj"].astype(xc.dtype)).astype(jnp.float32)
+    dt_r, b_mat, c_mat = jnp.split(
+        proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                # (...,di)
+    return dt, b_mat, c_mat
+
+
+def _scan_step(h, inputs):
+    """h: (B,di,N) f32. One selective-scan step."""
+    xt, dt, bt, ct, a = inputs                           # a: (di,N)
+    da = jnp.exp(dt[..., None] * a)                      # (B,di,N)
+    dbx = (dt * xt)[..., None] * bt[:, None, :]          # (B,di,N)
+    h = da * h + dbx
+    y = jnp.einsum("bdn,bn->bd", h, ct)                  # (B,di)
+    return h, y
+
+
+def mamba_seq(p, x, *, chunk: int = 128, remat: bool = True,
+              state=None) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence Mamba. x: (B,S,D) -> (y (B,S,D), final_state)."""
+    x_in, z, di, d_state, dt_rank = _ssm_inputs(p, x)
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = causal_depthwise_conv(
+        x_in, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    dt, b_mat, c_mat = _ssm_params(p, xc, dt_rank, d_state)
+
+    a = -jnp.exp(p["A_log"])                             # (di,N) f32
+    bsz, s, _ = x.shape
+    h0 = (jnp.zeros((bsz, di, d_state), jnp.float32)
+          if state is None else state["h"].astype(jnp.float32))
+
+    xs = (jnp.moveaxis(xc.astype(jnp.float32), 1, 0),    # (S,B,di)
+          jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b_mat, 1, 0),
+          jnp.moveaxis(c_mat, 1, 0))
+
+    def step(h, ins):
+        xt, dtt, bt, ct = ins
+        return _scan_step(h, (xt, dtt, bt, ct, a))
+
+    h_final, ys = chunked_remat_scan(step, h0, xs, chunk, remat)
+    y = jnp.moveaxis(ys, 0, 1)                           # (B,S,di)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": new_conv, "h": h_final.astype(jnp.float32)}
+
+
+def mamba_decode(p, x, state) -> Tuple[jnp.ndarray, dict]:
+    """Single-token step. x: (B,1,D); state from mamba_seq/init_state."""
+    x_in, z, di, d_state, dt_rank = _ssm_inputs(p, x)
+    xc, new_conv = causal_depthwise_conv(
+        x_in, p["conv_w"], p["conv_b"], state["conv"])
+    xc = jax.nn.silu(xc)
+    dt, b_mat, c_mat = _ssm_params(p, xc, dt_rank, d_state)
+    a = -jnp.exp(p["A_log"])
+    h, y = _scan_step(state["h"].astype(jnp.float32),
+                      (xc[:, 0].astype(jnp.float32), dt[:, 0],
+                       b_mat[:, 0], c_mat[:, 0], a))
+    y = y + xc[:, 0].astype(jnp.float32) * p["D"]
+    y = (y[:, None].astype(x.dtype) * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": new_conv, "h": h}
+
+
+def mamba_init_state(batch: int, d_model: int, *, d_state: int = 16,
+                     d_conv: int = 4, expand: int = 2,
+                     dtype=jnp.bfloat16) -> dict:
+    di = expand * d_model
+    return {"conv": jnp.zeros((batch, d_conv - 1, di), dtype),
+            "h": jnp.zeros((batch, di, d_state), jnp.float32)}

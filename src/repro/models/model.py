@@ -1,0 +1,423 @@
+"""Unified model stack covering all assigned architecture families.
+
+A model is a repeating *period* of sublayers (``cfg.pattern`` mixers +
+``cfg.ffn_pattern`` FFNs) executed with ``lax.scan`` over periods, which
+keeps compiled HLO size independent of depth (essential for the 80-layer
+dry-runs). Heterogeneous stacks (Jamba's 7:1 mamba:attn interleave with
+alternating MoE, xLSTM's mLSTM/sLSTM mix) are expressed as longer
+periods — every period is structurally identical, so the scan is valid.
+
+Three modes share one code path:
+  train   — full sequence, no cache, remat per period.
+  prefill — full sequence, emits a decode cache (KV / conv+ssm / lstm).
+  decode  — one token, consumes + updates the cache.
+
+KV caches are ring buffers when ``cfg.window`` is set (capacity=window)
+and plain append buffers otherwise; both carry an absolute-position
+buffer from which decode validity masks are derived.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import xlstm as X
+
+AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_drop_fraction")
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_period(rng, cfg: ModelConfig):
+    p = {}
+    n_slots = len(cfg.pattern)
+    ks = jax.random.split(rng, 2 * n_slots)
+    for slot, (mix, ffn) in enumerate(zip(cfg.pattern, cfg.ffn_pattern)):
+        kmix, kffn = ks[2 * slot], ks[2 * slot + 1]
+        p[f"norm1_{slot}"] = jnp.ones((cfg.d_model,))
+        if mix == "attn":
+            p[f"mixer_{slot}"] = L.init_attention(
+                kmix, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.head_dim, cfg.qkv_bias)
+        elif mix == "mamba":
+            p[f"mixer_{slot}"] = M.init_mamba(
+                kmix, cfg.d_model, d_state=cfg.ssm_d_state,
+                d_conv=cfg.ssm_d_conv, expand=cfg.ssm_expand)
+        elif mix == "mlstm":
+            p[f"mixer_{slot}"] = X.init_mlstm(
+                kmix, cfg.d_model, cfg.num_heads, expand=cfg.lstm_expand)
+        elif mix == "slstm":
+            p[f"mixer_{slot}"] = X.init_slstm(
+                kmix, cfg.d_model, cfg.num_heads)
+        else:
+            raise ValueError(mix)
+        if ffn != "none":
+            p[f"norm2_{slot}"] = jnp.ones((cfg.d_model,))
+        if ffn == "mlp":
+            p[f"ffn_{slot}"] = L.init_mlp(kffn, cfg.d_model, cfg.d_ff,
+                                          cfg.act)
+        elif ffn == "moe":
+            p[f"ffn_{slot}"] = MOE.init_moe(kffn, cfg.d_model, cfg.d_ff,
+                                            cfg.num_experts, cfg.act)
+        elif ffn != "none":
+            raise ValueError(ffn)
+    return p
+
+
+def init_params(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    k_embed, k_periods, k_head = jax.random.split(rng, 3)
+    params: Dict[str, Any] = {}
+    needs_embed = cfg.input_kind == "tokens" or cfg.causal
+    if needs_embed:
+        params["embed"] = L.embed_init(
+            k_embed, (cfg.vocab_size, cfg.d_model))
+    period_rngs = jax.random.split(k_periods, cfg.num_periods)
+    params["periods"] = jax.vmap(
+        lambda r: _init_period(r, cfg))(period_rngs)
+    params["final_norm"] = jnp.ones((cfg.d_model,))
+    params["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                     scale=cfg.d_model ** -0.5)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def attn_cache_capacity(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.window) if cfg.window else max_len
+
+
+def _init_period_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dt = _dtype(cfg)
+    cache = {}
+    cap = attn_cache_capacity(cfg, max_len)
+    for slot, mix in enumerate(cfg.pattern):
+        if mix == "attn":
+            cache[f"s{slot}"] = {
+                "k": jnp.zeros((batch, cap, cfg.num_kv_heads,
+                                cfg.head_dim), dt),
+                "v": jnp.zeros((batch, cap, cfg.num_kv_heads,
+                                cfg.head_dim), dt),
+                "pos": jnp.full((batch, cap), -1, jnp.int32),
+            }
+        elif mix == "mamba":
+            cache[f"s{slot}"] = M.mamba_init_state(
+                batch, cfg.d_model, d_state=cfg.ssm_d_state,
+                d_conv=cfg.ssm_d_conv, expand=cfg.ssm_expand, dtype=dt)
+        elif mix == "mlstm":
+            cache[f"s{slot}"] = X.mlstm_init_state(
+                batch, cfg.d_model, cfg.num_heads, cfg.lstm_expand,
+                dtype=dt)
+        elif mix == "slstm":
+            cache[f"s{slot}"] = X.slstm_init_state(batch, cfg.d_model)
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Fresh (empty) decode cache."""
+    per = _init_period_cache(cfg, batch, max_len)
+    stacked = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None],
+                                   (cfg.num_periods,) + a.shape).copy(), per)
+    return {"len": jnp.zeros((), jnp.int32), "layers": stacked}
+
+
+# ---------------------------------------------------------------------------
+# Mixers
+# ---------------------------------------------------------------------------
+
+
+def _rope_positions(cfg: ModelConfig, batch, b, s, cache_len=None):
+    pos = batch.get("positions")
+    if pos is not None:
+        return pos
+    if cache_len is not None:  # decode: next position
+        base = jnp.broadcast_to(cache_len, (b, 1)).astype(jnp.int32)
+    else:
+        base = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                (b, s))
+    if cfg.mrope_sections is not None:
+        return jnp.broadcast_to(base[..., None],
+                                base.shape + (len(cfg.mrope_sections),))
+    return base
+
+
+def _attn_mixer(cfg: ModelConfig, p, x, positions, mode, slot_cache,
+                cache_len, shard_kv=None):
+    if shard_kv is None:
+        shard_kv = lambda t: t
+    b, s, _ = x.shape
+    q, k, v = L.qkv_project(p, x, cfg.num_heads, cfg.num_kv_heads,
+                            cfg.head_dim)
+    q = L.apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = L.apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+
+    if mode in ("train", "prefill"):
+        if cfg.attention_impl.startswith("pallas"):
+            from repro.kernels.ops import flash_attention_op
+            out = flash_attention_op(
+                q, k, v, causal=cfg.causal, window=cfg.window,
+                interpret=cfg.attention_impl == "pallas_interpret")
+        else:
+            out = L.attention_chunked(
+                q, k, v, causal=cfg.causal, window=cfg.window,
+                chunk=cfg.attn_chunk)
+        new_cache = None
+        if mode == "prefill":
+            cap = slot_cache["k"].shape[1]
+            if cfg.window and s > cap:
+                # keep the trailing window, ring-ordered (slot = pos % cap)
+                ktail, vtail = k[:, s - cap:], v[:, s - cap:]
+                tail_pos = jnp.arange(s - cap, s, dtype=jnp.int32)
+                slots = tail_pos % cap
+                kc = slot_cache["k"].at[:, slots].set(ktail)
+                vc = slot_cache["v"].at[:, slots].set(vtail)
+                pc = slot_cache["pos"].at[:, slots].set(
+                    jnp.broadcast_to(tail_pos, (b, cap)))
+            else:
+                kc = slot_cache["k"].at[:, :s].set(k)
+                vc = slot_cache["v"].at[:, :s].set(v)
+                pc = slot_cache["pos"].at[:, :s].set(
+                    jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s)))
+            new_cache = {"k": shard_kv(kc), "v": shard_kv(vc),
+                         "pos": pc}
+    else:  # decode
+        cap = slot_cache["k"].shape[1]
+        idx = (cache_len % cap).astype(jnp.int32)
+        kc = jax.lax.dynamic_update_index_in_dim(
+            slot_cache["k"], k[:, 0], idx, axis=1)
+        vc = jax.lax.dynamic_update_index_in_dim(
+            slot_cache["v"], v[:, 0], idx, axis=1)
+        pc = jax.lax.dynamic_update_index_in_dim(
+            slot_cache["pos"],
+            jnp.broadcast_to(cache_len, (b,)).astype(jnp.int32), idx,
+            axis=1)
+        # Pin the cache sharding (batch x seq-on-model): without this
+        # GSPMD reshards the stacked cache to a head-split layout inside
+        # the period scan, staging f32 copies of the whole cache
+        # (EXPERIMENTS.md §Perf iteration D1).
+        kc, vc = shard_kv(kc), shard_kv(vc)
+        valid = pc >= 0
+        if cfg.window:
+            valid &= pc > cache_len - cfg.window
+        if cfg.attention_impl.startswith("pallas") and not cfg.window:
+            # kernel path uses prefix lengths; ring caches (SWA) keep the
+            # masked XLA form (positions are scattered, not a prefix)
+            from repro.kernels.ops import flash_decode_op
+            lengths = jnp.broadcast_to(cache_len + 1, (b,))
+            out = flash_decode_op(
+                q, kc, vc, lengths,
+                interpret=cfg.attention_impl == "pallas_interpret")
+        else:
+            out = L.attention_decode(q, kc, vc, valid)
+        new_cache = {"k": kc, "v": vc, "pos": pc}
+
+    b_, s_, hq, hd = out.shape
+    out = out.reshape(b_, s_, hq * hd) @ p["wo"].astype(x.dtype)
+    return out, new_cache
+
+
+def _run_period(cfg: ModelConfig, pp, x, positions, mode, cache_p,
+                cache_len, aux, shard_kv=None):
+    new_cache = {}
+    for slot, (mix, ffn) in enumerate(zip(cfg.pattern, cfg.ffn_pattern)):
+        h = L.rms_norm(x, pp[f"norm1_{slot}"], cfg.norm_eps)
+        sc = None if cache_p is None else cache_p.get(f"s{slot}")
+        if mix == "attn":
+            out, nc = _attn_mixer(cfg, pp[f"mixer_{slot}"], h, positions,
+                                  mode, sc, cache_len, shard_kv)
+        elif mix == "mamba":
+            if mode == "decode":
+                out, nc = M.mamba_decode(pp[f"mixer_{slot}"], h, sc)
+            else:
+                out, nc = M.mamba_seq(pp[f"mixer_{slot}"], h,
+                                      chunk=cfg.ssm_chunk,
+                                      remat=cfg.remat and mode == "train")
+        elif mix == "mlstm":
+            if mode == "decode":
+                out, nc = X.mlstm_decode(pp[f"mixer_{slot}"], h, sc,
+                                         num_heads=cfg.num_heads)
+            else:
+                out, nc = X.mlstm_seq(pp[f"mixer_{slot}"], h,
+                                      num_heads=cfg.num_heads,
+                                      chunk=cfg.mlstm_chunk)
+        elif mix == "slstm":
+            if mode == "decode":
+                out, nc = X.slstm_decode(pp[f"mixer_{slot}"], h, sc,
+                                         num_heads=cfg.num_heads)
+            else:
+                out, nc = X.slstm_seq(pp[f"mixer_{slot}"], h,
+                                      num_heads=cfg.num_heads,
+                                      remat=cfg.remat and mode == "train")
+        else:
+            raise ValueError(mix)
+        x = x + out
+        if mode != "train" and nc is not None:
+            new_cache[f"s{slot}"] = nc
+
+        if ffn == "mlp":
+            h2 = L.rms_norm(x, pp[f"norm2_{slot}"], cfg.norm_eps)
+            x = x + L.mlp(pp[f"ffn_{slot}"], h2, cfg.act)
+        elif ffn == "moe":
+            h2 = L.rms_norm(x, pp[f"norm2_{slot}"], cfg.norm_eps)
+            # Decode steps are dropless: a dropped token would corrupt
+            # the served output. Capacity = full worst case (B*k tiny).
+            cf = (float(cfg.num_experts) if mode == "decode"
+                  else cfg.capacity_factor)
+            if cfg.moe_impl == "a2a" and mode != "decode":
+                from repro.models.moe_a2a import moe_apply_a2a
+                y, moe_aux = moe_apply_a2a(
+                    pp[f"ffn_{slot}"], h2, top_k=cfg.top_k,
+                    capacity_factor=cf, act=cfg.act)
+            else:
+                y, moe_aux = MOE.moe_apply(
+                    pp[f"ffn_{slot}"], h2, top_k=cfg.top_k,
+                    capacity_factor=cf, act=cfg.act)
+            x = x + y
+            aux = {k: aux[k] + moe_aux.get(k, 0.0) for k in aux}
+    return x, (new_cache if mode != "train" else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    dt = _dtype(cfg)
+    if "embeds" in batch:
+        return batch["embeds"].astype(dt)
+    tok = batch["tokens"]
+    return jnp.take(params["embed"], tok, axis=0).astype(dt)
+
+
+def forward_hidden(params, cfg: ModelConfig, batch,
+                   mode: str = "train",
+                   cache: Optional[dict] = None,
+                   shard_act=None, shard_kv=None
+                   ) -> Tuple[jnp.ndarray, Optional[dict], Dict]:
+    """Returns (hidden (B,S,D) post-final-norm, new_cache, aux).
+
+    ``shard_act``: optional callable x->x inserting an activation
+    sharding constraint (batch on the data axes). Needed under pjit with
+    FSDP param storage: without an explicit reshard point, GSPMD can
+    resolve the data-axis conflict between batch and parameter shards by
+    replicating the *batch* — catastrophic (EXPERIMENTS.md §Perf).
+    Applied after embedding and at every period boundary.
+    """
+    if shard_act is None:
+        shard_act = lambda t: t
+    x = shard_act(embed_inputs(params, cfg, batch))
+    b, s, _ = x.shape
+    cache_len = None if cache is None else cache["len"]
+    positions = _rope_positions(cfg, batch, b, s,
+                                cache_len if mode == "decode" else None)
+    aux0 = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+    if mode == "train":
+        multi_slot = len(cfg.pattern) > 1
+
+        def step(carry, pp):
+            x, aux = carry
+            if cfg.remat and multi_slot:
+                # Long heterogeneous periods (Jamba: 8 sublayers, 4 of
+                # them MoE): remat per *sublayer* so backward recompute
+                # keeps one sublayer's transients live at a time, not
+                # the whole period's (§Perf iteration J1).
+                for slot in range(len(cfg.pattern)):
+                    sub_cfg = cfg.with_overrides(
+                        num_layers=len(cfg.pattern),
+                        pattern=cfg.pattern,
+                        ffn_pattern=cfg.ffn_pattern)
+
+                    def one_slot(x_, aux_, slot=slot):
+                        c = cfg.with_overrides(
+                            num_layers=1,
+                            pattern=(cfg.pattern[slot],),
+                            ffn_pattern=(cfg.ffn_pattern[slot],))
+                        pp_slot = {
+                            k.replace(f"_{slot}", "_0"): v
+                            for k, v in pp.items()
+                            if k.endswith(f"_{slot}")}
+                        return _run_period(c, pp_slot, x_, positions,
+                                           "train", None, None, aux_)
+
+                    one_slot = jax.checkpoint(
+                        one_slot,
+                        policy=jax.checkpoint_policies.nothing_saveable)
+                    x, _, aux = one_slot(x, aux)
+            else:
+                x, _, aux = _run_period(cfg, pp, x, positions, "train",
+                                        None, None, aux)
+            return (shard_act(x), aux), None
+        if cfg.remat and not multi_slot:
+            step = jax.checkpoint(
+                step, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux), _ = jax.lax.scan(step, (x, aux0), params["periods"])
+        new_cache = None
+    elif mode == "prefill":
+        assert cache is not None, "prefill needs an (empty) cache"
+        def step(carry, xs):
+            x, aux = carry
+            pp, cp = xs
+            x, nc, aux = _run_period(cfg, pp, x, positions, "prefill", cp,
+                                     None, aux, shard_kv)
+            return (shard_act(x), aux), nc
+        (x, aux), stacked = jax.lax.scan(
+            step, (x, aux0), (params["periods"], cache["layers"]))
+        new_cache = {"len": jnp.asarray(s, jnp.int32), "layers": stacked}
+    elif mode == "decode":
+        assert cache is not None
+        def step(carry, xs):
+            x, aux = carry
+            pp, cp = xs
+            x, nc, aux = _run_period(cfg, pp, x, positions, "decode", cp,
+                                     cache_len, aux, shard_kv)
+            return (shard_act(x), aux), nc
+        (x, aux), stacked = jax.lax.scan(
+            step, (x, aux0), (params["periods"], cache["layers"]))
+        new_cache = {"len": cache_len + 1, "layers": stacked}
+    else:
+        raise ValueError(mode)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache, aux
+
+
+def logits_from_hidden(params, cfg: ModelConfig,
+                       hidden: jnp.ndarray) -> jnp.ndarray:
+    return hidden @ params["lm_head"].astype(hidden.dtype)
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, shard_act=None,
+            shard_kv=None) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence prefill; returns (last-token logits (B,V), cache)."""
+    hidden, new_cache, _ = forward_hidden(params, cfg, batch, "prefill",
+                                          cache, shard_act, shard_kv)
+    logits = logits_from_hidden(params, cfg, hidden[:, -1:])[:, 0]
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, batch, cache, shard_act=None,
+                shard_kv=None) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode; batch has tokens (B,1) (or embeds (B,1,D))."""
+    hidden, new_cache, _ = forward_hidden(params, cfg, batch, "decode",
+                                          cache, shard_act, shard_kv)
+    logits = logits_from_hidden(params, cfg, hidden)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+GShard-style *grouped* scatter formulation: each sequence in the batch is
+a dispatch group, so token->expert scatter, expert gather and their
+position bookkeeping are local to a (group, expert) tile — under pjit the
+buffers shard as (groups on `data`) x (experts on `model`) with NO
+cross-shard scatter. (A flat formulation scatters tokens from data-
+sharded rows into expert-sharded buffers; GSPMD cannot partition that
+scatter and replicates the 17 GB update tensor — the failure documented
+in EXPERIMENTS.md §Perf iteration M1.)
+
+Collectives left to GSPMD here: the combine-side gather of expert outputs
+across the model axis. The explicit all-to-all shard_map variant
+(moe_a2a.py, ``cfg.moe_impl="a2a"``) replaces that with 2 all-to-alls.
+
+Aux outputs: Switch-style load-balance loss, router z-loss, and the
+realized drop fraction (capacity is per group×expert).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_moe(rng, d_model: int, d_ff: int, num_experts: int,
+             act: str = "silu"):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "router": dense_init(ks[0], (d_model, num_experts), scale=0.02),
+        "experts_w_in": dense_init(ks[1], (num_experts, d_model, d_ff),
+                                   scale=1.0 / math.sqrt(d_model)),
+        "experts_w_out": dense_init(ks[2], (num_experts, d_ff, d_model),
+                                    scale=1.0 / math.sqrt(d_ff)),
+    }
+    if act == "silu":
+        p["experts_w_gate"] = dense_init(
+            ks[3], (num_experts, d_model, d_ff),
+            scale=1.0 / math.sqrt(d_model))
+    return p
+
+
+def route(p, x, top_k: int):
+    """x: (G, T, D) -> (gates (G,T,k), ids (G,T,k), aux dict)."""
+    logits = (x.astype(jnp.float32) @ p["router"])       # (G,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)              # (G,T,k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    e = logits.shape[-1]
+    f_e = jnp.mean(jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32),
+                           axis=2), axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    lb_loss = e * jnp.sum(f_e * p_e)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return gate, idx, {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss}
+
+
+def moe_apply(p, x, *, top_k: int, capacity_factor: float = 1.25,
+              act: str = "silu") -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (y (B, S, D), aux losses). Groups = batch rows."""
+    b, s, d = x.shape
+    g, t = b, s
+    e = p["router"].shape[1]
+    gate, idx, aux = route(p, x, top_k)                  # (G,T,k)
+
+    cap = int(math.ceil(t * top_k * capacity_factor / e))
+    cap = max(min(cap, t * top_k), top_k)
+
+    # Position of each (token, slot) within its expert, per group.
+    idx_flat = idx.reshape(g, t * top_k)                 # (G,Tk)
+    onehot = jax.nn.one_hot(idx_flat, e, dtype=jnp.int32)  # (G,Tk,E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(
+        pos, idx_flat[..., None], axis=2)[..., 0]        # (G,Tk)
+    keep = pos < cap
+    pos_c = jnp.minimum(pos, cap - 1)
+
+    # Dispatch: group-local scatter into (G, E, C, D). vmap over the
+    # group dim makes G a formal scatter batch dim, so GSPMD shards it
+    # on the data axes (explicit fancy-index groups get replicated on
+    # multi-axis data meshes — §Perf iteration M2).
+    x_dup = jnp.repeat(x, top_k, axis=1)                 # (G,Tk,D)
+    upd = x_dup * keep[..., None].astype(x.dtype)
+
+    def scatter_group(idx_g, pos_g, upd_g):
+        return jnp.zeros((e, cap, d), x.dtype).at[idx_g, pos_g].add(
+            upd_g, mode="drop")
+
+    buf = jax.vmap(scatter_group)(idx_flat, pos_c, upd)  # (G,E,C,D)
+
+    # Expert computation: (G,E,C,D) x (E,D,F) — E on `model`, G on `data`.
+    h = jnp.einsum("gecd,edf->gecf", buf,
+                   p["experts_w_in"].astype(x.dtype))
+    if act == "silu":
+        gt = jnp.einsum("gecd,edf->gecf", buf,
+                        p["experts_w_gate"].astype(x.dtype))
+        h = jax.nn.silu(gt) * h
+    else:
+        h = jax.nn.gelu(h)
+    out_buf = jnp.einsum("gecf,efd->gecd", h,
+                         p["experts_w_out"].astype(x.dtype))
+
+    # Combine: group-local gather + router-gate weighting (vmapped for
+    # the same sharding reason as the dispatch scatter).
+    y_dup = jax.vmap(lambda ob, ig, pg: ob[ig, pg])(
+        out_buf, idx_flat, pos_c)                        # (G,Tk,D)
+    w = (gate.reshape(g, t * top_k) * keep).astype(x.dtype)
+    y = jnp.sum((y_dup * w[..., None]).reshape(g, t, top_k, d), axis=2)
+
+    aux["moe_drop_fraction"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y, aux

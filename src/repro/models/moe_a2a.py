@@ -1,0 +1,148 @@
+"""Expert-parallel MoE with explicit all-to-all dispatch (beyond-paper).
+
+The GSPMD baseline (``moe.py``) leaves the combine-side cross-shard
+gather to the compiler, which lowers to all-gathers of the expert output
+buffers — O(E_loc·C·D) bytes per chip. This variant expresses the
+DeepSpeed/GShard schedule directly with ``jax.shard_map``:
+
+  tokens (sequence-sharded over `model`, batch-sharded over data axes)
+    → local top-k route → local scatter into per-target-shard buffers
+    → all-to-all over `model` (dispatch)
+    → local expert matmuls (E/M experts per chip)
+    → all-to-all back (combine) → local gather + gate weighting.
+
+Per-chip collective bytes drop to 2 × T_loc·k·cf·D — independent of the
+expert count — which is what makes 128-expert qwen3 tractable
+(EXPERIMENTS.md §Perf, iteration A2A).
+
+Selected with ``cfg.moe_impl = "a2a"``; requires a mesh registered via
+``mesh_context`` (the dry-run/launchers do this) and falls back to the
+GSPMD path when none is set.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_MESH = None
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+def current_mesh():
+    return _MESH
+
+
+def _data_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def moe_apply_a2a(p, x, *, top_k: int, capacity_factor: float = 1.25,
+                  act: str = "silu") -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (y, aux). Requires S % model-axis == 0."""
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names or \
+            mesh.shape["model"] == 1:
+        from repro.models.moe import moe_apply
+        return moe_apply(p, x, top_k=top_k,
+                         capacity_factor=capacity_factor, act=act)
+
+    m = mesh.shape["model"]
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    assert e % m == 0, (e, m)
+    e_loc = e // m
+    dp = _data_axes(mesh)
+    all_axes = tuple(mesh.axis_names)
+    batch_spec = dp if b % math.prod(
+        mesh.shape[a] for a in dp) == 0 else None
+    s_loc = s // m
+    t_loc = b * s_loc if batch_spec else b * s_loc  # per-device tokens
+    cap = int(math.ceil(max(t_loc, 1) * top_k * capacity_factor / e))
+    cap = max(min(cap, t_loc * top_k), top_k)
+
+    def local(xb, router, w_in, w_gate, w_out):
+        # xb: (B_loc, S_loc, D); experts blocks: (E_loc, D, F)
+        bl, sl, _ = xb.shape
+        t = bl * sl
+        xt = xb.reshape(t, d)
+        logits = xt.astype(jnp.float32) @ router          # (T,E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, idx = jax.lax.top_k(probs, top_k)
+        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+        # positions within (global) expert, local tokens only
+        idx_flat = idx.reshape(t * top_k)
+        onehot = jax.nn.one_hot(idx_flat, e, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        pos = jnp.take_along_axis(pos, idx_flat[:, None], 1)[:, 0]
+        keep = pos < cap
+        pos_c = jnp.minimum(pos, cap - 1)
+
+        x_dup = jnp.repeat(xt, top_k, axis=0)             # (Tk,D)
+        send = jnp.zeros((e, cap, d), xb.dtype).at[idx_flat, pos_c].add(
+            x_dup * keep[:, None].astype(xb.dtype), mode="drop")
+        send = send.reshape(m, e_loc, cap, d)
+
+        # dispatch: tokens travel to the shard owning their expert
+        recv = jax.lax.all_to_all(send, "model", split_axis=0,
+                                  concat_axis=0)          # (M,E_loc,C,D)
+        work = jnp.moveaxis(recv, 0, 1).reshape(e_loc, m * cap, d)
+
+        h = jnp.einsum("ecd,edf->ecf", work, w_in.astype(xb.dtype))
+        if act == "silu":
+            g = jnp.einsum("ecd,edf->ecf", work,
+                           w_gate.astype(xb.dtype))
+            h = jax.nn.silu(g) * h
+        else:
+            h = jax.nn.gelu(h)
+        out = jnp.einsum("ecf,efd->ecd", h, w_out.astype(xb.dtype))
+
+        # combine: results travel back to the token's source shard
+        out = jnp.moveaxis(out.reshape(e_loc, m, cap, d), 1, 0)
+        back = jax.lax.all_to_all(out, "model", split_axis=0,
+                                  concat_axis=0)          # (M,E_loc,C,D)
+        back = back.reshape(e, cap, d)
+        y_dup = back[idx_flat, pos_c]                     # (Tk,D)
+        w = (gate.reshape(t * top_k) * keep).astype(xb.dtype)
+        y = jnp.sum((y_dup * w[:, None]).reshape(t, top_k, d), axis=1)
+
+        # aux (replicated scalars via mean over every mesh axis)
+        f_e = jnp.mean(jnp.sum(
+            jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=1), axis=0)
+        p_e = jnp.mean(probs, axis=0)
+        lb = e * jnp.sum(f_e * p_e)
+        z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+        drop = 1.0 - jnp.mean(keep.astype(jnp.float32))
+        lb, z, drop = (jax.lax.pmean(v, all_axes) for v in (lb, z, drop))
+        return y.reshape(bl, sl, d), lb, z, drop
+
+    gate_key = "experts_w_gate" if "experts_w_gate" in p else None
+    w_gate = p[gate_key] if gate_key else p["experts_w_in"]
+    y, lb, z, drop = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(batch_spec, "model", None),      # x: seq-sharded
+                  P(None, None),                     # router replicated
+                  P("model", None, None),            # experts E-sharded
+                  P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(batch_spec, "model", None), P(), P(), P()),
+        check_vma=False,
+    )(x, p["router"], p["experts_w_in"], w_gate, p["experts_w_out"])
+    aux = {"moe_lb_loss": lb, "moe_z_loss": z, "moe_drop_fraction": drop}
+    return y, aux

@@ -1,0 +1,63 @@
+"""Scan helpers shared by the recurrent layers (Mamba, sLSTM, mLSTM).
+
+``chunked_remat_scan`` is the TPU-memory adaptation of CUDA selective-scan
+recomputation: the outer scan saves only chunk-boundary carries; the
+inner scan is wrapped in ``jax.checkpoint`` so its per-step states are
+recomputed during backward. Saved residency drops from O(S) carries to
+O(S/chunk) at the cost of one extra forward over each chunk.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_remat_scan(step_fn: Callable, carry, xs, chunk: int,
+                       remat: bool = True):
+    """scan(step_fn, carry, xs) with chunk-level gradient checkpointing.
+
+    xs: pytree with leading time dim S (divisible by chunk or S<chunk).
+    Returns (final_carry, ys) like lax.scan.
+    """
+    s = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if s <= chunk or s % chunk:
+        return jax.lax.scan(step_fn, carry, xs)
+    n = s // chunk
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    def chunk_fn(c, xc):
+        return jax.lax.scan(step_fn, c, xc)
+
+    if remat:
+        chunk_fn = jax.checkpoint(chunk_fn,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+    carry, ys_c = jax.lax.scan(chunk_fn, carry, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((s,) + a.shape[2:]), ys_c)
+    return carry, ys
+
+
+def causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray,
+                          b: jnp.ndarray,
+                          state: jnp.ndarray = None):
+    """Depthwise causal 1-D conv along time.
+
+    x: (B, S, C); w: (K, C); b: (C,). ``state``: (B, K-1, C) trailing
+    inputs from the previous segment (decode), or None for zero history.
+    Returns (y (B,S,C), new_state (B,K-1,C)).
+    """
+    bsz, s, c = x.shape
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, k - 1, c), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # (B, S+K-1, C)
+    y = jnp.zeros((bsz, s, c), x.dtype)
+    for i in range(k):  # K is tiny (4); unrolled taps
+        y = y + xp[:, i:i + s, :] * w[i].astype(x.dtype)
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, s:, :] if k > 1 else state
+    return y, new_state

@@ -1,0 +1,213 @@
+"""Sharding rules: PartitionSpecs for params, caches, activations, opt state.
+
+Conventions on the production mesh (DESIGN.md §5):
+  * ``model`` axis: tensor parallelism — attention heads / d_ff / experts /
+    vocab; for decode KV caches, the cache *sequence* dim (sequence-
+    parallel flash-decode).
+  * ``data`` axis (plus ``pod`` when multi-pod): batch; with
+    ``cfg.fsdp``, parameters and optimizer state are additionally
+    sharded on data (ZeRO-3 style).
+
+A dim is sharded only if the axis size divides it (``_fits``); otherwise
+it is replicated — this keeps every (arch × mesh) combination legal, e.g.
+8 KV heads on a 16-way model axis fall back to replication while the
+cache sequence dim takes the sharding instead.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        out = 1
+        for n in name:
+            out *= axis_size(mesh, n)
+        return out
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fits(dim: int, mesh: Mesh, name) -> bool:
+    n = axis_size(mesh, name)
+    return n > 1 and dim % n == 0
+
+
+def _spec_for_param(path: str, shape, cfg: ModelConfig, mesh: Mesh) -> P:
+    """Rules keyed on parameter names (leading periods dim never sharded)."""
+    model = "model" if cfg.tensor_parallel else None
+    dp = data_axes(mesh)
+    stacked = path.startswith("periods")
+    dims = list(shape)
+    if stacked:
+        dims = dims[1:]  # strip the periods dim
+
+    def build(*spec):
+        spec = list(spec) + [None] * (len(dims) - len(spec))
+        # verify divisibility; drop shardings that don't fit
+        out = []
+        for d, s in zip(dims, spec):
+            if s is None:
+                out.append(None)
+            elif _fits(d, mesh, s):
+                out.append(s)
+            else:
+                out.append(None)
+        if stacked:
+            out = [None] + out
+        return P(*out)
+
+    leaf = path.split("/")[-1]
+
+    if leaf in ("embed", "lm_head"):
+        # (V, D) / (D, V): shard vocab on model, other dim on data (fsdp)
+        if leaf == "embed":
+            return build(model, dp if cfg.fsdp else None)
+        return build(dp if cfg.fsdp else None, model)
+    if leaf in ("wk", "wv"):
+        # KV projections: shard on model only when the kv-head count
+        # itself divides the axis — otherwise replicate (flat-head GQA
+        # keeps q sharded; KV is the small side). See layers.expand_kv.
+        kv_ok = cfg.num_kv_heads % axis_size(mesh, model) == 0
+        return build(dp if cfg.fsdp else None, model if kv_ok else None)
+    if leaf in ("wq", "w_in", "w_gate", "w_up", "w_z",
+                "w_q", "w_k", "w_v", "in_proj", "x_proj", "dt_proj", "w"):
+        # (D_in, D_out): output-feature sharded on model
+        return build(dp if cfg.fsdp else None, model)
+    if leaf in ("wo", "w_out", "w_down", "out_proj"):
+        # (D_in, D_out): input-feature (contracting) sharded on model
+        return build(model, dp if cfg.fsdp else None)
+    if leaf in ("experts_w_in", "experts_w_gate", "experts_w_out"):
+        # (E, D, F): expert-parallel on model; fsdp on F/D
+        return build(model, None, dp if cfg.fsdp else None)
+    if leaf == "router":
+        return build(None, None)
+    if leaf in ("bk", "bv"):
+        kv_ok = cfg.num_kv_heads % axis_size(mesh, model) == 0
+        return build(model if kv_ok else None)
+    if leaf in ("bq",):
+        return build(model)
+    if leaf in ("conv_b", "dt_bias", "D", "b", "norm_scale", "b_i", "b_f"):
+        return build(None)
+    if leaf in ("A_log",):
+        return build(model, None)
+    if leaf == "conv_w":
+        return build(None, model)
+    if leaf in ("w_i", "w_f"):
+        return build(model, None)
+    if leaf == "r":
+        return build(None, None, None)
+    if leaf in ("final_norm",):
+        return P(None)
+    return build()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+    return "/".join(parts)
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec pytree for a params pytree (arrays or SDS)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_param(_path_str(path), leaf.shape,
+                                           cfg, mesh),
+        params_shape)
+
+
+def cache_specs(cache_shape, cfg: ModelConfig, mesh: Mesh,
+                decode_2d: bool = False):
+    """Decode-cache specs.
+
+    KV tensors (P, B, S_cache, Hk, hd): batch on data if it fits, cache
+    sequence dim on ``model`` (flash-decode); recurrent states: batch on
+    data, feature dim on model where divisible.
+    """
+    dp = data_axes(mesh)
+    model = "model"
+    both = tuple(dp) + ("model",)
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        dims = leaf.shape
+        if p == "len":
+            return P()
+        leafname = p.split("/")[-1]
+        batch_s = None if decode_2d else best_batch_axes(
+            dims[1], cfg, mesh)
+
+        def feat(dim):
+            """Feature dims: widest sharding that divides."""
+            if decode_2d and _fits(dim, mesh, both):
+                return both
+            return model if _fits(dim, mesh, model) else None
+        if leafname in ("k", "v"):
+            seq_s = model if _fits(dims[2], mesh, model) else None
+            return P(None, batch_s, seq_s, None, None)
+        if leafname == "pos":
+            seq_s = model if _fits(dims[2], mesh, model) else None
+            return P(None, batch_s, seq_s)
+        if leafname == "conv":                     # (P,B,K-1,di)
+            return P(None, batch_s, None, feat(dims[3]))
+        if leafname == "h" and len(dims) == 4:     # mamba (P,B,di,N)
+            return P(None, batch_s, feat(dims[2]), None)
+        if leafname == "C":                        # (P,B,H,dh,dh)
+            f = model if _fits(dims[2], mesh, model) else None
+            return P(None, batch_s, f, None, None)
+        if leafname in ("n",) and len(dims) == 4:  # (P,B,H,dh)
+            f = model if _fits(dims[2], mesh, model) else None
+            return P(None, batch_s, f, None)
+        if leafname == "m" and len(dims) == 3:     # (P,B,H)
+            return P(None, batch_s, None)
+        # slstm states (P,B,di) and anything else: batch-shard only
+        return P(*([None, batch_s] + [None] * (len(dims) - 2)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def best_batch_axes(b: int, cfg: ModelConfig, mesh: Mesh):
+    """Widest axis set the batch divides: all axes (pure-DP models),
+    else the data axes, else none."""
+    dp = data_axes(mesh)
+    if not cfg.tensor_parallel:
+        full = tuple(dp) + ("model",)
+        if _fits(b, mesh, full):
+            return full
+    return dp if _fits(b, mesh, dp) else None
+
+
+def batch_specs(batch_shape, cfg: ModelConfig, mesh: Mesh):
+    """Input batch: leading batch dim on the widest dividing axes."""
+
+    def spec(path, leaf):
+        s = best_batch_axes(leaf.shape[0], cfg, mesh)
+        return P(*([s] + [None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def opt_state_specs(param_spec_tree):
+    """Optimizer moments shard like their parameters."""
+    return param_spec_tree
+
+
+def to_named(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,238 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM and sLSTM.
+
+mLSTM — matrix-memory LSTM with exponential gating. Two consistent
+forms are implemented (tested against each other):
+  * parallel/quadratic form for train & prefill (chunked over query rows
+    like attention, with log-space gate stabilization), plus a closed-form
+    computation of the final (C, n, m) recurrent state for decode handoff;
+  * recurrent form for single-token decode, state {C:(B,H,dh,dh),
+    n:(B,H,dh), m:(B,H)}.
+
+sLSTM — scalar-memory LSTM with exponential gating and block-diagonal
+(per-head) recurrence; inherently sequential, run with chunked-remat scan.
+State {c,n,h,m}: (B, di) each.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.models.scan_utils import causal_depthwise_conv, chunked_remat_scan
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(rng, d_model: int, num_heads: int, *, expand: int = 2,
+               d_conv: int = 4):
+    di = expand * d_model
+    ks = jax.random.split(rng, 9)
+    return {
+        "w_up": dense_init(ks[0], (d_model, di)),
+        "w_z": dense_init(ks[1], (d_model, di)),
+        "conv_w": dense_init(ks[2], (d_conv, di), scale=0.5),
+        "conv_b": jnp.zeros((di,)),
+        "w_q": dense_init(ks[3], (di, di)),
+        "w_k": dense_init(ks[4], (di, di)),
+        "w_v": dense_init(ks[5], (di, di)),
+        "w_i": dense_init(ks[6], (di, num_heads), scale=0.01),
+        "b_i": jnp.zeros((num_heads,)),
+        "w_f": dense_init(ks[7], (di, num_heads), scale=0.01),
+        # forget-gate bias init high => long memory at init
+        "b_f": jnp.full((num_heads,), 3.0),
+        "norm_scale": jnp.ones((di,)),
+        "w_down": dense_init(ks[8], (di, d_model)),
+    }
+
+
+def _mlstm_qkv_gates(p, x, num_heads, conv_state=None):
+    b, s, _ = x.shape
+    di = p["w_up"].shape[1]
+    dh = di // num_heads
+    xi = x @ p["w_up"].astype(x.dtype)
+    z = x @ p["w_z"].astype(x.dtype)
+    xc, new_conv = causal_depthwise_conv(xi, p["conv_w"], p["conv_b"],
+                                         conv_state)
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["w_q"].astype(x.dtype)).reshape(b, s, num_heads, dh)
+    k = (xc @ p["w_k"].astype(x.dtype)).reshape(b, s, num_heads, dh)
+    k = k / math.sqrt(dh)
+    v = (xi @ p["w_v"].astype(x.dtype)).reshape(b, s, num_heads, dh)
+    i_pre = (xc @ p["w_i"].astype(x.dtype)).astype(jnp.float32) + p["b_i"]
+    f_pre = (xc @ p["w_f"].astype(x.dtype)).astype(jnp.float32) + p["b_f"]
+    return xi, z, q, k, v, i_pre, f_pre, new_conv, dh
+
+
+def mlstm_seq(p, x, *, num_heads: int, chunk: int = 512
+              ) -> Tuple[jnp.ndarray, dict]:
+    """Parallel form. x: (B,S,D) -> (out (B,S,D), final recurrent state)."""
+    b, s, d_model = x.shape
+    xi, z, q, k, v, i_pre, f_pre, new_conv, dh = _mlstm_qkv_gates(
+        p, x, num_heads)
+    logf = jax.nn.log_sigmoid(f_pre)                     # (B,S,H)
+    f_cum = jnp.cumsum(logf, axis=1)                     # F_t
+    # log decay weight of source s at target t: F_t - F_s + i_s (s<=t)
+    w_src = i_pre - f_cum                                # (B,S,H): i_s - F_s
+
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # odd sizes (tests): single chunk
+    n_chunks = s // chunk
+    qc = q.reshape(b, n_chunks, chunk, num_heads, dh)
+    fc = f_cum.reshape(b, n_chunks, chunk, num_heads)
+
+    def body(_, ci):
+        qi = qc[:, ci]                                   # (B,c,H,dh)
+        fi = fc[:, ci]                                   # (B,c,H)
+        logw = fi[:, :, None, :] + w_src[:, None, :, :]  # (B,c,S,H)
+        t_pos = ci * chunk + jnp.arange(chunk)
+        mask = t_pos[:, None] >= jnp.arange(s)[None, :]  # (c,S)
+        logw = jnp.where(mask[None, :, :, None], logw, -jnp.inf)
+        m = jnp.maximum(jnp.max(logw, axis=2), 0.0)      # (B,c,H); >=0 per paper's max(.,exp(-m)<=1)
+        dmat = jnp.exp(logw - m[:, :, None, :])          # (B,c,S,H)
+        qk = jnp.einsum("bchd,bshd->bchs", qi.astype(jnp.float32),
+                        k.astype(jnp.float32))           # (B,c,H,S)
+        sc = qk * jnp.moveaxis(dmat, 3, 2)               # (B,c,H,S)
+        denom = jnp.maximum(jnp.abs(sc.sum(-1)),
+                            jnp.exp(-m))                 # (B,c,H)
+        out = jnp.einsum("bchs,bshd->bchd", sc, v.astype(jnp.float32))
+        out = out / denom[..., None]
+        return None, out                                 # (B,c,H,dh)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    y = jnp.moveaxis(outs, 0, 1).reshape(b, s, num_heads * dh)
+
+    # Closed-form final recurrent state (for prefill -> decode handoff).
+    f_total = f_cum[:, -1]                               # (B,H) = F_S
+    log_ws = f_total[:, None, :] + w_src                 # F_S - F_s + i_s
+    m_fin = jnp.max(log_ws, axis=1)                      # (B,H)
+    wgt = jnp.exp(log_ws - m_fin[:, None, :])            # (B,S,H)
+    c_fin = jnp.einsum("bsh,bshd,bshe->bhde", wgt, k.astype(jnp.float32),
+                       v.astype(jnp.float32))
+    n_fin = jnp.einsum("bsh,bshd->bhd", wgt, k.astype(jnp.float32))
+    state = {"C": c_fin, "n": n_fin, "m": m_fin, "conv": new_conv}
+
+    y = rms_norm(y.astype(x.dtype), p["norm_scale"])
+    y = y * jax.nn.silu(z)
+    return y @ p["w_down"].astype(x.dtype), state
+
+
+def mlstm_decode(p, x, state, *, num_heads: int
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """Recurrent form, one step. x: (B,1,D)."""
+    b = x.shape[0]
+    xi, z, q, k, v, i_pre, f_pre, new_conv, dh = _mlstm_qkv_gates(
+        p, x, num_heads, state["conv"])
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                  # (B,H,dh)
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]              # (B,H)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_prev = state["m"]
+    m_new = jnp.maximum(logf + m_prev, i_pre)
+    m_new = jnp.maximum(m_new, 0.0)                      # match parallel clamp
+    f_eff = jnp.exp(logf + m_prev - m_new)[..., None]
+    i_eff = jnp.exp(i_pre - m_new)[..., None]
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    c_new = f_eff[..., None] * state["C"] + \
+        i_eff[..., None] * kf[..., :, None] * vf[..., None, :]
+    n_new = f_eff * state["n"] + i_eff * kf
+    num = jnp.einsum("bhde,bhd->bhe", c_new, qf)         # (B,H,dh)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, qf)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, num_heads * dh)
+    y = rms_norm(y.astype(x.dtype), p["norm_scale"])
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_down"].astype(x.dtype)
+    return out, {"C": c_new, "n": n_new, "m": m_new, "conv": new_conv}
+
+
+def mlstm_init_state(batch: int, d_model: int, num_heads: int,
+                     expand: int = 2, d_conv: int = 4,
+                     dtype=jnp.bfloat16) -> dict:
+    di = expand * d_model
+    dh = di // num_heads
+    return {"C": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, num_heads, dh), jnp.float32),
+            "m": jnp.full((batch, num_heads), 0.0, jnp.float32),
+            "conv": jnp.zeros((batch, d_conv - 1, di), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(rng, d_model: int, num_heads: int):
+    di = d_model
+    dh = di // num_heads
+    ks = jax.random.split(rng, 3)
+    return {
+        "w": dense_init(ks[0], (d_model, 4 * di)),
+        "r": dense_init(ks[1], (num_heads, dh, 4 * dh),
+                        scale=1.0 / math.sqrt(dh)),
+        "b": jnp.zeros((4 * di,)).at[di:2 * di].set(3.0),  # f-gate bias
+        "norm_scale": jnp.ones((di,)),
+        "w_out": dense_init(ks[2], (di, d_model)),
+    }
+
+
+def _slstm_step(p, num_heads, carry, wx_t):
+    """carry: (c,n,h,m) each (B,di) f32; wx_t: (B,4di) f32 = x_t @ W + b."""
+    c, n, h, m = carry
+    b, di4 = wx_t.shape
+    di = di4 // 4
+    dh = di // num_heads
+    hh = h.reshape(b, num_heads, dh)
+    rh = jnp.einsum("bhd,hde->bhe", hh, p["r"].astype(jnp.float32))
+    g = wx_t + rh.reshape(b, 4 * di)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(g, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_eff = jnp.exp(i_pre - m_new)
+    f_eff = jnp.exp(logf + m - m_new)
+    c_new = f_eff * c + i_eff * jnp.tanh(z_pre)
+    n_new = f_eff * n + i_eff
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_seq(p, x, *, num_heads: int, chunk: int = 256,
+              remat: bool = True, state=None
+              ) -> Tuple[jnp.ndarray, dict]:
+    b, s, d_model = x.shape
+    di = d_model
+    wx = (x @ p["w"].astype(x.dtype)).astype(jnp.float32) + p["b"]
+    if state is None:
+        state = slstm_init_state(b, d_model)
+    carry = (state["c"], state["n"], state["h"], state["m"])
+
+    def step(cr, wx_t):
+        return _slstm_step(p, num_heads, cr, wx_t)
+
+    carry, hs = chunked_remat_scan(step, carry,
+                                   jnp.moveaxis(wx, 1, 0), chunk, remat)
+    y = jnp.moveaxis(hs, 0, 1)                           # (B,S,di)
+    y = rms_norm(y.astype(x.dtype), p["norm_scale"])
+    out = y @ p["w_out"].astype(x.dtype)
+    c, n, h, m = carry
+    return out, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_decode(p, x, state, *, num_heads: int) -> Tuple[jnp.ndarray, dict]:
+    b = x.shape[0]
+    wx = (x[:, 0] @ p["w"].astype(x.dtype)).astype(jnp.float32) + p["b"]
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, h = _slstm_step(p, num_heads, carry, wx)
+    y = rms_norm(h[:, None].astype(x.dtype), p["norm_scale"])
+    out = y @ p["w_out"].astype(x.dtype)
+    c, n, hh, m = carry
+    return out, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_init_state(batch: int, d_model: int) -> dict:
+    z = lambda: jnp.zeros((batch, d_model), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": z()}

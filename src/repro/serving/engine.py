@@ -1,0 +1,207 @@
+"""JAX model servables: the bridge from the lifecycle library to models.
+
+``JaxModelServable`` is the black box the Manager manages: config +
+params + jitted step functions. ``JaxModelLoader`` materializes one from
+a checkpoint directory (the payload emitted by the FileSystemSource →
+``JaxModelSourceAdapter`` chain). Memory release on unload explicitly
+deletes the device buffers — the JAX analogue of the paper's "releasing
+memory to the operating system upon servable unload", and it runs on the
+manager's unload thread per §2.1.2.
+"""
+from __future__ import annotations
+
+import logging
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.core.loader import Loader
+from repro.core.servable import ResourceEstimate, Servable, ServableId
+from repro.core.source import AspiredVersion
+from repro.core.adapter import SourceAdapter
+from repro.models import model as MD
+from repro.training import checkpoint as CKPT
+
+log = logging.getLogger(__name__)
+
+
+class InferenceLog:
+    """Bounded inference logging (paper §2.2: 'equipped with logging
+    capability' for debugging / training-serving-skew detection)."""
+
+    def __init__(self, capacity: int = 4096):
+        self._lock = threading.Lock()
+        self._entries = []
+        self._capacity = capacity
+        self.dropped = 0
+
+    def record(self, servable: ServableId, method: str, batch_size: int,
+               latency_s: float) -> None:
+        with self._lock:
+            if len(self._entries) >= self._capacity:
+                self._entries.pop(0)
+                self.dropped += 1
+            self._entries.append({
+                "t": time.time(), "servable": str(servable),
+                "method": method, "batch_size": batch_size,
+                "latency_ms": latency_s * 1e3})
+
+    def entries(self):
+        with self._lock:
+            return list(self._entries)
+
+
+class JaxModelServable(Servable):
+    """config + params + jitted inference functions.
+
+    Methods (the RPC surface, paper §2.2):
+      * ``predict``  — low-level tensor API: batch dict -> final logits.
+      * ``generate`` — prefill + greedy decode of ``max_new`` tokens.
+      * ``classify`` / ``regress`` — typed APIs over pooled hidden state.
+    """
+
+    def __init__(self, servable_id: ServableId, cfg: ModelConfig, params,
+                 max_cache_len: int = 512,
+                 inference_log: Optional[InferenceLog] = None):
+        super().__init__(servable_id)
+        self.cfg = cfg
+        self.params = params
+        self.max_cache_len = max_cache_len
+        self.inference_log = inference_log
+        self._ram = int(sum(np.asarray(l).nbytes for l in
+                            jax.tree_util.tree_leaves(params)))
+
+        cfgc = cfg
+
+        @jax.jit
+        def _predict(params, batch):
+            hidden, _, _ = MD.forward_hidden(params, cfgc, batch, "train")
+            return MD.logits_from_hidden(params, cfgc, hidden)
+
+        @jax.jit
+        def _prefill(params, batch, cache):
+            return MD.prefill(params, cfgc, batch, cache)
+
+        @jax.jit
+        def _decode(params, batch, cache):
+            return MD.decode_step(params, cfgc, batch, cache)
+
+        self._fns = {"predict": _predict, "prefill": _prefill,
+                     "decode": _decode}
+
+    # -- Servable API -----------------------------------------------------
+    def call(self, method: str, request: Any) -> Any:
+        t0 = time.monotonic()
+        out = self._dispatch(method, request)
+        if self.inference_log is not None:
+            bs = 0
+            for leaf in jax.tree_util.tree_leaves(request):
+                if hasattr(leaf, "shape") and getattr(leaf, "ndim", 0):
+                    bs = int(leaf.shape[0])
+                    break
+            self.inference_log.record(self.id, method, bs,
+                                      time.monotonic() - t0)
+        return out
+
+    def _dispatch(self, method: str, request: Any) -> Any:
+        if method == "predict":
+            return np.asarray(self._fns["predict"](self.params, request))
+        if method == "generate":
+            return self.generate(**request)
+        if method in ("classify", "regress"):
+            logits = np.asarray(
+                self._fns["predict"](self.params, request["batch"]))
+            pooled = logits[:, -1]                      # last position
+            if method == "classify":
+                top = np.argsort(-pooled, axis=-1)[:, :request.get("k", 5)]
+                return {"classes": top,
+                        "scores": np.take_along_axis(pooled, top, -1)}
+            return {"value": pooled.mean(axis=-1)}
+        raise ValueError(f"unknown method {method!r}")
+
+    def generate(self, tokens=None, embeds=None, max_new: int = 16,
+                 **_) -> np.ndarray:
+        prompt = tokens if tokens is not None else embeds
+        b, s = prompt.shape[:2]
+        cache = MD.init_cache(self.cfg, b, s + max_new)
+        pb = {"tokens": jnp.asarray(tokens)} if tokens is not None \
+            else {"embeds": jnp.asarray(embeds)}
+        logits, cache = self._fns["prefill"](self.params, pb, cache)
+        out = [np.argmax(np.asarray(logits), -1)]
+        for _ in range(max_new - 1):
+            nb = {"tokens": jnp.asarray(out[-1][:, None])}
+            logits, cache = self._fns["decode"](self.params, nb, cache)
+            out.append(np.argmax(np.asarray(logits), -1))
+        return np.stack(out, axis=1)                    # (B, max_new)
+
+    def unload(self) -> None:
+        # Paper §2.1.2: free on the manager thread; explicit buffer delete
+        # is the "release memory to the OS" analogue.
+        for leaf in jax.tree_util.tree_leaves(self.params):
+            if isinstance(leaf, jax.Array):
+                leaf.delete()
+        self.params = None
+        self._fns = {}
+
+    def resource_estimate(self) -> ResourceEstimate:
+        return ResourceEstimate(ram_bytes=self._ram,
+                                transient_ram_bytes=self._ram // 10)
+
+
+class JaxModelLoader(Loader):
+    """Loads a JaxModelServable from a checkpoint directory."""
+
+    def __init__(self, servable_id: ServableId, path: str,
+                 cfg: Optional[ModelConfig] = None,
+                 inference_log: Optional[InferenceLog] = None,
+                 load_delay_s: float = 0.0):
+        super().__init__(servable_id)
+        self.path = path
+        self._cfg = cfg
+        self._log = inference_log
+        self._delay = load_delay_s  # test hook: simulate big-model loads
+        self._manifest = CKPT.load_manifest(path)
+
+    def _resolve_cfg(self) -> ModelConfig:
+        if self._cfg is not None:
+            return self._cfg
+        return get_config(self._manifest["arch"])
+
+    def estimate_resources(self) -> ResourceEstimate:
+        ram = CKPT.estimate_ram_bytes(self.path)
+        return ResourceEstimate(ram_bytes=ram,
+                                transient_ram_bytes=ram // 10)
+
+    def load(self) -> Servable:
+        if self._delay:
+            time.sleep(self._delay)
+        cfg = self._resolve_cfg()
+        target = jax.eval_shape(
+            lambda: MD.init_params(jax.random.PRNGKey(0), cfg))
+        params = CKPT.load_checkpoint(self.path, target)
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+        return JaxModelServable(self.id, cfg, params,
+                                inference_log=self._log)
+
+
+class JaxModelSourceAdapter(SourceAdapter):
+    """path -> JaxModelLoader (the 'TensorFlow Source Adapter' analogue)."""
+
+    def __init__(self, cfg_for: Optional[Callable[[str], ModelConfig]] = None,
+                 inference_log: Optional[InferenceLog] = None):
+        super().__init__()
+        self._cfg_for = cfg_for
+        self._log = inference_log
+
+    def convert(self, version: AspiredVersion) -> AspiredVersion:
+        cfg = self._cfg_for(version.id.name) if self._cfg_for else None
+        return AspiredVersion(
+            id=version.id,
+            data=JaxModelLoader(version.id, version.data, cfg=cfg,
+                                inference_log=self._log))

@@ -1,0 +1,139 @@
+"""Canonical example format — the tf.Example analogue (paper §2.2).
+
+"to integrate smoothly with training pipelines, we have co-designed a
+canonical data format for examples called tf.Example ... We nevertheless
+do our best to optimize our standard example representation (e.g.
+compressing away features common to a batch of examples)".
+
+``Example`` is a typed feature map (int64/float/bytes lists — the
+tf.Example triple). ``ExampleBatch.pack`` splits a batch into *common*
+features (identical across every example — context features, model
+flags) stored ONCE, and per-example *varying* features stored as dense
+arrays — the paper's common-feature compression. ``to_model_inputs``
+adapts a packed batch to the tensor API.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+FeatureValue = Union[np.ndarray, list, tuple, bytes, int, float, str]
+
+_KINDS = {"int64": np.int64, "float": np.float32, "bytes": object}
+
+
+def _normalize(value: FeatureValue) -> np.ndarray:
+    if isinstance(value, (bytes, str)):
+        return np.asarray([value], dtype=object)
+    if isinstance(value, (int, np.integer)):
+        return np.asarray([value], dtype=np.int64)
+    if isinstance(value, (float, np.floating)):
+        return np.asarray([value], dtype=np.float32)
+    arr = np.asarray(value)
+    if arr.dtype.kind in "iu":
+        return arr.astype(np.int64).reshape(-1)
+    if arr.dtype.kind == "f":
+        return arr.astype(np.float32).reshape(-1)
+    return arr.astype(object).reshape(-1)
+
+
+@dataclasses.dataclass
+class Example:
+    """One typed feature map (the tf.Example unit)."""
+
+    features: Dict[str, np.ndarray]
+
+    @classmethod
+    def create(cls, **features: FeatureValue) -> "Example":
+        return cls({k: _normalize(v) for k, v in features.items()})
+
+    def kind_of(self, name: str) -> str:
+        dt = self.features[name].dtype
+        if dt == np.int64:
+            return "int64"
+        if dt == np.float32:
+            return "float"
+        return "bytes"
+
+
+class SchemaError(TypeError):
+    pass
+
+
+@dataclasses.dataclass
+class ExampleBatch:
+    """Batch with common-feature compression.
+
+    ``common``  — features identical across the batch, stored once.
+    ``varying`` — (B, L) arrays, one row per example.
+    """
+
+    size: int
+    common: Dict[str, np.ndarray]
+    varying: Dict[str, np.ndarray]
+
+    @classmethod
+    def pack(cls, examples: Sequence[Example]) -> "ExampleBatch":
+        if not examples:
+            raise ValueError("empty batch")
+        names = set(examples[0].features)
+        for ex in examples[1:]:
+            if set(ex.features) != names:
+                raise SchemaError(
+                    f"inconsistent feature sets: {names} vs "
+                    f"{set(ex.features)}")
+        common, varying = {}, {}
+        for name in sorted(names):
+            vals = [ex.features[name] for ex in examples]
+            first = vals[0]
+            if all(v.shape == first.shape and
+                   (v == first).all() for v in vals[1:]):
+                common[name] = first            # compressed away
+            else:
+                lens = {v.shape[0] for v in vals}
+                if len(lens) != 1:
+                    # ragged: pad to max (0 / b"" fill)
+                    width = max(lens)
+                    fill = (b"" if first.dtype == object else
+                            first.dtype.type(0))
+                    vals = [np.concatenate(
+                        [v, np.full(width - v.shape[0], fill,
+                                    dtype=v.dtype)]) for v in vals]
+                varying[name] = np.stack(vals)
+        return cls(size=len(examples), common=common, varying=varying)
+
+    def unpack(self) -> List[Example]:
+        out = []
+        for i in range(self.size):
+            feats = dict(self.common)
+            feats.update({k: v[i] for k, v in self.varying.items()})
+            out.append(Example(feats))
+        return out
+
+    @property
+    def compression_ratio(self) -> float:
+        """bytes(flat batch) / bytes(packed)."""
+        def nbytes(arr):
+            if arr.dtype == object:
+                return sum(len(x) if isinstance(x, (bytes, str)) else 8
+                           for x in arr.reshape(-1))
+            return arr.nbytes
+        flat = sum(nbytes(v) * self.size for v in self.common.values())
+        flat += sum(nbytes(v) for v in self.varying.values())
+        packed = sum(nbytes(v) for v in self.common.values())
+        packed += sum(nbytes(v) for v in self.varying.values())
+        return flat / max(packed, 1)
+
+    def to_model_inputs(self, token_feature: str = "tokens"
+                        ) -> Dict[str, np.ndarray]:
+        """Adapt to the low-level tensor API (paper: typed -> tensor)."""
+        if token_feature in self.varying:
+            toks = self.varying[token_feature]
+        elif token_feature in self.common:
+            toks = np.tile(self.common[token_feature][None],
+                           (self.size, 1))
+        else:
+            raise SchemaError(f"no {token_feature!r} feature")
+        return {"tokens": toks.astype(np.int32)}

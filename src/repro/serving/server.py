@@ -1,0 +1,129 @@
+"""ModelServer: the 'canonical binary' assembled from library modules
+(paper §3) — FileSystemSource → JaxModelSourceAdapter →
+AspiredVersionsManager, plus a SharedBatchScheduler so every servable
+version gets a BatchingSession, and typed RPC handlers on top.
+
+This is the programmatic equivalent of running the TF-Serving binary
+with a model-config file.
+"""
+from __future__ import annotations
+
+import logging
+import threading
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from repro.batching import BatchingOptions, BatchingSession, \
+    SharedBatchScheduler
+from repro.configs.base import ModelConfig
+from repro.core import (AspiredVersionsManager, FileSystemSource,
+                        NotFoundError, ServableVersionPolicy, chain)
+from repro.core.manager import ManagerEvent
+from repro.serving.engine import InferenceLog, JaxModelSourceAdapter
+
+log = logging.getLogger(__name__)
+
+
+class ModelServer:
+    def __init__(self, model_dirs: Dict[str, str],
+                 cfg_for: Optional[Callable[[str], ModelConfig]] = None,
+                 policies: Optional[Dict[str, ServableVersionPolicy]] = None,
+                 batching: Optional[BatchingOptions] = None,
+                 num_load_threads: int = 2,
+                 ram_budget_bytes: Optional[int] = None):
+        self.inference_log = InferenceLog()
+        self.source = FileSystemSource(model_dirs, policies)
+        self.adapter = JaxModelSourceAdapter(cfg_for, self.inference_log)
+        self.manager = AspiredVersionsManager(
+            num_load_threads=num_load_threads,
+            num_initial_load_threads=max(4, num_load_threads),
+            ram_budget_bytes=ram_budget_bytes,
+            on_event=self._on_event)
+        chain(self.source, self.adapter).set_aspired_versions_callback(
+            self.manager.set_aspired_versions)
+
+        self.batching_options = batching or BatchingOptions()
+        self.scheduler = SharedBatchScheduler()
+        self._sessions: Dict[str, BatchingSession] = {}
+        self._sessions_lock = threading.Lock()
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self, poll_interval_s: float = 0.5) -> None:
+        self.scheduler.start()
+        self.source.start_polling(poll_interval_s)
+        self.manager.start()
+
+    def start_sync(self) -> None:
+        """Deterministic start for tests: poll + reconcile to idle."""
+        self.scheduler.start()
+        self.source.poll()
+        assert self.manager.await_idle(timeout_s=60)
+
+    def refresh(self) -> None:
+        self.source.poll()
+        self.manager.await_idle(timeout_s=60)
+
+    def stop(self) -> None:
+        self.source.stop_polling()
+        with self._sessions_lock:
+            for s in self._sessions.values():
+                s.close(drain=False)
+            self._sessions.clear()
+        self.manager.shutdown()
+        self.scheduler.stop()
+
+    def _on_event(self, ev: ManagerEvent) -> None:
+        # Drop the batching queue of unloaded versions (dynamic queue set,
+        # paper §2.2.1 "added and removed as servable versions come and go")
+        if ev.kind == "unload_done":
+            key = str(ev.servable)
+            with self._sessions_lock:
+                sess = self._sessions.pop(key, None)
+            if sess is not None:
+                sess.close(drain=False)
+
+    # -- inference ----------------------------------------------------------
+    def _session_for(self, name: str, version: int) -> BatchingSession:
+        key = f"{name}@v{version}"
+        with self._sessions_lock:
+            sess = self._sessions.get(key)
+            if sess is None:
+                def run_batch(merged, name=name, version=version):
+                    with self.manager.get_servable_handle(
+                            name, version) as servable:
+                        return servable.call("predict", merged)
+                sess = BatchingSession(key, run_batch, self.scheduler,
+                                       self.batching_options)
+                self._sessions[key] = sess
+        return sess
+
+    def predict(self, name: str, batch: Dict[str, np.ndarray],
+                version: Optional[int] = None, *, batched: bool = True,
+                timeout_s: float = 30.0) -> np.ndarray:
+        """Low-level tensor API (Session::Run analogue)."""
+        if not batched:
+            with self.manager.get_servable_handle(name, version) as s:
+                return s.call("predict", batch)
+        # resolve version now so the queue is per-(servable, version)
+        with self.manager.get_servable_handle(name, version) as s:
+            v = s.id.version
+        return self._session_for(name, v).run(batch, timeout_s)
+
+    def classify(self, name: str, batch, k: int = 5,
+                 version: Optional[int] = None):
+        with self.manager.get_servable_handle(name, version) as s:
+            return s.call("classify", {"batch": batch, "k": k})
+
+    def regress(self, name: str, batch, version: Optional[int] = None):
+        with self.manager.get_servable_handle(name, version) as s:
+            return s.call("regress", {"batch": batch})
+
+    def generate(self, name: str, tokens=None, embeds=None,
+                 max_new: int = 16, version: Optional[int] = None):
+        with self.manager.get_servable_handle(name, version) as s:
+            return s.call("generate", {"tokens": tokens, "embeds": embeds,
+                                       "max_new": max_new})
+
+    def available_models(self):
+        return self.manager.list_available()

@@ -1,0 +1,86 @@
+"""Checkpointing: versioned directories in the TF-Serving layout.
+
+Checkpoints are written as ``<base>/<servable_name>/<version>/`` with
+flat ``.npz`` storage plus a JSON manifest — exactly the directory
+convention the FileSystemSource polls (paper §2.1.1), so a training job
+"emits versions" that a serving job picks up with no extra glue. The
+write is atomic (temp dir + rename) so the Source never sees a partial
+version — the paper's data-conveyance contract.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+            for e in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(base_dir: str, name: str, version: int,
+                    params: Any, extra: Optional[Dict] = None) -> str:
+    """Atomically write <base>/<name>/<version>/ (params.npz + manifest)."""
+    final = os.path.join(base_dir, name, str(version))
+    parent = os.path.dirname(final)
+    os.makedirs(parent, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=parent, prefix=".tmp-ckpt-")
+    try:
+        flat = _flatten(params)
+        np.savez(os.path.join(tmp, "params.npz"), **flat)
+        manifest = {
+            "name": name, "version": version,
+            "num_params": int(sum(v.size for v in flat.values())),
+            "bytes": int(sum(v.nbytes for v in flat.values())),
+            "dtypes": sorted({str(v.dtype) for v in flat.values()}),
+            **(extra or {}),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def load_manifest(path: str) -> Dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def load_checkpoint(path: str, target: Any = None) -> Any:
+    """Load params; if ``target`` pytree given, restore its structure."""
+    with np.load(os.path.join(path, "params.npz")) as data:
+        flat = {k: data[k] for k in data.files}
+    if target is None:
+        return flat
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(target)
+    paths, treedef = leaves_with_path[0], leaves_with_path[1]
+    out = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+            for e in path)
+        arr = flat[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def estimate_ram_bytes(path: str, overhead: float = 1.1) -> int:
+    """Controller RAM estimation from the manifest (paper §3.1)."""
+    return int(load_manifest(path)["bytes"] * overhead)

@@ -1,0 +1,128 @@
+"""Training substrate: chunked cross-entropy loss and the train step.
+
+The vocab projection is the memory hazard at assigned scale (V=152k ×
+1M tokens would materialize ~300 GB of logits), so the loss scans over
+sequence chunks: each chunk projects (B, c, D) -> (B, c, V), reduces to
+scalar CE, and frees the logits before the next chunk. Backward remats
+each chunk's projection (jax.checkpoint on the chunk body).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as MD
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                      adamw_update)
+
+MOE_LB_COEF = 0.01
+MOE_Z_COEF = 1e-3
+
+
+def chunked_softmax_xent(hidden, lm_head, labels, chunk: int = 1024,
+                         mask=None) -> jnp.ndarray:
+    """Mean CE over (B,S) tokens without materializing full logits.
+
+    hidden: (B,S,D); lm_head: (D,V); labels: (B,S) int32;
+    mask: optional (B,S) {0,1}.
+    """
+    b, s, d = hidden.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    n = s // chunk
+    hc = hidden.reshape(b, n, chunk, d)
+    lc = labels.reshape(b, n, chunk)
+    mc = mask.reshape(b, n, chunk)
+
+    def body(acc, ci):
+        h = hc[:, ci]
+        logits = (h @ lm_head.astype(h.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, lc[:, ci][..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc[:, ci]
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(mc[:, ci])), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(n))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch,
+            shard_act=None) -> Tuple[jnp.ndarray, Dict]:
+    hidden, _, aux = MD.forward_hidden(params, cfg, batch, "train",
+                                       shard_act=shard_act)
+    loss = chunked_softmax_xent(hidden, params["lm_head"], batch["labels"],
+                                cfg.loss_chunk, batch.get("loss_mask"))
+    total = loss
+    if "moe" in cfg.ffn_pattern:
+        total = (total + MOE_LB_COEF * aux["moe_lb_loss"]
+                 + MOE_Z_COEF * aux["moe_z_loss"])
+    metrics = {"loss": loss, **aux}
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    shard_act=None, microbatch: Optional[int] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Pure function of its inputs — suitable for jax.jit with in/out
+    shardings from models/shardings.py.
+    """
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    k = max(microbatch if microbatch is not None
+            else cfg.train_microbatch, 1)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if k == 1:
+            (total, metrics), grads = grad_fn(params, cfg, batch,
+                                              shard_act)
+        else:
+            # Gradient accumulation: scan over k microbatches (batch dim
+            # split), accumulating f32 grads; one optimizer update.
+            def split(x):
+                b = x.shape[0]
+                assert b % k == 0, (b, k)
+                return x.reshape((k, b // k) + x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+            grads0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                g_acc, tot, mets = carry
+                (total_i, metrics_i), g = grad_fn(params, cfg, mb,
+                                                  shard_act)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                mets = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_ / k, mets, metrics_i)
+                return (g_acc, tot + total_i / k, mets), None
+
+            mets0 = {kk: jnp.zeros((), jnp.float32)
+                     for kk in ("loss", "moe_lb_loss", "moe_z_loss",
+                                "moe_drop_fraction")}
+            (grads, total, metrics), _ = jax.lax.scan(
+                acc, (grads0, jnp.zeros((), jnp.float32), mets0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        metrics = {**metrics, **opt_metrics, "total_loss": total}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(rng, cfg: ModelConfig, opt_cfg: AdamWConfig):
+    params = MD.init_params(rng, cfg)
+    return params, adamw_init(opt_cfg, params)

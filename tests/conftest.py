@@ -1,0 +1,7 @@
+# NB: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# the real single CPU device; only launch/dryrun.py forces 512
+# placeholder devices (and only in its own process).
+import warnings
+
+warnings.filterwarnings(
+    "ignore", message=".*default axis_types will change.*")

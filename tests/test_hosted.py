@@ -1,0 +1,161 @@
+"""TFS² tests: transactional store, controller packing/admission,
+synchronizer propagation, router hedging, autoscaler."""
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CallableLoader, RawDictServable, ResourceEstimate,
+                        ServableId)
+from repro.hosted import (AdmissionError, Autoscaler, AutoscalerConfig,
+                          Controller, LatencyModel, NoReplicaError,
+                          Router, ServingJob, Synchronizer,
+                          TransactionalStore)
+
+
+def loader_factory(name, version, ref, ram):
+    sid = ServableId(name, version)
+    return CallableLoader(
+        sid, lambda: RawDictServable(sid, {"v": version}, ram_bytes=ram),
+        ResourceEstimate(ram_bytes=ram))
+
+
+class TestStore:
+    def test_snapshot_isolation(self):
+        store = TransactionalStore()
+        store.transact(lambda t: t.put("k", {"n": 1}))
+        snap = store.get("k")
+        snap["n"] = 99                      # mutating a copy
+        assert store.get("k")["n"] == 1
+
+    def test_conflicting_increments_serialize(self):
+        store = TransactionalStore()
+        store.transact(lambda t: t.put("ctr", 0))
+
+        def incr():
+            def fn(t):
+                v = t.get("ctr")
+                time.sleep(0.001)           # widen the race window
+                t.put("ctr", v + 1)
+            store.transact(fn)
+
+        ts = [threading.Thread(target=incr) for _ in range(16)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert store.get("ctr") == 16       # no lost updates
+
+    @given(st.lists(st.tuples(st.sampled_from("abc"),
+                              st.integers(0, 9)), max_size=30))
+    @settings(max_examples=50, deadline=None)
+    def test_matches_dict(self, ops):
+        store = TransactionalStore()
+        ref = {}
+        for k, v in ops:
+            store.transact(lambda t, k=k, v=v: t.put(k, v))
+            ref[k] = v
+        for k, v in ref.items():
+            assert store.get(k) == v
+
+
+class TestController:
+    def test_packing_respects_capacity_with_canary_headroom(self):
+        store = TransactionalStore()
+        ctrl = Controller(store, {"j1": 1000, "j2": 1000})
+        ctrl.add_model("a", 400)            # needs 800
+        ctrl.add_model("b", 400)            # needs 800 -> other job
+        assert {ctrl.job_assignment("a"),
+                ctrl.job_assignment("b")} == {"j1", "j2"}
+        with pytest.raises(AdmissionError):
+            ctrl.add_model("c", 400)        # no headroom anywhere
+        ctrl.add_model("d", 90)             # 180 still fits
+        ctrl.remove_model("a")
+        ctrl.add_model("c", 400)            # now fits
+
+    def test_desired_state_policies(self):
+        store = TransactionalStore()
+        ctrl = Controller(store, {"j1": 10_000})
+        ctrl.add_model("m", 100)
+        ctrl.add_version("m", 2)
+        ctrl.add_version("m", 3)
+        assert ctrl.desired_state()["j1"]["m"]["versions"] == [3]
+        ctrl.set_policy("m", "canary")
+        assert ctrl.desired_state()["j1"]["m"]["versions"] == [2, 3]
+        ctrl.set_policy("m", "rollback", pinned_version=2)
+        assert ctrl.desired_state()["j1"]["m"]["versions"] == [2]
+
+
+class TestSynchronizerRouter:
+    def make_stack(self, latency=None, replicas=1):
+        jobs = {"j1": ServingJob(
+            "j1", 10_000, min_replicas=replicas,
+            latency_factory=(lambda i: latency) if latency
+            else (lambda i: LatencyModel()))}
+        store = TransactionalStore()
+        ctrl = Controller(store, {"j1": 10_000})
+        sync = Synchronizer("dc", ctrl, jobs, loader_factory)
+        return jobs, ctrl, sync
+
+    def test_propagation_and_routing(self):
+        jobs, ctrl, sync = self.make_stack()
+        ctrl.add_model("m", 100)
+        assert sync.sync_once() == {"j1": {"m": (1,)}}
+        router = Router(sync, jobs, hedge_delay_s=None)
+        assert router.infer("m", "v", method="lookup") == 1
+        with pytest.raises(NoReplicaError):
+            router.infer("ghost", "v")
+        router.shutdown()
+        for j in jobs.values():
+            j.shutdown()
+
+    def test_version_transition_propagates(self):
+        jobs, ctrl, sync = self.make_stack()
+        ctrl.add_model("m", 100)
+        sync.sync_once()
+        ctrl.add_version("m", 2)
+        assert sync.sync_once()["j1"]["m"] == (2,)
+        router = Router(sync, jobs, hedge_delay_s=None)
+        assert router.infer("m", "v", method="lookup") == 2
+        router.shutdown()
+        for j in jobs.values():
+            j.shutdown()
+
+    def test_hedging_beats_single_tail(self):
+        lat = LatencyModel(base_s=0.0, tail_s=0.05, tail_prob=0.25,
+                           seed=0)
+        jobs, ctrl, sync = self.make_stack(latency=lat, replicas=2)
+        ctrl.add_model("m", 100)
+        sync.sync_once()
+        router = Router(sync, jobs, hedge_delay_s=0.005)
+        lats = []
+        for _ in range(40):
+            t0 = time.perf_counter()
+            router.infer("m", "v", method="lookup")
+            lats.append(time.perf_counter() - t0)
+        # with 25% tails, ~10 requests hedge; most should win < 50ms
+        assert router.stats["hedged"] > 0
+        assert sorted(lats)[int(len(lats) * 0.8)] < 0.05
+        router.shutdown()
+        for j in jobs.values():
+            j.shutdown()
+
+    def test_autoscaler_scales_up_and_down(self):
+        jobs, ctrl, sync = self.make_stack()
+        ctrl.add_model("m", 100)
+        sync.sync_once()
+        router = Router(sync, jobs, hedge_delay_s=None)
+        scaler = Autoscaler(jobs,
+                            AutoscalerConfig(target_qps_per_replica=50))
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < 0.25:
+            router.infer("m", "v", method="lookup")
+        scaler.tick()
+        assert jobs["j1"].num_replicas() > 1
+        sync.sync_once()                    # new replicas get the model
+        assert sync.loaded_status()["j1"]["m"] == (1,)
+        time.sleep(0.15)                    # idle
+        scaler.tick()
+        assert jobs["j1"].num_replicas() >= jobs["j1"].min_replicas
+        router.shutdown()
+        for j in jobs.values():
+            j.shutdown()

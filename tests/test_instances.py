@@ -1,0 +1,73 @@
+"""TFS² instances/partitions tests (paper §3.1 Temp/Prod + §3.2 flow)."""
+import numpy as np
+import pytest
+
+from repro.core import (CallableLoader, RawDictServable, ResourceEstimate,
+                        ServableId)
+from repro.hosted.controller import AdmissionError
+from repro.hosted.instances import (Instance, Partition, PartitionSpec,
+                                    Tfs2Service)
+
+
+def loader_factory(name, version, ref, ram):
+    sid = ServableId(name, version)
+    return CallableLoader(
+        sid, lambda: RawDictServable(sid, {"v": version}, ram_bytes=ram),
+        ResourceEstimate(ram_bytes=ram))
+
+
+@pytest.fixture()
+def service():
+    def part(name, hw, region):
+        return Partition(PartitionSpec(
+            name, hardware=hw, region=region,
+            job_capacities={"j0": 10_000}), loader_factory)
+    temp = Instance("temp", [part("t-cpu-us", "cpu", "us")])
+    prod = Instance("prod", [part("p-cpu-us", "cpu", "us"),
+                             part("p-tpu-us", "tpu", "us"),
+                             part("p-cpu-sa", "cpu", "sa")])
+    svc = Tfs2Service(temp, prod)
+    yield svc
+    svc.shutdown()
+
+
+class TestInstancesPartitions:
+    def test_defaults_to_temp(self, service):
+        placed = service.add_model("m", 100)
+        assert placed.startswith("temp/")
+        assert service.serving_instance("m") == "temp"
+        assert service.infer("m", "v", method="lookup") == 1
+
+    def test_partition_selection_by_hardware_and_region(self, service):
+        p1 = service.add_model("tpu-model", 100, instance="prod",
+                               hardware="tpu")
+        assert "p-tpu-us" in p1
+        p2 = service.add_model("sa-model", 100, instance="prod",
+                               region="sa")
+        assert "p-cpu-sa" in p2
+        with pytest.raises(AdmissionError):
+            service.add_model("gpu-model", 100, instance="prod",
+                              hardware="gpu")
+
+    def test_temp_to_prod_graduation(self, service):
+        service.add_model("m", 100)
+        assert service.serving_instance("m") == "temp"
+        dest = service.promote_to_prod("m", 100, hardware="cpu",
+                                       region="us")
+        assert dest.startswith("prod/")
+        assert service.infer("m", "v", method="lookup") == 1
+        with pytest.raises(KeyError):
+            service.promote_to_prod("m", 100)   # already in prod
+
+    def test_binary_canary_gates_prod_rollout(self, service):
+        """Paper: canary binary releases in Temp before Prod."""
+        temp_part = service.instances["temp"].partitions[0]
+        prod_part = service.instances["prod"].partitions[0]
+        assert prod_part.binary_version == "v1"
+        ok = service.rollout_binary("v2", validate=lambda p: True)
+        assert ok and prod_part.binary_version == "v2"
+        ok = service.rollout_binary("v3-broken",
+                                    validate=lambda p: False)
+        assert not ok
+        assert temp_part.binary_version == "v3-broken"  # canaried
+        assert prod_part.binary_version == "v2"         # protected

@@ -1,0 +1,62 @@
+"""CLI launcher tests: train.py emits servable versions; serve.py loads
+and serves them with canary; dryrun.py single combo (subprocesses — the
+real entry points)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_cli(args, timeout=400):
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run([sys.executable, "-m", *args], env=env,
+                          capture_output=True, text=True,
+                          timeout=timeout, cwd=ROOT)
+
+
+@pytest.fixture(scope="module")
+def trained_dir(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("models"))
+    r = run_cli(["repro.launch.train", "--arch", "tfs-classifier",
+                 "--smoke", "--steps", "30", "--batch-size", "4",
+                 "--seq-len", "32", "--out", out, "--emit-every", "15"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "emitted servable version 2" in r.stdout
+    return out
+
+
+def test_train_cli_emits_versions(trained_dir):
+    versions = sorted(os.listdir(
+        os.path.join(trained_dir, "tfs-classifier")))
+    assert versions == ["1", "2"]
+    manifest = json.load(open(os.path.join(
+        trained_dir, "tfs-classifier", "2", "manifest.json")))
+    assert manifest["arch"].startswith("tfs-classifier")
+    assert manifest["step"] == 30
+
+
+def test_serve_cli_serves_with_canary(trained_dir):
+    r = run_cli(["repro.launch.serve", "--model-dir", trained_dir,
+                 "--name", "tfs-classifier", "--arch", "tfs-classifier",
+                 "--smoke", "--requests", "24", "--threads", "2",
+                 "--canary"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "traffic:" in r.stdout and "errors=0" in r.stdout
+    assert "canary live:" in r.stdout and "(1, 2)" in r.stdout
+    assert "promoted:" in r.stdout and "(2,)" in r.stdout
+
+
+def test_dryrun_cli_single_combo(tmp_path):
+    out = str(tmp_path / "rec.jsonl")
+    r = run_cli(["repro.launch.dryrun", "--arch", "xlstm-125m",
+                 "--shape", "decode_32k", "--mesh", "single",
+                 "--out", out], timeout=500)
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.loads(open(out).read().strip().splitlines()[-1])
+    assert rec["status"] == "ok"
+    assert rec["fits_hbm_analytic"]
+    assert rec["collective_ops"] >= 0

@@ -1,0 +1,262 @@
+"""Lifecycle-library tests (paper §2.1): sources, adapters, manager,
+version policies, canary/rollback, error isolation, RAM gating."""
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import (AspiredVersion, AspiredVersionsManager,
+                        CallableLoader, ErrorInjectingLoader,
+                        FileSystemSource, FnSourceAdapter, NotFoundError,
+                        RawDictServable, ResourceEstimate,
+                        ResourcePreservingPolicy, ServableId,
+                        ServableVersionPolicy, SourceRouter, chain)
+
+
+def make_loader(sid: ServableId, ram=100, delay=0.0):
+    def factory():
+        if delay:
+            time.sleep(delay)
+        return RawDictServable(sid, {"v": sid.version}, ram_bytes=ram)
+    return CallableLoader(sid, factory, ResourceEstimate(ram_bytes=ram))
+
+
+def aspire(mgr, name, *versions, ram=100, delay=0.0):
+    mgr.set_aspired_versions(name, [
+        AspiredVersion(ServableId(name, v),
+                       make_loader(ServableId(name, v), ram, delay))
+        for v in versions])
+
+
+class TestManager:
+    def test_load_and_serve(self):
+        mgr = AspiredVersionsManager()
+        aspire(mgr, "m", 1)
+        assert mgr.await_idle()
+        with mgr.get_servable_handle("m") as s:
+            assert s.call("lookup", "v") == 1
+        mgr.shutdown()
+
+    def test_latest_is_primary(self):
+        mgr = AspiredVersionsManager()
+        aspire(mgr, "m", 1, 3, 2)
+        assert mgr.await_idle()
+        h = mgr.get_servable_handle("m")
+        assert h.id.version == 3
+        h.release()
+        mgr.shutdown()
+
+    def test_not_found(self):
+        mgr = AspiredVersionsManager()
+        with pytest.raises(NotFoundError):
+            mgr.get_servable_handle("ghost")
+        mgr.shutdown()
+
+    def test_unaspire_unloads(self):
+        mgr = AspiredVersionsManager()
+        aspire(mgr, "m", 1)
+        assert mgr.await_idle()
+        mgr.set_aspired_versions("m", [])
+        assert mgr.await_idle()
+        assert mgr.list_available() == {}
+        assert mgr.ram_committed_bytes == 0
+        mgr.shutdown()
+
+    def test_unload_waits_for_handles(self):
+        """Paper §2.1.2: refcounted handles drain before memory is freed,
+        and the free happens on the manager's unload thread."""
+        mgr = AspiredVersionsManager()
+        aspire(mgr, "m", 1)
+        assert mgr.await_idle()
+        h = mgr.get_servable_handle("m")
+        servable = h.servable
+        mgr.set_aspired_versions("m", [])
+        mgr.reconcile()
+        time.sleep(0.2)
+        # unpublished, but not yet freed (our handle pins it)
+        assert mgr.list_available() == {}
+        assert servable.table is not None
+        # new handles are refused while draining
+        with pytest.raises(NotFoundError):
+            mgr.get_servable_handle("m")
+        h.release()
+        assert mgr.await_idle()
+        assert servable.table is None  # unload() ran
+        mgr.shutdown()
+
+    def test_load_error_isolated(self):
+        mgr = AspiredVersionsManager()
+        sid = ServableId("bad", 1)
+        mgr.set_aspired_versions(
+            "bad", [AspiredVersion(sid, ErrorInjectingLoader(sid))])
+        aspire(mgr, "good", 1)
+        assert mgr.await_idle()
+        assert mgr.state_of("bad", 1).value == "error"
+        with mgr.get_servable_handle("good") as s:
+            assert s.call("lookup", "v") == 1
+        # clearing the error allows a reload on re-aspiration
+        mgr.clear_error("bad", 1)
+        mgr.set_aspired_versions(
+            "bad", [AspiredVersion(sid, make_loader(sid))])
+        assert mgr.await_idle()
+        assert mgr.state_of("bad", 1).value == "ready"
+        mgr.shutdown()
+
+    def test_ram_budget_gates_loads(self):
+        mgr = AspiredVersionsManager(ram_budget_bytes=250)
+        aspire(mgr, "a", 1, ram=100)
+        assert mgr.await_idle()
+        aspire(mgr, "b", 1, ram=200)   # 100 used + 220 peak > 250
+        assert mgr.await_idle()
+        assert mgr.state_of("b", 1) is None  # never started
+        events = [e.kind for e in mgr.events()]
+        assert "load_deferred_ram" in events
+        mgr.shutdown()
+
+    def test_availability_preserving_transition(self):
+        """New version loads BEFORE old unloads: availability never 0."""
+        mgr = AspiredVersionsManager()
+        aspire(mgr, "m", 1)
+        assert mgr.await_idle()
+        aspire(mgr, "m", 2, delay=0.2)
+        mgr.reconcile()
+        # while v2 loads, v1 still serves
+        with mgr.get_servable_handle("m") as s:
+            assert s.call("lookup", "v") == 1
+        assert mgr.await_idle()
+        assert mgr.list_available() == {"m": (2,)}
+        order = [e.kind for e in mgr.events()
+                 if e.servable.name == "m" and e.kind in
+                 ("load_done", "unload_start")]
+        i_load2 = [i for i, e in enumerate(mgr.events())
+                   if e.kind == "load_done" and e.servable.version == 2][0]
+        i_unload1 = [i for i, e in enumerate(mgr.events())
+                     if e.kind == "unload_start" and
+                     e.servable.version == 1][0]
+        assert i_load2 < i_unload1
+        mgr.shutdown()
+
+    def test_resource_preserving_transition(self):
+        """Old version unloads BEFORE new loads (huge-model policy)."""
+        mgr = AspiredVersionsManager(
+            transition_policy=ResourcePreservingPolicy())
+        aspire(mgr, "m", 1)
+        assert mgr.await_idle()
+        aspire(mgr, "m", 2)
+        assert mgr.await_idle()
+        assert mgr.list_available() == {"m": (2,)}
+        i_unload1 = [i for i, e in enumerate(mgr.events())
+                     if e.kind == "unload_done" and
+                     e.servable.version == 1][0]
+        i_load2 = [i for i, e in enumerate(mgr.events())
+                   if e.kind == "load_start" and e.servable.version == 2][0]
+        assert i_unload1 < i_load2
+        mgr.shutdown()
+
+
+class TestFileSystemSource:
+    def test_poll_and_policies(self, tmp_path):
+        d = tmp_path / "m"
+        (d / "1").mkdir(parents=True)
+        (d / "2").mkdir()
+        (d / "junk").mkdir()     # non-numeric ignored
+        got = {}
+        src = FileSystemSource({"m": str(d)})
+        src.set_aspired_versions_callback(
+            lambda name, vs: got.__setitem__(name, [v.id.version
+                                                    for v in vs]))
+        src.poll()
+        assert got["m"] == [2]
+        src.set_policy("m", ServableVersionPolicy(mode="canary"))
+        src.poll()
+        assert got["m"] == [1, 2]
+        src.set_policy("m", ServableVersionPolicy(mode="specific",
+                                                  specific_version=1))
+        src.poll()
+        assert got["m"] == [1]
+        src.set_policy("m", ServableVersionPolicy(mode="all"))
+        src.poll()
+        assert got["m"] == [1, 2]
+        src.remove_servable("m")
+        assert got["m"] == []
+
+    def test_idempotent_repolls(self, tmp_path):
+        d = tmp_path / "m"
+        (d / "7").mkdir(parents=True)
+        calls = []
+        src = FileSystemSource({"m": str(d)})
+        src.set_aspired_versions_callback(
+            lambda name, vs: calls.append([v.id.version for v in vs]))
+        for _ in range(3):
+            src.poll()
+        assert calls == [[7]] * 3
+
+
+class TestRouterAndAdapters:
+    def test_source_router_splits(self):
+        """Paper §2.1: route TensorFlow vs. BananaFlow models apart."""
+        router = SourceRouter(
+            2, lambda name, vs: 0 if name.startswith("tf/") else 1)
+        got0, got1 = {}, {}
+        router.outputs[0].set_aspired_versions_callback(
+            lambda n, v: got0.__setitem__(n, len(v)))
+        router.outputs[1].set_aspired_versions_callback(
+            lambda n, v: got1.__setitem__(n, len(v)))
+        sid = ServableId("tf/a", 1)
+        router("tf/a", [AspiredVersion(sid, "path")])
+        router("banana/b", [AspiredVersion(ServableId("banana/b", 1),
+                                           "path")])
+        assert "tf/a" in got0 and "banana/b" in got1
+
+    def test_adapter_chain(self):
+        """Paper: 'production use-cases for chains of multiple Source
+        Adapters'."""
+        tag = FnSourceAdapter(lambda v: AspiredVersion(v.id,
+                                                       v.data + "+tag"))
+        upper = FnSourceAdapter(lambda v: AspiredVersion(v.id,
+                                                         v.data.upper()))
+        src = FileSystemSource({})
+        tail = chain(src, tag, upper)
+        got = {}
+        tail.set_aspired_versions_callback(
+            lambda n, vs: got.__setitem__(n, [v.data for v in vs]))
+        sid = ServableId("m", 1)
+        tag("m", [AspiredVersion(sid, "path")])
+        assert got["m"] == ["PATH+TAG"]
+
+
+class TestVersionPolicyProperties:
+    """Hypothesis: ServableVersionPolicy.select invariants over arbitrary
+    version sets (paper §2.1.1 semantics)."""
+
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.lists(st.integers(1, 500), unique=True, max_size=12))
+    @settings(max_examples=120, deadline=None)
+    def test_latest_and_canary(self, versions):
+        latest = ServableVersionPolicy(mode="latest")
+        canary = ServableVersionPolicy(mode="canary")
+        got_l = latest.select(versions)
+        got_c = canary.select(versions)
+        if not versions:
+            assert got_l == [] and got_c == []
+            return
+        assert got_l == [max(versions)]
+        assert got_c == sorted(versions, reverse=True)[:2]
+        assert set(got_l) <= set(got_c)        # canary ⊇ latest
+
+    @given(st.lists(st.integers(1, 500), unique=True, max_size=12),
+           st.integers(1, 500))
+    @settings(max_examples=120, deadline=None)
+    def test_specific_pins_or_empty(self, versions, pin):
+        pol = ServableVersionPolicy(mode="specific",
+                                    specific_version=pin)
+        got = pol.select(versions)
+        assert got == ([pin] if pin in versions else [])
+
+    @given(st.lists(st.integers(1, 500), unique=True, max_size=12))
+    @settings(max_examples=60, deadline=None)
+    def test_all_returns_everything(self, versions):
+        got = ServableVersionPolicy(mode="all").select(versions)
+        assert sorted(got) == sorted(versions)

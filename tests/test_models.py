@@ -1,0 +1,200 @@
+"""Per-architecture smoke tests (deliverable f) + model invariants.
+
+Every assigned architecture instantiates its REDUCED smoke variant
+(≤2 layers, d_model ≤ 512, ≤4 experts), runs one forward/train step on
+CPU, and asserts output shapes + no NaNs. Prefill+decode must agree with
+the full-sequence forward in f32 (the serving-consistency invariant).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, SMOKE_ARCHS, get_config
+from repro.models import model as MD
+from repro.training.optimizer import AdamWConfig
+from repro.training.train import init_train_state, make_train_step
+
+B, S = 2, 16
+
+
+def make_batch(cfg, rng, b=B, s=S, labels=True):
+    batch = {}
+    if cfg.input_kind == "embeddings":
+        batch["embeds"] = jax.random.normal(
+            rng, (b, s, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(rng, (b, s), 0,
+                                             cfg.vocab_size)
+    if labels:
+        batch["labels"] = jax.random.randint(rng, (b, s), 0,
+                                             cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = SMOKE_ARCHS[arch]
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    rng = jax.random.PRNGKey(0)
+    params = MD.init_params(rng, cfg)
+    batch = make_batch(cfg, rng, labels=False)
+    hidden, _, aux = MD.forward_hidden(params, cfg, batch, "train")
+    logits = MD.logits_from_hidden(params, cfg, hidden)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_train_step(arch):
+    """One real optimizer step on CPU: loss finite, params move."""
+    cfg = SMOKE_ARCHS[arch]
+    opt_cfg = AdamWConfig(learning_rate=1e-3, warmup_steps=0)
+    rng = jax.random.PRNGKey(1)
+    params, opt_state = init_train_state(rng, cfg, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = make_batch(cfg, rng)
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    # params actually changed
+    delta = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree_util.tree_leaves(params),
+                                jax.tree_util.tree_leaves(new_params)))
+    assert delta > 0
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED
+                                  if SMOKE_ARCHS[a].causal])
+def test_prefill_decode_matches_forward(arch):
+    """Serving invariant: prefill+decode logits == full forward (f32)."""
+    cfg = SMOKE_ARCHS[arch].with_overrides(
+        dtype="float32", attn_chunk=8, ssm_chunk=8, mlstm_chunk=8,
+        capacity_factor=float(max(SMOKE_ARCHS[arch].num_experts, 1)))
+    rng = jax.random.PRNGKey(2)
+    params = MD.init_params(rng, cfg)
+    n_dec = 3
+    toks = jax.random.randint(rng, (B, S + n_dec), 0, cfg.vocab_size)
+    full = {"tokens": toks}
+    if cfg.input_kind == "embeddings":
+        emb = jnp.take(params["embed"], toks, axis=0).astype(jnp.float32)
+        full = {"embeds": emb}
+
+    hid, _, _ = MD.forward_hidden(params, cfg, full, "train")
+    ref = MD.logits_from_hidden(params, cfg, hid)
+
+    def sub(lo, hi):
+        return ({"tokens": toks[:, lo:hi]} if "tokens" in full
+                else {"embeds": full["embeds"][:, lo:hi]})
+
+    cache = MD.init_cache(cfg, B, S + n_dec)
+    lg, cache = MD.prefill(params, cfg, sub(0, S), cache)
+    errs = [float(np.max(np.abs(lg - ref[:, S - 1])))]
+    for t in range(n_dec):
+        lg, cache = MD.decode_step(params, cfg, sub(S + t, S + t + 1),
+                                   cache)
+        errs.append(float(np.max(np.abs(lg - ref[:, S + t]))))
+    assert max(errs) < 2e-3, errs
+
+
+def test_sliding_window_ring_cache_long_prompt():
+    """Danube family: prompt longer than the window — ring cache must
+    match the full forward."""
+    cfg = SMOKE_ARCHS["h2o-danube-3-4b"].with_overrides(
+        dtype="float32", attn_chunk=8)
+    assert cfg.window == 16
+    rng = jax.random.PRNGKey(3)
+    params = MD.init_params(rng, cfg)
+    s = 3 * cfg.window  # prompt = 3 windows
+    toks = jax.random.randint(rng, (1, s + 2), 0, cfg.vocab_size)
+    hid, _, _ = MD.forward_hidden(params, cfg, {"tokens": toks}, "train")
+    ref = MD.logits_from_hidden(params, cfg, hid)
+    cache = MD.init_cache(cfg, 1, s + 2)
+    # cache capacity is clamped to the window
+    kv = jax.tree_util.tree_leaves(cache["layers"])
+    lg, cache = MD.prefill(params, cfg, {"tokens": toks[:, :s]}, cache)
+    errs = [float(np.max(np.abs(lg - ref[:, s - 1])))]
+    for t in range(2):
+        lg, cache = MD.decode_step(
+            params, cfg, {"tokens": toks[:, s + t:s + t + 1]}, cache)
+        errs.append(float(np.max(np.abs(lg - ref[:, s + t]))))
+    assert max(errs) < 2e-3, errs
+
+
+def test_encoder_is_bidirectional():
+    """hubert: flipping a late frame must change early-frame logits."""
+    cfg = SMOKE_ARCHS["hubert-xlarge"].with_overrides(dtype="float32")
+    rng = jax.random.PRNGKey(4)
+    params = MD.init_params(rng, cfg)
+    emb = jax.random.normal(rng, (1, S, cfg.d_model))
+    h1, _, _ = MD.forward_hidden(params, cfg, {"embeds": emb}, "train")
+    emb2 = emb.at[:, -1].set(-emb[:, -1])
+    h2, _, _ = MD.forward_hidden(params, cfg, {"embeds": emb2}, "train")
+    assert float(jnp.max(jnp.abs(h1[:, 0] - h2[:, 0]))) > 1e-6
+
+
+def test_decoder_is_causal():
+    """Flipping a late token must NOT change earlier logits."""
+    cfg = SMOKE_ARCHS["granite-8b"].with_overrides(dtype="float32",
+                                                   attn_chunk=8)
+    rng = jax.random.PRNGKey(5)
+    params = MD.init_params(rng, cfg)
+    toks = jax.random.randint(rng, (1, S), 0, cfg.vocab_size)
+    h1, _, _ = MD.forward_hidden(params, cfg, {"tokens": toks}, "train")
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % cfg.vocab_size)
+    h2, _, _ = MD.forward_hidden(params, cfg, {"tokens": toks2}, "train")
+    assert float(jnp.max(jnp.abs(h1[:, :-1] - h2[:, :-1]))) < 1e-5
+
+
+def test_mrope_position_sensitivity():
+    """qwen2-vl: distinct (t,h,w) positions change the output vs. all-
+    equal positions (M-RoPE is actually wired through)."""
+    cfg = SMOKE_ARCHS["qwen2-vl-72b"].with_overrides(dtype="float32",
+                                                     attn_chunk=8)
+    rng = jax.random.PRNGKey(6)
+    params = MD.init_params(rng, cfg)
+    emb = jax.random.normal(rng, (1, S, cfg.d_model))
+    base = jnp.broadcast_to(jnp.arange(S)[None, :, None], (1, S, 3))
+    h1, _, _ = MD.forward_hidden(
+        params, cfg, {"embeds": emb, "positions": base}, "train")
+    # image-patch style: same t, varying h/w
+    pos2 = base.at[:, :, 1].set(jnp.arange(S)[::-1][None])
+    h2, _, _ = MD.forward_hidden(
+        params, cfg, {"embeds": emb, "positions": pos2}, "train")
+    assert float(jnp.max(jnp.abs(h1 - h2))) > 1e-6
+
+
+def test_moe_dropless_decode_and_capacity():
+    """MoE decode is dropless; train-time drop fraction is reported."""
+    cfg = SMOKE_ARCHS["qwen3-moe-30b-a3b"].with_overrides(
+        dtype="float32", capacity_factor=0.5)
+    rng = jax.random.PRNGKey(7)
+    params = MD.init_params(rng, cfg)
+    batch = make_batch(cfg, rng, labels=False)
+    _, _, aux = MD.forward_hidden(params, cfg, batch, "train")
+    assert float(aux["moe_drop_fraction"]) > 0  # cf=0.5 must drop
+    cache = MD.init_cache(cfg, B, 8)
+    _, cache = MD.prefill(params, cfg,
+                          {"tokens": batch["tokens"][:, :4]}, cache)
+    _, _, aux_dec = MD.forward_hidden(
+        params, cfg, {"tokens": batch["tokens"][:, 4:5]}, "decode", cache)
+    assert float(aux_dec["moe_drop_fraction"]) == 0.0
+
+
+def test_param_counts_match_actual_params():
+    """Analytic param accounting (Controller RAM estimates, roofline)
+    agrees with real initialized trees."""
+    for arch in ("granite-8b", "qwen3-moe-30b-a3b", "xlstm-125m",
+                 "jamba-1.5-large-398b"):
+        cfg = SMOKE_ARCHS[arch]
+        params = MD.init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(int(np.prod(l.shape))
+                     for l in jax.tree_util.tree_leaves(params))
+        # smoke variants of embedding-input models still allocate embed
+        est = cfg.param_counts()["total"]
+        if cfg.input_kind == "embeddings" and cfg.causal:
+            est += cfg.vocab_size * cfg.d_model
+        assert abs(actual - est) / actual < 0.05, (arch, actual, est)

@@ -1,0 +1,154 @@
+"""Roofline/launch tests: analytic model cross-checks, HLO collective
+parser, mesh construction, shape-applicability matrix, and a real
+lower+compile of every smoke arch on the 1-device host mesh (the same
+build_step path the 512-chip dry-run uses)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (ARCHS, ASSIGNED, INPUT_SHAPES, SMOKE_ARCHS,
+                           get_config, shape_applicable)
+from repro.configs.base import InputShape
+from repro.launch.hlo_analysis import collective_bytes, _shape_bytes
+from repro.launch.roofline import (analytic_dominant, analytic_residency,
+                                   analytic_roofline, layer_unit_costs)
+
+
+class TestHloParser:
+    def test_shape_bytes(self):
+        assert _shape_bytes("bf16[2,3,4]") == 48
+        assert _shape_bytes("f32[10]") == 40
+        assert _shape_bytes("(bf16[2,2], f32[2])") == 16
+        assert _shape_bytes("pred[8]") == 8
+
+    def test_collective_classification(self):
+        hlo = """
+  %ag = bf16[32,128]{1,0} all-gather(bf16[2,128] %x), dimensions={0}
+  %ar.1 = f32[16]{0} all-reduce(f32[16] %y), to_apply=%sum
+  %rs = f32[2,8]{1,0} reduce-scatter(f32[32,8] %z), dimensions={0}
+  %a2a = (bf16[4,4], bf16[4,4]) all-to-all(bf16[4,4] %a, bf16[4,4] %b)
+  %cp = u32[4]{0} collective-permute(u32[4] %w), source_target_pairs={{0,1}}
+  %not = f32[99] add(f32[99] %p, f32[99] %q)
+"""
+        out = collective_bytes(hlo)
+        assert out["all-gather"] == 32 * 128 * 2
+        assert out["all-reduce"] == 64
+        assert out["reduce-scatter"] == 64
+        assert out["all-to-all"] == 64
+        assert out["collective-permute"] == 16
+        assert out["count"] == 5
+
+    def test_real_compiled_module_collectives(self):
+        """Parser works on an actual sharded-compiled module."""
+        mesh = jax.make_mesh((1,), ("model",))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        @jax.jit
+        def f(x):
+            return x @ x.T
+        lowered = f.lower(jax.ShapeDtypeStruct((8, 8), jnp.float32))
+        txt = lowered.compile().as_text()
+        out = collective_bytes(txt)       # 1 device => none expected
+        assert out["count"] == 0
+
+
+class TestAnalyticModel:
+    def test_flops_scale_with_depth(self):
+        cfg = ARCHS["granite-8b"]
+        s = INPUT_SHAPES["train_4k"]
+        t1 = analytic_roofline(cfg, s)
+        t2 = analytic_roofline(cfg.with_overrides(num_layers=72,
+                                                  name="x"), s)
+        assert t2["an_flops_chip"] > 1.7 * t1["an_flops_chip"]
+
+    def test_decode_memory_dominated_for_dense(self):
+        cfg = ARCHS["granite-8b"]
+        terms = analytic_roofline(cfg, INPUT_SHAPES["decode_32k"])
+        assert analytic_dominant(terms) in ("memory", "collective")
+        assert terms["an_t_memory_s"] > terms["an_t_compute_s"]
+
+    def test_model_flops_close_to_6nd(self):
+        """For dense train, layer_unit_costs ≈ 6·N·D accounting."""
+        cfg = ARCHS["granite-8b"]
+        s = INPUT_SHAPES["train_4k"]
+        terms = analytic_roofline(cfg, s)
+        ratio = terms["an_model_flops_chip"] / terms["an_flops_chip"]
+        # remat => ~3/4 useful, plus attention overhead => 0.4..0.8
+        assert 0.3 < ratio < 0.9, ratio
+
+    def test_residency_components_positive(self):
+        for arch in ("qwen2-72b", "jamba-1.5-large-398b",
+                     "qwen3-moe-30b-a3b"):
+            cfg = ARCHS[arch]
+            res = analytic_residency(cfg, INPUT_SHAPES["train_4k"])
+            assert res["params"] > 0 and res["total"] >= res["params"]
+            res_d = analytic_residency(cfg, INPUT_SHAPES["decode_32k"])
+            assert res_d["kv_cache"] >= 0
+
+    def test_window_caps_decode_cache(self):
+        danube = ARCHS["h2o-danube-3-4b"]
+        r_long = analytic_residency(danube, INPUT_SHAPES["long_500k"])
+        # ring cache = window => tiny even at 500k context
+        assert r_long["kv_cache"] < 0.1 * 2**30
+
+    def test_ssm_has_no_kv_cache(self):
+        xl = ARCHS["xlstm-125m"]
+        r = analytic_residency(xl, INPUT_SHAPES["decode_32k"])
+        assert r["kv_cache"] == 0
+        assert r["states"] > 0
+
+
+class TestApplicabilityMatrix:
+    def test_counts(self):
+        runs = skips = 0
+        for arch in ASSIGNED:
+            for shape in INPUT_SHAPES.values():
+                ok, why = shape_applicable(ARCHS[arch], shape)
+                runs += ok
+                skips += not ok
+        assert runs + skips == 40
+        assert skips == 8  # hubert decode x2 (incl. long) + 6 long_500k
+
+    def test_long_context_allowed_for_subquadratic(self):
+        shape = INPUT_SHAPES["long_500k"]
+        for arch in ("h2o-danube-3-4b", "jamba-1.5-large-398b",
+                     "xlstm-125m"):
+            assert shape_applicable(ARCHS[arch], shape)[0]
+        for arch in ("qwen2-72b", "qwen2-vl-72b", "phi3.5-moe-42b-a6.6b"):
+            assert not shape_applicable(ARCHS[arch], shape)[0]
+
+    def test_encoder_skips_decode(self):
+        hub = ARCHS["hubert-xlarge"]
+        assert not shape_applicable(hub, INPUT_SHAPES["decode_32k"])[0]
+        assert shape_applicable(hub, INPUT_SHAPES["prefill_32k"])[0]
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_arch_lowers_on_host_mesh(arch):
+    """The exact dry-run build path (shardings included) lowers and
+    compiles for every architecture on the 1-device host mesh."""
+    from repro.launch.dryrun import build_step
+    from repro.launch.mesh import make_host_mesh
+    cfg = SMOKE_ARCHS[arch]
+    mesh = make_host_mesh()
+    shape = InputShape("tiny_train", 32, 4, "train")
+    fn, args = build_step(cfg, shape, mesh)
+    compiled = fn.lower(*args).compile()
+    assert compiled.memory_analysis() is not None
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED
+                                  if SMOKE_ARCHS[a].causal])
+def test_smoke_arch_decode_lowers_on_host_mesh(arch):
+    from repro.launch.dryrun import build_step
+    from repro.launch.mesh import make_host_mesh
+    cfg = SMOKE_ARCHS[arch]
+    mesh = make_host_mesh()
+    shape = InputShape("tiny_decode", 64, 2, "decode")
+    fn, args = build_step(cfg, shape, mesh)
+    compiled = fn.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    assert cost.get("flops", 0) >= 0

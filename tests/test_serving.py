@@ -1,0 +1,150 @@
+"""Serving-layer integration tests: ModelServer end-to-end (load from
+disk, predict/classify/regress/generate through batching, canary,
+rollback, RAM budget, inference logging, unload frees device memory)."""
+import os
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import NotFoundError, ServableVersionPolicy
+from repro.models import model as MD
+from repro.serving.engine import JaxModelLoader, JaxModelServable
+from repro.serving.server import ModelServer
+from repro.core.servable import ServableId
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+
+CFG = get_config("tfs-classifier", smoke=True)
+
+
+@pytest.fixture()
+def model_dir(tmp_path):
+    for v in (1, 2):
+        params = MD.init_params(jax.random.PRNGKey(v), CFG)
+        save_checkpoint(str(tmp_path), "clf", v, params,
+                        {"arch": CFG.name})
+    return str(tmp_path)
+
+
+@pytest.fixture()
+def server(model_dir):
+    srv = ModelServer({"clf": os.path.join(model_dir, "clf")},
+                      cfg_for=lambda n: CFG)
+    srv.start_sync()
+    yield srv
+    srv.stop()
+
+
+def batch(b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": rng.integers(0, CFG.vocab_size, (b, s))}
+
+
+class TestModelServer:
+    def test_serves_latest_version(self, server):
+        assert server.available_models() == {"clf": (2,)}
+        out = server.predict("clf", batch())
+        assert out.shape == (2, 16, CFG.vocab_size)
+        assert not np.any(np.isnan(out))
+
+    def test_batched_equals_unbatched(self, server):
+        b = batch()
+        out_b = server.predict("clf", b, batched=True)
+        out_u = server.predict("clf", b, batched=False)
+        np.testing.assert_allclose(out_b, out_u, atol=2e-5)
+
+    def test_concurrent_clients_merge(self, server):
+        outs = [None] * 8
+
+        def client(i):
+            outs[i] = server.predict("clf", batch(b=1, seed=i))
+        ts = [threading.Thread(target=client, args=(i,))
+              for i in range(8)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        for i in range(8):
+            ref = server.predict("clf", batch(b=1, seed=i),
+                                 batched=False)
+            # merged batches change matmul batching => bf16 rounding
+            np.testing.assert_allclose(outs[i], ref, atol=6e-2)
+        stats = server.scheduler.stats()
+        merged = sum(q["enqueued"] - q["batches"]
+                     for q in stats.values())
+        assert merged >= 0  # merging opportunistic on 1-core CI
+
+    def test_classify_regress_generate(self, server):
+        res = server.classify("clf", batch(), k=3)
+        assert res["classes"].shape == (2, 3)
+        assert np.all(np.diff(res["scores"], axis=1) <= 1e-6)
+        reg = server.regress("clf", batch())
+        assert reg["value"].shape == (2,)
+        gen = server.generate("clf", tokens=batch()["tokens"], max_new=4)
+        assert gen.shape == (2, 4)
+        assert gen.max() < CFG.vocab_size
+
+    def test_canary_and_rollback(self, server):
+        server.source.set_policy("clf",
+                                 ServableVersionPolicy(mode="canary"))
+        server.refresh()
+        assert server.available_models() == {"clf": (1, 2)}
+        o1 = server.predict("clf", batch(), version=1)
+        o2 = server.predict("clf", batch(), version=2)
+        assert np.abs(o1 - o2).max() > 1e-4   # different weights
+        server.source.set_policy("clf", ServableVersionPolicy(
+            mode="specific", specific_version=1))
+        server.refresh()
+        assert server.available_models() == {"clf": (1,)}
+        with pytest.raises(NotFoundError):
+            server.predict("clf", batch(), version=2, batched=False)
+
+    def test_inference_logging(self, server):
+        server.predict("clf", batch(), batched=False)
+        entries = server.inference_log.entries()
+        assert entries and entries[-1]["method"] == "predict"
+        assert entries[-1]["batch_size"] == 2
+
+    def test_unload_frees_device_buffers(self, server):
+        with server.manager.get_servable_handle("clf") as s:
+            leaf = jax.tree_util.tree_leaves(s.params)[0]
+        server.source.remove_servable("clf")
+        server.refresh()
+        assert server.available_models() == {}
+        assert leaf.is_deleted()   # jax.Array.delete() ran on unload
+
+
+class TestCheckpointRoundtrip:
+    def test_save_load_exact(self, tmp_path):
+        params = MD.init_params(jax.random.PRNGKey(0), CFG)
+        save_checkpoint(str(tmp_path), "m", 1, params, {"arch": CFG.name})
+        target = jax.eval_shape(
+            lambda: MD.init_params(jax.random.PRNGKey(0), CFG))
+        loaded = load_checkpoint(str(tmp_path / "m" / "1"), target)
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(loaded)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_loader_resource_estimate_matches_manifest(self, tmp_path):
+        params = MD.init_params(jax.random.PRNGKey(0), CFG)
+        save_checkpoint(str(tmp_path), "m", 1, params, {"arch": CFG.name})
+        loader = JaxModelLoader(ServableId("m", 1),
+                                str(tmp_path / "m" / "1"), cfg=CFG)
+        est = loader.estimate_resources()
+        nbytes = sum(np.asarray(l).nbytes
+                     for l in jax.tree_util.tree_leaves(params))
+        assert est.ram_bytes == int(nbytes * 1.1)
+        servable = loader.load()
+        assert isinstance(servable, JaxModelServable)
+        out = servable.call("predict", batch())
+        assert out.shape == (2, 16, CFG.vocab_size)
+        servable.unload()
+
+    def test_atomic_version_publish(self, tmp_path):
+        """A half-written version dir must never be visible."""
+        params = MD.init_params(jax.random.PRNGKey(0), CFG)
+        path = save_checkpoint(str(tmp_path), "m", 7, params,
+                               {"arch": CFG.name})
+        assert os.path.basename(path) == "7"
+        assert set(os.listdir(os.path.dirname(path))) == {"7"}
+        assert {"params.npz", "manifest.json"} <= set(os.listdir(path))

@@ -1,0 +1,143 @@
+"""Paper §3.2 pipeline gates + §2.2 example format tests."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.loader import CallableLoader, ErrorInjectingLoader
+from repro.core.servable import ResourceEstimate, ServableId
+from repro.hosted.validation import (QualityGate, RobustnessGate,
+                                     SkewDetector, ValidationPipeline)
+from repro.models import model as MD
+from repro.serving.engine import JaxModelServable
+from repro.serving.example_format import (Example, ExampleBatch,
+                                          SchemaError)
+
+CFG = get_config("tfs-classifier", smoke=True)
+
+
+def make_servable(seed, servable_id=None, poison=False):
+    sid = servable_id or ServableId("m", seed)
+    params = MD.init_params(jax.random.PRNGKey(seed), CFG)
+    if poison:  # corrupt weights -> NaNs out
+        params["lm_head"] = params["lm_head"] * np.nan
+    return JaxModelServable(sid, CFG, params)
+
+
+def probe_batches():
+    rng = np.random.default_rng(0)
+    return [{"tokens": rng.integers(0, CFG.vocab_size, (2, 16))},
+            {"tokens": np.zeros((1, 1), np.int32)},
+            {"tokens": np.full((1, 8), CFG.vocab_size - 1, np.int32)}]
+
+
+class TestGates:
+    def test_robustness_passes_healthy_model(self):
+        gate = RobustnessGate(probe_batches())
+        res = gate.run(make_servable(0), None)
+        assert res.passed, res.detail
+
+    def test_robustness_catches_nan_model(self):
+        gate = RobustnessGate(probe_batches())
+        res = gate.run(make_servable(0, poison=True), None)
+        assert not res.passed
+        assert "non-finite" in res.detail
+
+    def test_quality_gate_compares_versions(self):
+        rng = np.random.default_rng(1)
+        batch = {"tokens": rng.integers(0, CFG.vocab_size, (4, 16))}
+        labels = rng.integers(0, CFG.vocab_size, (4, 16))
+        gate = QualityGate(batch, labels, max_regression=0.0)
+        baseline = make_servable(0)
+        same = gate.run(make_servable(0), baseline)
+        assert same.passed                     # identical weights
+        res = gate.run(make_servable(1), baseline)
+        # different random model: NLL differs; pass/fail must follow sign
+        diff = (res.metrics["candidate_nll"]
+                - res.metrics["baseline_nll"])
+        assert res.passed == (diff <= 0.0)
+
+    def test_pipeline_blocks_bad_version_and_publishes_good(self):
+        published = []
+        pipe = ValidationPipeline([RobustnessGate(probe_batches())])
+        sid_bad = ServableId("m", 2)
+        bad_loader = ErrorInjectingLoader(sid_bad)
+        ok, results = pipe.validate_and_publish(
+            bad_loader, lambda: published.append("bad"))
+        assert not ok and not published
+        sid = ServableId("m", 3)
+        good_loader = CallableLoader(sid, lambda: make_servable(3, sid),
+                                     ResourceEstimate(ram_bytes=1))
+        ok, results = pipe.validate_and_publish(
+            good_loader, lambda: published.append("good"))
+        assert ok and published == ["good"]
+        assert len(pipe.history) == 2
+
+
+class TestSkewDetector:
+    def test_no_skew_on_matching_distribution(self):
+        rng = np.random.default_rng(0)
+        ref = np.asarray([0.25, 0.25, 0.25, 0.25]) * 1000
+        det = SkewDetector(ref, threshold=0.05)
+        logits = rng.standard_normal((512, 4))   # uniform argmax
+        det.observe(logits)
+        assert not det.skewed(), det.distance()
+
+    def test_skew_flagged_on_shifted_distribution(self):
+        ref = np.asarray([0.7, 0.1, 0.1, 0.1]) * 1000
+        det = SkewDetector(ref, threshold=0.05)
+        logits = np.zeros((256, 4))
+        logits[:, 2] = 10.0                      # everything -> class 2
+        det.observe(logits)
+        assert det.skewed()
+
+
+class TestExampleFormat:
+    def test_common_features_compressed(self):
+        ctx = np.arange(64, dtype=np.float32)  # shared context vector
+        exs = [Example.create(tokens=[i, i + 1, i + 2],
+                              lang=b"en", context=ctx, temperature=0.7)
+               for i in range(8)]
+        batch = ExampleBatch.pack(exs)
+        assert set(batch.common) == {"lang", "context", "temperature"}
+        assert set(batch.varying) == {"tokens"}
+        assert batch.varying["tokens"].shape == (8, 3)
+        assert batch.compression_ratio > 2.0
+        # lossless roundtrip
+        back = batch.unpack()
+        for a, b in zip(exs, back):
+            for k in a.features:
+                np.testing.assert_array_equal(a.features[k],
+                                              b.features[k])
+
+    def test_ragged_padding(self):
+        exs = [Example.create(tokens=list(range(n))) for n in (2, 5, 3)]
+        batch = ExampleBatch.pack(exs)
+        assert batch.varying["tokens"].shape == (3, 5)
+
+    def test_schema_mismatch_rejected(self):
+        with pytest.raises(SchemaError):
+            ExampleBatch.pack([Example.create(a=1),
+                               Example.create(b=2)])
+
+    def test_to_model_inputs_feeds_servable(self):
+        exs = [Example.create(
+            tokens=np.random.randint(0, CFG.vocab_size, 16))
+            for _ in range(4)]
+        batch = ExampleBatch.pack(exs).to_model_inputs()
+        out = make_servable(0).call("predict", batch)
+        assert out.shape == (4, 16, CFG.vocab_size)
+
+    @given(st.lists(st.lists(st.integers(0, 100), min_size=1,
+                             max_size=6), min_size=1, max_size=8))
+    @settings(max_examples=60, deadline=None)
+    def test_pack_unpack_roundtrip_property(self, rows):
+        exs = [Example.create(tokens=row, const=42) for row in rows]
+        batch = ExampleBatch.pack(exs)
+        back = batch.unpack()
+        assert len(back) == len(exs)
+        for a, b in zip(exs, back):
+            got = b.features["tokens"][:len(a.features["tokens"])]
+            np.testing.assert_array_equal(a.features["tokens"], got)
+            assert int(b.features["const"][0]) == 42
