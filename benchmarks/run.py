@@ -2,26 +2,48 @@
 
 Prints ``name,us_per_call,derived`` CSV. Roofline terms (deliverable g)
 come from the dry-run JSONL via benchmarks/roofline_report.py.
+
+``--smoke`` runs a reduced fast subset (and shrinks each module via the
+``REPRO_BENCH_SMOKE`` env var) so CI catches hot-path breakage without
+waiting for the full sweep.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import traceback
 
+# Allow `python benchmarks/run.py` from the repo root: the benchmarks
+# namespace package lives one level above this file.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset with reduced sizes (for CI)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
     rows = []
 
     def report(name, us_per_call, derived=""):
         rows.append((name, us_per_call, derived))
         print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
-    from benchmarks import (bench_batching, bench_generation,
-                            bench_hosted, bench_isolation, bench_lookup,
+    from benchmarks import (bench_batching, bench_decode_engine,
+                            bench_generation, bench_hosted,
+                            bench_isolation, bench_lookup,
                             bench_serving_engine, bench_transitions)
     modules = [bench_lookup, bench_isolation, bench_batching,
                bench_transitions, bench_hosted, bench_serving_engine,
-               bench_generation]
+               bench_generation, bench_decode_engine]
+    if args.smoke:
+        modules = [bench_lookup, bench_batching, bench_decode_engine]
     failures = 0
     for mod in modules:
         try:

@@ -160,6 +160,17 @@ class BatchingQueue(Generic[T]):
                 return self._closed.popleft()
         return None
 
+    def add_stat(self, key: str, delta: int) -> None:
+        """Mutate a stats counter under the queue lock (device threads
+        and enqueuers both write; ``stats_snapshot`` readers race
+        otherwise)."""
+        with self._lock:
+            self.stats[key] += delta
+
+    def stats_snapshot(self) -> dict:
+        with self._lock:
+            return dict(self.stats)
+
     def has_work(self) -> bool:
         with self._lock:
             return bool(self._closed) or (

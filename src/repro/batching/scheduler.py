@@ -8,7 +8,6 @@ starve others (the paper's tail-latency protection across models).
 """
 from __future__ import annotations
 
-import itertools
 import logging
 import threading
 from typing import Callable, Dict, Generic, Optional, TypeVar
@@ -28,8 +27,7 @@ class SharedBatchScheduler(Generic[T]):
         self._lock = threading.Lock()
         self._queues: Dict[str, BatchingQueue] = {}
         self._processors: Dict[str, BatchProcessor] = {}
-        self._rr: Optional[itertools.cycle] = None
-        self._rr_keys = ()
+        self._rr_keys = ()      # snapshot of queue names for the sweep
         self._stop = threading.Event()
         self._wake = threading.Event()
         self._idle_wait_s = idle_wait_s
@@ -48,14 +46,14 @@ class SharedBatchScheduler(Generic[T]):
                 raise KeyError(f"queue {name!r} exists")
             self._queues[name] = q
             self._processors[name] = processor
-            self._rebuild_rr()
+            self._rr_keys = tuple(self._queues)
         return q
 
     def remove_queue(self, name: str, *, drain: bool = True) -> None:
         with self._lock:
             q = self._queues.pop(name, None)
             proc = self._processors.pop(name, None)
-            self._rebuild_rr()
+            self._rr_keys = tuple(self._queues)
         if q is None:
             return
         if drain:
@@ -64,9 +62,6 @@ class SharedBatchScheduler(Generic[T]):
                 if batch is None:
                     break
                 self._process(q, proc, batch)
-
-    def _rebuild_rr(self) -> None:
-        self._rr_keys = tuple(self._queues)
 
     # -- device loop ------------------------------------------------------
     def start(self) -> None:
@@ -136,7 +131,9 @@ class SharedBatchScheduler(Generic[T]):
             return
         try:
             padded = q.options.bucket_for(batch.size)
-            q.stats["padded_examples"] += padded - batch.size
+            # device threads write this while stats() readers copy —
+            # must go through the queue lock
+            q.add_stat("padded_examples", padded - batch.size)
             proc(batch)
         except BaseException as exc:
             log.warning("batch processor for %s failed: %s", q.name, exc)
@@ -151,4 +148,5 @@ class SharedBatchScheduler(Generic[T]):
 
     def stats(self):
         with self._lock:
-            return {name: dict(q.stats) for name, q in self._queues.items()}
+            queues = list(self._queues.items())
+        return {name: q.stats_snapshot() for name, q in queues}

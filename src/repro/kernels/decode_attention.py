@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names it TPUCompilerParams, newer releases CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 NEG_INF = -1e30
 
 
@@ -101,7 +105,7 @@ def flash_decode(q, k_cache, v_cache, lengths, *, block_k: int = 512,
                 pltpu.VMEM((g, d), jnp.float32),
             ]),
         out_shape=jax.ShapeDtypeStruct((b, hk, g, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, qg, k_cache, v_cache)

@@ -138,6 +138,45 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return {"len": jnp.zeros((), jnp.int32), "layers": stacked}
 
 
+def init_pool_cache(cfg: ModelConfig, num_slots: int, max_len: int):
+    """Slot-pool decode cache for continuous batching.
+
+    Same layout as ``init_cache`` except ``len`` is a per-slot vector
+    (num_slots,), so every row decodes at its own position: the fused
+    decode step over the pool stays shape-stable while slots join and
+    retire at different times.
+    """
+    cache = init_cache(cfg, num_slots, max_len)
+    cache["len"] = jnp.zeros((num_slots,), jnp.int32)
+    return cache
+
+
+def cache_insert_slot(pool, row_cache, slot):
+    """Insert a single-row cache (from a B=1 prefill) at ``slot``.
+
+    Overwrites the slot's whole row — every cache leaf plus its length —
+    so insertion doubles as a reset of whatever retired sequence held the
+    slot before. ``slot`` may be a traced index (jit-friendly).
+    """
+    layers = jax.tree_util.tree_map(
+        lambda p, r: jax.lax.dynamic_update_slice_in_dim(
+            p, r.astype(p.dtype), slot, axis=1),
+        pool["layers"], row_cache["layers"])
+    row_len = jnp.asarray(row_cache["len"], jnp.int32).reshape(())
+    new_len = jax.lax.dynamic_update_index_in_dim(
+        jnp.asarray(pool["len"], jnp.int32), row_len, slot, axis=0)
+    return {"len": new_len, "layers": layers}
+
+
+def cache_reset_slot(cfg: ModelConfig, pool, slot, max_len: int):
+    """Clear one slot back to empty (len 0, positions invalid).
+
+    ``max_len`` must match the value the pool was created with so leaf
+    shapes line up.
+    """
+    return cache_insert_slot(pool, init_cache(cfg, 1, max_len), slot)
+
+
 # ---------------------------------------------------------------------------
 # Mixers
 # ---------------------------------------------------------------------------
@@ -147,8 +186,9 @@ def _rope_positions(cfg: ModelConfig, batch, b, s, cache_len=None):
     pos = batch.get("positions")
     if pos is not None:
         return pos
-    if cache_len is not None:  # decode: next position
-        base = jnp.broadcast_to(cache_len, (b, 1)).astype(jnp.int32)
+    if cache_len is not None:  # decode: next position (scalar or per-row)
+        base = jnp.asarray(cache_len, jnp.int32).reshape(-1, 1)
+        base = jnp.broadcast_to(base, (b, 1))
     else:
         base = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
                                 (b, s))
@@ -200,14 +240,23 @@ def _attn_mixer(cfg: ModelConfig, p, x, positions, mode, slot_cache,
     else:  # decode
         cap = slot_cache["k"].shape[1]
         idx = (cache_len % cap).astype(jnp.int32)
-        kc = jax.lax.dynamic_update_index_in_dim(
-            slot_cache["k"], k[:, 0], idx, axis=1)
-        vc = jax.lax.dynamic_update_index_in_dim(
-            slot_cache["v"], v[:, 0], idx, axis=1)
-        pc = jax.lax.dynamic_update_index_in_dim(
-            slot_cache["pos"],
-            jnp.broadcast_to(cache_len, (b,)).astype(jnp.int32), idx,
-            axis=1)
+        if getattr(cache_len, "ndim", 0):
+            # Per-row lengths (continuous-batching slot pool): every row
+            # writes its K/V at its own ring position.
+            rows = jnp.arange(b)
+            kc = slot_cache["k"].at[rows, idx].set(k[:, 0])
+            vc = slot_cache["v"].at[rows, idx].set(v[:, 0])
+            pc = slot_cache["pos"].at[rows, idx].set(
+                cache_len.astype(jnp.int32))
+        else:
+            kc = jax.lax.dynamic_update_index_in_dim(
+                slot_cache["k"], k[:, 0], idx, axis=1)
+            vc = jax.lax.dynamic_update_index_in_dim(
+                slot_cache["v"], v[:, 0], idx, axis=1)
+            pc = jax.lax.dynamic_update_index_in_dim(
+                slot_cache["pos"],
+                jnp.broadcast_to(cache_len, (b,)).astype(jnp.int32), idx,
+                axis=1)
         # Pin the cache sharding (batch x seq-on-model): without this
         # GSPMD reshards the stacked cache to a head-split layout inside
         # the period scan, staging f32 copies of the whole cache
@@ -215,7 +264,9 @@ def _attn_mixer(cfg: ModelConfig, p, x, positions, mode, slot_cache,
         kc, vc = shard_kv(kc), shard_kv(vc)
         valid = pc >= 0
         if cfg.window:
-            valid &= pc > cache_len - cfg.window
+            cl = (cache_len[:, None] if getattr(cache_len, "ndim", 0)
+                  else cache_len)
+            valid &= pc > cl - cfg.window
         if cfg.attention_impl.startswith("pallas") and not cfg.window:
             # kernel path uses prefix lengths; ring caches (SWA) keep the
             # masked XLA form (positions are scattered, not a prefix)

@@ -29,6 +29,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# jax >= 0.5 exposes shard_map at top level (kwarg: check_vma); 0.4.x
+# has it under experimental (kwarg: check_rep)
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SM_NOCHECK = {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_NOCHECK = {"check_rep": False}
+
 _MESH = None
 
 
@@ -133,7 +142,7 @@ def moe_apply_a2a(p, x, *, top_k: int, capacity_factor: float = 1.25,
 
     gate_key = "experts_w_gate" if "experts_w_gate" in p else None
     w_gate = p[gate_key] if gate_key else p["experts_w_in"]
-    y, lb, z, drop = jax.shard_map(
+    y, lb, z, drop = _shard_map(
         local,
         mesh=mesh,
         in_specs=(P(batch_spec, "model", None),      # x: seq-sharded
@@ -142,7 +151,7 @@ def moe_apply_a2a(p, x, *, top_k: int, capacity_factor: float = 1.25,
                   P("model", None, None),
                   P("model", None, None)),
         out_specs=(P(batch_spec, "model", None), P(), P(), P()),
-        check_vma=False,
+        **_SM_NOCHECK,
     )(x, p["router"], p["experts_w_in"], w_gate, p["experts_w_out"])
     aux = {"moe_lb_loss": lb, "moe_z_loss": z, "moe_drop_fraction": drop}
     return y, aux

@@ -1,0 +1,259 @@
+"""Continuous-batching decode engine (paper §2.2.1 applied to the
+steady-state decode path).
+
+The wave engine in ``serving/generation.py`` only admits requests at
+wave boundaries: one straggler holds every slot in its wave hostage
+until the whole wave finishes, and nothing new is admitted meanwhile.
+``DecodeScheduler`` removes the barrier. It owns a fixed pool of
+KV-cache slots with *per-slot* lengths (``models/model.py:
+init_pool_cache``) and runs ONE fused ``decode_step`` per tick over the
+whole pool; between ticks it retires finished sequences and immediately
+backfills freed slots with queued prefills (iteration-level scheduling,
+à la Orca). Shapes stay jit-stable throughout:
+
+  * the decode batch is always ``(num_slots, 1)`` — free slots ride
+    along masked-out (their rows are garbage, never read);
+  * prompts prefill one row at a time at their exact length (the jit
+    cache specializes per prompt length; no right-padding, so the
+    recurrent mixers — mamba/xLSTM — stay exact too) and are spliced
+    into the pool with ``cache_insert_slot``.
+
+Because every row's compute is independent and masked softmax ignores
+padded cache capacity bit-exactly, greedy engine output is bit-identical
+to per-request ``generate`` — asserted by tests/test_decode_engine.py.
+
+Throughput: the pool amortizes weight streaming and per-step dispatch
+over all active slots, so aggregate tokens/s scales with concurrency
+instead of serializing (benchmarks/bench_decode_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import threading
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as MD
+from repro.serving.generation import (GenRequest, SamplingParams,
+                                      sample_token)
+
+log = logging.getLogger(__name__)
+
+
+class DecodeRequest(GenRequest):
+    """GenRequest (tokens/max_new/sampling + completion event) with
+    engine-side completion helpers."""
+
+    def _finish(self, result: np.ndarray) -> None:
+        self.result = result
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        if not self._event.is_set():
+            self.error = exc
+            self._event.set()
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side state of one occupied cache slot."""
+
+    req: DecodeRequest
+    out: List[int]
+    last: int
+    rng: Optional[np.random.Generator]
+
+
+class DecodeScheduler:
+    """Admits concurrent generate requests into a shared KV slot pool.
+
+    One background thread runs the tick loop: backfill free slots from
+    the queue (per-request exact-length prefill + ``cache_insert_slot``),
+    then one fused ``decode_step`` over all ``num_slots`` rows, then
+    retire finished sequences. Client threads interact only through
+    ``submit``/``generate`` and never touch the pool.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 8,
+                 max_seq_len: int = 512,
+                 eos_token: Optional[int] = None,
+                 idle_wait_s: float = 0.01):
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.max_seq_len = max_seq_len
+        self.eos = eos_token
+        self._idle_wait_s = idle_wait_s
+
+        self._cond = threading.Condition()
+        self._queue: "deque[DecodeRequest]" = deque()
+        self._slots: List[Optional[_Slot]] = [None] * num_slots
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.stats: Dict[str, float] = {
+            "requests": 0, "finished": 0, "prefills": 0, "ticks": 0,
+            "slot_steps": 0, "active_steps": 0, "slot_utilization": 0.0}
+
+        cfgc = cfg
+
+        @jax.jit
+        def _prefill(params, batch, cache):
+            return MD.prefill(params, cfgc, batch, cache)
+
+        @jax.jit
+        def _decode(params, batch, cache):
+            return MD.decode_step(params, cfgc, batch, cache)
+
+        @jax.jit
+        def _insert(pool, row, slot):
+            return MD.cache_insert_slot(pool, row, slot)
+
+        self._prefill_fn, self._decode_fn = _prefill, _decode
+        self._insert_fn = _insert
+        self._pool = MD.init_pool_cache(cfg, num_slots, max_seq_len)
+
+    # -- client API --------------------------------------------------------
+    def submit(self, tokens, max_new: int = 16,
+               sampling: Optional[SamplingParams] = None) -> DecodeRequest:
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if tokens.shape[0] == 0:
+            raise ValueError("empty prompt")
+        if tokens.shape[0] + max_new > self.max_seq_len:
+            raise ValueError(
+                f"prompt_len {tokens.shape[0]} + max_new {max_new} "
+                f"exceeds max_seq_len {self.max_seq_len}")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        req = DecodeRequest(tokens=tokens, max_new=max_new,
+                            sampling=sampling)
+        with self._cond:
+            if self._stop.is_set():
+                raise RuntimeError("engine stopped")
+            self._queue.append(req)
+            self.stats["requests"] += 1
+            self._cond.notify()
+        return req
+
+    def generate(self, tokens, max_new: int = 16,
+                 sampling: Optional[SamplingParams] = None,
+                 timeout: float = 120.0) -> np.ndarray:
+        return self.submit(tokens, max_new, sampling).wait(timeout)
+
+    def active_slots(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> None:
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="decode-engine")
+        self._thread.start()
+
+    def stop(self) -> None:
+        with self._cond:
+            self._stop.set()
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+        err = RuntimeError("decode engine stopped")
+        for i, slot in enumerate(self._slots):
+            if slot is not None:
+                slot.req._fail(err)
+                self._slots[i] = None
+        with self._cond:
+            while self._queue:
+                self._queue.popleft()._fail(err)
+
+    # -- engine loop -------------------------------------------------------
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            with self._cond:
+                if not self._queue and not any(self._slots):
+                    self._cond.wait(self._idle_wait_s)
+                    continue
+            try:
+                self._backfill()
+                if any(s is not None for s in self._slots):
+                    self._tick()
+            except BaseException as exc:     # fail in-flight, keep serving
+                log.warning("decode engine tick failed: %s", exc)
+                for i, slot in enumerate(self._slots):
+                    if slot is not None:
+                        slot.req._fail(exc)
+                        self._slots[i] = None
+
+    def _next_request(self) -> Optional[DecodeRequest]:
+        with self._cond:
+            return self._queue.popleft() if self._queue else None
+
+    def _backfill(self) -> None:
+        """Fill free slots from the queue: exact-length B=1 prefill,
+        splice the row into the pool, emit the first token."""
+        for i in range(self.num_slots):
+            if self._slots[i] is not None:
+                continue
+            req = self._next_request()
+            if req is None:
+                return
+            try:
+                row = MD.init_cache(self.cfg, 1, self.max_seq_len)
+                logits, row = self._prefill_fn(
+                    self.params,
+                    {"tokens": jnp.asarray(req.tokens[None])}, row)
+                self._pool = self._insert_fn(self._pool, row, i)
+                self.stats["prefills"] += 1
+                rng = req.sampling.make_rng() if req.sampling else None
+                tok = sample_token(np.asarray(logits)[0], req.sampling,
+                                   rng)
+            except BaseException as exc:
+                # Fail only this request: once popped it is in neither
+                # the queue nor a slot, so nobody else would wake its
+                # waiter — and a request-local failure (bad prompt,
+                # compile OOM at a new length) must not nuke unrelated
+                # in-flight slots (pool updates are functional, so a
+                # failed insert left it untouched).
+                log.warning("prefill failed, failing request: %s", exc)
+                req._fail(exc)
+                continue
+            slot = _Slot(req=req, out=[tok], last=tok, rng=rng)
+            self._slots[i] = slot
+            self._maybe_retire(i, slot)
+
+    def _maybe_retire(self, i: int, slot: _Slot) -> None:
+        done = (len(slot.out) >= slot.req.max_new or
+                (self.eos is not None and slot.last == self.eos))
+        if done:
+            slot.req._finish(np.asarray(slot.out, np.int32))
+            self.stats["finished"] += 1
+            self._slots[i] = None   # freed; next insert overwrites the row
+
+    def _tick(self) -> None:
+        """One fused decode step over the whole pool."""
+        toks = np.zeros((self.num_slots, 1), np.int32)
+        n_active = 0
+        for i, slot in enumerate(self._slots):
+            if slot is not None:
+                toks[i, 0] = slot.last
+                n_active += 1
+        logits, self._pool = self._decode_fn(
+            self.params, {"tokens": jnp.asarray(toks)}, self._pool)
+        raw = np.asarray(logits)
+        for i, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            tok = sample_token(raw[i], slot.req.sampling, slot.rng)
+            slot.out.append(tok)
+            slot.last = tok
+            self._maybe_retire(i, slot)
+        self.stats["ticks"] += 1
+        self.stats["slot_steps"] += self.num_slots
+        self.stats["active_steps"] += n_active
+        self.stats["slot_utilization"] = (
+            self.stats["active_steps"] / max(self.stats["slot_steps"], 1))

@@ -26,6 +26,7 @@ from repro.core.servable import ResourceEstimate, Servable, ServableId
 from repro.core.source import AspiredVersion
 from repro.core.adapter import SourceAdapter
 from repro.models import model as MD
+from repro.serving.generation import sample_token
 from repro.training import checkpoint as CKPT
 
 log = logging.getLogger(__name__)
@@ -74,6 +75,11 @@ class JaxModelServable(Servable):
         self.params = params
         self.max_cache_len = max_cache_len
         self.inference_log = inference_log
+        # Attached by the owner (ModelServer): a DecodeScheduler sharing
+        # this servable's params. When set, token `generate` calls join
+        # the continuous-batching slot pool instead of running a private
+        # decode loop.
+        self.decode_engine = None
         self._ram = int(sum(np.asarray(l).nbytes for l in
                             jax.tree_util.tree_leaves(params)))
 
@@ -126,18 +132,45 @@ class JaxModelServable(Servable):
         raise ValueError(f"unknown method {method!r}")
 
     def generate(self, tokens=None, embeds=None, max_new: int = 16,
+                 sampling=None, timeout_s: float = 120.0,
                  **_) -> np.ndarray:
+        if tokens is not None:
+            tokens = np.asarray(tokens, np.int32)
+            if tokens.ndim == 1:        # same shape contract both paths
+                tokens = tokens[None]
+        eng = self.decode_engine
+        if eng is not None and tokens is not None:
+            # Over-budget requests (or max_new<1) fall back to the
+            # inline loop below, which allocates per-request — the
+            # pre-engine contract. Checked before any submit so a
+            # multi-row batch never half-enqueues.
+            if 1 <= max_new and tokens.shape[1] + max_new <= eng.max_seq_len:
+                # Continuous batching: each row becomes one slot
+                # request, so concurrent generate calls share the
+                # fused decode step.
+                reqs = [eng.submit(row, max_new=max_new,
+                                   sampling=sampling) for row in tokens]
+                return np.stack([r.wait(timeout_s) for r in reqs])
         prompt = tokens if tokens is not None else embeds
         b, s = prompt.shape[:2]
+        rngs = ([sampling.make_rng() for _ in range(b)]
+                if sampling is not None and not sampling.greedy else None)
+
+        def pick(raw) -> np.ndarray:
+            if rngs is None:
+                return np.argmax(raw, -1)
+            return np.asarray([sample_token(raw[i], sampling, rngs[i])
+                               for i in range(b)])
+
         cache = MD.init_cache(self.cfg, b, s + max_new)
         pb = {"tokens": jnp.asarray(tokens)} if tokens is not None \
             else {"embeds": jnp.asarray(embeds)}
         logits, cache = self._fns["prefill"](self.params, pb, cache)
-        out = [np.argmax(np.asarray(logits), -1)]
+        out = [pick(np.asarray(logits))]
         for _ in range(max_new - 1):
             nb = {"tokens": jnp.asarray(out[-1][:, None])}
             logits, cache = self._fns["decode"](self.params, nb, cache)
-            out.append(np.argmax(np.asarray(logits), -1))
+            out.append(pick(np.asarray(logits)))
         return np.stack(out, axis=1)                    # (B, max_new)
 
     def unload(self) -> None:

@@ -32,10 +32,54 @@ from repro.configs.base import ModelConfig
 from repro.models import model as MD
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding policy, carried per-slot by the engines.
+
+    ``temperature <= 0`` is greedy (argmax, the default — bit-identical
+    to the pre-sampling behavior). ``top_k == 0`` means the full vocab.
+    ``seed`` makes stochastic sampling reproducible per request.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def make_rng(self) -> Optional[np.random.Generator]:
+        return None if self.greedy else np.random.default_rng(self.seed)
+
+
+GREEDY = SamplingParams()
+
+
+def sample_token(logits, sampling: Optional[SamplingParams],
+                 rng: Optional[np.random.Generator] = None) -> int:
+    """Host-side sampling of one token from a (V,) logits row."""
+    logits = np.asarray(logits, np.float32).reshape(-1)
+    if sampling is None or sampling.greedy:
+        return int(np.argmax(logits))
+    if sampling.top_k:
+        k = min(sampling.top_k, logits.shape[0])
+        kth = np.partition(logits, -k)[-k]
+        logits = np.where(logits >= kth, logits, -np.inf)
+    z = logits / sampling.temperature
+    z = z - z.max()
+    p = np.exp(z)
+    p /= p.sum()
+    if rng is None:
+        rng = np.random.default_rng(sampling.seed)
+    return int(rng.choice(logits.shape[0], p=p))
+
+
 @dataclasses.dataclass
 class GenRequest:
     tokens: np.ndarray                 # (prompt_len,)
     max_new: int
+    sampling: Optional[SamplingParams] = None    # None => greedy
     _event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
     result: Optional[np.ndarray] = None
@@ -79,19 +123,22 @@ class GenerationEngine:
         self._prefill, self._decode = _prefill, _decode
 
     # -- client API ---------------------------------------------------------
-    def submit(self, tokens, max_new: Optional[int] = None) -> GenRequest:
+    def submit(self, tokens, max_new: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None) -> GenRequest:
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         if tokens.shape[0] > self.max_prompt:
             tokens = tokens[-self.max_prompt:]
         req = GenRequest(tokens=tokens,
                          max_new=min(max_new or self.max_new,
-                                     self.max_new))
+                                     self.max_new),
+                         sampling=sampling)
         self._queue.put(req)
         return req
 
     def generate(self, tokens, max_new: Optional[int] = None,
+                 sampling: Optional[SamplingParams] = None,
                  timeout: float = 120.0) -> np.ndarray:
-        return self.submit(tokens, max_new).wait(timeout)
+        return self.submit(tokens, max_new, sampling).wait(timeout)
 
     # -- engine loop ----------------------------------------------------------
     def start(self) -> None:
@@ -158,7 +205,19 @@ class GenerationEngine:
         active[:n] = True
         remaining = np.array([r.max_new for r in wave] +
                              [0] * (b - n))
-        cur = np.argmax(np.asarray(logits), -1).astype(np.int32)
+        rngs = [r.sampling.make_rng() if r.sampling else None
+                for r in wave]
+
+        def pick(raw) -> np.ndarray:
+            # greedy for every slot (incl. padding) unless a request
+            # carries stochastic SamplingParams
+            nxt = np.argmax(raw, -1).astype(np.int32)
+            for i, r in enumerate(wave):
+                if r.sampling is not None and not r.sampling.greedy:
+                    nxt[i] = sample_token(raw[i], r.sampling, rngs[i])
+            return nxt
+
+        cur = pick(np.asarray(logits))
         steps = 0
         while active.any() and not self._stop.is_set():
             for i in range(n):
@@ -173,7 +232,7 @@ class GenerationEngine:
             logits, cache = self._decode(
                 self.params, {"tokens": jnp.asarray(cur[:, None])},
                 cache)
-            cur = np.argmax(np.asarray(logits), -1).astype(np.int32)
+            cur = pick(np.asarray(logits))
             steps += 1
         for i, r in enumerate(wave):
             r.result = np.asarray(outs[i], np.int32)

@@ -20,7 +20,9 @@ from repro.configs.base import ModelConfig
 from repro.core import (AspiredVersionsManager, FileSystemSource,
                         NotFoundError, ServableVersionPolicy, chain)
 from repro.core.manager import ManagerEvent
-from repro.serving.engine import InferenceLog, JaxModelSourceAdapter
+from repro.serving.decode_engine import DecodeScheduler
+from repro.serving.engine import (InferenceLog, JaxModelServable,
+                                  JaxModelSourceAdapter)
 
 log = logging.getLogger(__name__)
 
@@ -31,7 +33,9 @@ class ModelServer:
                  policies: Optional[Dict[str, ServableVersionPolicy]] = None,
                  batching: Optional[BatchingOptions] = None,
                  num_load_threads: int = 2,
-                 ram_budget_bytes: Optional[int] = None):
+                 ram_budget_bytes: Optional[int] = None,
+                 use_decode_engine: bool = True,
+                 decode_engine_slots: int = 8):
         self.inference_log = InferenceLog()
         self.source = FileSystemSource(model_dirs, policies)
         self.adapter = JaxModelSourceAdapter(cfg_for, self.inference_log)
@@ -47,6 +51,13 @@ class ModelServer:
         self.scheduler = SharedBatchScheduler()
         self._sessions: Dict[str, BatchingSession] = {}
         self._sessions_lock = threading.Lock()
+        # One continuous-batching decode engine per servable version,
+        # created lazily on first generate next to the BatchingSession
+        # and torn down with it on unload.
+        self.use_decode_engine = use_decode_engine
+        self.decode_engine_slots = decode_engine_slots
+        self._engines: Dict[str, DecodeScheduler] = {}
+        self._engines_lock = threading.Lock()
 
     # -- lifecycle ---------------------------------------------------------
     def start(self, poll_interval_s: float = 0.5) -> None:
@@ -70,18 +81,28 @@ class ModelServer:
             for s in self._sessions.values():
                 s.close(drain=False)
             self._sessions.clear()
+        with self._engines_lock:
+            engines = list(self._engines.values())
+            self._engines.clear()
+        for eng in engines:
+            eng.stop()
         self.manager.shutdown()
         self.scheduler.stop()
 
     def _on_event(self, ev: ManagerEvent) -> None:
-        # Drop the batching queue of unloaded versions (dynamic queue set,
-        # paper §2.2.1 "added and removed as servable versions come and go")
+        # Drop the batching queue and decode engine of unloaded versions
+        # (dynamic queue set, paper §2.2.1 "added and removed as servable
+        # versions come and go")
         if ev.kind == "unload_done":
             key = str(ev.servable)
             with self._sessions_lock:
                 sess = self._sessions.pop(key, None)
             if sess is not None:
                 sess.close(drain=False)
+            with self._engines_lock:
+                eng = self._engines.pop(key, None)
+            if eng is not None:
+                eng.stop()
 
     # -- inference ----------------------------------------------------------
     def _session_for(self, name: str, version: int) -> BatchingSession:
@@ -119,11 +140,39 @@ class ModelServer:
         with self.manager.get_servable_handle(name, version) as s:
             return s.call("regress", {"batch": batch})
 
+    def _engine_for(self, name: str, servable) -> None:
+        """Attach a DecodeScheduler to a servable version (idempotent)."""
+        key = f"{name}@v{servable.id.version}"
+        with self._engines_lock:
+            if key in self._engines:
+                return
+        # Build outside the lock: pool-cache allocation is slow and must
+        # not serialize other models' generate calls (double-checked
+        # insert below; a losing racer discards its engine).
+        eng = DecodeScheduler(
+            servable.cfg, servable.params,
+            num_slots=self.decode_engine_slots,
+            max_seq_len=servable.max_cache_len)
+        with self._engines_lock:
+            if key in self._engines:
+                return
+            eng.start()
+            self._engines[key] = eng
+            servable.decode_engine = eng
+
     def generate(self, name: str, tokens=None, embeds=None,
-                 max_new: int = 16, version: Optional[int] = None):
+                 max_new: int = 16, version: Optional[int] = None,
+                 sampling=None):
+        # The handle is held for the whole call: the manager's refcount
+        # drain means the engine's params stay live until every in-slot
+        # request of this version has finished.
         with self.manager.get_servable_handle(name, version) as s:
+            if (self.use_decode_engine and tokens is not None
+                    and isinstance(s, JaxModelServable)):
+                self._engine_for(name, s)
             return s.call("generate", {"tokens": tokens, "embeds": embeds,
-                                       "max_new": max_new})
+                                       "max_new": max_new,
+                                       "sampling": sampling})
 
     def available_models(self):
         return self.manager.list_available()

@@ -5,7 +5,7 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep
 
 from repro.batching import (BatchedSection, BatchingOptions,
                             BatchingQueue, BatchingSession,
@@ -172,8 +172,17 @@ class TestSessionAndScheduler:
 
     def test_in_graph_sections_batch_independently(self):
         enc_shapes, dec_shapes = [], []
+
+        def enc_fn(x):
+            # slow processor: while the device chews on the first batch,
+            # the remaining workers' tasks pile up and must merge (the
+            # idle-device partial-pop path otherwise races to size-1
+            # batches when workers trickle in)
+            enc_shapes.append(x.shape[0])
+            time.sleep(0.02)
+            return x + 1
         enc = BatchedSection(
-            lambda x: enc_shapes.append(x.shape[0]) or x + 1,
+            enc_fn,
             self.sched, BatchingOptions(max_batch_size=4,
                                         batch_timeout_s=0.005),
             name="enc")

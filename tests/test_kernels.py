@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep
 
 from repro.kernels.ops import flash_attention_op, flash_decode_op
 from repro.kernels.ref import ref_flash_attention, ref_flash_decode

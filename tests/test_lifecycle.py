@@ -230,7 +230,7 @@ class TestVersionPolicyProperties:
     """Hypothesis: ServableVersionPolicy.select invariants over arbitrary
     version sets (paper §2.1.1 semantics)."""
 
-    from hypothesis import given, settings, strategies as st
+    from _hypothesis_compat import given, settings, st  # optional dep
 
     @given(st.lists(st.integers(1, 500), unique=True, max_size=12))
     @settings(max_examples=120, deadline=None)

@@ -99,6 +99,50 @@ class TestModelServer:
         with pytest.raises(NotFoundError):
             server.predict("clf", batch(), version=2, batched=False)
 
+    def test_concurrent_generate_across_version_transition(self, server):
+        """N threads generate on one servable while versions transition:
+        every call must complete with correct shapes (continuous-batching
+        decode engine + RCU handle path together). The manager drains
+        handles before unload, so in-flight slot requests keep live
+        params even as their version is being retired."""
+        stop = threading.Event()
+        lock = threading.Lock()
+        errors, outs = [], []
+
+        def client(i):
+            rng = np.random.default_rng(i)
+            while not stop.is_set():
+                toks = rng.integers(0, CFG.vocab_size, (1, 12))
+                try:
+                    out = server.generate("clf", tokens=toks, max_new=4)
+                    with lock:
+                        outs.append(out)
+                except Exception as exc:        # any failure is a bug
+                    with lock:
+                        errors.append(exc)
+                    return
+        ts = [threading.Thread(target=client, args=(i,))
+              for i in range(6)]
+        [t.start() for t in ts]
+        try:
+            for policy in (ServableVersionPolicy(mode="canary"),
+                           ServableVersionPolicy(mode="specific",
+                                                 specific_version=1),
+                           ServableVersionPolicy(mode="latest")):
+                server.source.set_policy("clf", policy)
+                server.refresh()
+        finally:
+            stop.set()
+            [t.join(timeout=60) for t in ts]
+        assert not errors, errors
+        assert len(outs) >= 6
+        for out in outs:
+            assert out.shape == (1, 4)
+            assert 0 <= out.min() and out.max() < CFG.vocab_size
+        # transitions tore down the retired versions' engines
+        live = set(server._engines)
+        assert live <= {"clf@v2"} | {"clf@v1"}
+
     def test_inference_logging(self, server):
         server.predict("clf", batch(), batched=False)
         entries = server.inference_log.entries()

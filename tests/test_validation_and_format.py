@@ -2,7 +2,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep
 
 from repro.configs import get_config
 from repro.core.loader import CallableLoader, ErrorInjectingLoader
