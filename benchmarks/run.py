@@ -36,12 +36,11 @@ def main(argv=None) -> None:
         print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
     from benchmarks import (bench_batching, bench_decode_engine,
-                            bench_generation, bench_hosted,
-                            bench_isolation, bench_lookup,
+                            bench_hosted, bench_isolation, bench_lookup,
                             bench_serving_engine, bench_transitions)
     modules = [bench_lookup, bench_isolation, bench_batching,
                bench_transitions, bench_hosted, bench_serving_engine,
-               bench_generation, bench_decode_engine]
+               bench_decode_engine]
     if args.smoke:
         modules = [bench_lookup, bench_batching, bench_decode_engine]
     failures = 0

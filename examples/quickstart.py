@@ -1,9 +1,11 @@
-"""Quickstart: the TF-Serving lifecycle in ~60 lines.
+"""Quickstart: the TF-Serving lifecycle + typed serving API.
 
 Builds two versions of a tiny JAX classifier on disk, starts a
 ModelServer (FileSystemSource -> adapter -> AspiredVersionsManager ->
-batching), sends traffic, then walks the paper's §2.1.1 use-cases:
-canary (serve both), promote (newest only), rollback (pin the old one).
+batching), sends traffic, then walks the paper's use-cases through the
+typed API: canary addressed by *version label*, promote (labels flip
+atomically), streaming generate, MultiInference, and a live
+ReloadConfig that adds and retires a model without restarting.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -19,6 +21,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.configs import get_config
 from repro.core import ServableVersionPolicy
 from repro.models import model as MD
+from repro.serving import api
 from repro.serving.server import ModelServer
 from repro.training.checkpoint import save_checkpoint
 
@@ -42,23 +45,50 @@ def main():
     batch = {"tokens": np.random.randint(0, cfg.vocab_size, (2, 16))}
     print("predict ->", server.predict("demo", batch).shape)
     print("classify ->", server.classify("demo", batch, k=3)["classes"])
-    print("generate ->", server.generate("demo", tokens=batch["tokens"],
-                                         max_new=8).shape)
+    multi = server.multi_inference("demo", batch, k=3)
+    print("multi_inference (one forward pass) ->",
+          multi.classify.classes.shape, multi.regress.values.shape)
 
-    print("\n-- canary: load v2 alongside v1, traffic still on v1 --")
+    print("\n-- streaming generate: chunks as decode ticks retire them --")
+    prompt = batch["tokens"][:1]
+    for chunk in server.generate("demo", tokens=prompt, max_new=8,
+                                 stream=True):
+        print(f"  chunk index={chunk.index} token={chunk.token}"
+              + (" (final)" if chunk.final else ""))
+
+    print("\n-- canary: load v2 alongside v1, address by LABEL --")
     server.source.set_policy("demo", ServableVersionPolicy(mode="canary"))
     server.refresh()
-    print("serving:", server.available_models())
-    out_v1 = server.predict("demo", batch, version=1)
-    out_v2 = server.predict("demo", batch, version=2)
-    print("versions differ:",
-          bool(np.abs(out_v1 - out_v2).max() > 1e-3))
+    print("serving:", server.available_models(),
+          "labels:", server.manager.version_labels("demo"))
+    out_stable = server.predict("demo", batch, label="stable")
+    out_canary = server.predict("demo", batch, label="canary")
+    print("stable vs canary differ:",
+          bool(np.abs(out_stable - out_canary).max() > 1e-3))
 
-    print("\n-- rollback: pin v1 --")
-    server.source.set_policy(
-        "demo", ServableVersionPolicy(mode="specific", specific_version=1))
+    print("\n-- promote: labels flip atomically, no restart --")
+    server.source.set_policy("demo", ServableVersionPolicy(mode="latest"))
     server.refresh()
-    print("serving:", server.available_models())
+    print("labels:", server.manager.version_labels("demo"))
+    status = server.model_status("demo")
+    print("status:", [(v.version, v.state) for v in status.versions])
+
+    print("\n-- reload-config: add + retire models on a live server --")
+    params = MD.init_params(jax.random.PRNGKey(42), cfg)
+    save_checkpoint(base, "extra", 1, params, {"arch": cfg.name})
+    resp = server.reload_config({
+        "demo": api.ModelDirConfig(os.path.join(base, "demo")),
+        "extra": api.ModelDirConfig(os.path.join(base, "extra"))})
+    print("added:", resp.added, "->", server.available_models())
+    resp = server.reload_config({
+        "demo": api.ModelDirConfig(os.path.join(base, "demo"))})
+    print("removed:", resp.removed, "->", server.available_models())
+
+    print("\n-- typed errors --")
+    try:
+        server.predict("demo", batch, label="nope")
+    except api.NotFound as exc:
+        print(f"NotFound({exc.code}):", exc)
 
     print("\nlifecycle events:")
     for ev in server.manager.events():

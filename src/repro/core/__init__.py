@@ -13,11 +13,13 @@ Canonical wiring::
 """
 from repro.core.adapter import FnSourceAdapter, SourceAdapter, chain
 from repro.core.loader import CallableLoader, ErrorInjectingLoader, Loader
-from repro.core.manager import (AspiredVersionsManager, ManagerEvent,
+from repro.core.manager import (AspiredVersionsManager,
+                                FailedPreconditionError, ManagerEvent,
                                 NotFoundError)
 from repro.core.rcu import RcuMap
 from repro.core.servable import (RawDictServable, ResourceEstimate, Servable,
-                                 ServableHandle, ServableId, ServableState)
+                                 ServableHandle, ServableId, ServableState,
+                                 UnsupportedMethodError)
 from repro.core.source import (AspiredVersion, FileSystemSource,
                                ServableVersionPolicy, Source, SourceRouter,
                                StaticSource)
@@ -28,11 +30,12 @@ from repro.core.version_policy import (AvailabilityPreservingPolicy,
 
 __all__ = [
     "AspiredVersion", "AspiredVersionsManager", "AvailabilityPreservingPolicy",
-    "CallableLoader", "ErrorInjectingLoader", "FileSystemSource",
+    "CallableLoader", "ErrorInjectingLoader", "FailedPreconditionError",
+    "FileSystemSource",
     "FnSourceAdapter", "Loader", "ManagerEvent", "NotFoundError",
     "PendingAction", "RawDictServable", "RcuMap", "ResourceEstimate",
     "ResourcePreservingPolicy", "Servable", "ServableHandle", "ServableId",
     "ServablePicture", "ServableState", "ServableVersionPolicy", "Source",
     "SourceAdapter", "SourceRouter", "StaticSource",
-    "VersionTransitionPolicy", "chain",
+    "UnsupportedMethodError", "VersionTransitionPolicy", "chain",
 ]

@@ -89,6 +89,11 @@ class NotFoundError(KeyError):
     pass
 
 
+class FailedPreconditionError(RuntimeError):
+    """Request is structurally valid but the system state forbids it,
+    e.g. assigning a version label to a version that is not READY."""
+
+
 class AspiredVersionsManager:
     def __init__(
         self,
@@ -125,6 +130,16 @@ class AspiredVersionsManager:
 
         self._ram_budget = ram_budget_bytes
         self._ram_committed = 0      # READY + LOADING estimates
+
+        # Version labels (paper §3: address "stable"/"canary" instead of
+        # a number). ``_labels`` maps name -> an immutable-after-publish
+        # dict swapped whole under the mutex; readers grab the reference
+        # once per resolution attempt, so a flip is atomic from their
+        # point of view. ``_explicit_labels`` holds operator-assigned
+        # labels (SetVersionLabels); stable/canary are auto-tracked from
+        # the READY set on every version transition unless overridden.
+        self._labels: Dict[str, Dict[str, int]] = {}
+        self._explicit_labels: Dict[str, Dict[str, int]] = {}
 
         self._pending_ops = 0        # in-flight loads+unloads
         self._idle = threading.Condition(self._mutex)
@@ -240,8 +255,14 @@ class AspiredVersionsManager:
             entry = mv.entry
             assert entry is not None
             snap = self._serving.get(name)
+            new_snap = snap.without_version(action.version) \
+                if snap is not None else None
+            # Flip labels BEFORE unpublishing: a published label must
+            # never point at a version absent from the snapshot, so a
+            # reader that raced the flip either acquires the old entry
+            # (still READY) or retries and resolves the new target.
+            self._relabel(name, new_snap.versions if new_snap else ())
             if snap is not None:
-                new_snap = snap.without_version(action.version)
                 if new_snap is None:
                     self._serving.remove(name)
                 else:
@@ -278,6 +299,7 @@ class AspiredVersionsManager:
                 else:
                     snap = snap.with_entry(version, entry)
                 self._serving.insert(name, snap)
+                self._relabel(name, snap.versions)
                 self._event("load_done", sid, f"{dt*1e3:.1f}ms")
         except BaseException as exc:  # robustness: never crash the server
             log.warning("load failed for %s: %s", sid, exc)
@@ -318,10 +340,74 @@ class AspiredVersionsManager:
             self._idle.notify_all()
 
     # ------------------------------------------------------------------
+    # Version labels
+    # ------------------------------------------------------------------
+    def _relabel(self, name: str, ready: Tuple[int, ...]) -> None:
+        """Recompute the published label map for ``name``. Called under
+        the mutex on every READY-set change and explicit assignment.
+
+        Auto rule: ``canary`` -> newest READY; ``stable`` -> previous
+        READY while two versions coexist (canary pair / mid-transition),
+        else the single newest. Explicit labels override the auto pair;
+        explicit labels whose version left the READY set are dropped (so
+        they fall back to auto tracking rather than dangle)."""
+        explicit = self._explicit_labels.get(name, {})
+        kept = {lbl: v for lbl, v in explicit.items() if v in ready}
+        if kept != explicit:
+            log.warning("dropping labels %s of %r: version no longer READY",
+                        sorted(set(explicit) - set(kept)), name)
+            self._explicit_labels[name] = kept
+        labels = {}
+        if ready:
+            labels["canary"] = ready[-1]
+            labels["stable"] = ready[-2] if len(ready) > 1 else ready[-1]
+        labels.update(kept)
+        if labels:
+            self._labels[name] = labels       # atomic swap for readers
+        else:
+            self._labels.pop(name, None)
+
+    def set_version_labels(self, name: str,
+                           labels: Dict[str, Optional[int]]) -> None:
+        """Assign/clear explicit labels (value ``None`` clears one).
+
+        A label may only point at a READY version — assigning to a
+        version that is loading/absent raises FailedPreconditionError
+        (the paper's ModelService semantics: labels move only after the
+        target can actually serve)."""
+        with self._mutex:
+            snap = self._serving.get(name)
+            ready = snap.versions if snap is not None else ()
+            explicit = dict(self._explicit_labels.get(name, {}))
+            for lbl, ver in labels.items():
+                if ver is None:
+                    explicit.pop(lbl, None)
+                    continue
+                ver = int(ver)
+                if ver not in ready:
+                    raise FailedPreconditionError(
+                        f"cannot label {lbl!r} -> {name}@v{ver}: "
+                        "version is not READY")
+                explicit[lbl] = ver
+            self._explicit_labels[name] = explicit
+            self._relabel(name, ready)
+
+    def version_labels(self, name: str) -> Dict[str, int]:
+        return dict(self._labels.get(name, {}))
+
+    def resolve_version_label(self, name: str, label: str) -> int:
+        labels = self._labels.get(name)
+        if labels is None or label not in labels:
+            raise NotFoundError(
+                f"no version labeled {label!r} for servable {name!r}")
+        return labels[label]
+
+    # ------------------------------------------------------------------
     # Inference-side API — wait-free lookup + refcounted handles.
     # ------------------------------------------------------------------
     def get_servable_handle(self, name: str,
-                            version: Optional[int] = None
+                            version: Optional[int] = None,
+                            *, label: Optional[str] = None
                             ) -> ServableHandle:
         """Wait-free lookup: RCU snapshot read + refcount CAS.
 
@@ -331,14 +417,28 @@ class AspiredVersionsManager:
         entry in the *current* snapshot is always acquirable because the
         manager unpublishes before begin_unload. Retries are bounded by
         the publish rate, never by lock-holding — still wait-free in
-        practice. Raises NotFoundError if no READY version matches."""
+        practice. Raises NotFoundError if no READY version matches.
+
+        ``label`` addresses a version indirectly ("stable"/"canary"/
+        explicit); it is re-resolved against the current label map on
+        every retry, and the manager flips labels before unpublishing,
+        so a label flip can never strand an in-flight request."""
+        if version is not None and label is not None:
+            raise ValueError("pass version or label, not both")
         prev = None
         while True:
             snap = self._serving.get(name)
             if snap is prev:  # stable snapshot, definitive miss
                 break
             if snap is not None:
-                if version is None:
+                want = version
+                if label is not None:
+                    labels = self._labels.get(name)
+                    if labels is None or label not in labels:
+                        prev = snap
+                        continue
+                    want = labels[label]
+                if want is None:
                     # Prefer primary (= newest READY).
                     for v in (snap.primary, *reversed(snap.versions)):
                         entry = snap.entries.get(v)
@@ -347,17 +447,29 @@ class AspiredVersionsManager:
                             if h is not None:
                                 return h
                 else:
-                    entry = snap.entries.get(version)
+                    entry = snap.entries.get(want)
                     if entry is not None:
                         h = entry.try_acquire()
                         if h is not None:
                             return h
             prev = snap
+        if label is not None:
+            raise NotFoundError(
+                f"no READY servable {name!r} label={label!r}")
         raise NotFoundError(f"no READY servable {name!r} version={version}")
 
     def list_available(self) -> Dict[str, Tuple[int, ...]]:
         return {name: snap.versions
                 for name, snap in self._serving.snapshot().items()}
+
+    def version_states(
+            self, name: str
+    ) -> Dict[int, Tuple[ServableState, Optional[BaseException]]]:
+        """Per-version (state, error) for one servable — the state
+        machine GetModelStatus surfaces."""
+        with self._mutex:
+            return {v: (mv.state, mv.error)
+                    for v, mv in self._managed.get(name, {}).items()}
 
     def state_of(self, name: str, version: int) -> Optional[ServableState]:
         with self._mutex:

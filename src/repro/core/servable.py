@@ -54,6 +54,14 @@ class ResourceEstimate:
         return self.ram_bytes + self.transient_ram_bytes
 
 
+class UnsupportedMethodError(ValueError):
+    """A servable does not implement the requested method. Subclasses
+    ValueError for backward compatibility; callers that want to fall
+    back (e.g. MultiInference decomposing into per-task calls) catch
+    THIS, so genuine ValueErrors from inside a method are never
+    mistaken for "method not supported"."""
+
+
 class Servable:
     """Base black box. Subclasses hold whatever payload they want.
 
@@ -92,7 +100,7 @@ class RawDictServable(Servable):
 
     def call(self, method: str, request: Any) -> Any:
         if method != "lookup":
-            raise ValueError(f"unknown method {method!r}")
+            raise UnsupportedMethodError(f"unknown method {method!r}")
         assert self.table is not None, "servable already unloaded"
         return self.table.get(request)
 

@@ -123,23 +123,38 @@ class FileSystemSource(Source[str]):
         self._timer: Optional[threading.Timer] = None
         self._stopped = False
 
+    def current_config(self) -> Dict[str, tuple]:
+        """Snapshot of the served-model map: name -> (directory, policy).
+        The diff target for runtime ReloadConfig."""
+        with self._poll_lock:
+            return {name: (directory, self.policy_for(name))
+                    for name, directory in list(self._dirs.items())}
+
     def policy_for(self, name: str) -> ServableVersionPolicy:
         return self._policies.setdefault(name, ServableVersionPolicy())
 
+    # Config mutators serialize against poll() via _poll_lock: a timer
+    # poll snapshots the dir map, so an unsynchronized removal could
+    # interleave with an in-flight poll that then re-emits (resurrects)
+    # the just-removed servable — and, with the name gone from the map,
+    # nothing would ever un-aspire it again.
     def set_policy(self, name: str, policy: ServableVersionPolicy) -> None:
         """Runtime policy switch — how canary→promote and rollback happen."""
-        self._policies[name] = policy
+        with self._poll_lock:
+            self._policies[name] = policy
 
     def add_servable(self, name: str, directory: str,
                      policy: Optional[ServableVersionPolicy] = None) -> None:
-        self._dirs[name] = directory
-        if policy is not None:
-            self._policies[name] = policy
+        with self._poll_lock:
+            self._dirs[name] = directory
+            if policy is not None:
+                self._policies[name] = policy
 
     def remove_servable(self, name: str) -> None:
-        self._dirs.pop(name, None)
-        self._policies.pop(name, None)
-        self._emit(name, [])  # un-aspire everything
+        with self._poll_lock:
+            self._dirs.pop(name, None)
+            self._policies.pop(name, None)
+            self._emit(name, [])  # un-aspire everything
 
     def list_versions(self, name: str) -> List[int]:
         directory = self._dirs.get(name)

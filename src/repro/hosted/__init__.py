@@ -3,16 +3,17 @@ in-process: Controller (bin-packing + transactional state), Synchronizer
 (per-datacenter propagation), Router (hedged requests), Autoscaler.
 """
 from repro.hosted.autoscaler import Autoscaler, AutoscalerConfig
-from repro.hosted.controller import AdmissionError, Controller, ModelSpec
+from repro.hosted.controller import AdmissionError, Controller, ModelEntry
 from repro.hosted.jobs import (JobReplica, LatencyModel, RpcSource,
                                ServingJob)
 from repro.hosted.router import NoReplicaError, Router
 from repro.hosted.store import TransactionalStore, Txn, TxnConflict
 from repro.hosted.synchronizer import Synchronizer
+from repro.serving.api import ModelSpec  # request addressing (re-export)
 
 __all__ = [
     "AdmissionError", "Autoscaler", "AutoscalerConfig", "Controller",
-    "JobReplica", "LatencyModel", "ModelSpec", "NoReplicaError",
-    "Router", "RpcSource", "ServingJob", "Synchronizer",
+    "JobReplica", "LatencyModel", "ModelEntry", "ModelSpec",
+    "NoReplicaError", "Router", "RpcSource", "ServingJob", "Synchronizer",
     "TransactionalStore", "Txn", "TxnConflict",
 ]

@@ -23,7 +23,11 @@ class AdmissionError(RuntimeError):
 
 
 @dataclasses.dataclass
-class ModelSpec:
+class ModelEntry:
+    """Controller-side record of a managed model (formerly ``ModelSpec``;
+    renamed so the request-addressing ``repro.serving.api.ModelSpec``
+    owns that name)."""
+
     name: str
     ram_bytes: int                     # Controller's RAM estimate
     versions: List[int]
@@ -65,7 +69,7 @@ class Controller:
             j["reserved"] += need
             j["models"].append(name)
             txn.put(key, j)
-            txn.put(f"models/{name}", dataclasses.asdict(ModelSpec(
+            txn.put(f"models/{name}", dataclasses.asdict(ModelEntry(
                 name=name, ram_bytes=ram_bytes, versions=[version],
                 loader_ref=loader_ref)))
             return key.split("/", 1)[1]

@@ -131,9 +131,10 @@ class Tfs2Service:
         return dest
 
     def infer(self, name: str, request: Any, method: str = "predict",
-              version: Optional[int] = None):
+              version: Optional[int] = None,
+              label: Optional[str] = None):
         inst, part = self._placements[name]
-        return part.router.infer(name, request, method, version)
+        return part.router.infer(name, request, method, version, label)
 
     def serving_instance(self, name: str) -> Optional[str]:
         return self._placements.get(name, (None,))[0]

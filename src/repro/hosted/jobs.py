@@ -16,9 +16,8 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core import (AspiredVersion, AspiredVersionsManager,
-                        CallableLoader, NotFoundError, ResourceEstimate,
-                        Servable, ServableId, Source)
+from repro.core import AspiredVersion, AspiredVersionsManager, Source
+from repro.serving.api import ModelSpec, PredictionService
 
 
 class RpcSource(Source):
@@ -62,6 +61,10 @@ class JobReplica:
             num_load_threads=2, ram_budget_bytes=capacity_bytes)
         self.source.set_aspired_versions_callback(
             self.manager.set_aspired_versions)
+        # Replica inference routes through the same typed service core
+        # as a stand-alone ModelServer (bare configuration: direct
+        # calls, no cross-request batching on the replica).
+        self.prediction = PredictionService(self.manager)
         self._req_count = 0
         self._req_lock = threading.Lock()
 
@@ -76,15 +79,19 @@ class JobReplica:
         return self.manager.list_available()
 
     # -- Router-facing ---------------------------------------------------------
-    def infer(self, model: str, method: str, request: Any,
+    def infer(self, model, method: str, request: Any,
               version: Optional[int] = None) -> Any:
+        """Serve one RPC. ``model`` is a ``ModelSpec`` (label-aware) or a
+        bare name (+ optional ``version``) for convenience; labels are
+        resolved against this replica's own manager at request time."""
+        spec = model if isinstance(model, ModelSpec) \
+            else ModelSpec(model, version)
         delay = self.latency.sample()
         if delay:
             time.sleep(delay)
         with self._req_lock:
             self._req_count += 1
-        with self.manager.get_servable_handle(model, version) as s:
-            return s.call(method, request)
+        return self.prediction.call(spec, method, request)
 
     def take_request_count(self) -> int:
         with self._req_lock:

@@ -3,20 +3,26 @@ hosting the requested model, with *hedged backup requests* [Dean 2012]
 to cut tail latency from transient replica slowness: the request goes to
 one replica; if no reply within ``hedge_delay_s``, a backup goes to a
 second replica; first reply wins.
+
+Requests are addressed by ``ModelSpec`` (name + version OR label): the
+router places by name, and the chosen replica resolves version/label
+against its own manager at request time, so a canary promote propagating
+through the Synchronizer flips routing without restarting anything.
 """
 from __future__ import annotations
 
 import itertools
 import threading
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
-from repro.hosted.jobs import JobReplica, ServingJob
+from repro.hosted.jobs import ServingJob
 from repro.hosted.synchronizer import Synchronizer
+from repro.serving.api import ModelSpec, NotFound
 
 
-class NoReplicaError(RuntimeError):
-    pass
+class NoReplicaError(NotFound):
+    """No replica anywhere has the model loaded (typed: NOT_FOUND)."""
 
 
 class Router:
@@ -42,21 +48,26 @@ class Router:
                     return list(job.replicas)
         return []
 
-    def infer(self, model: str, request: Any, method: str = "predict",
-              version: Optional[int] = None) -> Any:
-        replicas = self._replicas_for(model)
+    def infer(self, model, request: Any, method: str = "predict",
+              version: Optional[int] = None,
+              label: Optional[str] = None) -> Any:
+        """``model`` is a ``ModelSpec`` or a bare name (+ optional
+        ``version``/``label``). Replicas resolve labels locally."""
+        spec = model if isinstance(model, ModelSpec) \
+            else ModelSpec(model, version, label)
+        replicas = self._replicas_for(spec.name)
         if not replicas:
-            raise NoReplicaError(f"model {model!r} not loaded anywhere")
+            raise NoReplicaError(
+                f"model {spec.name!r} not loaded anywhere")
         with self._stats_lock:
             self.stats["requests"] += 1
         start = next(self._rr)
         primary = replicas[start % len(replicas)]
 
         if self.hedge_delay_s is None or len(replicas) == 1:
-            return primary.infer(model, method, request, version)
+            return primary.infer(spec, method, request)
 
-        f1 = self._pool.submit(primary.infer, model, method, request,
-                               version)
+        f1 = self._pool.submit(primary.infer, spec, method, request)
         done, _ = wait([f1], timeout=self.hedge_delay_s)
         if done:
             return f1.result()
@@ -64,8 +75,7 @@ class Router:
         backup = replicas[(start + 1) % len(replicas)]
         with self._stats_lock:
             self.stats["hedged"] += 1
-        f2 = self._pool.submit(backup.infer, model, method, request,
-                               version)
+        f2 = self._pool.submit(backup.infer, spec, method, request)
         done, _ = wait([f1, f2], return_when=FIRST_COMPLETED)
         winner = done.pop()
         if winner is f2:

@@ -168,6 +168,25 @@ def cache_insert_slot(pool, row_cache, slot):
     return {"len": new_len, "layers": layers}
 
 
+def estimate_pool_cache_bytes(cfg: ModelConfig, num_slots: int,
+                              max_len: int) -> int:
+    """Bytes of a ``num_slots`` x ``max_len`` decode slot pool.
+
+    Shape-only (``jax.eval_shape`` — nothing is allocated), so loaders
+    can fold the decode engine's KV footprint into their resource
+    estimate before admission (paper §2.1.2 load gating).
+    """
+    shapes = jax.eval_shape(
+        lambda: init_pool_cache(cfg, num_slots, max_len))
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(shapes):
+        n = leaf.dtype.itemsize
+        for d in leaf.shape:
+            n *= int(d)
+        total += n
+    return total
+
+
 def cache_reset_slot(cfg: ModelConfig, pool, slot, max_len: int):
     """Clear one slot back to empty (len 0, positions invalid).
 

@@ -1,0 +1,626 @@
+"""Typed, transport-agnostic serving API (paper §2.2, §3).
+
+The paper's serving surface is a small set of typed RPCs — Predict,
+Classify, Regress, MultiInference on a *PredictionService*, plus
+GetModelStatus and runtime config reload on a *ModelService* — all
+addressed by a ``ModelSpec`` naming a model and either a version number
+or a version **label** ("stable", "canary", ...). This module is that
+surface: plain request/response dataclasses and two service classes any
+transport (in-process calls today, gRPC/HTTP handlers later) can wrap
+without re-deriving semantics.
+
+Key properties:
+
+  * **Labels resolve at request time under the RCU handle.** The label
+    map lives in ``AspiredVersionsManager`` and is swapped atomically
+    *before* a version is unpublished, so a canary→promote flip never
+    strands an in-flight request (``tests/test_api.py`` hammers this).
+  * **MultiInference is fused**: classify + regress run over one
+    resolved version inside one servable-handle hold, sharing a single
+    forward pass where the servable supports it.
+  * **Generate streams**: ``stream=True`` returns an iterator of
+    ``TokenChunk``s emitted as decode ticks retire tokens; the
+    concatenation is bit-identical to the blocking result.
+  * **Typed errors** — ``NotFound`` / ``FailedPrecondition`` /
+    ``InvalidArgument`` / ``Unavailable`` — replace bare RuntimeErrors.
+    Each subclasses the matching lower-level exception so pre-existing
+    ``except`` clauses keep working.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import queue
+import threading
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.batching import BatchingOptions, BatchingSession, \
+    SharedBatchScheduler
+from repro.core import (AspiredVersionsManager, FileSystemSource,
+                        ServableVersionPolicy)
+from repro.core.manager import FailedPreconditionError, NotFoundError
+from repro.core.servable import (Servable, ServableHandle,
+                                 UnsupportedMethodError)
+from repro.serving.decode_engine import DecodeScheduler
+from repro.serving.engine import JaxModelServable
+from repro.serving.generation import SamplingParams
+
+log = logging.getLogger(__name__)
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy (gRPC-status-shaped, paper §2.2 "typed RPCs")
+# ---------------------------------------------------------------------------
+
+
+class ServingError(Exception):
+    """Base of the typed serving errors; ``code`` mirrors gRPC status."""
+
+    code = "UNKNOWN"
+
+
+class NotFound(ServingError, NotFoundError):
+    """Model, version, or label does not resolve to a READY servable."""
+
+    code = "NOT_FOUND"
+    __str__ = Exception.__str__      # not KeyError's quoted repr
+
+
+class FailedPrecondition(ServingError, FailedPreconditionError):
+    """Valid request, but system state forbids it (e.g. labeling a
+    version that is not READY, reloading without a file-system source)."""
+
+    code = "FAILED_PRECONDITION"
+
+
+class InvalidArgument(ServingError, ValueError):
+    """Malformed request: bad spec, empty prompt, unknown task, ..."""
+
+    code = "INVALID_ARGUMENT"
+
+
+class Unavailable(ServingError, RuntimeError):
+    """Transient inability to serve (engine/server shutting down)."""
+
+    code = "UNAVAILABLE"
+
+
+# ---------------------------------------------------------------------------
+# Request / response messages
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Names a servable plus *which* version: an explicit number, a
+    label like "stable"/"canary", or neither (the serving default —
+    newest READY version)."""
+
+    name: str
+    version: Optional[int] = None
+    label: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictRequest:
+    model_spec: ModelSpec
+    inputs: Dict[str, np.ndarray]
+    batched: bool = True          # merge into the shared batch queue
+    timeout_s: float = 30.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictResponse:
+    model_spec: ModelSpec         # resolved (concrete version)
+    outputs: np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifyRequest:
+    model_spec: ModelSpec
+    inputs: Dict[str, np.ndarray]
+    k: int = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifyResponse:
+    model_spec: ModelSpec
+    classes: np.ndarray           # (B, k)
+    scores: np.ndarray            # (B, k)
+
+
+@dataclasses.dataclass(frozen=True)
+class RegressRequest:
+    model_spec: ModelSpec
+    inputs: Dict[str, np.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class RegressResponse:
+    model_spec: ModelSpec
+    values: np.ndarray            # (B,)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiInferenceRequest:
+    """Classify and/or regress fused over ONE resolved version in one
+    servable-handle hold (paper §2.2 MultiInference)."""
+
+    model_spec: ModelSpec
+    inputs: Dict[str, np.ndarray]
+    tasks: Tuple[str, ...] = ("classify", "regress")
+    k: int = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiInferenceResponse:
+    model_spec: ModelSpec
+    classify: Optional[ClassifyResponse] = None
+    regress: Optional[RegressResponse] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerateRequest:
+    model_spec: ModelSpec
+    tokens: Optional[np.ndarray] = None      # (L,) or (B, L) int32
+    embeds: Optional[np.ndarray] = None
+    max_new: int = 16
+    sampling: Optional[SamplingParams] = None
+    stream: bool = False                     # True => iterator of chunks
+    timeout_s: float = 120.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerateResponse:
+    model_spec: ModelSpec
+    tokens: np.ndarray                       # (B, <=max_new)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenChunk:
+    """One streamed token, emitted as the decode tick retires it."""
+
+    token: int
+    index: int                               # position in the generation
+    final: bool                              # last chunk of the stream
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelVersionStatus:
+    version: int
+    state: str                               # ServableState.name
+    error: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class GetModelStatusRequest:
+    model_spec: ModelSpec                    # version/label filter optional
+
+
+@dataclasses.dataclass(frozen=True)
+class GetModelStatusResponse:
+    model_spec: ModelSpec
+    versions: Tuple[ModelVersionStatus, ...]
+    labels: Dict[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDirConfig:
+    """One entry of the served-model map a ReloadConfig diffs against."""
+
+    base_path: str
+    policy: Optional[ServableVersionPolicy] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReloadConfigRequest:
+    model_configs: Dict[str, ModelDirConfig]
+    wait: bool = True                        # block until reconciled
+    timeout_s: float = 60.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ReloadConfigResponse:
+    added: Tuple[str, ...]
+    removed: Tuple[str, ...]
+    updated: Tuple[str, ...]                 # repoliced / re-pathed
+
+
+def _validate_spec(spec: Any) -> None:
+    if not isinstance(spec, ModelSpec):
+        raise InvalidArgument(
+            f"model_spec must be a ModelSpec, got {type(spec).__name__}")
+    if not spec.name or not isinstance(spec.name, str):
+        raise InvalidArgument("model_spec.name must be a non-empty string")
+    if spec.version is not None and spec.label is not None:
+        raise InvalidArgument(
+            "model_spec addresses a version OR a label, not both")
+
+
+def resolved_spec(servable: Servable) -> ModelSpec:
+    return ModelSpec(servable.id.name, servable.id.version)
+
+
+# ---------------------------------------------------------------------------
+# PredictionService
+# ---------------------------------------------------------------------------
+
+
+class PredictionService:
+    """The inference core every entry point routes through.
+
+    Owns the per-version batching sessions and decode engines that used
+    to live in ``ModelServer``; the server (and the hosted JobReplica)
+    are thin shims over this class. Constructed bare
+    (``PredictionService(manager)``) it serves direct, unbatched calls —
+    the replica configuration; with a scheduler it cross-request
+    batches; with ``use_decode_engine`` it continuous-batches generate.
+    """
+
+    def __init__(self, manager: AspiredVersionsManager, *,
+                 scheduler: Optional[SharedBatchScheduler] = None,
+                 batching: Optional[BatchingOptions] = None,
+                 use_decode_engine: bool = False,
+                 decode_engine_slots: int = 8):
+        self.manager = manager
+        self._scheduler = scheduler
+        self._batching = batching or BatchingOptions()
+        self._sessions: Dict[str, BatchingSession] = {}
+        self._sessions_lock = threading.Lock()
+        self.use_decode_engine = use_decode_engine
+        self.decode_engine_slots = decode_engine_slots
+        self._engines: Dict[str, DecodeScheduler] = {}
+        self._engines_lock = threading.Lock()
+        self._closed = False
+
+    # -- handle / error mapping -------------------------------------------
+    def _acquire(self, spec: ModelSpec) -> ServableHandle:
+        _validate_spec(spec)
+        if self._closed:
+            raise Unavailable("prediction service is shut down")
+        try:
+            return self.manager.get_servable_handle(
+                spec.name, spec.version, label=spec.label)
+        except NotFoundError as exc:
+            raise NotFound(str(exc)) from exc
+
+    # -- generic escape hatch ----------------------------------------------
+    def call(self, spec: ModelSpec, method: str, request: Any) -> Any:
+        """One handle hold around an arbitrary servable method — for
+        non-model servables (lookup tables, ...) the typed RPCs don't
+        cover. Spec resolution (label/default -> version) and the error
+        taxonomy apply exactly as for the typed methods."""
+        with self._acquire(spec) as s:
+            try:
+                return s.call(method, request)
+            except ServingError:
+                raise
+            except ValueError as exc:
+                raise InvalidArgument(str(exc)) from exc
+            except RuntimeError as exc:
+                raise Unavailable(str(exc)) from exc
+
+    # -- Predict -----------------------------------------------------------
+    def predict(self, req: PredictRequest) -> PredictResponse:
+        # Resolve the spec (label/default -> concrete version) now, so
+        # the batch queue is per-(servable, version) and a label flip
+        # mid-flight cannot re-route an enqueued request.
+        with self._acquire(req.model_spec) as s:
+            spec = resolved_spec(s)
+            if not req.batched or self._scheduler is None:
+                return PredictResponse(spec, s.call("predict", req.inputs))
+        out = self._session_for(spec.name, spec.version).run(
+            req.inputs, req.timeout_s)
+        return PredictResponse(spec, out)
+
+    def _session_for(self, name: str, version: int) -> BatchingSession:
+        key = f"{name}@v{version}"
+        with self._sessions_lock:
+            sess = self._sessions.get(key)
+            if sess is None:
+                def run_batch(merged, name=name, version=version):
+                    with self.manager.get_servable_handle(
+                            name, version) as servable:
+                        return servable.call("predict", merged)
+                sess = BatchingSession(key, run_batch, self._scheduler,
+                                       self._batching)
+                self._sessions[key] = sess
+        return sess
+
+    # -- Classify / Regress / MultiInference -------------------------------
+    def classify(self, req: ClassifyRequest) -> ClassifyResponse:
+        with self._acquire(req.model_spec) as s:
+            out = s.call("classify", {"batch": req.inputs, "k": req.k})
+            return ClassifyResponse(resolved_spec(s),
+                                    out["classes"], out["scores"])
+
+    def regress(self, req: RegressRequest) -> RegressResponse:
+        with self._acquire(req.model_spec) as s:
+            out = s.call("regress", {"batch": req.inputs})
+            return RegressResponse(resolved_spec(s), out["value"])
+
+    def multi_inference(self,
+                        req: MultiInferenceRequest) -> MultiInferenceResponse:
+        if not req.tasks:
+            raise InvalidArgument("multi_inference needs at least one task")
+        if not set(req.tasks) <= {"classify", "regress"}:
+            raise InvalidArgument(f"unknown tasks in {req.tasks!r}")
+        with self._acquire(req.model_spec) as s:
+            spec = resolved_spec(s)
+            try:
+                # Fused path: one forward pass for all tasks.
+                out = s.call("multi_inference",
+                             {"batch": req.inputs, "tasks": req.tasks,
+                              "k": req.k})
+            except UnsupportedMethodError:
+                # Servable without the fused method: per-task calls,
+                # still over the SAME resolved version in one hold.
+                out = {}
+                for task in req.tasks:
+                    if task == "classify":
+                        out["classify"] = s.call(
+                            "classify", {"batch": req.inputs, "k": req.k})
+                    else:
+                        out["regress"] = s.call(
+                            "regress", {"batch": req.inputs})
+        cls = out.get("classify")
+        reg = out.get("regress")
+        return MultiInferenceResponse(
+            spec,
+            classify=ClassifyResponse(spec, cls["classes"], cls["scores"])
+            if cls is not None else None,
+            regress=RegressResponse(spec, reg["value"])
+            if reg is not None else None)
+
+    # -- Generate ----------------------------------------------------------
+    def generate(self, req: GenerateRequest):
+        """Blocking: returns ``GenerateResponse``. ``stream=True``:
+        returns an ``Iterator[TokenChunk]`` that holds the servable
+        handle until exhausted/closed, so the version cannot be freed
+        under an in-flight stream."""
+        if req.tokens is None and req.embeds is None:
+            raise InvalidArgument("generate needs tokens or embeds")
+        if req.stream and req.tokens is None:
+            raise InvalidArgument("stream=True requires token prompts")
+        if req.max_new < 1:
+            raise InvalidArgument("max_new must be >= 1")
+        handle = self._acquire(req.model_spec)
+        try:
+            s = handle.servable
+            self._maybe_attach_engine(req.model_spec.name, s, req)
+            if req.stream:
+                stream = self._generate_stream(handle, s, req)
+                handle = None     # ownership moved to the stream worker
+                return stream
+            out = s.call("generate", {
+                "tokens": req.tokens, "embeds": req.embeds,
+                "max_new": req.max_new, "sampling": req.sampling,
+                "timeout_s": req.timeout_s})
+            return GenerateResponse(resolved_spec(s), out)
+        except ValueError as exc:
+            raise InvalidArgument(str(exc)) from exc
+        except RuntimeError as exc:
+            raise Unavailable(str(exc)) from exc
+        finally:
+            if handle is not None:
+                handle.release()
+
+    def _generate_stream(self, handle: ServableHandle, s: Servable,
+                         req: GenerateRequest) -> Iterator[TokenChunk]:
+        tokens = np.asarray(req.tokens, np.int32)
+        if tokens.ndim == 2 and tokens.shape[0] == 1:
+            tokens = tokens[0]
+        if tokens.ndim != 1:
+            handle.release()
+            raise InvalidArgument(
+                "stream=True serves a single sequence; pass (L,) or "
+                "(1, L) tokens")
+
+        q: "queue.Queue[tuple]" = queue.Queue()
+
+        # The WORKER owns the handle, not the generator: generation
+        # cannot be cancelled once submitted, so the version must stay
+        # pinned until the worker finishes — even if the consumer closes
+        # the iterator early (or never iterates at all). The queue is
+        # bounded by max_new, so an abandoned stream cannot grow it.
+        def worker():
+            try:
+                out = s.call("generate", {
+                    "tokens": tokens, "max_new": req.max_new,
+                    "sampling": req.sampling, "timeout_s": req.timeout_s,
+                    "on_token": lambda i, t: q.put(("tok", i, t))})
+                q.put(("done", out, None))
+            except BaseException as exc:   # surfaced on the stream
+                q.put(("err", exc, None))
+            finally:
+                handle.release()
+
+        threading.Thread(target=worker, daemon=True,
+                         name="generate-stream").start()
+
+        def stream():
+            # One-chunk lookahead so the last chunk carries final=True.
+            pending: Optional[Tuple[int, int]] = None
+            while True:
+                try:
+                    item = q.get(timeout=req.timeout_s)
+                except queue.Empty:
+                    raise TimeoutError(
+                        "generation stream timed out") from None
+                kind = item[0]
+                if kind == "tok":
+                    _, idx, tok = item
+                    if pending is not None:
+                        yield TokenChunk(pending[1], pending[0], False)
+                    pending = (idx, int(tok))
+                elif kind == "done":
+                    if pending is not None:
+                        yield TokenChunk(pending[1], pending[0], True)
+                    return
+                else:
+                    exc = item[1]
+                    if isinstance(exc, ServingError):
+                        raise exc
+                    if isinstance(exc, ValueError):
+                        raise InvalidArgument(str(exc)) from exc
+                    if isinstance(exc, RuntimeError):
+                        raise Unavailable(str(exc)) from exc
+                    raise exc
+
+        return stream()
+
+    def _maybe_attach_engine(self, name: str, s: Servable,
+                             req: GenerateRequest) -> None:
+        """Attach a DecodeScheduler to a servable version (idempotent)."""
+        if not (self.use_decode_engine and req.tokens is not None
+                and isinstance(s, JaxModelServable)):
+            return
+        key = f"{name}@v{s.id.version}"
+        with self._engines_lock:
+            if key in self._engines:
+                return
+        # Build outside the lock: pool-cache allocation is slow and must
+        # not serialize other models' generate calls (double-checked
+        # insert below; a losing racer discards its engine).
+        eng = DecodeScheduler(
+            s.cfg, s.params,
+            num_slots=self.decode_engine_slots,
+            max_seq_len=s.max_cache_len)
+        with self._engines_lock:
+            if key in self._engines:
+                return
+            eng.start()
+            self._engines[key] = eng
+            s.decode_engine = eng
+
+    # -- lifecycle ---------------------------------------------------------
+    def evict_version(self, key: str) -> None:
+        """Drop the batch queue + decode engine of an unloaded version
+        (dynamic queue set, paper §2.2.1)."""
+        with self._sessions_lock:
+            sess = self._sessions.pop(key, None)
+        if sess is not None:
+            sess.close(drain=False)
+        with self._engines_lock:
+            eng = self._engines.pop(key, None)
+        if eng is not None:
+            eng.stop()
+
+    def close(self) -> None:
+        self._closed = True
+        with self._sessions_lock:
+            sessions = list(self._sessions.values())
+            self._sessions.clear()
+        for sess in sessions:
+            sess.close(drain=False)
+        with self._engines_lock:
+            engines = list(self._engines.values())
+            self._engines.clear()
+        for eng in engines:
+            eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# ModelService
+# ---------------------------------------------------------------------------
+
+
+class ModelService:
+    """Model lifecycle RPCs: status, labels, runtime config reload."""
+
+    def __init__(self, manager: AspiredVersionsManager,
+                 source: Optional[FileSystemSource] = None):
+        self.manager = manager
+        self.source = source
+        self._reload_lock = threading.Lock()
+
+    # -- GetModelStatus ----------------------------------------------------
+    def get_model_status(
+            self, req: GetModelStatusRequest) -> GetModelStatusResponse:
+        spec = req.model_spec
+        _validate_spec(spec)
+        states = self.manager.version_states(spec.name)
+        if not states:
+            raise NotFound(f"model {spec.name!r} is not managed")
+        want: Optional[int] = spec.version
+        if spec.label is not None:
+            try:
+                want = self.manager.resolve_version_label(
+                    spec.name, spec.label)
+            except NotFoundError as exc:
+                raise NotFound(str(exc)) from exc
+        versions = tuple(
+            ModelVersionStatus(v, state.name,
+                               repr(err) if err is not None else None)
+            for v, (state, err) in sorted(states.items())
+            if want is None or v == want)
+        if not versions:
+            raise NotFound(
+                f"model {spec.name!r} has no version {want}")
+        return GetModelStatusResponse(
+            spec, versions, self.manager.version_labels(spec.name))
+
+    # -- SetVersionLabels --------------------------------------------------
+    def set_version_labels(self, name: str,
+                           labels: Dict[str, Optional[int]]) -> None:
+        try:
+            self.manager.set_version_labels(name, labels)
+        except FailedPreconditionError as exc:
+            raise FailedPrecondition(str(exc)) from exc
+
+    # -- ReloadConfig ------------------------------------------------------
+    def reload_config(self, req: ReloadConfigRequest) -> ReloadConfigResponse:
+        """Diff a new served-model map against the live FileSystemSource:
+        add, retire, and repolicy servables WITHOUT a restart. In-flight
+        requests on retiring versions finish on their RCU handles; new
+        requests resolve against the post-reload set."""
+        if self.source is None:
+            raise FailedPrecondition(
+                "reload_config requires a file-system source")
+        desired: Dict[str, ModelDirConfig] = {}
+        for name, entry in req.model_configs.items():
+            if isinstance(entry, str):
+                entry = ModelDirConfig(entry)
+            if not isinstance(entry, ModelDirConfig):
+                raise InvalidArgument(
+                    f"model_configs[{name!r}] must be a path or "
+                    f"ModelDirConfig, got {type(entry).__name__}")
+            desired[name] = entry
+        with self._reload_lock:
+            current = self.source.current_config()
+            added, removed, updated = [], [], []
+            for name in current:
+                if name not in desired:
+                    removed.append(name)
+                    self.source.remove_servable(name)
+            for name, entry in desired.items():
+                policy = entry.policy or ServableVersionPolicy()
+                if name not in current:
+                    added.append(name)
+                    self.source.add_servable(name, entry.base_path, policy)
+                else:
+                    cur_dir, cur_policy = current[name]
+                    if cur_dir != entry.base_path or cur_policy != policy:
+                        updated.append(name)
+                        self.source.add_servable(name, entry.base_path,
+                                                 policy)
+            self.source.poll()
+        if req.wait and not self.manager.await_idle(req.timeout_s):
+            raise Unavailable(
+                f"reload did not reconcile within {req.timeout_s}s")
+        return ReloadConfigResponse(tuple(added), tuple(removed),
+                                    tuple(updated))
+
+
+__all__ = [
+    "ClassifyRequest", "ClassifyResponse", "FailedPrecondition",
+    "GenerateRequest", "GenerateResponse", "GetModelStatusRequest",
+    "GetModelStatusResponse", "InvalidArgument", "ModelDirConfig",
+    "ModelService", "ModelSpec", "ModelVersionStatus",
+    "MultiInferenceRequest", "MultiInferenceResponse", "NotFound",
+    "PredictRequest", "PredictResponse", "PredictionService",
+    "RegressRequest", "RegressResponse", "ReloadConfigRequest",
+    "ReloadConfigResponse", "ServingError", "TokenChunk", "Unavailable",
+]

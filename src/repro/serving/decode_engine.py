@@ -50,6 +50,17 @@ class DecodeRequest(GenRequest):
     """GenRequest (tokens/max_new/sampling + completion event) with
     engine-side completion helpers."""
 
+    def _emit_token(self, index: int, token: int) -> None:
+        """Streaming tap, called on the engine thread as each tick
+        retires the token. A raising client callback must never poison
+        the tick for unrelated slots."""
+        if self.on_token is None:
+            return
+        try:
+            self.on_token(index, token)
+        except Exception:
+            log.exception("on_token callback failed")
+
     def _finish(self, result: np.ndarray) -> None:
         self.result = result
         self._event.set()
@@ -120,7 +131,8 @@ class DecodeScheduler:
 
     # -- client API --------------------------------------------------------
     def submit(self, tokens, max_new: int = 16,
-               sampling: Optional[SamplingParams] = None) -> DecodeRequest:
+               sampling: Optional[SamplingParams] = None,
+               on_token=None) -> DecodeRequest:
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         if tokens.shape[0] == 0:
             raise ValueError("empty prompt")
@@ -131,7 +143,7 @@ class DecodeScheduler:
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
         req = DecodeRequest(tokens=tokens, max_new=max_new,
-                            sampling=sampling)
+                            sampling=sampling, on_token=on_token)
         with self._cond:
             if self._stop.is_set():
                 raise RuntimeError("engine stopped")
@@ -224,6 +236,7 @@ class DecodeScheduler:
                 continue
             slot = _Slot(req=req, out=[tok], last=tok, rng=rng)
             self._slots[i] = slot
+            req._emit_token(0, tok)
             self._maybe_retire(i, slot)
 
     def _maybe_retire(self, i: int, slot: _Slot) -> None:
@@ -251,6 +264,7 @@ class DecodeScheduler:
             tok = sample_token(raw[i], slot.req.sampling, slot.rng)
             slot.out.append(tok)
             slot.last = tok
+            slot.req._emit_token(len(slot.out) - 1, tok)
             self._maybe_retire(i, slot)
         self.stats["ticks"] += 1
         self.stats["slot_steps"] += self.num_slots

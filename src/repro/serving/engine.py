@@ -13,7 +13,8 @@ from __future__ import annotations
 import logging
 import threading
 import time
-from typing import Any, Callable, Dict, Optional
+from collections import deque
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +23,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.core.loader import Loader
-from repro.core.servable import ResourceEstimate, Servable, ServableId
+from repro.core.servable import (ResourceEstimate, Servable, ServableId,
+                                 UnsupportedMethodError)
 from repro.core.source import AspiredVersion
 from repro.core.adapter import SourceAdapter
 from repro.models import model as MD
@@ -31,22 +33,30 @@ from repro.training import checkpoint as CKPT
 
 log = logging.getLogger(__name__)
 
+# Default decode-cache capacity for servables (and therefore the decode
+# engine's per-slot max_seq_len); loaders use the same value when
+# estimating the engine's KV-pool footprint before load.
+DEFAULT_MAX_CACHE_LEN = 512
+
 
 class InferenceLog:
     """Bounded inference logging (paper §2.2: 'equipped with logging
-    capability' for debugging / training-serving-skew detection)."""
+    capability' for debugging / training-serving-skew detection).
+
+    Backed by ``deque(maxlen=capacity)`` so eviction under the lock is
+    O(1) — a plain ``list.pop(0)`` is O(n) and was measurable on the
+    inference hot path once the log filled. ``dropped`` counts evicted
+    entries explicitly."""
 
     def __init__(self, capacity: int = 4096):
         self._lock = threading.Lock()
-        self._entries = []
-        self._capacity = capacity
+        self._entries: deque = deque(maxlen=capacity)
         self.dropped = 0
 
     def record(self, servable: ServableId, method: str, batch_size: int,
                latency_s: float) -> None:
         with self._lock:
-            if len(self._entries) >= self._capacity:
-                self._entries.pop(0)
+            if len(self._entries) == self._entries.maxlen:
                 self.dropped += 1
             self._entries.append({
                 "t": time.time(), "servable": str(servable),
@@ -68,7 +78,7 @@ class JaxModelServable(Servable):
     """
 
     def __init__(self, servable_id: ServableId, cfg: ModelConfig, params,
-                 max_cache_len: int = 512,
+                 max_cache_len: int = DEFAULT_MAX_CACHE_LEN,
                  inference_log: Optional[InferenceLog] = None):
         super().__init__(servable_id)
         self.cfg = cfg
@@ -120,24 +130,50 @@ class JaxModelServable(Servable):
             return np.asarray(self._fns["predict"](self.params, request))
         if method == "generate":
             return self.generate(**request)
-        if method in ("classify", "regress"):
+        if method in ("classify", "regress", "multi_inference"):
             logits = np.asarray(
                 self._fns["predict"](self.params, request["batch"]))
             pooled = logits[:, -1]                      # last position
+            if method == "multi_inference":
+                # One forward pass shared by every requested task — the
+                # typed API's MultiInference fusion.
+                out = {}
+                for task in request.get("tasks", ("classify", "regress")):
+                    if task == "classify":
+                        out["classify"] = self._classify_from(
+                            pooled, request.get("k", 5))
+                    elif task == "regress":
+                        out["regress"] = self._regress_from(pooled)
+                    else:
+                        raise ValueError(f"unknown task {task!r}")
+                return out
             if method == "classify":
-                top = np.argsort(-pooled, axis=-1)[:, :request.get("k", 5)]
-                return {"classes": top,
-                        "scores": np.take_along_axis(pooled, top, -1)}
-            return {"value": pooled.mean(axis=-1)}
-        raise ValueError(f"unknown method {method!r}")
+                return self._classify_from(pooled, request.get("k", 5))
+            return self._regress_from(pooled)
+        raise UnsupportedMethodError(f"unknown method {method!r}")
+
+    @staticmethod
+    def _classify_from(pooled: np.ndarray, k: int):
+        top = np.argsort(-pooled, axis=-1)[:, :k]
+        return {"classes": top,
+                "scores": np.take_along_axis(pooled, top, -1)}
+
+    @staticmethod
+    def _regress_from(pooled: np.ndarray):
+        return {"value": pooled.mean(axis=-1)}
 
     def generate(self, tokens=None, embeds=None, max_new: int = 16,
                  sampling=None, timeout_s: float = 120.0,
-                 **_) -> np.ndarray:
+                 on_token=None, **_) -> np.ndarray:
         if tokens is not None:
             tokens = np.asarray(tokens, np.int32)
             if tokens.ndim == 1:        # same shape contract both paths
                 tokens = tokens[None]
+        if on_token is not None:
+            b = tokens.shape[0] if tokens is not None else embeds.shape[0]
+            if b != 1:
+                raise ValueError(
+                    "streaming (on_token) requires a single sequence")
         eng = self.decode_engine
         if eng is not None and tokens is not None:
             # Over-budget requests (or max_new<1) fall back to the
@@ -148,8 +184,8 @@ class JaxModelServable(Servable):
                 # Continuous batching: each row becomes one slot
                 # request, so concurrent generate calls share the
                 # fused decode step.
-                reqs = [eng.submit(row, max_new=max_new,
-                                   sampling=sampling) for row in tokens]
+                reqs = [eng.submit(row, max_new=max_new, sampling=sampling,
+                                   on_token=on_token) for row in tokens]
                 return np.stack([r.wait(timeout_s) for r in reqs])
         prompt = tokens if tokens is not None else embeds
         b, s = prompt.shape[:2]
@@ -167,10 +203,14 @@ class JaxModelServable(Servable):
             else {"embeds": jnp.asarray(embeds)}
         logits, cache = self._fns["prefill"](self.params, pb, cache)
         out = [pick(np.asarray(logits))]
-        for _ in range(max_new - 1):
+        if on_token is not None:
+            on_token(0, int(out[0][0]))
+        for step in range(max_new - 1):
             nb = {"tokens": jnp.asarray(out[-1][:, None])}
             logits, cache = self._fns["decode"](self.params, nb, cache)
             out.append(pick(np.asarray(logits)))
+            if on_token is not None:
+                on_token(step + 1, int(out[-1][0]))
         return np.stack(out, axis=1)                    # (B, max_new)
 
     def unload(self) -> None:
@@ -193,13 +233,18 @@ class JaxModelLoader(Loader):
     def __init__(self, servable_id: ServableId, path: str,
                  cfg: Optional[ModelConfig] = None,
                  inference_log: Optional[InferenceLog] = None,
-                 load_delay_s: float = 0.0):
+                 load_delay_s: float = 0.0,
+                 engine_slots: int = 0,
+                 engine_max_seq_len: int = DEFAULT_MAX_CACHE_LEN):
         super().__init__(servable_id)
         self.path = path
         self._cfg = cfg
         self._log = inference_log
         self._delay = load_delay_s  # test hook: simulate big-model loads
+        self._engine_slots = engine_slots
+        self._engine_max_seq_len = engine_max_seq_len
         self._manifest = CKPT.load_manifest(path)
+        self._estimate: Optional[ResourceEstimate] = None
 
     def _resolve_cfg(self) -> ModelConfig:
         if self._cfg is not None:
@@ -207,9 +252,22 @@ class JaxModelLoader(Loader):
         return get_config(self._manifest["arch"])
 
     def estimate_resources(self) -> ResourceEstimate:
-        ram = CKPT.estimate_ram_bytes(self.path)
-        return ResourceEstimate(ram_bytes=ram,
-                                transient_ram_bytes=ram // 10)
+        """Params estimate from the manifest plus — when the owner will
+        attach a decode engine to this version — the engine's KV slot
+        pool (num_slots x max_seq_len across all layers). The pool is
+        allocated lazily at first generate, but it is real steady-state
+        memory of the version, so admission must count it up front
+        instead of discovering the overshoot at runtime."""
+        if self._estimate is None:
+            ram = CKPT.estimate_ram_bytes(self.path)
+            pool = 0
+            if self._engine_slots > 0:
+                pool = MD.estimate_pool_cache_bytes(
+                    self._resolve_cfg(), self._engine_slots,
+                    self._engine_max_seq_len)
+            self._estimate = ResourceEstimate(
+                ram_bytes=ram + pool, transient_ram_bytes=ram // 10)
+        return self._estimate
 
     def load(self) -> Servable:
         if self._delay:
@@ -224,17 +282,28 @@ class JaxModelLoader(Loader):
 
 
 class JaxModelSourceAdapter(SourceAdapter):
-    """path -> JaxModelLoader (the 'TensorFlow Source Adapter' analogue)."""
+    """path -> JaxModelLoader (the 'TensorFlow Source Adapter' analogue).
+
+    ``engine_slots > 0`` tells emitted loaders that the serving owner
+    will attach a decode engine of that many slots, so their resource
+    estimates include the KV slot pool."""
 
     def __init__(self, cfg_for: Optional[Callable[[str], ModelConfig]] = None,
-                 inference_log: Optional[InferenceLog] = None):
+                 inference_log: Optional[InferenceLog] = None,
+                 engine_slots: int = 0,
+                 engine_max_seq_len: int = DEFAULT_MAX_CACHE_LEN):
         super().__init__()
         self._cfg_for = cfg_for
         self._log = inference_log
+        self._engine_slots = engine_slots
+        self._engine_max_seq_len = engine_max_seq_len
 
     def convert(self, version: AspiredVersion) -> AspiredVersion:
         cfg = self._cfg_for(version.id.name) if self._cfg_for else None
         return AspiredVersion(
             id=version.id,
-            data=JaxModelLoader(version.id, version.data, cfg=cfg,
-                                inference_log=self._log))
+            data=JaxModelLoader(
+                version.id, version.data, cfg=cfg,
+                inference_log=self._log,
+                engine_slots=self._engine_slots,
+                engine_max_seq_len=self._engine_max_seq_len))

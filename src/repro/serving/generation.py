@@ -1,40 +1,26 @@
-"""Batched autoregressive generation service (paper §2.2.1 extended to
-decode loops).
+"""Generation primitives shared by the decode engine and servables.
 
-The paper batches independent Run() calls; for LLM serving the unit
-worth batching is the *decode step*. ``GenerationEngine`` runs a
-slot-based scheduler: up to ``max_slots`` concurrent requests share one
-compiled prefill and one compiled decode step (fixed shapes — no
-recompiles). Requests join in WAVES bucketed by exact prompt length (padding a
-causal prompt would let real tokens attend to garbage), so every slot
-steps in lock-step; the step functions specialize per prompt length via
-the jit cache (classic pre-Orca batched serving — per-iteration joining
-needs per-row cache write indices and is noted as future work).
-Finished slots mask out via an active-slot vector; a wave retires when
-every slot finishes, and the next wave admits the queue.
-
-Throughput comes from the same place as the paper's §2.2.1 claim: the
-decode matmuls amortize weight streaming over the whole slot batch.
+Historically this module also held the wave-batched ``GenerationEngine``
+(requests joined in lock-step waves bucketed by prompt length). The
+continuous-batching ``DecodeScheduler`` in ``serving/decode_engine.py``
+subsumed it — per-slot lengths remove the wave barrier entirely — so the
+engine was retired; what remains is the per-request decoding policy
+(``SamplingParams``), host-side token sampling (``sample_token``), and
+the request object (``GenRequest``) the decode engine completes.
 """
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-
-from repro.configs.base import ModelConfig
-from repro.models import model as MD
 
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
-    """Per-request decoding policy, carried per-slot by the engines.
+    """Per-request decoding policy, carried per-slot by the engine.
 
     ``temperature <= 0`` is greedy (argmax, the default — bit-identical
     to the pre-sampling behavior). ``top_k == 0`` means the full vocab.
@@ -75,11 +61,17 @@ def sample_token(logits, sampling: Optional[SamplingParams],
     return int(rng.choice(logits.shape[0], p=p))
 
 
+# Streaming hook: called as on_token(index, token) from the engine/decode
+# thread, strictly in emission order for one request.
+TokenCallback = Callable[[int, int], None]
+
+
 @dataclasses.dataclass
 class GenRequest:
     tokens: np.ndarray                 # (prompt_len,)
     max_new: int
     sampling: Optional[SamplingParams] = None    # None => greedy
+    on_token: Optional[TokenCallback] = None     # streaming tap
     _event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
     result: Optional[np.ndarray] = None
@@ -92,159 +84,3 @@ class GenRequest:
         if self.error is not None:
             raise self.error
         return self.result
-
-
-class GenerationEngine:
-    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
-                 max_prompt: int = 64, max_new: int = 32,
-                 eos_token: Optional[int] = None):
-        self.cfg = cfg
-        self.params = params
-        self.max_slots = max_slots
-        self.max_prompt = max_prompt
-        self.max_new = max_new
-        self.eos = eos_token
-        self._queue: "queue.Queue[GenRequest]" = queue.Queue()
-        self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
-        self.stats = {"waves": 0, "requests": 0, "steps": 0,
-                      "slot_utilization": 0.0}
-
-        cfgc = cfg
-
-        @jax.jit
-        def _prefill(params, batch, cache):
-            return MD.prefill(params, cfgc, batch, cache)
-
-        @jax.jit
-        def _decode(params, batch, cache):
-            return MD.decode_step(params, cfgc, batch, cache)
-
-        self._prefill, self._decode = _prefill, _decode
-
-    # -- client API ---------------------------------------------------------
-    def submit(self, tokens, max_new: Optional[int] = None,
-               sampling: Optional[SamplingParams] = None) -> GenRequest:
-        tokens = np.asarray(tokens, np.int32).reshape(-1)
-        if tokens.shape[0] > self.max_prompt:
-            tokens = tokens[-self.max_prompt:]
-        req = GenRequest(tokens=tokens,
-                         max_new=min(max_new or self.max_new,
-                                     self.max_new),
-                         sampling=sampling)
-        self._queue.put(req)
-        return req
-
-    def generate(self, tokens, max_new: Optional[int] = None,
-                 sampling: Optional[SamplingParams] = None,
-                 timeout: float = 120.0) -> np.ndarray:
-        return self.submit(tokens, max_new, sampling).wait(timeout)
-
-    # -- engine loop ----------------------------------------------------------
-    def start(self) -> None:
-        self._stop.clear()
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name="gen-engine")
-        self._thread.start()
-
-    def stop(self) -> None:
-        self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout=10)
-
-    def _gather_wave(self) -> List[GenRequest]:
-        """Admit up to max_slots requests with the SAME prompt length;
-        non-matching arrivals are requeued for the next wave."""
-        wave: List[GenRequest] = []
-        try:
-            wave.append(self._queue.get(timeout=0.05))
-        except queue.Empty:
-            return wave
-        want = wave[0].tokens.shape[0]
-        requeue: List[GenRequest] = []
-        deadline = time.monotonic() + 0.002   # small batching window
-        while len(wave) < self.max_slots:
-            try:
-                r = self._queue.get(
-                    timeout=max(0.0, deadline - time.monotonic()))
-            except queue.Empty:
-                break
-            (wave if r.tokens.shape[0] == want else requeue).append(r)
-        for r in requeue:
-            self._queue.put(r)
-        return wave
-
-    def _run(self) -> None:
-        while not self._stop.is_set():
-            wave = self._gather_wave()
-            if not wave:
-                continue
-            try:
-                self._serve_wave(wave)
-            except BaseException as exc:
-                for r in wave:
-                    if not r._event.is_set():
-                        r.error = exc
-                        r._event.set()
-
-    def _serve_wave(self, wave: List[GenRequest]) -> None:
-        n = len(wave)
-        b = self.max_slots                     # fixed slot count
-        pl = wave[0].tokens.shape[0]           # exact-length bucket
-        prompts = np.zeros((b, pl), np.int32)
-        for i, r in enumerate(wave):
-            assert r.tokens.shape[0] == pl
-            prompts[i] = r.tokens
-
-        cache = MD.init_cache(self.cfg, b, pl + self.max_new)
-        logits, cache = self._prefill(self.params,
-                                      {"tokens": jnp.asarray(prompts)},
-                                      cache)
-        outs = [[] for _ in range(b)]
-        active = np.zeros((b,), bool)
-        active[:n] = True
-        remaining = np.array([r.max_new for r in wave] +
-                             [0] * (b - n))
-        rngs = [r.sampling.make_rng() if r.sampling else None
-                for r in wave]
-
-        def pick(raw) -> np.ndarray:
-            # greedy for every slot (incl. padding) unless a request
-            # carries stochastic SamplingParams
-            nxt = np.argmax(raw, -1).astype(np.int32)
-            for i, r in enumerate(wave):
-                if r.sampling is not None and not r.sampling.greedy:
-                    nxt[i] = sample_token(raw[i], r.sampling, rngs[i])
-            return nxt
-
-        cur = pick(np.asarray(logits))
-        steps = 0
-        while active.any() and not self._stop.is_set():
-            for i in range(n):
-                if active[i]:
-                    outs[i].append(int(cur[i]))
-                    remaining[i] -= 1
-                    if remaining[i] <= 0 or (self.eos is not None and
-                                             cur[i] == self.eos):
-                        active[i] = False
-            if not active.any():
-                break
-            logits, cache = self._decode(
-                self.params, {"tokens": jnp.asarray(cur[:, None])},
-                cache)
-            cur = pick(np.asarray(logits))
-            steps += 1
-        for i, r in enumerate(wave):
-            r.result = np.asarray(outs[i], np.int32)
-            r._event.set()
-        self.stats["waves"] += 1
-        self.stats["requests"] += n
-        self.stats["steps"] += steps
-        total_slot_steps = self.stats.setdefault("_slot_steps", 0)
-        self.stats["_slot_steps"] = total_slot_steps + steps * b
-        used = self.stats.setdefault("_used_steps", 0)
-        self.stats["_used_steps"] = used + int(
-            sum(min(r.max_new, steps + 1) for r in wave))
-        self.stats["slot_utilization"] = (
-            self.stats["_used_steps"] /
-            max(self.stats["_slot_steps"], 1))

@@ -1,7 +1,14 @@
 """ModelServer: the 'canonical binary' assembled from library modules
 (paper §3) — FileSystemSource → JaxModelSourceAdapter →
 AspiredVersionsManager, plus a SharedBatchScheduler so every servable
-version gets a BatchingSession, and typed RPC handlers on top.
+version gets a BatchingSession, and the typed RPC services on top.
+
+The inference surface lives in ``repro.serving.api``: a
+``PredictionService`` (Predict/Classify/Regress/MultiInference/Generate)
+and a ``ModelService`` (GetModelStatus/SetVersionLabels/ReloadConfig).
+The per-method helpers below are thin shims over those services, kept
+for ergonomic in-process use; transports should wrap the services
+directly.
 
 This is the programmatic equivalent of running the TF-Serving binary
 with a model-config file.
@@ -9,20 +16,17 @@ with a model-config file.
 from __future__ import annotations
 
 import logging
-import threading
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
-from repro.batching import BatchingOptions, BatchingSession, \
-    SharedBatchScheduler
+from repro.batching import BatchingOptions, SharedBatchScheduler
 from repro.configs.base import ModelConfig
 from repro.core import (AspiredVersionsManager, FileSystemSource,
-                        NotFoundError, ServableVersionPolicy, chain)
+                        ServableVersionPolicy, chain)
 from repro.core.manager import ManagerEvent
-from repro.serving.decode_engine import DecodeScheduler
-from repro.serving.engine import (InferenceLog, JaxModelServable,
-                                  JaxModelSourceAdapter)
+from repro.serving import api
+from repro.serving.engine import InferenceLog, JaxModelSourceAdapter
 
 log = logging.getLogger(__name__)
 
@@ -38,7 +42,9 @@ class ModelServer:
                  decode_engine_slots: int = 8):
         self.inference_log = InferenceLog()
         self.source = FileSystemSource(model_dirs, policies)
-        self.adapter = JaxModelSourceAdapter(cfg_for, self.inference_log)
+        self.adapter = JaxModelSourceAdapter(
+            cfg_for, self.inference_log,
+            engine_slots=decode_engine_slots if use_decode_engine else 0)
         self.manager = AspiredVersionsManager(
             num_load_threads=num_load_threads,
             num_initial_load_threads=max(4, num_load_threads),
@@ -49,15 +55,12 @@ class ModelServer:
 
         self.batching_options = batching or BatchingOptions()
         self.scheduler = SharedBatchScheduler()
-        self._sessions: Dict[str, BatchingSession] = {}
-        self._sessions_lock = threading.Lock()
-        # One continuous-batching decode engine per servable version,
-        # created lazily on first generate next to the BatchingSession
-        # and torn down with it on unload.
-        self.use_decode_engine = use_decode_engine
-        self.decode_engine_slots = decode_engine_slots
-        self._engines: Dict[str, DecodeScheduler] = {}
-        self._engines_lock = threading.Lock()
+        self.prediction = api.PredictionService(
+            self.manager, scheduler=self.scheduler,
+            batching=self.batching_options,
+            use_decode_engine=use_decode_engine,
+            decode_engine_slots=decode_engine_slots)
+        self.models = api.ModelService(self.manager, self.source)
 
     # -- lifecycle ---------------------------------------------------------
     def start(self, poll_interval_s: float = 0.5) -> None:
@@ -77,15 +80,7 @@ class ModelServer:
 
     def stop(self) -> None:
         self.source.stop_polling()
-        with self._sessions_lock:
-            for s in self._sessions.values():
-                s.close(drain=False)
-            self._sessions.clear()
-        with self._engines_lock:
-            engines = list(self._engines.values())
-            self._engines.clear()
-        for eng in engines:
-            eng.stop()
+        self.prediction.close()
         self.manager.shutdown()
         self.scheduler.stop()
 
@@ -94,85 +89,68 @@ class ModelServer:
         # (dynamic queue set, paper §2.2.1 "added and removed as servable
         # versions come and go")
         if ev.kind == "unload_done":
-            key = str(ev.servable)
-            with self._sessions_lock:
-                sess = self._sessions.pop(key, None)
-            if sess is not None:
-                sess.close(drain=False)
-            with self._engines_lock:
-                eng = self._engines.pop(key, None)
-            if eng is not None:
-                eng.stop()
+            self.prediction.evict_version(str(ev.servable))
 
-    # -- inference ----------------------------------------------------------
-    def _session_for(self, name: str, version: int) -> BatchingSession:
-        key = f"{name}@v{version}"
-        with self._sessions_lock:
-            sess = self._sessions.get(key)
-            if sess is None:
-                def run_batch(merged, name=name, version=version):
-                    with self.manager.get_servable_handle(
-                            name, version) as servable:
-                        return servable.call("predict", merged)
-                sess = BatchingSession(key, run_batch, self.scheduler,
-                                       self.batching_options)
-                self._sessions[key] = sess
-        return sess
-
+    # -- inference shims over the typed API --------------------------------
     def predict(self, name: str, batch: Dict[str, np.ndarray],
-                version: Optional[int] = None, *, batched: bool = True,
+                version: Optional[int] = None, *, label: Optional[str] = None,
+                batched: bool = True,
                 timeout_s: float = 30.0) -> np.ndarray:
         """Low-level tensor API (Session::Run analogue)."""
-        if not batched:
-            with self.manager.get_servable_handle(name, version) as s:
-                return s.call("predict", batch)
-        # resolve version now so the queue is per-(servable, version)
-        with self.manager.get_servable_handle(name, version) as s:
-            v = s.id.version
-        return self._session_for(name, v).run(batch, timeout_s)
+        return self.prediction.predict(api.PredictRequest(
+            api.ModelSpec(name, version, label), batch,
+            batched=batched, timeout_s=timeout_s)).outputs
 
     def classify(self, name: str, batch, k: int = 5,
-                 version: Optional[int] = None):
-        with self.manager.get_servable_handle(name, version) as s:
-            return s.call("classify", {"batch": batch, "k": k})
+                 version: Optional[int] = None, *,
+                 label: Optional[str] = None):
+        resp = self.prediction.classify(api.ClassifyRequest(
+            api.ModelSpec(name, version, label), batch, k=k))
+        return {"classes": resp.classes, "scores": resp.scores}
 
-    def regress(self, name: str, batch, version: Optional[int] = None):
-        with self.manager.get_servable_handle(name, version) as s:
-            return s.call("regress", {"batch": batch})
+    def regress(self, name: str, batch, version: Optional[int] = None, *,
+                label: Optional[str] = None):
+        resp = self.prediction.regress(api.RegressRequest(
+            api.ModelSpec(name, version, label), batch))
+        return {"value": resp.values}
 
-    def _engine_for(self, name: str, servable) -> None:
-        """Attach a DecodeScheduler to a servable version (idempotent)."""
-        key = f"{name}@v{servable.id.version}"
-        with self._engines_lock:
-            if key in self._engines:
-                return
-        # Build outside the lock: pool-cache allocation is slow and must
-        # not serialize other models' generate calls (double-checked
-        # insert below; a losing racer discards its engine).
-        eng = DecodeScheduler(
-            servable.cfg, servable.params,
-            num_slots=self.decode_engine_slots,
-            max_seq_len=servable.max_cache_len)
-        with self._engines_lock:
-            if key in self._engines:
-                return
-            eng.start()
-            self._engines[key] = eng
-            servable.decode_engine = eng
+    def multi_inference(self, name: str, batch,
+                        tasks=("classify", "regress"), k: int = 5,
+                        version: Optional[int] = None, *,
+                        label: Optional[str] = None
+                        ) -> api.MultiInferenceResponse:
+        return self.prediction.multi_inference(api.MultiInferenceRequest(
+            api.ModelSpec(name, version, label), batch,
+            tasks=tuple(tasks), k=k))
 
     def generate(self, name: str, tokens=None, embeds=None,
                  max_new: int = 16, version: Optional[int] = None,
-                 sampling=None):
-        # The handle is held for the whole call: the manager's refcount
-        # drain means the engine's params stay live until every in-slot
-        # request of this version has finished.
-        with self.manager.get_servable_handle(name, version) as s:
-            if (self.use_decode_engine and tokens is not None
-                    and isinstance(s, JaxModelServable)):
-                self._engine_for(name, s)
-            return s.call("generate", {"tokens": tokens, "embeds": embeds,
-                                       "max_new": max_new,
-                                       "sampling": sampling})
+                 sampling=None, *, label: Optional[str] = None,
+                 stream: bool = False, timeout_s: float = 120.0):
+        """Blocking: (B, max_new) tokens. ``stream=True``: iterator of
+        ``api.TokenChunk`` whose concatenation is bit-identical to the
+        blocking result."""
+        out = self.prediction.generate(api.GenerateRequest(
+            api.ModelSpec(name, version, label), tokens=tokens,
+            embeds=embeds, max_new=max_new, sampling=sampling,
+            stream=stream, timeout_s=timeout_s))
+        return out if stream else out.tokens
+
+    # -- model-service shims ----------------------------------------------
+    def model_status(self, name: str, version: Optional[int] = None,
+                     label: Optional[str] = None
+                     ) -> api.GetModelStatusResponse:
+        return self.models.get_model_status(api.GetModelStatusRequest(
+            api.ModelSpec(name, version, label)))
+
+    def set_version_labels(self, name: str, labels) -> None:
+        self.models.set_version_labels(name, labels)
+
+    def reload_config(self, model_configs: Dict[str, "api.ModelDirConfig"],
+                      timeout_s: float = 60.0) -> api.ReloadConfigResponse:
+        """Swap the served-model map at runtime (add/retire/repolicy)."""
+        return self.models.reload_config(api.ReloadConfigRequest(
+            model_configs, timeout_s=timeout_s))
 
     def available_models(self):
         return self.manager.list_available()

@@ -1,0 +1,415 @@
+"""Typed serving API: label resolution (canary→promote flip under
+concurrent traffic), streaming generate equivalence, MultiInference
+fusion, ReloadConfig on a live server, error taxonomy, and the decode
+engine's KV-pool resource accounting."""
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ServableVersionPolicy
+from repro.core.servable import ServableId
+from repro.models import model as MD
+from repro.serving import api
+from repro.serving.engine import (DEFAULT_MAX_CACHE_LEN, InferenceLog,
+                                  JaxModelLoader)
+from repro.serving.server import ModelServer
+from repro.training.checkpoint import save_checkpoint
+
+CFG = get_config("tfs-classifier", smoke=True)
+
+
+@pytest.fixture()
+def model_dir(tmp_path):
+    for v in (1, 2):
+        params = MD.init_params(jax.random.PRNGKey(v), CFG)
+        save_checkpoint(str(tmp_path), "clf", v, params,
+                        {"arch": CFG.name})
+    return str(tmp_path)
+
+
+@pytest.fixture()
+def server(model_dir):
+    srv = ModelServer({"clf": os.path.join(model_dir, "clf")},
+                      cfg_for=lambda n: CFG)
+    srv.start_sync()
+    yield srv
+    srv.stop()
+
+
+def batch(b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": rng.integers(0, CFG.vocab_size, (b, s))}
+
+
+class TestLabels:
+    def test_canary_and_stable_auto_tracked(self, server):
+        server.source.set_policy("clf", ServableVersionPolicy(mode="canary"))
+        server.refresh()
+        labels = server.manager.version_labels("clf")
+        assert labels["canary"] == 2 and labels["stable"] == 1
+        resp = server.prediction.predict(api.PredictRequest(
+            api.ModelSpec("clf", label="canary"), batch(), batched=False))
+        assert resp.model_spec == api.ModelSpec("clf", 2)
+        np.testing.assert_allclose(
+            resp.outputs, server.predict("clf", batch(), version=2,
+                                         batched=False), atol=2e-5)
+        np.testing.assert_allclose(
+            server.predict("clf", batch(), label="stable", batched=False),
+            server.predict("clf", batch(), version=1, batched=False),
+            atol=2e-5)
+
+    def test_promote_flips_labels(self, server):
+        server.source.set_policy("clf", ServableVersionPolicy(mode="canary"))
+        server.refresh()
+        assert server.manager.version_labels("clf")["stable"] == 1
+        server.source.set_policy("clf", ServableVersionPolicy(mode="latest"))
+        server.refresh()
+        labels = server.manager.version_labels("clf")
+        assert labels == {"stable": 2, "canary": 2}
+
+    def test_label_resolution_survives_promote_under_load(self, server):
+        """Concurrent predicts addressed by label across canary→promote→
+        canary flips: every request must resolve to SOME ready version
+        — a label flip may never strand an in-flight request."""
+        server.source.set_policy("clf", ServableVersionPolicy(mode="canary"))
+        server.refresh()
+        stop = threading.Event()
+        errors, done = [], [0]
+        lock = threading.Lock()
+
+        def client(i):
+            b = batch(b=1, seed=i)
+            while not stop.is_set():
+                try:
+                    for label in ("stable", "canary"):
+                        out = server.predict("clf", b, label=label,
+                                             batched=False)
+                        assert out.shape == (1, 16, CFG.vocab_size)
+                    with lock:
+                        done[0] += 1
+                except Exception as exc:        # any failure is a bug
+                    with lock:
+                        errors.append(exc)
+                    return
+
+        ts = [threading.Thread(target=client, args=(i,)) for i in range(6)]
+        [t.start() for t in ts]
+        try:
+            for mode in ("latest", "canary", "latest", "canary"):
+                server.source.set_policy(
+                    "clf", ServableVersionPolicy(mode=mode))
+                server.refresh()
+        finally:
+            stop.set()
+            [t.join(timeout=60) for t in ts]
+        assert not errors, errors
+        assert done[0] >= 6
+
+    def test_explicit_labels_override_and_validate(self, server):
+        server.source.set_policy("clf", ServableVersionPolicy(mode="canary"))
+        server.refresh()
+        server.set_version_labels("clf", {"prod": 1})
+        out = server.predict("clf", batch(), label="prod", batched=False)
+        np.testing.assert_allclose(
+            out, server.predict("clf", batch(), version=1, batched=False),
+            atol=2e-5)
+        # labels may only point at READY versions
+        with pytest.raises(api.FailedPrecondition):
+            server.set_version_labels("clf", {"prod": 99})
+        # clearing falls back to auto tracking
+        server.set_version_labels("clf", {"prod": None})
+        with pytest.raises(api.NotFound):
+            server.predict("clf", batch(), label="prod", batched=False)
+
+    def test_explicit_label_dropped_when_version_retires(self, server):
+        server.source.set_policy("clf", ServableVersionPolicy(mode="canary"))
+        server.refresh()
+        server.set_version_labels("clf", {"pinned": 1})
+        server.source.set_policy("clf", ServableVersionPolicy(mode="latest"))
+        server.refresh()                        # v1 unloads
+        assert "pinned" not in server.manager.version_labels("clf")
+
+
+class TestMultiInference:
+    def test_fused_matches_standalone(self, server):
+        b = batch()
+        resp = server.multi_inference("clf", b, k=3)
+        cls = server.classify("clf", b, k=3)
+        reg = server.regress("clf", b)
+        np.testing.assert_array_equal(resp.classify.classes, cls["classes"])
+        np.testing.assert_allclose(resp.classify.scores, cls["scores"],
+                                   atol=2e-5)
+        np.testing.assert_allclose(resp.regress.values, reg["value"],
+                                   atol=2e-5)
+        # one resolved version stamped on every sub-response
+        assert resp.model_spec == resp.classify.model_spec \
+            == resp.regress.model_spec == api.ModelSpec("clf", 2)
+
+    def test_single_task_and_validation(self, server):
+        resp = server.multi_inference("clf", batch(), tasks=("regress",))
+        assert resp.classify is None and resp.regress is not None
+        with pytest.raises(api.InvalidArgument):
+            server.multi_inference("clf", batch(), tasks=("translate",))
+
+
+class TestStreamingGenerate:
+    def test_stream_concat_bit_identical_to_blocking(self, server):
+        toks = batch(b=1, s=12)["tokens"]
+        blocking = server.generate("clf", tokens=toks, max_new=6)
+        chunks = list(server.generate("clf", tokens=toks, max_new=6,
+                                      stream=True))
+        assert len(chunks) >= 2                 # incremental, not one blob
+        assert [c.index for c in chunks] == list(range(len(chunks)))
+        assert all(not c.final for c in chunks[:-1]) and chunks[-1].final
+        np.testing.assert_array_equal(
+            np.asarray([c.token for c in chunks], np.int32), blocking[0])
+
+    def test_stream_without_decode_engine(self, model_dir):
+        """The inline per-request loop streams too (engine-less server)."""
+        srv = ModelServer({"clf": os.path.join(model_dir, "clf")},
+                          cfg_for=lambda n: CFG, use_decode_engine=False)
+        srv.start_sync()
+        try:
+            toks = batch(b=1, s=10)["tokens"]
+            blocking = srv.generate("clf", tokens=toks, max_new=5)
+            chunks = list(srv.generate("clf", tokens=toks, max_new=5,
+                                       stream=True))
+            np.testing.assert_array_equal(
+                np.asarray([c.token for c in chunks], np.int32),
+                blocking[0])
+        finally:
+            srv.stop()
+
+    def test_stream_requires_single_sequence(self, server):
+        with pytest.raises(api.InvalidArgument):
+            server.generate("clf", tokens=batch()["tokens"], max_new=4,
+                            stream=True)
+
+    def test_stream_requires_tokens(self, server):
+        with pytest.raises(api.InvalidArgument):
+            server.generate("clf", embeds=np.zeros((1, 4, 8), np.float32),
+                            max_new=4, stream=True)
+
+    def test_abandoned_stream_does_not_wedge_unload(self, server):
+        """A stream iterator the client never consumes must not pin the
+        version forever: the worker owns the handle and releases it when
+        generation completes, so the version can still unload."""
+        toks = batch(b=1, s=8)["tokens"]
+        it = server.generate("clf", tokens=toks, max_new=3, stream=True)
+        server.source.remove_servable("clf")
+        assert server.manager.await_idle(timeout_s=60)
+        assert server.available_models() == {}
+        # the buffered chunks are still consumable after the unload
+        assert len(list(it)) == 3
+
+
+class TestModelStatusAndReload:
+    def test_get_model_status(self, server):
+        server.source.set_policy("clf", ServableVersionPolicy(mode="canary"))
+        server.refresh()
+        status = server.model_status("clf")
+        assert {v.version: v.state for v in status.versions} == {
+            1: "READY", 2: "READY"}
+        assert status.labels == {"stable": 1, "canary": 2}
+        one = server.model_status("clf", label="stable")
+        assert [v.version for v in one.versions] == [1]
+        with pytest.raises(api.NotFound):
+            server.model_status("ghost")
+
+    def test_reload_config_add_retire_repolicy_live(self, server,
+                                                    model_dir, tmp_path):
+        # second model appears at runtime
+        params = MD.init_params(jax.random.PRNGKey(7), CFG)
+        save_checkpoint(str(tmp_path), "m2", 1, params, {"arch": CFG.name})
+        clf_dir = os.path.join(model_dir, "clf")
+        resp = server.reload_config({
+            "clf": api.ModelDirConfig(clf_dir),
+            "m2": api.ModelDirConfig(os.path.join(str(tmp_path), "m2"))})
+        assert resp.added == ("m2",) and resp.removed == ()
+        assert server.available_models() == {"clf": (2,), "m2": (1,)}
+        out = server.predict("m2", batch(), batched=False)
+        assert out.shape == (2, 16, CFG.vocab_size)
+        # repolicy clf to canary through reload (no restart)
+        resp = server.reload_config({
+            "clf": api.ModelDirConfig(
+                clf_dir, ServableVersionPolicy(mode="canary")),
+            "m2": api.ModelDirConfig(os.path.join(str(tmp_path), "m2"))})
+        assert resp.updated == ("clf",)
+        assert server.available_models()["clf"] == (1, 2)
+        # retire m2; clf keeps serving
+        resp = server.reload_config({
+            "clf": api.ModelDirConfig(
+                clf_dir, ServableVersionPolicy(mode="canary"))})
+        assert resp.removed == ("m2",)
+        assert "m2" not in server.available_models()
+        with pytest.raises(api.NotFound):
+            server.predict("m2", batch(), batched=False)
+
+    def test_reload_config_with_inflight_requests(self, server, model_dir,
+                                                  tmp_path):
+        """Add + retire a model while traffic hammers another: in-flight
+        requests must be unharmed."""
+        params = MD.init_params(jax.random.PRNGKey(9), CFG)
+        save_checkpoint(str(tmp_path), "tmp", 1, params, {"arch": CFG.name})
+        stop = threading.Event()
+        errors = []
+
+        def client(i):
+            b = batch(b=1, seed=i)
+            while not stop.is_set():
+                try:
+                    server.predict("clf", b, batched=False)
+                except Exception as exc:
+                    errors.append(exc)
+                    return
+
+        ts = [threading.Thread(target=client, args=(i,)) for i in range(4)]
+        [t.start() for t in ts]
+        try:
+            clf = api.ModelDirConfig(os.path.join(model_dir, "clf"))
+            for _ in range(3):
+                server.reload_config({
+                    "clf": clf,
+                    "tmp": api.ModelDirConfig(
+                        os.path.join(str(tmp_path), "tmp"))})
+                server.reload_config({"clf": clf})
+        finally:
+            stop.set()
+            [t.join(timeout=60) for t in ts]
+        assert not errors, errors
+        assert server.available_models() == {"clf": (2,)}
+
+    def test_reload_retire_races_background_polling(self, model_dir,
+                                                    tmp_path):
+        """With the background poll timer running, retiring a model via
+        reload must not be resurrected by an in-flight poll (the config
+        mutators serialize against poll())."""
+        params = MD.init_params(jax.random.PRNGKey(3), CFG)
+        save_checkpoint(str(tmp_path), "m2", 1, params, {"arch": CFG.name})
+        srv = ModelServer({"clf": os.path.join(model_dir, "clf")},
+                          cfg_for=lambda n: CFG)
+        srv.start_sync()
+        srv.source.start_polling(0.005)     # aggressive timer polls
+        try:
+            clf = api.ModelDirConfig(os.path.join(model_dir, "clf"))
+            m2 = api.ModelDirConfig(os.path.join(str(tmp_path), "m2"))
+            for _ in range(5):
+                srv.reload_config({"clf": clf, "m2": m2})
+                srv.reload_config({"clf": clf})
+            time.sleep(0.05)                # let stale polls (if any) land
+            assert srv.manager.await_idle(timeout_s=60)
+            assert srv.available_models() == {"clf": (2,)}
+        finally:
+            srv.stop()
+
+
+class TestErrorTaxonomy:
+    def test_not_found_variants(self, server):
+        for kwargs in ({"version": 9}, {"label": "nope"}, {}):
+            name = "clf" if kwargs else "ghost"
+            with pytest.raises(api.NotFound) as ei:
+                server.predict(name, batch(), batched=False, **kwargs)
+            assert isinstance(ei.value, KeyError)       # legacy contract
+
+    def test_invalid_argument(self, server):
+        with pytest.raises(api.InvalidArgument):
+            server.predict("clf", batch(), version=1, label="stable")
+        with pytest.raises(api.InvalidArgument):
+            server.generate("clf", tokens=batch()["tokens"], max_new=0)
+        with pytest.raises(api.InvalidArgument):
+            server.prediction.predict(api.PredictRequest(
+                api.ModelSpec(""), batch()))
+        assert issubclass(api.InvalidArgument, ValueError)
+
+    def test_unavailable_after_close(self, server):
+        ps = api.PredictionService(server.manager)
+        ps.close()
+        with pytest.raises(api.Unavailable):
+            ps.predict(api.PredictRequest(api.ModelSpec("clf"), batch()))
+        assert issubclass(api.Unavailable, RuntimeError)
+
+    def test_failed_precondition_reload_without_source(self, server):
+        ms = api.ModelService(server.manager, source=None)
+        with pytest.raises(api.FailedPrecondition):
+            ms.reload_config(api.ReloadConfigRequest({}))
+
+    def test_generic_call_maps_taxonomy(self, server):
+        """The hosted path (Router -> JobReplica -> PredictionService.
+        call) gets the same error contract as the typed RPCs."""
+        with pytest.raises(api.InvalidArgument):
+            server.prediction.call(api.ModelSpec("clf"), "bogus", {})
+        with pytest.raises(api.NotFound):
+            server.prediction.call(api.ModelSpec("ghost"), "predict", {})
+
+    def test_multi_inference_fallback_only_on_unsupported(self):
+        """A genuine ValueError inside a fused multi_inference call must
+        surface, not silently trigger the per-task fallback (which only
+        fires on UnsupportedMethodError)."""
+        from repro.core import (AspiredVersion, AspiredVersionsManager,
+                                CallableLoader, ResourceEstimate, Servable)
+
+        class Broken(Servable):
+            def call(self, method, request):
+                raise ValueError("genuine failure inside fused path")
+
+        sid = ServableId("b", 1)
+        manager = AspiredVersionsManager()
+        manager.set_aspired_versions("b", [AspiredVersion(sid, CallableLoader(
+            sid, lambda: Broken(sid), ResourceEstimate(ram_bytes=1)))])
+        assert manager.await_idle()
+        try:
+            ps = api.PredictionService(manager)
+            with pytest.raises(ValueError, match="genuine failure"):
+                ps.multi_inference(api.MultiInferenceRequest(
+                    api.ModelSpec("b"), {}))
+        finally:
+            manager.shutdown()
+
+
+class TestResourceAccounting:
+    def test_loader_estimate_includes_engine_pool(self, model_dir):
+        sid = ServableId("clf", 1)
+        path = os.path.join(model_dir, "clf", "1")
+        base = JaxModelLoader(sid, path, cfg=CFG).estimate_resources()
+        eng = JaxModelLoader(sid, path, cfg=CFG,
+                             engine_slots=8).estimate_resources()
+        pool = MD.estimate_pool_cache_bytes(CFG, 8, DEFAULT_MAX_CACHE_LEN)
+        assert pool > 0
+        assert eng.ram_bytes == base.ram_bytes + pool
+
+    def test_engine_pool_counts_against_admission(self, model_dir):
+        sid = ServableId("clf", 2)
+        path = os.path.join(model_dir, "clf", "2")
+        base = JaxModelLoader(sid, path, cfg=CFG).estimate_resources()
+        pool = MD.estimate_pool_cache_bytes(CFG, 8, DEFAULT_MAX_CACHE_LEN)
+        budget = base.peak_ram_bytes + pool // 2    # params fit, +pool not
+        kw = dict(cfg_for=lambda n: CFG, ram_budget_bytes=budget,
+                  policies={"clf": ServableVersionPolicy(mode="latest")})
+        srv = ModelServer({"clf": os.path.join(model_dir, "clf")},
+                          use_decode_engine=True, **kw)
+        srv.start_sync()
+        try:
+            assert srv.available_models() == {}     # deferred: undercount fixed
+        finally:
+            srv.stop()
+        srv = ModelServer({"clf": os.path.join(model_dir, "clf")},
+                          use_decode_engine=False, **kw)
+        srv.start_sync()
+        try:
+            assert srv.available_models() == {"clf": (2,)}
+        finally:
+            srv.stop()
+
+
+def test_inference_log_bounded_o1_with_dropped_counter():
+    log = InferenceLog(capacity=4)
+    sid = ServableId("m", 1)
+    for _ in range(7):
+        log.record(sid, "predict", 1, 0.001)
+    assert len(log.entries()) == 4
+    assert log.dropped == 3

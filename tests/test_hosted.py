@@ -9,9 +9,9 @@ from _hypothesis_compat import given, settings, st  # optional dep
 from repro.core import (CallableLoader, RawDictServable, ResourceEstimate,
                         ServableId)
 from repro.hosted import (AdmissionError, Autoscaler, AutoscalerConfig,
-                          Controller, LatencyModel, NoReplicaError,
-                          Router, ServingJob, Synchronizer,
-                          TransactionalStore)
+                          Controller, LatencyModel, ModelSpec,
+                          NoReplicaError, Router, ServingJob,
+                          Synchronizer, TransactionalStore)
 
 
 def loader_factory(name, version, ref, ram):
@@ -116,6 +116,26 @@ class TestSynchronizerRouter:
         assert sync.sync_once()["j1"]["m"] == (2,)
         router = Router(sync, jobs, hedge_delay_s=None)
         assert router.infer("m", "v", method="lookup") == 2
+        router.shutdown()
+        for j in jobs.values():
+            j.shutdown()
+
+    def test_label_aware_routing(self):
+        """Router requests address ModelSpecs; replicas resolve labels
+        against their own managers, so a canary propagated through the
+        Synchronizer is addressable without naming its version."""
+        jobs, ctrl, sync = self.make_stack()
+        ctrl.add_model("m", 100)
+        sync.sync_once()
+        ctrl.add_version("m", 2)
+        ctrl.set_policy("m", "canary")
+        assert sync.sync_once()["j1"]["m"] == (1, 2)
+        router = Router(sync, jobs, hedge_delay_s=None)
+        assert router.infer(ModelSpec("m", label="canary"), "v",
+                            method="lookup") == 2
+        assert router.infer("m", "v", method="lookup",
+                            label="stable") == 1
+        assert router.infer("m", "v", method="lookup") == 2  # default
         router.shutdown()
         for j in jobs.values():
             j.shutdown()

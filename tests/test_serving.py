@@ -140,7 +140,7 @@ class TestModelServer:
             assert out.shape == (1, 4)
             assert 0 <= out.min() and out.max() < CFG.vocab_size
         # transitions tore down the retired versions' engines
-        live = set(server._engines)
+        live = set(server.prediction._engines)
         assert live <= {"clf@v2"} | {"clf@v1"}
 
     def test_inference_logging(self, server):
