@@ -1,15 +1,24 @@
-"""Continuous-batching decode throughput (the tentpole claim).
+"""Continuous-batching decode throughput + paged-KV capacity (tentpole).
 
-Aggregate tokens/s at 1/4/8/16 concurrent generate requests through the
-DecodeScheduler slot pool vs the sequential per-request baseline (each
-request runs its own prefill + decode loop, one after another — what
-``JaxModelServable.generate`` did for concurrent callers before the
-engine). The fused per-tick decode amortizes weight streaming and
-dispatch over every active slot, so throughput should scale with
-concurrency instead of staying flat.
+Two claims, one module:
+
+  * **Batching**: aggregate tokens/s through the DecodeScheduler slot
+    pool vs the sequential per-request baseline (prefill + private
+    decode loop, one request after another). The fused per-tick decode
+    amortizes weight streaming and dispatch over every active slot, so
+    throughput scales with concurrency instead of staying flat.
+  * **Paging**: at a FIXED cache-byte budget (what the contiguous
+    ``num_slots x max_seq_len`` pool costs), the paged layout — KV
+    blocks allocated per live request instead of worst-case capacity
+    per slot — admits several times the concurrent slots, at the same
+    per-token quality (greedy outputs bit-identical, asserted here).
+
+Emits ``BENCH_decode_paged.json`` (slots, cache bytes, tok/s) next to
+the CWD — CI uploads it as the perf-trajectory artifact.
 """
 from __future__ import annotations
 
+import json
 import os
 import threading
 import time
@@ -26,10 +35,15 @@ SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
 PROMPT, NEW = 16, 8 if SMOKE else 16
 CONCURRENCY = (1, 8) if SMOKE else (1, 4, 8, 16)
 NUM_SLOTS = 8
+BLOCK = 16
+# Engine capacity is provisioned for the worst case; typical requests
+# are much shorter — exactly where paging reclaims the difference.
+MAX_SEQ = 96 if SMOKE else 192
+MAX_PAGED_SLOTS = 64
 
 
-def _prompts(n):
-    rng = np.random.default_rng(0)
+def _prompts(n, seed=0):
+    rng = np.random.default_rng(seed)
     return [rng.integers(0, CFG.vocab_size, PROMPT).astype(np.int32)
             for _ in range(n)]
 
@@ -58,37 +72,97 @@ def sequential_tok_s(params, n):
     return n * NEW / dt
 
 
-def engine_tok_s(eng, n):
+def engine_tok_s(eng, n, collect=False):
     prompts = _prompts(n)
     eng.generate(prompts[0], max_new=NEW)    # warm prefill+decode+insert
     t0 = time.perf_counter()
-    done = []
+    done = [None] * n
 
     def client(i):
-        done.append(eng.generate(prompts[i], max_new=NEW, timeout=300))
+        done[i] = eng.generate(prompts[i], max_new=NEW, timeout=300)
     ts = [threading.Thread(target=client, args=(i,)) for i in range(n)]
     [t.start() for t in ts]
     [t.join() for t in ts]
     dt = time.perf_counter() - t0
-    assert len(done) == n
-    return n * NEW / dt
+    assert all(d is not None for d in done)
+    rate = n * NEW / dt
+    return (rate, done) if collect else rate
+
+
+def paged_sizing(budget_bytes):
+    """Most concurrent slots the paged layout fits in ``budget_bytes``
+    when blocks are provisioned per expected request (the admission
+    currency) rather than per worst-case slot capacity."""
+    per_req = -(-(PROMPT + NEW - 1) // BLOCK)
+    slots = NUM_SLOTS
+    while slots + 1 <= MAX_PAGED_SLOTS:
+        blocks = (slots + 1) * per_req + 1
+        if MD.estimate_paged_cache_bytes(
+                CFG, slots + 1, MAX_SEQ, num_blocks=blocks,
+                block_size=BLOCK) > budget_bytes:
+            break
+        slots += 1
+    return slots, slots * per_req + 1
 
 
 def main(report):
     params = MD.init_params(jax.random.PRNGKey(0), CFG)
-    eng = DecodeScheduler(CFG, params, num_slots=NUM_SLOTS,
-                          max_seq_len=PROMPT + NEW)
-    eng.start()
+    budget = MD.estimate_pool_cache_bytes(CFG, NUM_SLOTS, MAX_SEQ)
+    paged_slots, paged_blocks = paged_sizing(budget)
+    paged_bytes = MD.estimate_paged_cache_bytes(
+        CFG, paged_slots, MAX_SEQ, num_blocks=paged_blocks,
+        block_size=BLOCK)
+
+    cont = DecodeScheduler(CFG, params, num_slots=NUM_SLOTS,
+                           max_seq_len=MAX_SEQ, paged=False)
+    paged = DecodeScheduler(CFG, params, num_slots=paged_slots,
+                            max_seq_len=MAX_SEQ, paged=True,
+                            block_size=BLOCK, num_blocks=paged_blocks)
+    cont.start()
+    paged.start()
+    results = {"contiguous_slots": NUM_SLOTS, "paged_slots": paged_slots,
+               "slots_ratio": paged_slots / NUM_SLOTS,
+               "budget_bytes": int(budget),
+               "paged_cache_bytes": int(paged_bytes),
+               "block_size": BLOCK, "num_blocks": paged_blocks,
+               "max_seq_len": MAX_SEQ, "prompt": PROMPT, "max_new": NEW,
+               "tok_s": {}}
     try:
+        report("decode_paged_slots_at_budget", 1.0,
+               f"{paged_slots} paged vs {NUM_SLOTS} contiguous slots "
+               f"in {budget / 1e6:.1f} MB "
+               f"({paged_slots / NUM_SLOTS:.1f}x, paged uses "
+               f"{paged_bytes / 1e6:.1f} MB)")
         for n in CONCURRENCY:
             seq = sequential_tok_s(params, n)
-            bat = engine_tok_s(eng, n)
-            report(f"decode_engine_c{n}_tok_s", 1e6 / bat,
-                   f"{bat:,.0f} tok/s vs {seq:,.0f} sequential "
-                   f"(speedup={bat / seq:.2f}x, "
-                   f"util={eng.stats['slot_utilization']:.2f})")
+            cont_rate, cont_out = engine_tok_s(cont, n, collect=True)
+            paged_rate, paged_out = engine_tok_s(paged, n, collect=True)
+            for a, b in zip(cont_out, paged_out):
+                np.testing.assert_array_equal(a, b)   # greedy bit-identity
+            results["tok_s"][str(n)] = {
+                "sequential": seq, "contiguous": cont_rate,
+                "paged": paged_rate}
+            report(f"decode_engine_c{n}_tok_s", 1e6 / paged_rate,
+                   f"paged {paged_rate:,.0f} tok/s vs "
+                   f"{cont_rate:,.0f} contiguous vs {seq:,.0f} "
+                   f"sequential (speedup={paged_rate / seq:.2f}x, "
+                   f"util={paged.stats['slot_utilization']:.2f})")
+        # Capacity point: fill every paged slot the budget admits —
+        # concurrency the contiguous pool cannot reach at these bytes.
+        cap_rate = engine_tok_s(paged, paged_slots)
+        results["tok_s"][str(paged_slots)] = {"paged": cap_rate}
+        report(f"decode_paged_c{paged_slots}_tok_s", 1e6 / cap_rate,
+               f"{cap_rate:,.0f} tok/s at {paged_slots} concurrent "
+               f"(paged capacity point)")
+        results["bit_identical"] = True
+        out = os.environ.get("REPRO_BENCH_OUT", ".")
+        path = os.path.join(out, "BENCH_decode_paged.json")
+        with open(path, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {path}")
     finally:
-        eng.stop()
+        cont.stop()
+        paged.stop()
 
 
 if __name__ == "__main__":

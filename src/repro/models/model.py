@@ -178,13 +178,7 @@ def estimate_pool_cache_bytes(cfg: ModelConfig, num_slots: int,
     """
     shapes = jax.eval_shape(
         lambda: init_pool_cache(cfg, num_slots, max_len))
-    total = 0
-    for leaf in jax.tree_util.tree_leaves(shapes):
-        n = leaf.dtype.itemsize
-        for d in leaf.shape:
-            n *= int(d)
-        total += n
-    return total
+    return _tree_bytes(shapes)
 
 
 def cache_reset_slot(cfg: ModelConfig, pool, slot, max_len: int):
@@ -194,6 +188,178 @@ def cache_reset_slot(cfg: ModelConfig, pool, slot, max_len: int):
     shapes line up.
     """
     return cache_insert_slot(pool, init_cache(cfg, 1, max_len), slot)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (vLLM-style block pool for the decode engine)
+# ---------------------------------------------------------------------------
+#
+# The contiguous slot pool above reserves ``max_seq_len`` KV positions per
+# slot, so device memory scales with *capacity*. The paged layout stores
+# attention K/V in fixed-size blocks shared by all slots:
+#
+#   k/v:  (num_blocks, block_size, num_kv_heads, head_dim)
+#   pos:  (num_blocks, block_size)      absolute positions, -1 = invalid
+#
+# plus a per-slot **block table** (num_slots, blocks_per_slot) mapping the
+# slot's logical block j to a physical block id (-1 = unassigned). A slot
+# holds only the blocks its live tokens need; freed blocks return to the
+# engine's shared free list on retire, so memory scales with live tokens
+# and a fixed byte budget admits far more concurrent slots.
+#
+# Physical block 0 is a *trash block* by convention: it is never handed
+# out by the engine's allocator, and decode writes of free/retired rows
+# (whose table entries are -1) are clamped onto it so they can never
+# corrupt a live slot. The per-tick gather reorders a slot's blocks into
+# a contiguous (blocks_per_slot * block_size) prefix view, so the masked
+# attention sees exactly the layout of the contiguous pool — greedy
+# outputs stay bit-identical (asserted by tests/test_decode_engine.py).
+#
+# Recurrent mixer state (mamba conv/ssm, xLSTM) is O(1) per slot and
+# stays a dense (num_slots, ...) row per slot — only attention KV pages.
+
+DEFAULT_BLOCK_SIZE = 16
+
+
+def paged_layout(max_seq_len: int, block_size: int) -> Tuple[int, int]:
+    """(blocks_per_slot, padded per-slot capacity) for a paged pool."""
+    if block_size < 1:
+        raise ValueError("block_size must be >= 1")
+    bps = -(-max_seq_len // block_size)
+    return bps, bps * block_size
+
+
+def default_num_blocks(num_slots: int, max_seq_len: int,
+                       block_size: int = DEFAULT_BLOCK_SIZE) -> int:
+    """Block count giving every slot full ``max_seq_len`` capacity (plus
+    the trash block) — byte parity with the contiguous pool. Operators
+    shrink this to trade worst-case capacity for more slots."""
+    bps, _ = paged_layout(max_seq_len, block_size)
+    return num_slots * bps + 1
+
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq_len: int,
+                     *, num_blocks: Optional[int] = None,
+                     block_size: int = DEFAULT_BLOCK_SIZE):
+    """Paged decode cache: block-major attention KV + per-slot tables.
+
+    Returns ``{"len": (num_slots,), "tables": (num_slots, blocks_per_slot),
+    "layers": ...}``; the ``tables`` key is what marks a cache as paged
+    for ``decode_step``.
+    """
+    if cfg.window:
+        raise ValueError(
+            "paged KV cache requires non-windowed attention (ring caches "
+            "scatter positions; pages assume an append-only prefix)")
+    bps, _ = paged_layout(max_seq_len, block_size)
+    if num_blocks is None:
+        num_blocks = default_num_blocks(num_slots, max_seq_len, block_size)
+    if num_blocks < 2:
+        raise ValueError("num_blocks must be >= 2 (block 0 is reserved)")
+    dt = _dtype(cfg)
+    per = {}
+    for slot, mix in enumerate(cfg.pattern):
+        if mix == "attn":
+            per[f"s{slot}"] = {
+                "k": jnp.zeros((num_blocks, block_size, cfg.num_kv_heads,
+                                cfg.head_dim), dt),
+                "v": jnp.zeros((num_blocks, block_size, cfg.num_kv_heads,
+                                cfg.head_dim), dt),
+                "pos": jnp.full((num_blocks, block_size), -1, jnp.int32),
+            }
+        elif mix == "mamba":
+            per[f"s{slot}"] = M.mamba_init_state(
+                num_slots, cfg.d_model, d_state=cfg.ssm_d_state,
+                d_conv=cfg.ssm_d_conv, expand=cfg.ssm_expand, dtype=dt)
+        elif mix == "mlstm":
+            per[f"s{slot}"] = X.mlstm_init_state(
+                num_slots, cfg.d_model, cfg.num_heads, cfg.lstm_expand,
+                dtype=dt)
+        elif mix == "slstm":
+            per[f"s{slot}"] = X.slstm_init_state(num_slots, cfg.d_model)
+    stacked = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None],
+                                   (cfg.num_periods,) + a.shape).copy(), per)
+    return {"len": jnp.zeros((num_slots,), jnp.int32),
+            "tables": jnp.full((num_slots, bps), -1, jnp.int32),
+            "layers": stacked}
+
+
+def cache_insert_slot_paged(cfg: ModelConfig, pool, row_cache, slot,
+                            blocks):
+    """Insert a B=1 prefilled row into ``slot`` of a paged pool.
+
+    ``blocks`` is a (need,) int32 vector of physical block ids, in
+    logical order; the row's first ``need * block_size`` positions are
+    scattered into them (whole blocks, so stale K/V/pos from a previous
+    occupant is fully overwritten). The slot's table row becomes
+    ``blocks`` padded with -1. ``slot`` may be a traced index; ``need``
+    is static per call (jit specializes per block count, as prefill
+    already does per prompt length).
+    """
+    bps = pool["tables"].shape[1]
+    need = int(blocks.shape[0])
+    new_layers = {}
+    for key, pslot in pool["layers"].items():
+        rslot = row_cache["layers"][key]
+        if cfg.pattern[int(key[1:])] == "attn":
+            bs = pslot["k"].shape[2]            # (P, NB, bs, H, D)
+            nl = {}
+            for f in ("k", "v", "pos"):
+                p, r = pslot[f], rslot[f]
+                r = r[:, 0, :need * bs]         # (P, need*bs, ...)
+                r = r.reshape((r.shape[0], need, bs) + r.shape[2:])
+                nl[f] = p.at[:, blocks].set(r.astype(p.dtype))
+            new_layers[key] = nl
+        else:
+            new_layers[key] = jax.tree_util.tree_map(
+                lambda p, r: jax.lax.dynamic_update_slice_in_dim(
+                    p, r.astype(p.dtype), slot, axis=1), pslot, rslot)
+    row_len = jnp.asarray(row_cache["len"], jnp.int32).reshape(())
+    new_len = jax.lax.dynamic_update_index_in_dim(
+        jnp.asarray(pool["len"], jnp.int32), row_len, slot, axis=0)
+    table_row = jnp.full((bps,), -1, jnp.int32).at[:need].set(
+        jnp.asarray(blocks, jnp.int32))
+    tables = jax.lax.dynamic_update_slice_in_dim(
+        pool["tables"], table_row[None], slot, axis=0)
+    return {"len": new_len, "tables": tables, "layers": new_layers}
+
+
+def cache_release_slot_paged(pool, slot):
+    """Detach ``slot`` from its blocks (table row -> -1).
+
+    Must run when a slot retires and its blocks return to the free list:
+    otherwise the free slot's per-tick writes would follow the stale
+    table into blocks that may since belong to another slot. With the
+    row cleared, its writes clamp onto trash block 0.
+    """
+    return {**pool, "tables": pool["tables"].at[slot].set(-1)}
+
+
+def _tree_bytes(shapes) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(shapes):
+        n = leaf.dtype.itemsize
+        for d in leaf.shape:
+            n *= int(d)
+        total += n
+    return total
+
+
+def estimate_paged_cache_bytes(cfg: ModelConfig, num_slots: int,
+                               max_seq_len: int, *,
+                               num_blocks: Optional[int] = None,
+                               block_size: int = DEFAULT_BLOCK_SIZE) -> int:
+    """Bytes of a paged decode pool (shape-only, nothing allocated).
+
+    Accounts *blocks* — num_blocks x block_size attention KV plus the
+    per-slot dense state and tables — not num_slots x max_seq_len, so
+    loaders admit by what the paged engine actually holds."""
+    shapes = jax.eval_shape(
+        lambda: init_paged_cache(cfg, num_slots, max_seq_len,
+                                 num_blocks=num_blocks,
+                                 block_size=block_size))
+    return _tree_bytes(shapes)
 
 
 # ---------------------------------------------------------------------------
@@ -218,7 +384,7 @@ def _rope_positions(cfg: ModelConfig, batch, b, s, cache_len=None):
 
 
 def _attn_mixer(cfg: ModelConfig, p, x, positions, mode, slot_cache,
-                cache_len, shard_kv=None):
+                cache_len, shard_kv=None, block_tables=None):
     if shard_kv is None:
         shard_kv = lambda t: t
     b, s, _ = x.shape
@@ -256,6 +422,51 @@ def _attn_mixer(cfg: ModelConfig, p, x, positions, mode, slot_cache,
                     jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s)))
             new_cache = {"k": shard_kv(kc), "v": shard_kv(vc),
                          "pos": pc}
+    elif block_tables is not None:  # decode into a paged block pool
+        # K/V live block-major: (num_blocks, block_size, Hk, D). Each
+        # row writes this tick's K/V at its own (physical block, offset)
+        # via its block table, then gathers its table into a contiguous
+        # prefix view — identical in content to the contiguous pool row,
+        # so masked attention is bit-identical.
+        bs_blk = slot_cache["k"].shape[1]
+        bps = block_tables.shape[1]
+        lens = jnp.asarray(cache_len, jnp.int32).reshape(-1)
+        rows = jnp.arange(b)
+        logical = jnp.clip(lens // bs_blk, 0, bps - 1)
+        phys = block_tables[rows, logical]
+        # Rows without an assigned block (free/retired slots riding
+        # along in the fused step) write into trash block 0 — never
+        # gathered, so they cannot corrupt a live slot.
+        phys = jnp.where(phys < 0, 0, phys)
+        off = lens % bs_blk
+        kc = slot_cache["k"].at[phys, off].set(k[:, 0])
+        vc = slot_cache["v"].at[phys, off].set(v[:, 0])
+        pc = slot_cache["pos"].at[phys, off].set(lens)
+        kc, vc = shard_kv(kc), shard_kv(vc)
+        tab = jnp.where(block_tables < 0, 0, block_tables)
+        kg = kc[tab].reshape(b, bps * bs_blk, *kc.shape[2:])
+        vg = vc[tab].reshape(b, bps * bs_blk, *vc.shape[2:])
+        pg = jnp.where((block_tables < 0)[:, :, None], -1, pc[tab])
+        pg = pg.reshape(b, bps * bs_blk)
+        # Zero gathered K/V at invalid positions: unassigned table
+        # entries gather the trash block, which absorbs the (NaN-laden)
+        # writes of fully-masked free rows — and 0 * NaN = NaN would
+        # leak through the masked softmax's weighted sum. Zeros match
+        # the contiguous pool's untouched-lane contribution bit-exactly
+        # (masked weight is exactly 0, and 0 * 0 = 0 = 0 * garbage).
+        live = (pg >= 0)[:, :, None, None]
+        kg = jnp.where(live, kg, 0)
+        vg = jnp.where(live, vg, 0)
+        if cfg.attention_impl.startswith("pallas"):
+            # The gathered view is an exact prefix (logical position i at
+            # index i), so the prefix-length kernel applies unchanged.
+            from repro.kernels.ops import flash_decode_op
+            out = flash_decode_op(
+                q, kg, vg, lens + 1,
+                interpret=cfg.attention_impl == "pallas_interpret")
+        else:
+            out = L.attention_decode(q, kg, vg, pg >= 0)
+        new_cache = {"k": kc, "v": vc, "pos": pc}
     else:  # decode
         cap = slot_cache["k"].shape[1]
         idx = (cache_len % cap).astype(jnp.int32)
@@ -304,14 +515,15 @@ def _attn_mixer(cfg: ModelConfig, p, x, positions, mode, slot_cache,
 
 
 def _run_period(cfg: ModelConfig, pp, x, positions, mode, cache_p,
-                cache_len, aux, shard_kv=None):
+                cache_len, aux, shard_kv=None, block_tables=None):
     new_cache = {}
     for slot, (mix, ffn) in enumerate(zip(cfg.pattern, cfg.ffn_pattern)):
         h = L.rms_norm(x, pp[f"norm1_{slot}"], cfg.norm_eps)
         sc = None if cache_p is None else cache_p.get(f"s{slot}")
         if mix == "attn":
             out, nc = _attn_mixer(cfg, pp[f"mixer_{slot}"], h, positions,
-                                  mode, sc, cache_len, shard_kv)
+                                  mode, sc, cache_len, shard_kv,
+                                  block_tables)
         elif mix == "mamba":
             if mode == "decode":
                 out, nc = M.mamba_decode(pp[f"mixer_{slot}"], h, sc)
@@ -454,15 +666,21 @@ def forward_hidden(params, cfg: ModelConfig, batch,
         new_cache = {"len": jnp.asarray(s, jnp.int32), "layers": stacked}
     elif mode == "decode":
         assert cache is not None
+        # A "tables" key marks a paged pool (block-major attention KV);
+        # the tables are shared by every period, captured as a scan
+        # constant and carried through unchanged.
+        tables = cache.get("tables")
         def step(carry, xs):
             x, aux = carry
             pp, cp = xs
             x, nc, aux = _run_period(cfg, pp, x, positions, "decode", cp,
-                                     cache_len, aux, shard_kv)
+                                     cache_len, aux, shard_kv, tables)
             return (shard_act(x), aux), nc
         (x, aux), stacked = jax.lax.scan(
             step, (x, aux0), (params["periods"], cache["layers"]))
         new_cache = {"len": cache_len + 1, "layers": stacked}
+        if tables is not None:
+            new_cache["tables"] = tables
     else:
         raise ValueError(mode)
 

@@ -263,7 +263,9 @@ class PredictionService:
                  scheduler: Optional[SharedBatchScheduler] = None,
                  batching: Optional[BatchingOptions] = None,
                  use_decode_engine: bool = False,
-                 decode_engine_slots: int = 8):
+                 decode_engine_slots: int = 8,
+                 decode_engine_block_size: Optional[int] = None,
+                 decode_engine_num_blocks: Optional[int] = None):
         self.manager = manager
         self._scheduler = scheduler
         self._batching = batching or BatchingOptions()
@@ -271,6 +273,12 @@ class PredictionService:
         self._sessions_lock = threading.Lock()
         self.use_decode_engine = use_decode_engine
         self.decode_engine_slots = decode_engine_slots
+        # None => DecodeScheduler defaults. Owners that tune these must
+        # pass the SAME values to the loader/adapter estimate knobs
+        # (engine_block_size / engine_num_blocks) so admission accounts
+        # what the engine will actually allocate — ModelServer does.
+        self.decode_engine_block_size = decode_engine_block_size
+        self.decode_engine_num_blocks = decode_engine_num_blocks
         self._engines: Dict[str, DecodeScheduler] = {}
         self._engines_lock = threading.Lock()
         self._closed = False
@@ -306,24 +314,37 @@ class PredictionService:
     def predict(self, req: PredictRequest) -> PredictResponse:
         # Resolve the spec (label/default -> concrete version) now, so
         # the batch queue is per-(servable, version) and a label flip
-        # mid-flight cannot re-route an enqueued request.
+        # mid-flight cannot re-route an enqueued request. The handle is
+        # held for the WHOLE call — including the time the request sits
+        # parked in the shared batch queue — so a version retired in
+        # that window blocks in the manager's refcount drain until the
+        # merged batch has run, instead of failing every co-batched
+        # request with NotFound (the batched-predict unload race).
         with self._acquire(req.model_spec) as s:
             spec = resolved_spec(s)
             if not req.batched or self._scheduler is None:
                 return PredictResponse(spec, s.call("predict", req.inputs))
-        out = self._session_for(spec.name, spec.version).run(
-            req.inputs, req.timeout_s)
-        return PredictResponse(spec, out)
+            out = self._session_for(spec.name, spec.version, s).run(
+                req.inputs, req.timeout_s)
+            return PredictResponse(spec, out)
 
-    def _session_for(self, name: str, version: int) -> BatchingSession:
+    def _session_for(self, name: str, version: int,
+                     servable: Servable) -> BatchingSession:
         key = f"{name}@v{version}"
         with self._sessions_lock:
             sess = self._sessions.get(key)
             if sess is None:
-                def run_batch(merged, name=name, version=version):
-                    with self.manager.get_servable_handle(
-                            name, version) as servable:
-                        return servable.call("predict", merged)
+                # run_batch uses the servable object directly instead of
+                # re-resolving through the manager at batch time: every
+                # co-batched request pre-acquired an RCU handle at
+                # enqueue (predict above), so the servable is guaranteed
+                # live while the batch runs even if the version was
+                # unpublished meanwhile — re-resolving would NotFound on
+                # exactly the requests the handles were keeping safe.
+                # The session (and this capture) is dropped by
+                # evict_version once the unload actually completes.
+                def run_batch(merged, servable=servable):
+                    return servable.call("predict", merged)
                 sess = BatchingSession(key, run_batch, self._scheduler,
                                        self._batching)
                 self._sessions[key] = sess
@@ -484,10 +505,15 @@ class PredictionService:
         # Build outside the lock: pool-cache allocation is slow and must
         # not serialize other models' generate calls (double-checked
         # insert below; a losing racer discards its engine).
+        kw = {}
+        if self.decode_engine_block_size is not None:
+            kw["block_size"] = self.decode_engine_block_size
+        if self.decode_engine_num_blocks is not None:
+            kw["num_blocks"] = self.decode_engine_num_blocks
         eng = DecodeScheduler(
             s.cfg, s.params,
             num_slots=self.decode_engine_slots,
-            max_seq_len=s.max_cache_len)
+            max_seq_len=s.max_cache_len, **kw)
         with self._engines_lock:
             if key in self._engines:
                 return

@@ -1,30 +1,49 @@
 """Continuous-batching decode engine (paper §2.2.1 applied to the
 steady-state decode path).
 
-The wave engine in ``serving/generation.py`` only admits requests at
-wave boundaries: one straggler holds every slot in its wave hostage
-until the whole wave finishes, and nothing new is admitted meanwhile.
+The wave engine in ``serving/generation.py`` only admitted requests at
+wave boundaries: one straggler held every slot in its wave hostage.
 ``DecodeScheduler`` removes the barrier. It owns a fixed pool of
-KV-cache slots with *per-slot* lengths (``models/model.py:
-init_pool_cache``) and runs ONE fused ``decode_step`` per tick over the
-whole pool; between ticks it retires finished sequences and immediately
-backfills freed slots with queued prefills (iteration-level scheduling,
-à la Orca). Shapes stay jit-stable throughout:
+KV-cache slots with *per-slot* lengths and runs ONE fused
+``decode_step`` per tick over the whole pool; between ticks it retires
+finished sequences and immediately backfills freed slots with queued
+prefills (iteration-level scheduling, à la Orca). Shapes stay
+jit-stable throughout:
 
   * the decode batch is always ``(num_slots, 1)`` — free slots ride
     along masked-out (their rows are garbage, never read);
   * prompts prefill one row at a time at their exact length (the jit
     cache specializes per prompt length; no right-padding, so the
     recurrent mixers — mamba/xLSTM — stay exact too) and are spliced
-    into the pool with ``cache_insert_slot``.
+    into the pool with the cache-insert helpers.
+
+KV memory comes in two layouts (``models/model.py``):
+
+  * **paged** (the default): attention K/V lives in fixed-size blocks
+    shared by all slots, each slot holding a block table; blocks are
+    allocated from a free list at admission and returned on retire, so
+    device memory scales with *live tokens* — at a fixed byte budget the
+    paged pool admits several times the concurrent slots of the
+    contiguous layout (benchmarks/bench_decode_engine.py). Admission is
+    by free-block count: a request needs
+    ``ceil((prompt + max_new - 1) / block_size)`` blocks and waits at
+    the head of the queue (FIFO, starvation-free) until retiring slots
+    return enough.
+  * **contiguous** (``paged=False``, and the automatic fallback for
+    windowed/ring attention): the original ``num_slots x max_seq_len``
+    slot pool.
 
 Because every row's compute is independent and masked softmax ignores
 padded cache capacity bit-exactly, greedy engine output is bit-identical
-to per-request ``generate`` — asserted by tests/test_decode_engine.py.
+to per-request ``generate`` in BOTH layouts — asserted by
+tests/test_decode_engine.py.
 
-Throughput: the pool amortizes weight streaming and per-step dispatch
-over all active slots, so aggregate tokens/s scales with concurrency
-instead of serializing (benchmarks/bench_decode_engine.py).
+Client threads interact through ``submit``/``generate``/``cancel`` and
+never touch the pool. A ``generate`` that times out cancels its request,
+so abandoned slots retire (and their blocks free) at the next tick
+instead of decoding to ``max_new`` for nobody. ``active_slots()`` and
+``stats`` snapshot under the engine lock, so introspection never reads
+torn state.
 """
 from __future__ import annotations
 
@@ -48,7 +67,14 @@ log = logging.getLogger(__name__)
 
 class DecodeRequest(GenRequest):
     """GenRequest (tokens/max_new/sampling + completion event) with
-    engine-side completion helpers."""
+    engine-side completion helpers and client-side cancellation."""
+
+    cancelled: bool = False
+
+    def cancel(self) -> None:
+        """Mark abandoned: the engine retires the slot (freeing its
+        blocks) at the next tick instead of decoding to ``max_new``."""
+        self.cancelled = True
 
     def _emit_token(self, index: int, token: int) -> None:
         """Streaming tap, called on the engine thread as each tick
@@ -85,16 +111,22 @@ class DecodeScheduler:
     """Admits concurrent generate requests into a shared KV slot pool.
 
     One background thread runs the tick loop: backfill free slots from
-    the queue (per-request exact-length prefill + ``cache_insert_slot``),
-    then one fused ``decode_step`` over all ``num_slots`` rows, then
-    retire finished sequences. Client threads interact only through
-    ``submit``/``generate`` and never touch the pool.
+    the queue (per-request exact-length prefill + cache insert), then
+    one fused ``decode_step`` over all ``num_slots`` rows, then retire
+    finished/cancelled sequences (returning their blocks).
+
+    ``self._cond`` guards the queue, the slot list, the free-block list
+    and the stats dict; the device pool itself is touched only by the
+    engine thread, never under the lock.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 8,
                  max_seq_len: int = 512,
                  eos_token: Optional[int] = None,
-                 idle_wait_s: float = 0.01):
+                 idle_wait_s: float = 0.01,
+                 paged: Optional[bool] = None,
+                 block_size: int = MD.DEFAULT_BLOCK_SIZE,
+                 num_blocks: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
@@ -102,14 +134,23 @@ class DecodeScheduler:
         self.eos = eos_token
         self._idle_wait_s = idle_wait_s
 
+        # Ring (windowed) caches scatter positions, pages assume an
+        # append-only prefix — fall back to the contiguous pool there.
+        if paged is None:
+            paged = not cfg.window
+        if paged and cfg.window:
+            raise ValueError("paged KV requires non-windowed attention")
+        self.paged = paged
+
         self._cond = threading.Condition()
         self._queue: "deque[DecodeRequest]" = deque()
         self._slots: List[Optional[_Slot]] = [None] * num_slots
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self.stats: Dict[str, float] = {
-            "requests": 0, "finished": 0, "prefills": 0, "ticks": 0,
-            "slot_steps": 0, "active_steps": 0, "slot_utilization": 0.0}
+        self._stats: Dict[str, float] = {
+            "requests": 0, "finished": 0, "cancelled": 0, "prefills": 0,
+            "ticks": 0, "slot_steps": 0, "active_steps": 0,
+            "slot_utilization": 0.0, "admission_waits": 0}
 
         cfgc = cfg
 
@@ -121,15 +162,70 @@ class DecodeScheduler:
         def _decode(params, batch, cache):
             return MD.decode_step(params, cfgc, batch, cache)
 
-        @jax.jit
-        def _insert(pool, row, slot):
-            return MD.cache_insert_slot(pool, row, slot)
-
         self._prefill_fn, self._decode_fn = _prefill, _decode
-        self._insert_fn = _insert
-        self._pool = MD.init_pool_cache(cfg, num_slots, max_seq_len)
+
+        if self.paged:
+            self.block_size = block_size
+            self.blocks_per_slot, self._row_cap = MD.paged_layout(
+                max_seq_len, block_size)
+            self.num_blocks = (num_blocks if num_blocks is not None else
+                               MD.default_num_blocks(num_slots, max_seq_len,
+                                                     block_size))
+            if self.num_blocks < 2:
+                raise ValueError("num_blocks must be >= 2")
+            # Block 0 is the trash block absorbing masked writes of free
+            # rows; it is never handed out.
+            self._free_blocks = list(range(self.num_blocks - 1, 0, -1))
+            self._slot_blocks: List[List[int]] = [[] for _ in
+                                                  range(num_slots)]
+            self._pool = MD.init_paged_cache(
+                cfg, num_slots, max_seq_len, num_blocks=self.num_blocks,
+                block_size=block_size)
+
+            @jax.jit
+            def _insert(pool, row, slot, blocks):
+                return MD.cache_insert_slot_paged(cfgc, pool, row, slot,
+                                                  blocks)
+
+            @jax.jit
+            def _release(pool, slot):
+                return MD.cache_release_slot_paged(pool, slot)
+
+            self._insert_fn = _insert
+            self._release_fn = _release
+        else:
+            self.block_size = 0
+            self._row_cap = max_seq_len
+            self.num_blocks = 0
+            self._free_blocks = []
+            self._slot_blocks = [[] for _ in range(num_slots)]
+            self._pool = MD.init_pool_cache(cfg, num_slots, max_seq_len)
+
+            @jax.jit
+            def _insert(pool, row, slot):
+                return MD.cache_insert_slot(pool, row, slot)
+
+            self._insert_fn = _insert
+            self._release_fn = None
 
     # -- client API --------------------------------------------------------
+    def _blocks_needed(self, prompt_len: int, max_new: int) -> int:
+        # KV is written for positions 0 .. prompt + max_new - 2 (the
+        # final sampled token's KV is never stored).
+        return -(-(prompt_len + max_new - 1) // self.block_size)
+
+    def admits(self, prompt_len: int, max_new: int) -> bool:
+        """Whether a request of this shape can EVER be admitted (budget
+        check, not current occupancy) — callers fall back to a private
+        per-request decode loop when False."""
+        if max_new < 1 or prompt_len + max_new > self.max_seq_len:
+            return False
+        if (self.paged and
+                self._blocks_needed(prompt_len, max_new) >
+                self.num_blocks - 1):
+            return False
+        return True
+
     def submit(self, tokens, max_new: int = 16,
                sampling: Optional[SamplingParams] = None,
                on_token=None) -> DecodeRequest:
@@ -142,23 +238,54 @@ class DecodeScheduler:
                 f"exceeds max_seq_len {self.max_seq_len}")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
+        if self.paged:
+            need = self._blocks_needed(tokens.shape[0], max_new)
+            if need > self.num_blocks - 1:
+                raise ValueError(
+                    f"request needs {need} KV blocks but the pool only "
+                    f"has {self.num_blocks - 1}")
         req = DecodeRequest(tokens=tokens, max_new=max_new,
                             sampling=sampling, on_token=on_token)
         with self._cond:
             if self._stop.is_set():
                 raise RuntimeError("engine stopped")
             self._queue.append(req)
-            self.stats["requests"] += 1
+            self._stats["requests"] += 1
             self._cond.notify()
         return req
 
     def generate(self, tokens, max_new: int = 16,
                  sampling: Optional[SamplingParams] = None,
                  timeout: float = 120.0) -> np.ndarray:
-        return self.submit(tokens, max_new, sampling).wait(timeout)
+        req = self.submit(tokens, max_new, sampling)
+        try:
+            return req.wait(timeout)
+        except BaseException:
+            # Abandoned request (timeout / interrupt): nobody will read
+            # the result, so let the engine retire the slot and free its
+            # blocks at the next tick.
+            self.cancel(req)
+            raise
+
+    def cancel(self, req: DecodeRequest) -> None:
+        req.cancel()
+        with self._cond:
+            self._cond.notify()
 
     def active_slots(self) -> int:
-        return sum(s is not None for s in self._slots)
+        with self._cond:
+            return sum(s is not None for s in self._slots)
+
+    def free_block_count(self) -> int:
+        with self._cond:
+            return len(self._free_blocks)
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        """Consistent snapshot of the engine counters (engine-thread
+        mutations happen under the same lock)."""
+        with self._cond:
+            return dict(self._stats)
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> None:
@@ -175,11 +302,13 @@ class DecodeScheduler:
             self._thread.join(timeout=10)
             self._thread = None
         err = RuntimeError("decode engine stopped")
-        for i, slot in enumerate(self._slots):
-            if slot is not None:
-                slot.req._fail(err)
-                self._slots[i] = None
         with self._cond:
+            for i, slot in enumerate(self._slots):
+                if slot is not None:
+                    slot.req._fail(err)
+                    self._slots[i] = None
+                    self._free_blocks.extend(self._slot_blocks[i])
+                    self._slot_blocks[i] = []
             while self._queue:
                 self._queue.popleft()._fail(err)
 
@@ -191,6 +320,7 @@ class DecodeScheduler:
                     self._cond.wait(self._idle_wait_s)
                     continue
             try:
+                self._retire_cancelled()
                 self._backfill()
                 if any(s is not None for s in self._slots):
                     self._tick()
@@ -198,29 +328,69 @@ class DecodeScheduler:
                 log.warning("decode engine tick failed: %s", exc)
                 for i, slot in enumerate(self._slots):
                     if slot is not None:
+                        self._release_slot(i)
                         slot.req._fail(exc)
-                        self._slots[i] = None
 
-    def _next_request(self) -> Optional[DecodeRequest]:
+    def _release_slot(self, i: int) -> None:
+        """Free slot ``i``: detach its block-table row (so its masked
+        per-tick writes clamp onto the trash block, never a reallocated
+        block) and return its blocks to the free list."""
+        if self.paged:
+            self._pool = self._release_fn(self._pool, i)
         with self._cond:
-            return self._queue.popleft() if self._queue else None
+            self._slots[i] = None
+            self._free_blocks.extend(self._slot_blocks[i])
+            self._slot_blocks[i] = []
+
+    def _retire_cancelled(self) -> None:
+        """Retire slots whose requests were abandoned (timed-out
+        ``generate``): nobody reads their tokens, so decoding them to
+        ``max_new`` would burn ticks and hold blocks for nothing."""
+        for i, slot in enumerate(self._slots):
+            if slot is not None and slot.req.cancelled:
+                self._release_slot(i)
+                with self._cond:
+                    self._stats["cancelled"] += 1
+                slot.req._fail(RuntimeError("request cancelled"))
 
     def _backfill(self) -> None:
         """Fill free slots from the queue: exact-length B=1 prefill,
-        splice the row into the pool, emit the first token."""
+        splice the row into the pool, emit the first token. In paged
+        mode a request is admitted only when the free list covers its
+        worst-case block need (reserved up front, so a slot can never
+        stall mid-decode); the queue stays FIFO — an oversized head
+        waits for retiring slots rather than being overtaken."""
         for i in range(self.num_slots):
             if self._slots[i] is not None:
                 continue
-            req = self._next_request()
-            if req is None:
-                return
+            blocks: List[int] = []
+            with self._cond:
+                while self._queue and self._queue[0].cancelled:
+                    dropped = self._queue.popleft()
+                    dropped._fail(RuntimeError("request cancelled"))
+                    self._stats["cancelled"] += 1
+                if not self._queue:
+                    return
+                req = self._queue[0]
+                if self.paged:
+                    need = self._blocks_needed(req.tokens.shape[0],
+                                               req.max_new)
+                    if need > len(self._free_blocks):
+                        self._stats["admission_waits"] += 1
+                        return
+                    blocks = [self._free_blocks.pop() for _ in range(need)]
+                self._queue.popleft()
             try:
-                row = MD.init_cache(self.cfg, 1, self.max_seq_len)
+                row = MD.init_cache(self.cfg, 1, self._row_cap)
                 logits, row = self._prefill_fn(
                     self.params,
                     {"tokens": jnp.asarray(req.tokens[None])}, row)
-                self._pool = self._insert_fn(self._pool, row, i)
-                self.stats["prefills"] += 1
+                if self.paged:
+                    self._pool = self._insert_fn(
+                        self._pool, row, i,
+                        jnp.asarray(np.asarray(blocks, np.int32)))
+                else:
+                    self._pool = self._insert_fn(self._pool, row, i)
                 rng = req.sampling.make_rng() if req.sampling else None
                 tok = sample_token(np.asarray(logits)[0], req.sampling,
                                    rng)
@@ -230,12 +400,21 @@ class DecodeScheduler:
                 # waiter — and a request-local failure (bad prompt,
                 # compile OOM at a new length) must not nuke unrelated
                 # in-flight slots (pool updates are functional, so a
-                # failed insert left it untouched).
+                # failed insert left it untouched — but a *successful*
+                # insert may have published the table row, so detach it
+                # before the blocks go back to the free list).
                 log.warning("prefill failed, failing request: %s", exc)
+                if self.paged and blocks:
+                    self._pool = self._release_fn(self._pool, i)
+                    with self._cond:
+                        self._free_blocks.extend(blocks)
                 req._fail(exc)
                 continue
             slot = _Slot(req=req, out=[tok], last=tok, rng=rng)
-            self._slots[i] = slot
+            with self._cond:
+                self._slots[i] = slot
+                self._slot_blocks[i] = blocks
+                self._stats["prefills"] += 1
             req._emit_token(0, tok)
             self._maybe_retire(i, slot)
 
@@ -243,9 +422,12 @@ class DecodeScheduler:
         done = (len(slot.out) >= slot.req.max_new or
                 (self.eos is not None and slot.last == self.eos))
         if done:
+            # Release BEFORE completing: a waiter that wakes on the
+            # result must observe the slot free and its blocks returned.
+            self._release_slot(i)
+            with self._cond:
+                self._stats["finished"] += 1
             slot.req._finish(np.asarray(slot.out, np.int32))
-            self.stats["finished"] += 1
-            self._slots[i] = None   # freed; next insert overwrites the row
 
     def _tick(self) -> None:
         """One fused decode step over the whole pool."""
@@ -266,8 +448,10 @@ class DecodeScheduler:
             slot.last = tok
             slot.req._emit_token(len(slot.out) - 1, tok)
             self._maybe_retire(i, slot)
-        self.stats["ticks"] += 1
-        self.stats["slot_steps"] += self.num_slots
-        self.stats["active_steps"] += n_active
-        self.stats["slot_utilization"] = (
-            self.stats["active_steps"] / max(self.stats["slot_steps"], 1))
+        with self._cond:
+            self._stats["ticks"] += 1
+            self._stats["slot_steps"] += self.num_slots
+            self._stats["active_steps"] += n_active
+            self._stats["slot_utilization"] = (
+                self._stats["active_steps"] /
+                max(self._stats["slot_steps"], 1))

@@ -180,7 +180,7 @@ class JaxModelServable(Servable):
             # inline loop below, which allocates per-request — the
             # pre-engine contract. Checked before any submit so a
             # multi-row batch never half-enqueues.
-            if 1 <= max_new and tokens.shape[1] + max_new <= eng.max_seq_len:
+            if eng.admits(tokens.shape[1], max_new):
                 # Continuous batching: each row becomes one slot
                 # request, so concurrent generate calls share the
                 # fused decode step.
@@ -235,7 +235,9 @@ class JaxModelLoader(Loader):
                  inference_log: Optional[InferenceLog] = None,
                  load_delay_s: float = 0.0,
                  engine_slots: int = 0,
-                 engine_max_seq_len: int = DEFAULT_MAX_CACHE_LEN):
+                 engine_max_seq_len: int = DEFAULT_MAX_CACHE_LEN,
+                 engine_block_size: int = MD.DEFAULT_BLOCK_SIZE,
+                 engine_num_blocks: Optional[int] = None):
         super().__init__(servable_id)
         self.path = path
         self._cfg = cfg
@@ -243,6 +245,8 @@ class JaxModelLoader(Loader):
         self._delay = load_delay_s  # test hook: simulate big-model loads
         self._engine_slots = engine_slots
         self._engine_max_seq_len = engine_max_seq_len
+        self._engine_block_size = engine_block_size
+        self._engine_num_blocks = engine_num_blocks
         self._manifest = CKPT.load_manifest(path)
         self._estimate: Optional[ResourceEstimate] = None
 
@@ -253,18 +257,29 @@ class JaxModelLoader(Loader):
 
     def estimate_resources(self) -> ResourceEstimate:
         """Params estimate from the manifest plus — when the owner will
-        attach a decode engine to this version — the engine's KV slot
-        pool (num_slots x max_seq_len across all layers). The pool is
-        allocated lazily at first generate, but it is real steady-state
-        memory of the version, so admission must count it up front
-        instead of discovering the overshoot at runtime."""
+        attach a decode engine to this version — the engine's KV pool.
+        The pool is allocated lazily at first generate, but it is real
+        steady-state memory of the version, so admission must count it
+        up front instead of discovering the overshoot at runtime.
+
+        The estimate mirrors what the engine will actually allocate:
+        the paged block pool (num_blocks x block_size attention KV plus
+        per-slot dense state) for paged-eligible configs, or the
+        contiguous num_slots x max_seq_len pool for windowed attention
+        where the engine falls back to the ring layout."""
         if self._estimate is None:
             ram = CKPT.estimate_ram_bytes(self.path)
             pool = 0
             if self._engine_slots > 0:
-                pool = MD.estimate_pool_cache_bytes(
-                    self._resolve_cfg(), self._engine_slots,
-                    self._engine_max_seq_len)
+                cfg = self._resolve_cfg()
+                if cfg.window:
+                    pool = MD.estimate_pool_cache_bytes(
+                        cfg, self._engine_slots, self._engine_max_seq_len)
+                else:
+                    pool = MD.estimate_paged_cache_bytes(
+                        cfg, self._engine_slots, self._engine_max_seq_len,
+                        num_blocks=self._engine_num_blocks,
+                        block_size=self._engine_block_size)
             self._estimate = ResourceEstimate(
                 ram_bytes=ram + pool, transient_ram_bytes=ram // 10)
         return self._estimate
@@ -291,12 +306,16 @@ class JaxModelSourceAdapter(SourceAdapter):
     def __init__(self, cfg_for: Optional[Callable[[str], ModelConfig]] = None,
                  inference_log: Optional[InferenceLog] = None,
                  engine_slots: int = 0,
-                 engine_max_seq_len: int = DEFAULT_MAX_CACHE_LEN):
+                 engine_max_seq_len: int = DEFAULT_MAX_CACHE_LEN,
+                 engine_block_size: int = MD.DEFAULT_BLOCK_SIZE,
+                 engine_num_blocks: Optional[int] = None):
         super().__init__()
         self._cfg_for = cfg_for
         self._log = inference_log
         self._engine_slots = engine_slots
         self._engine_max_seq_len = engine_max_seq_len
+        self._engine_block_size = engine_block_size
+        self._engine_num_blocks = engine_num_blocks
 
     def convert(self, version: AspiredVersion) -> AspiredVersion:
         cfg = self._cfg_for(version.id.name) if self._cfg_for else None
@@ -306,4 +325,6 @@ class JaxModelSourceAdapter(SourceAdapter):
                 version.id, version.data, cfg=cfg,
                 inference_log=self._log,
                 engine_slots=self._engine_slots,
-                engine_max_seq_len=self._engine_max_seq_len))
+                engine_max_seq_len=self._engine_max_seq_len,
+                engine_block_size=self._engine_block_size,
+                engine_num_blocks=self._engine_num_blocks))

@@ -39,12 +39,21 @@ class ModelServer:
                  num_load_threads: int = 2,
                  ram_budget_bytes: Optional[int] = None,
                  use_decode_engine: bool = True,
-                 decode_engine_slots: int = 8):
+                 decode_engine_slots: int = 8,
+                 decode_engine_block_size: Optional[int] = None,
+                 decode_engine_num_blocks: Optional[int] = None):
         self.inference_log = InferenceLog()
         self.source = FileSystemSource(model_dirs, policies)
+        # The block-sizing knobs feed BOTH the loader estimate and the
+        # engines PredictionService attaches, so RAM-budget admission
+        # accounts exactly what generate will allocate.
+        adapter_kw = {}
+        if decode_engine_block_size is not None:
+            adapter_kw["engine_block_size"] = decode_engine_block_size
         self.adapter = JaxModelSourceAdapter(
             cfg_for, self.inference_log,
-            engine_slots=decode_engine_slots if use_decode_engine else 0)
+            engine_slots=decode_engine_slots if use_decode_engine else 0,
+            engine_num_blocks=decode_engine_num_blocks, **adapter_kw)
         self.manager = AspiredVersionsManager(
             num_load_threads=num_load_threads,
             num_initial_load_threads=max(4, num_load_threads),
@@ -59,7 +68,9 @@ class ModelServer:
             self.manager, scheduler=self.scheduler,
             batching=self.batching_options,
             use_decode_engine=use_decode_engine,
-            decode_engine_slots=decode_engine_slots)
+            decode_engine_slots=decode_engine_slots,
+            decode_engine_block_size=decode_engine_block_size,
+            decode_engine_num_blocks=decode_engine_num_blocks)
         self.models = api.ModelService(self.manager, self.source)
 
     # -- lifecycle ---------------------------------------------------------

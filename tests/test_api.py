@@ -371,6 +371,85 @@ class TestErrorTaxonomy:
             manager.shutdown()
 
 
+class TestBatchedPredictUnloadRace:
+    def test_retire_with_parked_predicts_still_succeeds(self, model_dir):
+        """Regression (ROADMAP): a predict enqueued to the shared batch
+        queue pre-acquires its RCU handle, so a version retired while
+        requests are parked blocks in the refcount drain until the
+        merged batch has run — instead of the batch re-resolving the
+        unpublished version and failing every co-batched request with
+        NotFound."""
+        from repro.batching import BatchingOptions
+        srv = ModelServer({"clf": os.path.join(model_dir, "clf")},
+                          cfg_for=lambda n: CFG,
+                          batching=BatchingOptions(max_batch_size=8,
+                                                   batch_timeout_s=0.05))
+        srv.start_sync()
+        try:
+            # Warm the padded-batch compile (3 tasks pad to bucket 4)
+            # so the parked window is not dominated by compilation.
+            srv.predict("clf", batch(b=4), version=2)
+
+            # Stall the single shared device thread with a slow batch on
+            # a side queue, so the clf predicts deterministically PARK in
+            # their batch queue while the version is retired underneath.
+            stalled, release = threading.Event(), threading.Event()
+
+            def slow_proc(b):
+                stalled.set()
+                release.wait(30)
+                for t in b.tasks:
+                    t.set_result(None)
+
+            stall_q = srv.scheduler.add_queue(
+                "stall", BatchingOptions(max_batch_size=1), slow_proc)
+            stall_q.enqueue(None, size=1)
+            assert stalled.wait(10)
+
+            results, errors = [], []
+
+            def client(i):
+                try:
+                    results.append(srv.predict("clf", batch(b=1, seed=i),
+                                               version=2))
+                except Exception as exc:        # any failure is the bug
+                    errors.append(exc)
+
+            ts = [threading.Thread(target=client, args=(i,))
+                  for i in range(3)]
+            [t.start() for t in ts]
+            queue = srv.prediction._sessions["clf@v2"]._queue
+            deadline = time.monotonic() + 10
+            while (queue.pending_tasks() < 3 and
+                   time.monotonic() < deadline):
+                time.sleep(0.002)
+            assert queue.pending_tasks() == 3    # all parked, handles held
+            # Retire v2 while the predicts are parked (v1 takes over;
+            # the availability-preserving policy loads v1 first, so
+            # reconcile until the v2 unload has actually been issued).
+            srv.source.set_policy("clf", ServableVersionPolicy(
+                mode="specific", specific_version=1))
+            srv.source.poll()
+            deadline = time.monotonic() + 30
+            while (srv.manager.state_of("clf", 2).name == "READY" and
+                   time.monotonic() < deadline):
+                srv.manager.reconcile()
+                time.sleep(0.01)
+            assert srv.manager.state_of("clf", 2).name != "READY"
+            time.sleep(0.2)     # without the fix: unload completes here
+            release.set()       # device thread resumes, runs the batch
+            [t.join(timeout=60) for t in ts]
+            assert not errors, errors
+            assert len(results) == 3
+            for out in results:
+                assert out.shape == (1, 16, CFG.vocab_size)
+            srv.refresh()       # unload completes once the batch drained
+            assert srv.manager.state_of("clf", 2).name == "DISABLED"
+            srv.scheduler.remove_queue("stall", drain=False)
+        finally:
+            srv.stop()
+
+
 class TestResourceAccounting:
     def test_loader_estimate_includes_engine_pool(self, model_dir):
         sid = ServableId("clf", 1)
@@ -378,15 +457,61 @@ class TestResourceAccounting:
         base = JaxModelLoader(sid, path, cfg=CFG).estimate_resources()
         eng = JaxModelLoader(sid, path, cfg=CFG,
                              engine_slots=8).estimate_resources()
-        pool = MD.estimate_pool_cache_bytes(CFG, 8, DEFAULT_MAX_CACHE_LEN)
+        # The engine pages its KV by default, so the loader accounts
+        # blocks (num_blocks x block_size), not slots x max_seq_len.
+        pool = MD.estimate_paged_cache_bytes(CFG, 8, DEFAULT_MAX_CACHE_LEN)
         assert pool > 0
         assert eng.ram_bytes == base.ram_bytes + pool
+
+    def test_loader_estimate_follows_block_count(self, model_dir):
+        sid = ServableId("clf", 1)
+        path = os.path.join(model_dir, "clf", "1")
+        full = JaxModelLoader(sid, path, cfg=CFG,
+                              engine_slots=8).estimate_resources()
+        half_blocks = MD.default_num_blocks(8, DEFAULT_MAX_CACHE_LEN) // 2
+        half = JaxModelLoader(
+            sid, path, cfg=CFG, engine_slots=8,
+            engine_num_blocks=half_blocks).estimate_resources()
+        assert half.ram_bytes < full.ram_bytes
+
+    def test_block_knobs_reach_attached_engine(self, model_dir):
+        """decode_engine_block_size/num_blocks must configure the engine
+        PredictionService actually builds — not only the loader's RAM
+        estimate — or admission accounting diverges from allocation."""
+        blocks = MD.default_num_blocks(8, DEFAULT_MAX_CACHE_LEN) // 2
+        srv = ModelServer({"clf": os.path.join(model_dir, "clf")},
+                          cfg_for=lambda n: CFG,
+                          decode_engine_block_size=32,
+                          decode_engine_num_blocks=blocks)
+        srv.start_sync()
+        try:
+            srv.generate("clf", tokens=np.arange(8, dtype=np.int32),
+                         max_new=2)
+            eng = srv.prediction._engines["clf@v2"]
+            assert eng.paged
+            assert eng.block_size == 32
+            assert eng.num_blocks == blocks
+            from repro.core.source import AspiredVersion
+            loader = srv.adapter.convert(AspiredVersion(
+                id=ServableId("clf", 2),
+                data=os.path.join(model_dir, "clf", "2"))).data
+            pool = MD.estimate_paged_cache_bytes(
+                CFG, 8, DEFAULT_MAX_CACHE_LEN, num_blocks=blocks,
+                block_size=32)
+            base = JaxModelLoader(
+                ServableId("clf", 2),
+                os.path.join(model_dir, "clf", "2"),
+                cfg=CFG).estimate_resources()
+            est = loader.estimate_resources()
+            assert est.ram_bytes == base.ram_bytes + pool
+        finally:
+            srv.stop()
 
     def test_engine_pool_counts_against_admission(self, model_dir):
         sid = ServableId("clf", 2)
         path = os.path.join(model_dir, "clf", "2")
         base = JaxModelLoader(sid, path, cfg=CFG).estimate_resources()
-        pool = MD.estimate_pool_cache_bytes(CFG, 8, DEFAULT_MAX_CACHE_LEN)
+        pool = MD.estimate_paged_cache_bytes(CFG, 8, DEFAULT_MAX_CACHE_LEN)
         budget = base.peak_ram_bytes + pool // 2    # params fit, +pool not
         kw = dict(cfg_for=lambda n: CFG, ram_budget_bytes=budget,
                   policies={"clf": ServableVersionPolicy(mode="latest")})

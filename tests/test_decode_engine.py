@@ -1,7 +1,9 @@
 """Continuous-batching decode engine: bit-exact equivalence with
-per-request generate, slot reuse under churn, sampling params, and the
-slot-oriented cache helpers."""
+per-request generate (paged AND contiguous KV layouts), slot reuse
+under churn, block-pool admission/exhaustion, request cancellation,
+sampling params, and the slot-oriented cache helpers."""
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +26,10 @@ def params():
 
 @pytest.fixture(scope="module")
 def engine(params):
+    # Paged by default: every pre-existing engine test now exercises the
+    # block-pool layout against the per-request reference.
     eng = DecodeScheduler(CFG, params, num_slots=4, max_seq_len=64)
+    assert eng.paged
     eng.start()
     yield eng
     eng.stop()
@@ -131,6 +136,203 @@ class TestDecodeScheduler:
             req.wait(1.0)
         with pytest.raises(RuntimeError):
             eng.submit(np.arange(8, dtype=np.int32), max_new=2)
+
+
+class TestPagedEngine:
+    def test_paged_vs_contiguous_bit_identical_staggered(self, params):
+        """Same staggered-length workload through a paged and a
+        contiguous engine: greedy outputs must match bit-for-bit (and
+        the per-request reference)."""
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(0, CFG.vocab_size, int(n)).astype(np.int32)
+                   for n in rng.integers(4, 25, 8)]
+        max_news = [int(m) for m in rng.integers(1, 9, 8)]
+        paged = DecodeScheduler(CFG, params, num_slots=3, max_seq_len=64,
+                                paged=True, block_size=8)
+        cont = DecodeScheduler(CFG, params, num_slots=3, max_seq_len=64,
+                               paged=False)
+        paged.start()
+        cont.start()
+        try:
+            pr = [paged.submit(p, m) for p, m in zip(prompts, max_news)]
+            cr = [cont.submit(p, m) for p, m in zip(prompts, max_news)]
+            for i, (a, b) in enumerate(zip(pr, cr)):
+                out_p, out_c = a.wait(120), b.wait(120)
+                np.testing.assert_array_equal(out_p, out_c)
+                np.testing.assert_array_equal(
+                    out_p, reference_generate(params, prompts[i],
+                                              max_news[i]))
+            assert paged.active_slots() == 0
+            # every block returned to the free list
+            assert paged.free_block_count() == paged.num_blocks - 1
+        finally:
+            paged.stop()
+            cont.stop()
+
+    def test_block_exhaustion_queue_waits(self, params):
+        """More requests than the block pool admits at once: admission
+        waits at the head of the queue (no crash, no starvation) and
+        every output stays exact."""
+        # need = ceil((12 + 8 - 1) / 8) = 3 blocks per request; 6 usable
+        # blocks => exactly 2 concurrent although there are 4 slots.
+        eng = DecodeScheduler(CFG, params, num_slots=4, max_seq_len=64,
+                              paged=True, block_size=8, num_blocks=7)
+        prompts = [np.arange(i, i + 12, dtype=np.int32) % CFG.vocab_size
+                   for i in range(5)]
+        reqs = [eng.submit(p, 8) for p in prompts]   # queued pre-start
+        eng.start()
+        try:
+            outs = [r.wait(120) for r in reqs]
+            for out, p in zip(outs, prompts):
+                np.testing.assert_array_equal(
+                    out, reference_generate(params, p, 8))
+            stats = eng.stats
+            assert stats["admission_waits"] >= 1
+            assert stats["finished"] == 5
+            assert eng.active_slots() == 0
+            assert eng.free_block_count() == 6
+        finally:
+            eng.stop()
+
+    def test_cancel_frees_blocks(self, params):
+        """A cancelled (abandoned) request retires its slot at the next
+        tick and returns its blocks to the free list."""
+        eng = DecodeScheduler(CFG, params, num_slots=2, max_seq_len=64,
+                              paged=True, block_size=8)
+        eng.start()
+        usable = eng.num_blocks - 1
+        try:
+            req = eng.submit(np.arange(8, dtype=np.int32), max_new=48)
+            deadline = time.monotonic() + 30
+            while eng.active_slots() == 0 and time.monotonic() < deadline:
+                time.sleep(0.005)
+            assert eng.active_slots() == 1
+            assert eng.free_block_count() < usable
+            eng.cancel(req)
+            while ((eng.active_slots() or
+                    eng.free_block_count() != usable) and
+                   time.monotonic() < deadline):
+                time.sleep(0.005)
+            assert eng.active_slots() == 0
+            assert eng.free_block_count() == usable
+            assert eng.stats["cancelled"] >= 1
+            with pytest.raises(RuntimeError, match="cancelled"):
+                req.wait(10)
+            # the engine keeps serving exactly after a cancellation
+            toks = np.arange(9, dtype=np.int32)
+            np.testing.assert_array_equal(
+                eng.generate(toks, max_new=4),
+                reference_generate(params, toks, 4))
+        finally:
+            eng.stop()
+
+    def test_generate_timeout_cancels(self, params):
+        """generate() that times out marks its request abandoned so the
+        engine reclaims the slot instead of decoding to max_new."""
+        eng = DecodeScheduler(CFG, params, num_slots=2, max_seq_len=64,
+                              paged=True, block_size=8)
+        eng.start()
+        try:
+            with pytest.raises(TimeoutError):
+                eng.generate(np.arange(6, dtype=np.int32), max_new=40,
+                             timeout=0.0)
+            deadline = time.monotonic() + 30
+            while ((eng.active_slots() or
+                    eng.free_block_count() != eng.num_blocks - 1) and
+                   time.monotonic() < deadline):
+                time.sleep(0.005)
+            assert eng.active_slots() == 0
+            assert eng.free_block_count() == eng.num_blocks - 1
+        finally:
+            eng.stop()
+
+    def test_submit_validates_block_budget(self, params):
+        eng = DecodeScheduler(CFG, params, num_slots=2, max_seq_len=64,
+                              paged=True, block_size=8, num_blocks=3)
+        # 2 usable blocks = 16 positions; prompt 20 + max_new 8 passes
+        # the max_seq_len check but can never be paged in.
+        with pytest.raises(ValueError, match="blocks"):
+            eng.submit(np.arange(20, dtype=np.int32), max_new=8)
+        assert not eng.admits(20, 8)
+        assert eng.admits(8, 8)
+
+    def test_stats_snapshot_under_concurrent_readers(self, engine):
+        """stats/active_slots snapshot under the engine lock: a reader
+        hammering them during a burst must never see torn state (e.g.
+        finished > requests) or crash."""
+        stop = threading.Event()
+        torn = []
+
+        def reader():
+            while not stop.is_set():
+                s = engine.stats
+                if s["finished"] > s["requests"]:
+                    torn.append(s)
+                engine.active_slots()
+
+        t = threading.Thread(target=reader)
+        t.start()
+        try:
+            rng = np.random.default_rng(3)
+            prompts = [rng.integers(0, CFG.vocab_size, 8).astype(np.int32)
+                       for _ in range(6)]
+            reqs = [engine.submit(p, 4) for p in prompts]
+            [r.wait(120) for r in reqs]
+        finally:
+            stop.set()
+            t.join(timeout=10)
+        assert not torn
+
+
+class TestPagedCacheHelpers:
+    def test_insert_scatters_blocks_and_table(self, params):
+        pool = MD.init_paged_cache(CFG, 3, 32, block_size=8)
+        assert pool["tables"].shape == (3, 4)
+        row = MD.init_cache(CFG, 1, 32)
+        toks = np.arange(11, dtype=np.int32)
+        _, row = MD.prefill(params, CFG, {"tokens": toks[None]}, row)
+        pool = MD.cache_insert_slot_paged(
+            CFG, pool, row, 1, jnp.asarray([4, 2], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(pool["len"]), [0, 11, 0])
+        np.testing.assert_array_equal(np.asarray(pool["tables"])[1],
+                                      [4, 2, -1, -1])
+        pos = np.asarray(pool["layers"]["s0"]["pos"])
+        np.testing.assert_array_equal(pos[0, 4], np.arange(8))
+        np.testing.assert_array_equal(pos[0, 2, :3], [8, 9, 10])
+        assert np.all(pos[0, 2, 3:] == -1)
+        assert np.all(pos[0, 1] == -1)           # unassigned untouched
+
+    def test_release_detaches_table_only(self, params):
+        pool = MD.init_paged_cache(CFG, 2, 32, block_size=8)
+        row = MD.init_cache(CFG, 1, 32)
+        toks = np.arange(5, dtype=np.int32)
+        _, row = MD.prefill(params, CFG, {"tokens": toks[None]}, row)
+        pool = MD.cache_insert_slot_paged(
+            CFG, pool, row, 0, jnp.asarray([1], jnp.int32))
+        pool = MD.cache_insert_slot_paged(
+            CFG, pool, row, 1, jnp.asarray([3], jnp.int32))
+        pool = MD.cache_release_slot_paged(pool, 0)
+        np.testing.assert_array_equal(
+            np.asarray(pool["tables"]),
+            [[-1, -1, -1, -1], [3, -1, -1, -1]])
+        # neighbor's blocks untouched by the release
+        pos = np.asarray(pool["layers"]["s0"]["pos"])
+        assert np.any(pos[0, 3] >= 0)
+
+    def test_estimate_scales_with_blocks_not_capacity(self):
+        full = MD.estimate_paged_cache_bytes(CFG, 8, 512)
+        half = MD.estimate_paged_cache_bytes(
+            CFG, 8, 512, num_blocks=MD.default_num_blocks(8, 512) // 2)
+        contiguous = MD.estimate_pool_cache_bytes(CFG, 8, 512)
+        assert half < full
+        assert abs(full - contiguous) / contiguous < 0.05
+        with pytest.raises(ValueError, match="window"):
+            MD.init_paged_cache(CFG.with_overrides(window=16), 2, 32)
+
+    def test_windowed_config_falls_back_to_contiguous(self, params):
+        eng = DecodeScheduler(CFG.with_overrides(window=16), params,
+                              num_slots=2, max_seq_len=32)
+        assert not eng.paged
 
 
 class TestSlotCacheHelpers:
