@@ -1,0 +1,179 @@
+"""Transport cost of the typed API: in-process calls vs HTTP/JSON over
+localhost (the first real process-boundary numbers in the repo — "On
+the Cost of Model-Serving Frameworks" shows transport + (de)serialization
+are first-order costs in real serving systems).
+
+Measures:
+
+  * **Predict latency**: median us/call, in-process PredictionService
+    vs ServingClient over a localhost socket (same model, same batch) —
+    the wire + codec overhead per RPC.
+  * **Predict throughput**: requests/s at fixed client concurrency,
+    both transports (the threaded server must not serialize clients).
+  * **Generate tok/s**: blocking HTTP vs streamed NDJSON chunks vs the
+    in-process baseline; streamed concatenation is asserted
+    bit-identical to the blocking result while we're at it.
+
+Writes ``BENCH_transport.json`` (CI bench-smoke uploads it) — the perf
+trajectory for the transport hot path across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as MD
+from repro.serving import api
+from repro.serving.server import ModelServer
+from repro.serving.transport import ServingClient
+from repro.training.checkpoint import save_checkpoint
+
+CFG = get_config("tfs-classifier", smoke=True)
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+ITERS = 40 if SMOKE else 300
+THREADS = 4 if SMOKE else 8
+REQS_PER_THREAD = 10 if SMOKE else 40
+PROMPT, NEW = 16, 8 if SMOKE else 32
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": rng.integers(0, CFG.vocab_size, (1, PROMPT))}
+
+
+def _latency_us(fn, iters=ITERS):
+    fn()                                    # warm
+    lats = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        lats.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(lats)
+
+
+def _throughput_rps(fn, threads=THREADS, per_thread=REQS_PER_THREAD):
+    fn()                                    # warm
+    t0 = time.perf_counter()
+
+    def worker():
+        for _ in range(per_thread):
+            fn()
+
+    ts = [threading.Thread(target=worker) for _ in range(threads)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    return threads * per_thread / (time.perf_counter() - t0)
+
+
+def main(report):
+    tmp = tempfile.mkdtemp(prefix="bench_transport_")
+    params = MD.init_params(jax.random.PRNGKey(0), CFG)
+    save_checkpoint(tmp, "clf", 1, params, {"arch": CFG.name})
+    srv = ModelServer({"clf": os.path.join(tmp, "clf")},
+                      cfg_for=lambda n: CFG)
+    srv.start_sync()
+    http = srv.serve_http()
+    client = ServingClient(*http.address)
+    results = {"iters": ITERS, "threads": THREADS,
+               "prompt": PROMPT, "max_new": NEW,
+               "latency_us": {}, "throughput_rps": {},
+               "generate_tok_s": {}}
+    try:
+        spec = api.ModelSpec("clf")
+        b = _batch()
+
+        def inproc():
+            srv.prediction.predict(api.PredictRequest(spec, b,
+                                                      batched=False))
+
+        def over_http():
+            client.predict(api.PredictRequest(spec, b, batched=False))
+
+        # Pure wire RTT (no model in the path): the floor any RPC pays.
+        rtt = _latency_us(client.health)
+        lat_in = _latency_us(inproc)
+        lat_http = _latency_us(over_http)
+        results["latency_us"] = {"http_rtt": rtt, "inproc": lat_in,
+                                 "http": lat_http}
+        report("transport_rtt_us", rtt,
+               "HTTP+JSON round trip, empty body")
+        report("transport_predict_inproc_us", lat_in, "median latency")
+        report("transport_predict_http_us", lat_http,
+               f"median over localhost ({lat_http / lat_in:.2f}x "
+               f"in-process; wire floor {rtt:.0f}us)")
+
+        rps_in = _throughput_rps(inproc)
+        rps_http = _throughput_rps(over_http)
+        results["throughput_rps"] = {"inproc": rps_in, "http": rps_http}
+        report("transport_predict_http_rps", 1e6 / rps_http,
+               f"{rps_http:,.0f} req/s over HTTP at {THREADS} clients "
+               f"vs {rps_in:,.0f} in-process")
+
+        toks = np.random.default_rng(1).integers(
+            0, CFG.vocab_size, (PROMPT,)).astype(np.int32)
+        blocking_ref = srv.generate("clf", tokens=toks, max_new=NEW)
+
+        def gen_blocking():
+            return client.generate(api.GenerateRequest(
+                spec, tokens=toks, max_new=NEW))
+
+        def gen_streamed():
+            return list(client.generate(api.GenerateRequest(
+                spec, tokens=toks, max_new=NEW, stream=True)))
+
+        gen_blocking(), gen_streamed()      # warm
+        out_b, chunks = gen_blocking(), gen_streamed()
+
+        def timed(fn, runs=3):              # median: decode ticks jitter
+            dts = []
+            for _ in range(runs):
+                t0 = time.perf_counter()
+                fn()
+                dts.append(time.perf_counter() - t0)
+            return statistics.median(dts)
+
+        dt_b = timed(gen_blocking)
+        dt_s = timed(gen_streamed)
+        # first-token latency: one more streamed run, timed to chunk 0
+        t0 = time.perf_counter()
+        it = client.generate(api.GenerateRequest(spec, tokens=toks,
+                                                 max_new=NEW,
+                                                 stream=True))
+        next(it)
+        t_first = time.perf_counter() - t0
+        list(it)
+        np.testing.assert_array_equal(
+            np.asarray([c.token for c in chunks], np.int32),
+            blocking_ref[0])                # stream == blocking, bitwise
+        np.testing.assert_array_equal(out_b.tokens, blocking_ref)
+        results["generate_tok_s"] = {
+            "blocking_http": NEW / dt_b, "streamed_http": NEW / dt_s,
+            "first_token_s": t_first}
+        results["bit_identical"] = True
+        report("transport_generate_blocking_tok_s", 1e6 / (NEW / dt_b),
+               f"{NEW / dt_b:,.0f} tok/s blocking over HTTP")
+        report("transport_generate_streamed_tok_s", 1e6 / (NEW / dt_s),
+               f"{NEW / dt_s:,.0f} tok/s streamed (first token "
+               f"{t_first * 1e3:.1f}ms, stream==blocking bitwise)")
+
+        out = os.environ.get("REPRO_BENCH_OUT", ".")
+        path = os.path.join(out, "BENCH_transport.json")
+        with open(path, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {path}")
+    finally:
+        client.close()
+        http.stop()
+        srv.stop()
+
+
+if __name__ == "__main__":
+    main(lambda name, us, d="": print(f"{name},{us:.3f},{d}"))

@@ -37,12 +37,14 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_batching, bench_decode_engine,
                             bench_hosted, bench_isolation, bench_lookup,
-                            bench_serving_engine, bench_transitions)
+                            bench_serving_engine, bench_transitions,
+                            bench_transport)
     modules = [bench_lookup, bench_isolation, bench_batching,
                bench_transitions, bench_hosted, bench_serving_engine,
-               bench_decode_engine]
+               bench_decode_engine, bench_transport]
     if args.smoke:
-        modules = [bench_lookup, bench_batching, bench_decode_engine]
+        modules = [bench_lookup, bench_batching, bench_decode_engine,
+                   bench_transport]
     failures = 0
     for mod in modules:
         try:

@@ -4,6 +4,11 @@ the Synchronizer pushes aspirations to every replica, the Router serves
 with hedged backups, the Autoscaler reacts to load, and canary/rollback
 are one-line commands.
 
+Every replica serves its typed API on its own localhost port
+(``serve_replicas=True``), so routed traffic genuinely crosses
+sockets — Router -> ServingClient -> replica HTTP server — and
+operator label pins propagate cluster-wide over ModelService.
+
 Run: PYTHONPATH=src python examples/hosted_tfs2.py
 """
 import os
@@ -18,8 +23,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.configs import get_config
 from repro.core import CallableLoader, ResourceEstimate, ServableId
 from repro.hosted import (Autoscaler, AutoscalerConfig, Controller,
-                          LatencyModel, Router, ServingJob, Synchronizer,
-                          TransactionalStore)
+                          LatencyModel, ModelSpec, Router, ServingJob,
+                          Synchronizer, TransactionalStore)
 from repro.models import model as MD
 from repro.serving.engine import JaxModelServable
 
@@ -39,10 +44,12 @@ def main():
     jobs = {
         "cpu-job-a": ServingJob(
             "cpu-job-a", capacity_bytes=4_000_000_000, min_replicas=2,
+            serve_replicas=True,
             latency_factory=lambda i: LatencyModel(0.001, 0.03, 0.05,
                                                    seed=i)),
         "cpu-job-b": ServingJob("cpu-job-b",
-                                capacity_bytes=1_000_000_000),
+                                capacity_bytes=1_000_000_000,
+                                serve_replicas=True),
     }
     store = TransactionalStore()
     ctrl = Controller(store, {j: jobs[j].capacity_bytes for j in jobs})
@@ -54,17 +61,27 @@ def main():
 
     sync = Synchronizer("dc-1", ctrl, jobs, loader_factory)
     print("synchronizer:", sync.sync_once())
+    for job in jobs.values():
+        for r in job.replicas:
+            print(f"  {r.name} serving on {r.address[0]}:{r.address[1]}")
 
     router = Router(sync, jobs, hedge_delay_s=0.005)
     batch = {"tokens": np.random.randint(0, 512, (1, 16))}
     out = router.infer("ranker", batch)
+    served = sum(r.transport.requests_served
+                 for job in jobs.values() for r in job.replicas)
     print("routed inference ->", out.shape,
-          f"(hedged={router.stats['hedged']})")
+          f"(hedged={router.stats['hedged']}, "
+          f"{served} request(s) crossed sockets)")
 
     print("\n-- new version arrives; canary it --")
     ctrl.add_version("ranker", 2)
     ctrl.set_policy("ranker", "canary")
     print("loaded:", sync.sync_once())
+    print("-- operator pins label 'prod' to v1 cluster-wide --")
+    n = sync.set_version_labels("ranker", {"prod": 1})
+    print(f"label pushed over ModelService to {n} replica(s)")
+    router.infer(ModelSpec("ranker", label="prod"), batch)
     print("-- looks good; promote --")
     ctrl.set_policy("ranker", "latest")
     print("loaded:", sync.sync_once())
@@ -79,6 +96,7 @@ def main():
     print(f"{n} requests in 1s ->", scaler.tick())
 
     router.shutdown()
+    sync.shutdown()
     for j in jobs.values():
         j.shutdown()
     print("OK")

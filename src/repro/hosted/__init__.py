@@ -1,6 +1,9 @@
-"""TFS² — the hosted model-serving service (paper §3.1), simulated
-in-process: Controller (bin-packing + transactional state), Synchronizer
-(per-datacenter propagation), Router (hedged requests), Autoscaler.
+"""TFS² — the hosted model-serving service (paper §3.1): Controller
+(bin-packing + transactional state), Synchronizer (per-datacenter
+propagation + cluster-wide version labels), Router (hedged requests),
+Autoscaler. Replicas can serve their typed API over HTTP on real
+localhost sockets (``ServingJob(serve_replicas=True)``); without it the
+stack runs fully in-process for tests.
 """
 from repro.hosted.autoscaler import Autoscaler, AutoscalerConfig
 from repro.hosted.controller import AdmissionError, Controller, ModelEntry

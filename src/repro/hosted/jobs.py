@@ -5,6 +5,13 @@ same AspiredVersionsManager — but with the *RPC-based Source* instead of
 the file-system Source (paper footnote 6): the Synchronizer pushes
 aspired versions over this source and reads load status back.
 
+A replica can **serve on a port** (``JobReplica.serve`` /
+``ServingJob(serve_replicas=True)``): its PredictionService +
+ModelService go up behind an ``HttpServingServer``, and the Router
+reaches it through a ``ServingClient`` over a real localhost socket —
+the deployment shape of the paper — instead of direct method calls
+(which remain the default for unit tests).
+
 A ``JobReplica`` optionally injects simulated per-request latency (base +
 heavy tail) so the Router's hedged-request benefit is measurable in
 benchmarks without real hardware contention.
@@ -17,6 +24,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import AspiredVersion, AspiredVersionsManager, Source
+from repro.serving import api
 from repro.serving.api import ModelSpec, PredictionService
 
 
@@ -45,6 +53,28 @@ class LatencyModel:
         return self.base_s + (self.tail_s if tail else 0.0)
 
 
+class _ReplicaTransportFacade:
+    """What a replica's HTTP server fronts: every transported RPC pays
+    the replica's latency model and bumps its request counter (so
+    hedging benchmarks and the autoscaler see network traffic exactly
+    like in-process traffic), then delegates to the replica's typed
+    PredictionService."""
+
+    def __init__(self, replica: "JobReplica"):
+        self._replica = replica
+
+    def __getattr__(self, name: str):
+        fn = getattr(self._replica.prediction, name)
+        if not callable(fn):
+            return fn
+
+        def accounted(*args, **kwargs):
+            self._replica._account()
+            return fn(*args, **kwargs)
+
+        return accounted
+
+
 class JobReplica:
     """One replica of a serving job: manager + RPC source + stats."""
 
@@ -63,8 +93,15 @@ class JobReplica:
             self.manager.set_aspired_versions)
         # Replica inference routes through the same typed service core
         # as a stand-alone ModelServer (bare configuration: direct
-        # calls, no cross-request batching on the replica).
+        # calls, no cross-request batching on the replica). ModelService
+        # has no file-system source here — versions arrive over the RPC
+        # source — but labels/status are served (the Synchronizer
+        # propagates SetVersionLabels through it).
         self.prediction = PredictionService(self.manager)
+        self.models = api.ModelService(self.manager)
+        self._transport = None
+        self._client = None
+        self._client_lock = threading.Lock()
         self._req_count = 0
         self._req_lock = threading.Lock()
 
@@ -78,7 +115,55 @@ class JobReplica:
     def loaded_status(self) -> Dict[str, Tuple[int, ...]]:
         return self.manager.list_available()
 
+    # -- network serving -----------------------------------------------------
+    def serve(self, host: str = "127.0.0.1",
+              port: int = 0) -> Tuple[str, int]:
+        """Start serving this replica's typed API over HTTP on
+        ``(host, port)`` (``port=0`` picks a free one); idempotent.
+        Returns the bound address. Routed traffic then crosses a real
+        socket: Router -> ServingClient -> this replica."""
+        from repro.serving.transport import HttpServingServer
+        with self._client_lock:
+            if self._transport is None:
+                self._transport = HttpServingServer(
+                    _ReplicaTransportFacade(self), self.models,
+                    host=host, port=port).start()
+            return self._transport.address
+
+    @property
+    def address(self) -> Optional[Tuple[str, int]]:
+        """(host, port) when serving over HTTP, else None (in-process)."""
+        transport = self._transport
+        return None if transport is None else transport.address
+
+    @property
+    def transport(self):
+        return self._transport
+
+    def client(self):
+        """Shared typed client to this replica's transport (None when
+        not serving). Owned HERE — consumers (Router, Synchronizer)
+        borrow it, so it is closed exactly when the replica shuts down
+        instead of lingering in per-consumer caches after a
+        scale-down. The lock makes it safe against a concurrent
+        shutdown (scale-down under load): after teardown this simply
+        returns None and callers fall back in-process / NotFound."""
+        with self._client_lock:
+            if self._transport is None:
+                return None
+            if self._client is None:
+                from repro.serving.transport import ServingClient
+                self._client = ServingClient(*self._transport.address)
+            return self._client
+
     # -- Router-facing ---------------------------------------------------------
+    def _account(self) -> None:
+        delay = self.latency.sample()
+        if delay:
+            time.sleep(delay)
+        with self._req_lock:
+            self._req_count += 1
+
     def infer(self, model, method: str, request: Any,
               version: Optional[int] = None) -> Any:
         """Serve one RPC. ``model`` is a ``ModelSpec`` (label-aware) or a
@@ -86,11 +171,7 @@ class JobReplica:
         resolved against this replica's own manager at request time."""
         spec = model if isinstance(model, ModelSpec) \
             else ModelSpec(model, version)
-        delay = self.latency.sample()
-        if delay:
-            time.sleep(delay)
-        with self._req_lock:
-            self._req_count += 1
+        self._account()
         return self.prediction.call(spec, method, request)
 
     def take_request_count(self) -> int:
@@ -103,19 +184,33 @@ class JobReplica:
         return self.manager.ram_committed_bytes
 
     def shutdown(self) -> None:
+        with self._client_lock:
+            client, self._client = self._client, None
+            transport, self._transport = self._transport, None
+        if client is not None:
+            client.close()
+        if transport is not None:
+            transport.stop()
         self.manager.shutdown()
 
 
 class ServingJob:
-    """A job group: N identical replicas (autoscaler adds/removes them)."""
+    """A job group: N identical replicas (autoscaler adds/removes them).
+
+    ``serve_replicas=True`` brings every replica (including ones added
+    later by ``scale_to``) up on its own localhost port, so routed
+    traffic crosses real sockets."""
 
     def __init__(self, job_id: str, capacity_bytes: int,
                  latency_factory: Callable[[int], LatencyModel] = None,
-                 min_replicas: int = 1, max_replicas: int = 8):
+                 min_replicas: int = 1, max_replicas: int = 8,
+                 serve_replicas: bool = False, host: str = "127.0.0.1"):
         self.job_id = job_id
         self.capacity_bytes = capacity_bytes
         self.min_replicas = min_replicas
         self.max_replicas = max_replicas
+        self.serve_replicas = serve_replicas
+        self.host = host
         self._latency_factory = latency_factory or (lambda i: LatencyModel())
         self._lock = threading.Lock()
         self.replicas: List[JobReplica] = []
@@ -127,21 +222,35 @@ class ServingJob:
         idx = len(self.replicas)
         r = JobReplica(self.job_id, idx, self.capacity_bytes,
                        self._latency_factory(idx))
+        if self.serve_replicas:
+            r.serve(host=self.host)
         self.replicas.append(r)
         return r
 
     def scale_to(self, n: int) -> None:
         n = max(self.min_replicas, min(self.max_replicas, n))
+        removed: List[JobReplica] = []
         with self._lock:
             while len(self.replicas) < n:
                 r = self._add_replica_locked()
                 r.sync_aspirations(self._aspirations)
             while len(self.replicas) > n:
-                self.replicas.pop().shutdown()
+                removed.append(self.replicas.pop())
+        # Shut down OUTSIDE the lock: a serving replica drains its HTTP
+        # transport (bounded but slow), and holding the lock here would
+        # stall routing/sync for the whole job meanwhile.
+        for r in removed:
+            r.shutdown()
 
     def num_replicas(self) -> int:
         with self._lock:
             return len(self.replicas)
+
+    def replica_snapshot(self) -> List[JobReplica]:
+        """Point-in-time copy of the replica list, safe to iterate (and
+        RPC against) without holding the job's lock."""
+        with self._lock:
+            return list(self.replicas)
 
     def sync_aspirations(self, aspirations) -> None:
         with self._lock:
@@ -170,6 +279,7 @@ class ServingJob:
 
     def shutdown(self) -> None:
         with self._lock:
-            for r in self.replicas:
-                r.shutdown()
+            replicas = list(self.replicas)
             self.replicas.clear()
+        for r in replicas:
+            r.shutdown()

@@ -8,6 +8,15 @@ Requests are addressed by ``ModelSpec`` (name + version OR label): the
 router places by name, and the chosen replica resolves version/label
 against its own manager at request time, so a canary promote propagating
 through the Synchronizer flips routing without restarting anything.
+
+Transport: replicas that are serving on a port (``JobReplica.serve`` /
+``ServingJob(serve_replicas=True)``) are reached through the replica's
+own shared ``ServingClient`` over a real localhost socket — the request
+crosses the wire exactly as in a multi-process deployment, and the
+client dies with its replica (no per-consumer cache to leak after a
+scale-down). Replicas without an address fall back to direct in-process
+calls (the unit-test configuration). ``transport="inproc"`` forces the
+fallback everywhere.
 """
 from __future__ import annotations
 
@@ -16,7 +25,7 @@ import threading
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from typing import Any, Dict, Optional
 
-from repro.hosted.jobs import ServingJob
+from repro.hosted.jobs import JobReplica, ServingJob
 from repro.hosted.synchronizer import Synchronizer
 from repro.serving.api import ModelSpec, NotFound
 
@@ -29,10 +38,14 @@ class Router:
     def __init__(self, synchronizer: Synchronizer,
                  jobs: Dict[str, ServingJob],
                  hedge_delay_s: Optional[float] = 0.010,
-                 max_workers: int = 32):
+                 max_workers: int = 32,
+                 transport: str = "auto"):
+        if transport not in ("auto", "inproc"):
+            raise ValueError(f"unknown transport {transport!r}")
         self.sync = synchronizer
         self.jobs = jobs
         self.hedge_delay_s = hedge_delay_s
+        self.transport = transport
         self._rr = itertools.count()
         self._pool = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="tfs2-router")
@@ -43,10 +56,15 @@ class Router:
         loaded = self.sync.loaded_status()
         for jid, models in loaded.items():
             if model in models and models[model]:
-                job = self.jobs[jid]
-                with job._lock:
-                    return list(job.replicas)
+                return self.jobs[jid].replica_snapshot()
         return []
+
+    def _infer_on(self, replica: JobReplica, spec: ModelSpec,
+                  method: str, request: Any) -> Any:
+        client = None if self.transport == "inproc" else replica.client()
+        if client is None:
+            return replica.infer(spec, method, request)
+        return client.call(spec, method, request)
 
     def infer(self, model, request: Any, method: str = "predict",
               version: Optional[int] = None,
@@ -65,9 +83,10 @@ class Router:
         primary = replicas[start % len(replicas)]
 
         if self.hedge_delay_s is None or len(replicas) == 1:
-            return primary.infer(spec, method, request)
+            return self._infer_on(primary, spec, method, request)
 
-        f1 = self._pool.submit(primary.infer, spec, method, request)
+        f1 = self._pool.submit(self._infer_on, primary, spec, method,
+                               request)
         done, _ = wait([f1], timeout=self.hedge_delay_s)
         if done:
             return f1.result()
@@ -75,7 +94,8 @@ class Router:
         backup = replicas[(start + 1) % len(replicas)]
         with self._stats_lock:
             self.stats["hedged"] += 1
-        f2 = self._pool.submit(backup.infer, spec, method, request)
+        f2 = self._pool.submit(self._infer_on, backup, spec, method,
+                               request)
         done, _ = wait([f1, f2], return_when=FIRST_COMPLETED)
         winner = done.pop()
         if winner is f2:

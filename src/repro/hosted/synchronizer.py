@@ -2,18 +2,28 @@
 desired state, instructs each serving job which model versions to keep
 loaded (via the jobs' RPC Sources), and reports successfully-loaded
 models to the Router for request forwarding.
+
+It also owns **cluster-wide version labels**: an operator calls
+``set_version_labels`` once and the Synchronizer propagates it to every
+replica hosting the model through the replica's ModelService — over the
+replica's HTTP transport when it is serving on a port, in-process
+otherwise — and re-asserts the desired labels on every ``sync_once`` so
+replicas added later (autoscale) or re-synced after a version transition
+converge to the same label map. A desired label whose target version
+disappears from a replica is dropped (mirroring the manager's own
+retire-drops-label semantics) instead of being re-asserted forever.
 """
 from __future__ import annotations
 
 import logging
 import threading
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
-from repro.core import AspiredVersion, CallableLoader, ResourceEstimate, \
-    ServableId
+from repro.core import AspiredVersion, ServableId
 from repro.core.loader import Loader
 from repro.hosted.controller import Controller
-from repro.hosted.jobs import ServingJob
+from repro.hosted.jobs import JobReplica, ServingJob
+from repro.serving.api import NotFound, ServingError
 
 log = logging.getLogger(__name__)
 
@@ -33,9 +43,17 @@ class Synchronizer:
         self.loader_factory = loader_factory
         self._lock = threading.Lock()
         self._loaded: Dict[str, Dict[str, Tuple[int, ...]]] = {}
+        # model -> {label: version | None}: the operator-desired
+        # explicit labels, re-applied cluster-wide on every sync.
+        # ``None`` is a clear TOMBSTONE: a clear whose push to some
+        # replica failed transiently must keep being re-pushed until
+        # every replica converges (clears are idempotent no-ops once
+        # applied), or a stale pin would survive on that replica.
+        self._desired_labels: Dict[str, Dict[str, Optional[int]]] = {}
 
     def sync_once(self) -> Dict[str, Dict[str, Tuple[int, ...]]]:
-        """Push desired state to every job; gather loaded status."""
+        """Push desired state to every job; gather loaded status;
+        re-assert desired version labels on every replica."""
         desired = self.controller.desired_state()
         loaded: Dict[str, Dict[str, Tuple[int, ...]]] = {}
         for jid, job in self.jobs.items():
@@ -56,8 +74,113 @@ class Synchronizer:
             loaded[jid] = job.loaded_status()
         with self._lock:
             self._loaded = loaded
+        self._reassert_labels(loaded)
         return loaded
 
     def loaded_status(self) -> Dict[str, Dict[str, Tuple[int, ...]]]:
         with self._lock:
             return dict(self._loaded)
+
+    # -- label propagation (ModelService.SetVersionLabels, cluster-wide) --
+    @staticmethod
+    def _model_service(replica: JobReplica):
+        """The replica's ModelService — through its HTTP transport when
+        it serves on a port (the labels RPC crosses the same wire as
+        inference, via the replica-owned shared client), in-process
+        otherwise."""
+        client = replica.client()
+        return replica.models if client is None else client
+
+    def _replicas_hosting(self, name: str):
+        """Snapshot of the replicas hosting ``name``. A list, not a
+        generator: the caller performs per-replica RPCs while
+        iterating, which must happen outside the job lock."""
+        out = []
+        for jid, job in self.jobs.items():
+            if name in job.loaded_status():
+                out.extend(job.replica_snapshot())
+        return out
+
+    def set_version_labels(self, name: str,
+                           labels: Dict[str, Optional[int]]) -> int:
+        """Record desired labels (value ``None`` clears one) and push
+        them to every replica hosting ``name`` now; future ``sync_once``
+        calls keep re-asserting them (new replicas converge). Returns
+        the number of replicas that applied the change; raises
+        ``FailedPrecondition``/``NotFound`` if no replica could (e.g.
+        labeling a version that is READY nowhere)."""
+        with self._lock:
+            cur = dict(self._desired_labels.get(name, {}))
+            for lbl, ver in labels.items():
+                cur[lbl] = None if ver is None else int(ver)
+            self._desired_labels[name] = cur
+        applied, first_err = 0, None
+        for replica in self._replicas_hosting(name):
+            try:
+                self._model_service(replica).set_version_labels(
+                    name, labels)
+                applied += 1
+            except ServingError as exc:
+                first_err = first_err or exc
+                log.warning("label push %s -> %s failed: %s",
+                            labels, replica.name, exc)
+        if applied == 0:
+            raise first_err or NotFound(
+                f"model {name!r} is not loaded on any replica")
+        return applied
+
+    def version_labels(self, name: str) -> Dict[str, int]:
+        with self._lock:
+            return {lbl: v for lbl, v in
+                    self._desired_labels.get(name, {}).items()
+                    if v is not None}
+
+    def _reassert_labels(self, loaded) -> None:
+        with self._lock:
+            desired = {m: dict(ls) for m, ls in
+                       self._desired_labels.items() if ls}
+        for name, labels in desired.items():
+            replicas = self._replicas_hosting(name)
+            if not replicas:
+                continue
+            # A desired PIN dies only when its version is READY on NO
+            # replica hosting the model (retired cluster-wide — the
+            # managers already dropped their local copies). A single
+            # degraded replica missing the version must not erase the
+            # operator's pin for everyone else. Clear tombstones
+            # (``None``) are always re-pushed — idempotent — so a
+            # transiently-missed clear still converges.
+            present = set()
+            for replica in replicas:
+                present.update(replica.loaded_status().get(name, ()))
+            dead = {lbl for lbl, v in labels.items()
+                    if v is not None and v not in present}
+            live = {lbl: v for lbl, v in labels.items()
+                    if lbl not in dead}
+            for replica in replicas:
+                have = set(replica.loaded_status().get(name, ()))
+                applicable = {lbl: v for lbl, v in live.items()
+                              if v is None or v in have}
+                if not applicable:
+                    continue
+                try:
+                    self._model_service(replica).set_version_labels(
+                        name, applicable)
+                except ServingError as exc:
+                    log.warning("label re-assert %s on %s failed: %s",
+                                applicable, replica.name, exc)
+            if dead:
+                with self._lock:
+                    kept = self._desired_labels.get(name, {})
+                    for lbl in dead:
+                        # Drop only if the desired pin is still the one
+                        # this pass judged dead — a concurrent
+                        # set_version_labels may have re-pinned the
+                        # label to a new (live) version meanwhile.
+                        if kept.get(lbl) == labels[lbl]:
+                            kept.pop(lbl, None)
+
+    def shutdown(self) -> None:
+        """Replica clients are owned by the replicas themselves (closed
+        in JobReplica.shutdown); nothing synchronizer-owned to tear
+        down."""

@@ -187,6 +187,37 @@ class TokenChunk:
     final: bool                              # last chunk of the stream
 
 
+class TokenStream:
+    """Iterator of ``TokenChunk``s with an explicit ``cancel()``.
+
+    ``cancel()`` abandons the generation: the worker observes the event,
+    cancels the decode-engine request (retiring its slot and returning
+    its paged KV blocks to the free list) and releases the RCU handle.
+    Transports call it when the client disconnects mid-stream; local
+    consumers get it via ``close()``. A stream that is merely dropped
+    (never cancelled, never exhausted) keeps the old contract: the
+    worker decodes to completion and the buffered chunks stay
+    consumable."""
+
+    def __init__(self, gen: Iterator[TokenChunk],
+                 cancel_event: threading.Event):
+        self._gen = gen
+        self._cancel = cancel_event
+
+    def __iter__(self) -> "TokenStream":
+        return self
+
+    def __next__(self) -> TokenChunk:
+        return next(self._gen)
+
+    def cancel(self) -> None:
+        self._cancel.set()
+
+    def close(self) -> None:
+        self.cancel()
+        self._gen.close()
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelVersionStatus:
     version: int
@@ -429,7 +460,7 @@ class PredictionService:
                 handle.release()
 
     def _generate_stream(self, handle: ServableHandle, s: Servable,
-                         req: GenerateRequest) -> Iterator[TokenChunk]:
+                         req: GenerateRequest) -> "TokenStream":
         tokens = np.asarray(req.tokens, np.int32)
         if tokens.ndim == 2 and tokens.shape[0] == 1:
             tokens = tokens[0]
@@ -440,18 +471,23 @@ class PredictionService:
                 "(1, L) tokens")
 
         q: "queue.Queue[tuple]" = queue.Queue()
+        cancel_event = threading.Event()
 
-        # The WORKER owns the handle, not the generator: generation
-        # cannot be cancelled once submitted, so the version must stay
-        # pinned until the worker finishes — even if the consumer closes
-        # the iterator early (or never iterates at all). The queue is
-        # bounded by max_new, so an abandoned stream cannot grow it.
+        # The WORKER owns the handle, not the generator: the version
+        # must stay pinned until the worker finishes — even if the
+        # consumer closes the iterator early (or never iterates at
+        # all). The queue is bounded by max_new, so an abandoned stream
+        # cannot grow it. ``cancel_event`` (TokenStream.cancel, set by
+        # transports on client disconnect) aborts the generation early:
+        # the engine request is cancelled so its slot retires and its
+        # KV blocks free, then the handle releases as usual.
         def worker():
             try:
                 out = s.call("generate", {
                     "tokens": tokens, "max_new": req.max_new,
                     "sampling": req.sampling, "timeout_s": req.timeout_s,
-                    "on_token": lambda i, t: q.put(("tok", i, t))})
+                    "on_token": lambda i, t: q.put(("tok", i, t)),
+                    "cancel": cancel_event})
                 q.put(("done", out, None))
             except BaseException as exc:   # surfaced on the stream
                 q.put(("err", exc, None))
@@ -490,7 +526,7 @@ class PredictionService:
                         raise Unavailable(str(exc)) from exc
                     raise exc
 
-        return stream()
+        return TokenStream(stream(), cancel_event)
 
     def _maybe_attach_engine(self, name: str, s: Servable,
                              req: GenerateRequest) -> None:
@@ -648,5 +684,6 @@ __all__ = [
     "MultiInferenceRequest", "MultiInferenceResponse", "NotFound",
     "PredictRequest", "PredictResponse", "PredictionService",
     "RegressRequest", "RegressResponse", "ReloadConfigRequest",
-    "ReloadConfigResponse", "ServingError", "TokenChunk", "Unavailable",
+    "ReloadConfigResponse", "ServingError", "TokenChunk", "TokenStream",
+    "Unavailable",
 ]

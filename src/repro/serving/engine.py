@@ -164,7 +164,12 @@ class JaxModelServable(Servable):
 
     def generate(self, tokens=None, embeds=None, max_new: int = 16,
                  sampling=None, timeout_s: float = 120.0,
-                 on_token=None, **_) -> np.ndarray:
+                 on_token=None, cancel=None, **_) -> np.ndarray:
+        """``cancel`` is an optional ``threading.Event`` the caller may
+        set to abandon the generation (a disconnected streaming client):
+        engine requests are cancelled so their slots retire and their KV
+        blocks return to the free list instead of decoding to
+        ``max_new`` for nobody."""
         if tokens is not None:
             tokens = np.asarray(tokens, np.int32)
             if tokens.ndim == 1:        # same shape contract both paths
@@ -186,7 +191,7 @@ class JaxModelServable(Servable):
                 # fused decode step.
                 reqs = [eng.submit(row, max_new=max_new, sampling=sampling,
                                    on_token=on_token) for row in tokens]
-                return np.stack([r.wait(timeout_s) for r in reqs])
+                return self._wait_engine(eng, reqs, timeout_s, cancel)
         prompt = tokens if tokens is not None else embeds
         b, s = prompt.shape[:2]
         rngs = ([sampling.make_rng() for _ in range(b)]
@@ -206,12 +211,45 @@ class JaxModelServable(Servable):
         if on_token is not None:
             on_token(0, int(out[0][0]))
         for step in range(max_new - 1):
+            if cancel is not None and cancel.is_set():
+                raise RuntimeError("generation cancelled by client")
             nb = {"tokens": jnp.asarray(out[-1][:, None])}
             logits, cache = self._fns["decode"](self.params, nb, cache)
             out.append(pick(np.asarray(logits)))
             if on_token is not None:
                 on_token(step + 1, int(out[-1][0]))
         return np.stack(out, axis=1)                    # (B, max_new)
+
+    @staticmethod
+    def _wait_engine(eng, reqs, timeout_s: float, cancel) -> np.ndarray:
+        """Wait for engine requests; on timeout, interrupt, or a set
+        ``cancel`` event, cancel every submitted request so the engine
+        retires the slots and frees their KV blocks (nobody will read
+        the results). Without a cancel event this is a plain blocking
+        wait — no polling on the hot path."""
+        try:
+            if cancel is None:
+                return np.stack([r.wait(timeout_s) for r in reqs])
+            deadline = time.monotonic() + timeout_s
+            out = []
+            for r in reqs:
+                while True:
+                    if cancel.is_set():
+                        raise RuntimeError(
+                            "generation cancelled by client")
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        raise TimeoutError("generation timed out")
+                    try:
+                        out.append(r.wait(min(0.02, left)))
+                        break
+                    except TimeoutError:
+                        continue        # poll the cancel event
+            return np.stack(out)
+        except BaseException:
+            for r in reqs:
+                eng.cancel(r)
+            raise
 
     def unload(self) -> None:
         # Paper §2.1.2: free on the manager thread; explicit buffer delete

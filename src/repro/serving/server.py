@@ -16,7 +16,10 @@ with a model-config file.
 from __future__ import annotations
 
 import logging
-from typing import Callable, Dict, Optional
+from typing import TYPE_CHECKING, Callable, Dict, Optional
+
+if TYPE_CHECKING:       # HTTP transport is imported lazily at serve time
+    from repro.serving.transport import HttpServingServer
 
 import numpy as np
 
@@ -88,6 +91,16 @@ class ModelServer:
     def refresh(self) -> None:
         self.source.poll()
         self.manager.await_idle(timeout_s=60)
+
+    def serve_http(self, host: str = "127.0.0.1", port: int = 0,
+                   **kw) -> "HttpServingServer":
+        """Expose this server's PredictionService + ModelService over
+        HTTP/JSON (repro.serving.transport); returns the started
+        transport server (``.address`` is the bound (host, port)).
+        The caller owns it: stop the transport before ``stop()``."""
+        from repro.serving.transport import HttpServingServer
+        return HttpServingServer(self.prediction, self.models,
+                                 host=host, port=port, **kw).start()
 
     def stop(self) -> None:
         self.source.stop_polling()

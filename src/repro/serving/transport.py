@@ -1,0 +1,632 @@
+"""HTTP/JSON transport for the typed serving API (paper §2.2's RPC
+surface, crossed over a real socket).
+
+``HttpServingServer`` wraps a ``PredictionService`` (and optionally a
+``ModelService``) 1:1 — one POST route per RPC, the ``ModelSpec`` in
+the body, tensors as exact dtype/shape/base64 triples
+(``repro.serving.wire``), and the typed error taxonomy mapped onto
+HTTP status codes:
+
+    ==================  ====
+    INVALID_ARGUMENT    400
+    NOT_FOUND           404
+    FAILED_PRECONDITION 412
+    UNAVAILABLE         503
+    (anything else)     500
+    ==================  ====
+
+``Generate(stream=True)`` is server-side streaming: chunked NDJSON,
+one ``TokenChunk`` per line, whose concatenation is bit-identical to
+the blocking result. A client that disconnects mid-stream cancels the
+decode request (``TokenStream.cancel``), so the slot retires and its
+paged KV blocks return to the free list instead of decoding for
+nobody.
+
+Shutdown drains: ``stop()`` flips the server into draining mode —
+requests already executing (including open streams) run to completion
+within a bounded deadline while requests arriving during the drain get
+a clean ``503 UNAVAILABLE`` (never a connection reset) — then the
+listener closes.
+
+``ServingClient`` is the typed counterpart: the same method signatures
+as the in-process ``PredictionService``/``ModelService``, over
+``http.client`` with per-thread persistent connections (streams use a
+dedicated connection so a long generation never head-of-line-blocks
+unary calls). Status codes map back into the typed exceptions, so
+``except api.NotFound`` works identically in-process and across the
+wire.
+
+Everything here is stdlib-only: ``http.server`` + ``http.client``.
+"""
+from __future__ import annotations
+
+import json
+import logging
+import socket
+import threading
+import time
+from http.client import HTTPConnection, HTTPException, RemoteDisconnected
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Iterator, Optional, Tuple, Union
+
+from repro.serving import api, wire
+
+log = logging.getLogger(__name__)
+
+STATUS_FOR_CODE = {
+    "INVALID_ARGUMENT": 400,
+    "NOT_FOUND": 404,
+    "FAILED_PRECONDITION": 412,
+    "UNAVAILABLE": 503,
+    "UNKNOWN": 500,
+}
+EXC_FOR_CODE = {
+    "INVALID_ARGUMENT": api.InvalidArgument,
+    "NOT_FOUND": api.NotFound,
+    "FAILED_PRECONDITION": api.FailedPrecondition,
+    "UNAVAILABLE": api.Unavailable,
+}
+CODE_FOR_STATUS = {v: k for k, v in STATUS_FOR_CODE.items()}
+
+_DISCONNECT_ERRORS = (BrokenPipeError, ConnectionResetError,
+                      ConnectionAbortedError, socket.timeout, OSError)
+
+
+class _ClientGone(Exception):
+    """A socket read/write on the CLIENT connection failed (the peer
+    hung up). Raised only by the handler's own I/O helpers, so a
+    service-side OSError (e.g. a reload hitting an unreadable
+    directory) is never mistaken for a disconnect — that one still
+    gets a real 500 response."""
+
+
+# ---------------------------------------------------------------------------
+# Server
+# ---------------------------------------------------------------------------
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    server_version = "repro-serving"
+    timeout = 60            # idle keep-alive connections eventually close
+
+    # route -> (service attr, request dataclass, service method)
+    UNARY_ROUTES = {
+        "/v1/predict": ("prediction", api.PredictRequest, "predict"),
+        "/v1/classify": ("prediction", api.ClassifyRequest, "classify"),
+        "/v1/regress": ("prediction", api.RegressRequest, "regress"),
+        "/v1/multi_inference": ("prediction", api.MultiInferenceRequest,
+                                "multi_inference"),
+        "/v1/get_model_status": ("models", api.GetModelStatusRequest,
+                                 "get_model_status"),
+        "/v1/reload_config": ("models", api.ReloadConfigRequest,
+                              "reload_config"),
+    }
+
+    def log_message(self, fmt, *args):      # route to logging, not stderr
+        log.debug("%s %s", self.address_string(), fmt % args)
+
+    # -- plumbing ----------------------------------------------------------
+    def _read_raw(self) -> bytes:
+        """Consume the request body. Called unconditionally before ANY
+        response (including 404/503/error paths): leaving unread body
+        bytes on a keep-alive connection would desync the next request
+        on it."""
+        length = int(self.headers.get("Content-Length") or 0)
+        try:
+            return self.rfile.read(length) if length else b"{}"
+        except _DISCONNECT_ERRORS as exc:
+            raise _ClientGone from exc
+
+    @staticmethod
+    def _parse_body(raw: bytes) -> Any:
+        try:
+            return json.loads(raw or b"{}")
+        except (ValueError, UnicodeDecodeError) as exc:
+            raise wire.WireError(f"body is not valid JSON: {exc}") from exc
+
+    def _send_json(self, status: int, payload: Any,
+                   close: bool = False) -> None:
+        body = json.dumps(payload).encode("utf-8")
+        try:
+            self.send_response(status)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            if close:
+                self.send_header("Connection", "close")
+                self.close_connection = True
+            self.end_headers()
+            self.wfile.write(body)
+        except _DISCONNECT_ERRORS as exc:
+            raise _ClientGone from exc
+
+    def _send_error_json(self, exc: BaseException,
+                         close: bool = False) -> None:
+        code = getattr(exc, "code", "UNKNOWN")
+        status = STATUS_FOR_CODE.get(code, 500)
+        self._send_json(status, {"error": {"code": code,
+                                           "message": str(exc)}},
+                        close=close)
+
+    # -- HTTP verbs --------------------------------------------------------
+    def do_GET(self):       # health / readiness probe (curl-able)
+        try:
+            if self.path != "/healthz":
+                self._send_json(404, {"error": {"code": "NOT_FOUND",
+                                                "message": self.path}})
+                return
+            owner: "HttpServingServer" = self.server.owner
+            self._send_json(200, {"status": "draining" if owner.draining
+                                  else "ok"})
+        except _ClientGone:
+            self.close_connection = True
+
+    def do_POST(self):
+        owner: "HttpServingServer" = self.server.owner
+        try:
+            raw = self._read_raw()          # always drain the body
+            if not owner.enter_request():
+                # Draining: a clean typed 503, never a connection reset.
+                self._send_error_json(
+                    api.Unavailable("server is draining"), close=True)
+                return
+            try:
+                try:
+                    self._dispatch(raw)
+                except wire.WireError as exc:
+                    self._send_error_json(exc)
+                except api.ServingError as exc:
+                    self._send_error_json(exc)
+                except _ClientGone:
+                    raise
+                except Exception as exc:    # noqa: BLE001 — wire boundary
+                    log.exception("unhandled error serving %s", self.path)
+                    self._send_error_json(exc)
+            finally:
+                owner.exit_request()
+        except _ClientGone:
+            # Client went away mid-request; nothing to send, nothing to
+            # log beyond debug (a mid-stream disconnect already
+            # cancelled its generation in _handle_generate).
+            log.debug("client disconnected during %s", self.path)
+            self.close_connection = True
+
+    # -- dispatch ----------------------------------------------------------
+    def _dispatch(self, raw: bytes) -> None:
+        owner: "HttpServingServer" = self.server.owner
+        if self.path == "/v1/generate":
+            self._handle_generate(owner, raw)
+            return
+        if self.path == "/v1/call":
+            body = self._parse_body(raw)
+            spec = wire.decode_message(api.ModelSpec,
+                                       body.get("model_spec") or {})
+            out = owner.prediction.call(spec, body.get("method", ""),
+                                        wire.decode_value(
+                                            body.get("request")))
+            self._send_json(200, {"result": wire.encode_value(out)})
+            return
+        if self.path == "/v1/set_version_labels":
+            models = owner.require_models()
+            body = self._parse_body(raw)
+            labels = body.get("labels")
+            if not isinstance(labels, dict):
+                raise wire.WireError("'labels' must be an object")
+            models.set_version_labels(body.get("name", ""), labels)
+            self._send_json(200, {})
+            return
+        route = self.UNARY_ROUTES.get(self.path)
+        if route is None:
+            self._send_json(404, {"error": {
+                "code": "NOT_FOUND",
+                "message": f"no route {self.path!r}"}})
+            return
+        service_attr, req_cls, method = route
+        service = (owner.prediction if service_attr == "prediction"
+                   else owner.require_models())
+        req = wire.decode_message(req_cls, self._parse_body(raw))
+        resp = getattr(service, method)(req)
+        self._send_json(200, wire.encode_message(resp))
+
+    # -- streaming generate ------------------------------------------------
+    def _handle_generate(self, owner: "HttpServingServer",
+                         raw: bytes) -> None:
+        req = wire.decode_message(api.GenerateRequest,
+                                  self._parse_body(raw))
+        out = owner.prediction.generate(req)
+        if not req.stream:
+            self._send_json(200, wire.encode_message(out))
+            return
+        # Chunked NDJSON: one TokenChunk per line, flushed per decode
+        # tick so the client sees tokens as they retire.
+        try:
+            try:
+                self.send_response(200)
+                self.send_header("Content-Type", "application/x-ndjson")
+                self.send_header("Transfer-Encoding", "chunked")
+                self.send_header("Connection", "close")
+                self.close_connection = True
+                self.end_headers()
+                try:
+                    self.connection.setsockopt(socket.IPPROTO_TCP,
+                                               socket.TCP_NODELAY, 1)
+                except OSError:
+                    pass
+                for chunk in out:
+                    self._write_chunk({"token": chunk.token,
+                                       "index": chunk.index,
+                                       "final": chunk.final})
+                self._write_chunk(None)     # terminal 0-length chunk
+            except api.ServingError as exc:
+                self._write_chunk({"error": {"code": exc.code,
+                                             "message": str(exc)}})
+                self._write_chunk(None)
+            except TimeoutError as exc:
+                self._write_chunk({"error": {"code": "UNAVAILABLE",
+                                             "message": str(exc)}})
+                self._write_chunk(None)
+            except _ClientGone:         # disconnect, NOT a stream error
+                raise
+            except Exception as exc:    # noqa: BLE001 — headers are out:
+                # any error must travel IN-stream as a framed chunk; a
+                # second send_response would corrupt the chunked body.
+                log.exception("stream failed mid-flight")
+                self._write_chunk({"error": {"code": "UNKNOWN",
+                                             "message": str(exc)}})
+                self._write_chunk(None)
+        except _ClientGone:
+            # Client hung up mid-stream: abandon the generation so the
+            # decode slot retires and its KV blocks free immediately.
+            out.cancel()
+        finally:
+            out.close()
+
+    def _write_chunk(self, obj: Optional[dict]) -> None:
+        data = b"" if obj is None else (json.dumps(obj).encode("utf-8")
+                                        + b"\n")
+        try:
+            self.wfile.write(f"{len(data):x}\r\n".encode("ascii") + data
+                             + b"\r\n")
+            self.wfile.flush()
+        except _DISCONNECT_ERRORS as exc:
+            raise _ClientGone from exc
+
+
+class _Server(ThreadingHTTPServer):
+    daemon_threads = True
+    allow_reuse_address = True
+    owner: "HttpServingServer"
+
+
+class HttpServingServer:
+    """Threaded HTTP/JSON server over PredictionService + ModelService.
+
+    ``port=0`` binds an ephemeral port (tests / replicas); ``address``
+    is the bound ``(host, port)``. ``stop()`` drains gracefully: new
+    requests get 503 while in-flight ones (streams included) finish
+    within ``drain_timeout_s``.
+    """
+
+    def __init__(self, prediction: Any,
+                 models: Optional[api.ModelService] = None, *,
+                 host: str = "127.0.0.1", port: int = 0,
+                 drain_timeout_s: float = 10.0):
+        self.prediction = prediction
+        self.models = models
+        self._host = host
+        self._port = port
+        self.drain_timeout_s = drain_timeout_s
+        self._httpd: Optional[_Server] = None
+        self._thread: Optional[threading.Thread] = None
+        self._bound: Optional[Tuple[str, int]] = None
+        self._lock = threading.Condition()
+        self._inflight = 0
+        self.requests_served = 0
+        self.draining = False
+
+    # -- request accounting (drain) ----------------------------------------
+    def enter_request(self) -> bool:
+        with self._lock:
+            if self.draining:
+                return False
+            self._inflight += 1
+            self.requests_served += 1
+            return True
+
+    def exit_request(self) -> None:
+        with self._lock:
+            self._inflight -= 1
+            self._lock.notify_all()
+
+    def require_models(self) -> api.ModelService:
+        if self.models is None:
+            raise api.FailedPrecondition(
+                "this server exposes no ModelService")
+        return self.models
+
+    # -- lifecycle ---------------------------------------------------------
+    @property
+    def address(self) -> Tuple[str, int]:
+        """Bound (host, port). Stays readable after ``stop()`` (callers
+        racing a shutdown get a dead-but-well-formed address — their
+        connect fails as Unavailable — rather than an exception here)."""
+        if self._bound is None:
+            raise RuntimeError("server not started")
+        return self._bound
+
+    def start(self) -> "HttpServingServer":
+        if self._httpd is not None:
+            return self
+        self._httpd = _Server((self._host, self._port), _Handler)
+        self._httpd.owner = self
+        self._bound = self._httpd.server_address[:2]
+        with self._lock:
+            self.draining = False       # support stop() -> start() reuse
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, daemon=True,
+            name=f"http-serving:{self._bound[1]}")
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        if self._httpd is None:
+            return
+        with self._lock:
+            self.draining = True
+            if drain:
+                deadline = time.monotonic() + self.drain_timeout_s
+                while self._inflight:
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        log.warning(
+                            "drain deadline: %d request(s) in flight",
+                            self._inflight)
+                        break
+                    self._lock.wait(min(left, 0.1))
+        self._httpd.shutdown()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+        self._httpd.server_close()
+        self._httpd = None
+
+
+# ---------------------------------------------------------------------------
+# Client
+# ---------------------------------------------------------------------------
+
+
+def _raise_for_error(status: int, raw: bytes) -> None:
+    try:
+        err = json.loads(raw)["error"]
+        code, message = err["code"], err["message"]
+    except Exception:
+        code = CODE_FOR_STATUS.get(status, "UNKNOWN")
+        message = raw.decode("utf-8", "replace") or f"HTTP {status}"
+    exc_cls = EXC_FOR_CODE.get(code)
+    if exc_cls is None:
+        raise api.ServingError(message)
+    raise exc_cls(message)
+
+
+class ServingClient:
+    """Typed client with the same method signatures as the in-process
+    services — request dataclasses in, response dataclasses (or a
+    ``TokenChunk`` iterator) out, typed exceptions on failure.
+
+    Thread-safe: unary calls reuse one persistent connection per
+    thread; each stream gets a dedicated connection (closing the
+    stream closes the socket, which is how the server learns the
+    client is gone). Transport-level failures (refused/reset
+    connections) surface as ``api.Unavailable``.
+    """
+
+    def __init__(self, host: str = "127.0.0.1",
+                 port: Optional[int] = None, *, timeout_s: float = 60.0):
+        if port is None:
+            host, _, p = host.partition(":")
+            port = int(p)
+        self._addr = (host, int(port))
+        self._timeout = timeout_s
+        self._local = threading.local()
+        self._conns_lock = threading.Lock()
+        self._conns: set = set()            # LIVE connections only
+
+    # -- transport ---------------------------------------------------------
+    def _new_connection(self) -> HTTPConnection:
+        conn = HTTPConnection(*self._addr, timeout=self._timeout)
+        with self._conns_lock:
+            self._conns.add(conn)
+        return conn
+
+    def _thread_conn(self) -> Tuple[HTTPConnection, bool]:
+        """This thread's persistent connection, plus whether it was
+        freshly created (a fresh connection that fails did NOT die to a
+        stale keep-alive, so it must not be retried)."""
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            return conn, False
+        conn = self._new_connection()
+        self._local.conn = conn
+        return conn, True
+
+    def _discard(self, conn: HTTPConnection) -> None:
+        """Close a connection and stop tracking it — dead connections
+        must not accumulate in a long-lived client (the Router and
+        Synchronizer cache clients for the process lifetime)."""
+        with self._conns_lock:
+            self._conns.discard(conn)
+        try:
+            conn.close()
+        except Exception:       # noqa: BLE001 — best-effort teardown
+            pass
+
+    def _drop_thread_conn(self) -> None:
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            self._discard(conn)
+            self._local.conn = None
+
+    def _request(self, method: str, path: str,
+                 payload: Optional[Any]) -> Any:
+        body = (None if payload is None
+                else json.dumps(payload).encode("utf-8"))
+        headers = {"Content-Type": "application/json"} if body else {}
+        while True:
+            conn, fresh = self._thread_conn()
+            try:
+                conn.request(method, path, body=body, headers=headers)
+                resp = conn.getresponse()
+                raw = resp.read()
+                if resp.status != 200:
+                    _raise_for_error(resp.status, raw)
+                return json.loads(raw)
+            except (RemoteDisconnected, BrokenPipeError,
+                    ConnectionResetError) as exc:
+                self._drop_thread_conn()
+                if not fresh:
+                    # A REUSED keep-alive died before yielding a
+                    # response — the classic server-closed-idle-conn
+                    # case; the request was almost certainly never
+                    # processed, so one reconnect+resend is safe.
+                    continue
+                # A fresh connection failing is a server-side problem;
+                # resending could re-execute a non-idempotent RPC.
+                raise api.Unavailable(
+                    f"transport to {self._addr[0]}:{self._addr[1]} "
+                    f"failed: {exc}") from exc
+            except (HTTPException, ConnectionError, socket.timeout,
+                    OSError) as exc:
+                # Includes IncompleteRead & co: the server may already
+                # have executed the request — never blind-resend.
+                self._drop_thread_conn()
+                raise api.Unavailable(
+                    f"transport to {self._addr[0]}:{self._addr[1]} "
+                    f"failed: {exc}") from exc
+
+    def _post(self, path: str, payload: Any) -> Any:
+        return self._request("POST", path, payload)
+
+    # -- PredictionService surface -----------------------------------------
+    def predict(self, req: api.PredictRequest) -> api.PredictResponse:
+        return wire.decode_message(
+            api.PredictResponse,
+            self._post("/v1/predict", wire.encode_message(req)))
+
+    def classify(self, req: api.ClassifyRequest) -> api.ClassifyResponse:
+        return wire.decode_message(
+            api.ClassifyResponse,
+            self._post("/v1/classify", wire.encode_message(req)))
+
+    def regress(self, req: api.RegressRequest) -> api.RegressResponse:
+        return wire.decode_message(
+            api.RegressResponse,
+            self._post("/v1/regress", wire.encode_message(req)))
+
+    def multi_inference(self, req: api.MultiInferenceRequest
+                        ) -> api.MultiInferenceResponse:
+        return wire.decode_message(
+            api.MultiInferenceResponse,
+            self._post("/v1/multi_inference", wire.encode_message(req)))
+
+    def call(self, spec: api.ModelSpec, method: str, request: Any) -> Any:
+        out = self._post("/v1/call", {
+            "model_spec": wire.encode_message(spec), "method": method,
+            "request": wire.encode_value(request)})
+        return wire.decode_value(out.get("result"))
+
+    def generate(self, req: api.GenerateRequest
+                 ) -> Union[api.GenerateResponse, Iterator[api.TokenChunk]]:
+        if not req.stream:
+            return wire.decode_message(
+                api.GenerateResponse,
+                self._post("/v1/generate", wire.encode_message(req)))
+        return self._generate_stream(req)
+
+    def _generate_stream(self, req: api.GenerateRequest
+                         ) -> Iterator[api.TokenChunk]:
+        conn = self._new_connection()       # dedicated to this stream
+        try:
+            conn.request("POST", "/v1/generate",
+                         body=json.dumps(
+                             wire.encode_message(req)).encode("utf-8"),
+                         headers={"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            if resp.status != 200:
+                _raise_for_error(resp.status, resp.read())
+        except (ConnectionError, socket.timeout, OSError,
+                HTTPException) as exc:
+            self._discard(conn)
+            raise api.Unavailable(f"transport failed: {exc}") from exc
+        except BaseException:       # typed errors from _raise_for_error
+            self._discard(conn)
+            raise
+
+        def stream() -> Iterator[api.TokenChunk]:
+            # Closing this generator closes the socket — the server
+            # notices the disconnect and cancels the decode request.
+            try:
+                while True:
+                    try:
+                        line = resp.readline()
+                        obj = json.loads(line) if line else None
+                    except (HTTPException, ConnectionError,
+                            socket.timeout, OSError, ValueError) as exc:
+                        # Torn frame / dead server mid-stream: same
+                        # typed contract as every unary call.
+                        raise api.Unavailable(
+                            f"stream transport failed: {exc}") from exc
+                    if obj is None:
+                        return
+                    if "error" in obj:
+                        err = obj["error"]
+                        exc_cls = EXC_FOR_CODE.get(err.get("code"),
+                                                   api.ServingError)
+                        raise exc_cls(err.get("message", ""))
+                    chunk = api.TokenChunk(int(obj["token"]),
+                                           int(obj["index"]),
+                                           bool(obj["final"]))
+                    yield chunk
+                    if chunk.final:
+                        return
+            finally:
+                self._discard(conn)
+
+        return stream()
+
+    # -- ModelService surface ----------------------------------------------
+    def get_model_status(self, req: api.GetModelStatusRequest
+                         ) -> api.GetModelStatusResponse:
+        return wire.decode_message(
+            api.GetModelStatusResponse,
+            self._post("/v1/get_model_status", wire.encode_message(req)))
+
+    def set_version_labels(self, name: str,
+                           labels: Dict[str, Optional[int]]) -> None:
+        self._post("/v1/set_version_labels",
+                   {"name": name, "labels": labels})
+
+    def reload_config(self, req: api.ReloadConfigRequest
+                      ) -> api.ReloadConfigResponse:
+        return wire.decode_message(
+            api.ReloadConfigResponse,
+            self._post("/v1/reload_config", wire.encode_message(req)))
+
+    # -- misc --------------------------------------------------------------
+    def health(self) -> Dict[str, Any]:
+        return self._request("GET", "/healthz", None)
+
+    def close(self) -> None:
+        with self._conns_lock:
+            conns, self._conns = self._conns, set()
+        for conn in conns:
+            try:
+                conn.close()
+            except Exception:       # noqa: BLE001 — best-effort teardown
+                pass
+
+
+__all__ = [
+    "CODE_FOR_STATUS", "EXC_FOR_CODE", "HttpServingServer",
+    "STATUS_FOR_CODE", "ServingClient",
+]

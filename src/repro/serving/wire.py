@@ -1,0 +1,278 @@
+"""Wire codec for the typed serving API (the (de)serialization half of
+the transport layer).
+
+Two encodings share one tensor format:
+
+  * **Tagged values** (``encode_value``/``decode_value``): round-trip
+    arbitrary request/response payloads EXACTLY — numpy arrays travel
+    as ``{"__wire__": "ndarray", dtype, shape, data-b64}`` triples and
+    come back bit-identical (dtype string keeps endianness; 0-d, empty
+    and unicode arrays included), tuples and the registered API
+    dataclasses are tagged so they decode to the same Python types.
+    This is the codec of the generic ``/v1/call`` escape hatch, where
+    the server cannot know the schema.
+  * **Messages** (``encode_message``/``decode_message``): the typed
+    RPCs' bodies. Dataclasses flatten to plain JSON objects keyed by
+    field name — curl-able: ``{"model_spec": {"name": "clf"},
+    "inputs": {"tokens": [[1, 2]]}}`` — and decoding is driven by the
+    dataclass type annotations, so tuples, nested messages and
+    ``Dict[str, np.ndarray]`` fields come back typed. Tensor fields
+    accept either the exact tagged triple or a plain (nested) JSON
+    list for hand-written clients.
+
+No pickle anywhere: only the dataclasses registered below decode, so a
+malicious payload cannot instantiate arbitrary types.
+"""
+from __future__ import annotations
+
+import base64
+import dataclasses
+import typing
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.core.source import ServableVersionPolicy
+from repro.serving import api
+from repro.serving.generation import SamplingParams
+
+TAG = "__wire__"
+
+# The closed set of dataclasses allowed on the wire.
+WIRE_DATACLASSES: Dict[str, type] = {
+    cls.__name__: cls for cls in (
+        api.ClassifyRequest, api.ClassifyResponse, api.GenerateRequest,
+        api.GenerateResponse, api.GetModelStatusRequest,
+        api.GetModelStatusResponse, api.ModelDirConfig, api.ModelSpec,
+        api.ModelVersionStatus, api.MultiInferenceRequest,
+        api.MultiInferenceResponse, api.PredictRequest,
+        api.PredictResponse, api.RegressRequest, api.RegressResponse,
+        api.ReloadConfigRequest, api.ReloadConfigResponse,
+        api.TokenChunk, SamplingParams, ServableVersionPolicy,
+    )
+}
+
+
+class WireError(api.InvalidArgument):
+    """Payload cannot be encoded/decoded (taxonomy: INVALID_ARGUMENT)."""
+
+
+# ---------------------------------------------------------------------------
+# Tensors
+# ---------------------------------------------------------------------------
+
+
+def _dtype_token(dtype: np.dtype) -> str:
+    """Wire name of a dtype. Plain numpy dtypes use ``dtype.str`` (which
+    keeps endianness); extension dtypes (bfloat16, float8_* — whose
+    ``.str`` degrades to an anonymous void like ``|V2``) travel by
+    name and are resolved through ml_dtypes on decode."""
+    if dtype.kind == "V":
+        if dtype.fields is not None:
+            raise WireError("structured dtypes are not wire-encodable")
+        return dtype.name            # e.g. "bfloat16"
+    return dtype.str
+
+
+def _resolve_dtype(token: str) -> np.dtype:
+    try:
+        return np.dtype(token)
+    except TypeError:
+        pass
+    try:                             # extension types (jax dependency)
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, token))
+    except (ImportError, AttributeError, TypeError) as exc:
+        raise WireError(f"unknown wire dtype {token!r}") from exc
+
+
+def encode_ndarray(arr: np.ndarray) -> Dict[str, Any]:
+    arr = np.asarray(arr)
+    if arr.dtype == object:
+        raise WireError("object-dtype arrays are not wire-encodable")
+    data = np.ascontiguousarray(arr).tobytes()
+    return {TAG: "ndarray", "dtype": _dtype_token(arr.dtype),
+            "shape": list(arr.shape),
+            "data": base64.b64encode(data).decode("ascii")}
+
+
+def decode_ndarray(obj: Dict[str, Any]) -> np.ndarray:
+    try:
+        dtype = _resolve_dtype(obj["dtype"])
+        if dtype == object:
+            raise WireError("object-dtype arrays are not wire-decodable")
+        buf = base64.b64decode(obj["data"])
+        return np.frombuffer(buf, dtype=dtype).reshape(
+            tuple(obj["shape"])).copy()
+    except WireError:
+        raise
+    except Exception as exc:
+        raise WireError(f"malformed ndarray payload: {exc}") from exc
+
+
+# ---------------------------------------------------------------------------
+# Tagged values (exact round trip; /v1/call payloads)
+# ---------------------------------------------------------------------------
+
+
+def encode_value(obj: Any) -> Any:
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, (np.ndarray, np.generic)):
+        return encode_ndarray(np.asarray(obj))
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        name = type(obj).__name__
+        if name not in WIRE_DATACLASSES:
+            raise WireError(f"dataclass {name!r} is not wire-registered")
+        return {TAG: "dc", "type": name,
+                "fields": {f.name: encode_value(getattr(obj, f.name))
+                           for f in dataclasses.fields(obj)}}
+    if isinstance(obj, dict):
+        for k in obj:
+            if not isinstance(k, str):
+                raise WireError(
+                    f"dict keys must be str, got {type(k).__name__}")
+        items = {k: encode_value(v) for k, v in obj.items()}
+        if TAG in obj:          # escape dicts that collide with our tag
+            return {TAG: "dict", "items": items}
+        return items
+    if isinstance(obj, tuple):
+        return {TAG: "tuple", "items": [encode_value(x) for x in obj]}
+    if isinstance(obj, list):
+        return [encode_value(x) for x in obj]
+    raise WireError(f"type {type(obj).__name__} is not wire-encodable")
+
+
+def decode_value(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        kind = obj.get(TAG)
+        if kind is None:
+            return {k: decode_value(v) for k, v in obj.items()}
+        if kind == "ndarray":
+            return decode_ndarray(obj)
+        if kind == "tuple":
+            return tuple(decode_value(x) for x in obj["items"])
+        if kind == "dict":
+            return {k: decode_value(v) for k, v in obj["items"].items()}
+        if kind == "dc":
+            cls = WIRE_DATACLASSES.get(obj.get("type", ""))
+            if cls is None:
+                raise WireError(
+                    f"unknown wire dataclass {obj.get('type')!r}")
+            try:
+                return cls(**{k: decode_value(v)
+                              for k, v in obj["fields"].items()})
+            except TypeError as exc:
+                raise WireError(str(exc)) from exc
+        raise WireError(f"unknown wire tag {kind!r}")
+    if isinstance(obj, list):
+        return [decode_value(x) for x in obj]
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# Messages (typed RPC bodies; schema known per route)
+# ---------------------------------------------------------------------------
+
+
+def encode_message(obj: Any) -> Any:
+    """Dataclass -> plain JSON object keyed by field name (recursive);
+    tensors keep the tagged-triple form so they stay exact."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, (np.ndarray, np.generic)):
+        return encode_ndarray(np.asarray(obj))
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: encode_message(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if isinstance(obj, dict):
+        return {str(k): encode_message(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [encode_message(x) for x in obj]
+    raise WireError(f"type {type(obj).__name__} is not wire-encodable")
+
+
+_HINT_CACHE: Dict[type, Dict[str, Any]] = {}
+
+
+def _hints(cls: type) -> Dict[str, Any]:
+    h = _HINT_CACHE.get(cls)
+    if h is None:
+        h = _HINT_CACHE[cls] = typing.get_type_hints(cls)
+    return h
+
+
+def _coerce(tp: Any, val: Any) -> Any:
+    if val is None:
+        return None
+    origin = typing.get_origin(tp)
+    if origin is typing.Union:
+        args = [a for a in typing.get_args(tp) if a is not type(None)]
+        if len(args) == 1:
+            return _coerce(args[0], val)
+        return decode_value(val)
+    if tp is np.ndarray:
+        v = decode_value(val)
+        return v if isinstance(v, np.ndarray) else np.asarray(v)
+    if isinstance(tp, type) and dataclasses.is_dataclass(tp):
+        if isinstance(val, dict) and TAG not in val:
+            return decode_message(tp, val)
+        # tagged form, or a convenience scalar the service itself
+        # accepts (e.g. a bare path string for ModelDirConfig)
+        return decode_value(val)
+    if origin is dict:
+        _, vt = typing.get_args(tp) or (str, Any)
+        if not isinstance(val, dict):
+            raise WireError(f"expected object for {tp}, got "
+                            f"{type(val).__name__}")
+        return {k: _coerce(vt, v) for k, v in val.items()}
+    if origin is tuple:
+        args = typing.get_args(tp)
+        if isinstance(val, dict):
+            items = val.get("items")
+            if items is None:
+                raise WireError(f"expected array for {tp}, got object")
+        elif isinstance(val, (list, tuple)):
+            items = val
+        else:
+            raise WireError(f"expected array for {tp}, got "
+                            f"{type(val).__name__}")
+        if len(args) == 2 and args[1] is Ellipsis:
+            return tuple(_coerce(args[0], x) for x in items)
+        return tuple(_coerce(a, x) for a, x in zip(args, items))
+    if origin is list:
+        (it,) = typing.get_args(tp) or (Any,)
+        return [_coerce(it, x) for x in val]
+    if tp in (int, float, bool, str, Any):
+        return val
+    return decode_value(val)
+
+
+def decode_message(cls: type, obj: Any) -> Any:
+    """Plain JSON object -> dataclass instance, driven by ``cls``'s
+    field annotations. Unknown keys are rejected (catches typos in
+    hand-written clients); missing keys fall back to field defaults."""
+    if not isinstance(obj, dict):
+        raise WireError(
+            f"expected JSON object for {cls.__name__}, got "
+            f"{type(obj).__name__}")
+    hints = _hints(cls)
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(obj) - names
+    if unknown:
+        raise WireError(
+            f"unknown field(s) {sorted(unknown)} for {cls.__name__}")
+    try:
+        return cls(**{k: _coerce(hints[k], v) for k, v in obj.items()})
+    except WireError:
+        raise
+    except (TypeError, ValueError, KeyError) as exc:
+        raise WireError(
+            f"malformed {cls.__name__} payload: {exc!r}") from exc
+
+
+__all__ = [
+    "TAG", "WIRE_DATACLASSES", "WireError", "decode_message",
+    "decode_ndarray", "decode_value", "encode_message", "encode_ndarray",
+    "encode_value",
+]

@@ -1,0 +1,454 @@
+"""HTTP/JSON transport: wire-codec round trips (property-based),
+error-taxonomy -> status-code mapping for all four codes, streamed
+generate bit-identical to blocking over a real socket, client
+disconnect mid-stream freeing decode-engine KV blocks, and graceful
+drain (in-flight finishes, drain-time arrivals get 503)."""
+import json
+import os
+import threading
+import time
+from http.client import HTTPConnection
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # optional dep
+
+from repro.configs import get_config
+from repro.core import (AspiredVersion, AspiredVersionsManager,
+                        CallableLoader, ResourceEstimate)
+from repro.core.servable import Servable, ServableId
+from repro.models import model as MD
+from repro.serving import api, wire
+from repro.serving.generation import SamplingParams
+from repro.serving.server import ModelServer
+from repro.serving.transport import (STATUS_FOR_CODE, HttpServingServer,
+                                     ServingClient)
+from repro.training.checkpoint import save_checkpoint
+
+CFG = get_config("tfs-classifier", smoke=True)
+
+
+def round_trip(value):
+    """Encode -> actual JSON text -> decode (exactly what the socket
+    carries)."""
+    return wire.decode_value(json.loads(json.dumps(
+        wire.encode_value(value))))
+
+
+class TestWireCodec:
+    @pytest.mark.parametrize("dtype", [
+        "<f2", "<f4", "<f8", "<i4", "<i8", "<u2", "|u1", "|b1", "<c8",
+        "<c16", "<U7"])
+    @pytest.mark.parametrize("shape", [(), (0,), (3,), (2, 3), (0, 4)])
+    def test_ndarray_exact(self, dtype, shape):
+        n = int(np.prod(shape, dtype=int))
+        if dtype == "<U7":
+            flat = np.array(["héllo", "wörld✓", "", "日本語"] * (n + 1),
+                            dtype=dtype)[:n]
+        else:
+            flat = (np.arange(n) % 5).astype(dtype)
+        arr = flat.reshape(shape)
+        out = round_trip(arr)
+        assert isinstance(out, np.ndarray)
+        assert out.dtype == arr.dtype and out.shape == arr.shape
+        assert out.tobytes() == arr.tobytes()       # bit-identical
+
+    def test_extension_dtype_bfloat16(self):
+        import ml_dtypes
+        arr = np.arange(6, dtype=np.float32).astype(
+            ml_dtypes.bfloat16).reshape(2, 3)
+        out = round_trip(arr)
+        assert out.dtype == arr.dtype
+        assert out.tobytes() == arr.tobytes()
+
+    def test_object_dtype_rejected(self):
+        with pytest.raises(wire.WireError):
+            wire.encode_value(np.array([object()]))
+        assert issubclass(wire.WireError, api.InvalidArgument)
+
+    def test_tuple_and_tag_escape(self):
+        v = {"__wire__": "sneaky", "t": (1, ("a", None)), "s": "ünï"}
+        out = round_trip(v)
+        assert out == v and isinstance(out["t"], tuple)
+
+    def test_registered_dataclasses(self):
+        reqs = [
+            api.ModelSpec("clf", label="canary"),
+            api.GenerateRequest(api.ModelSpec("m"),
+                                tokens=np.arange(4, dtype=np.int32),
+                                sampling=SamplingParams(0.7, 5, 3),
+                                stream=True),
+            api.TokenChunk(7, 0, False),
+        ]
+        for req in reqs:
+            out = round_trip(req)
+            assert type(out) is type(req)
+        out = round_trip(reqs[1])
+        np.testing.assert_array_equal(out.tokens, reqs[1].tokens)
+        assert out.sampling == reqs[1].sampling
+
+    def test_unregistered_dataclass_rejected(self):
+        import dataclasses
+
+        @dataclasses.dataclass
+        class Evil:
+            x: int = 0
+
+        with pytest.raises(wire.WireError):
+            wire.encode_value(Evil())
+        with pytest.raises(wire.WireError):
+            wire.decode_value({"__wire__": "dc", "type": "Evil",
+                               "fields": {"x": 1}})
+
+    @given(st.recursive(
+        st.one_of(st.none(), st.booleans(), st.integers(-2**31, 2**31),
+                  st.floats(allow_nan=False, allow_infinity=False),
+                  st.text(max_size=12)),
+        lambda c: st.one_of(
+            st.lists(c, max_size=4), st.tuples(c, c),
+            st.dictionaries(st.text(max_size=8), c, max_size=4)),
+        max_leaves=12))
+    @settings(max_examples=120, deadline=None)
+    def test_value_round_trip_property(self, value):
+        assert round_trip(value) == value
+
+    @given(st.lists(st.text(max_size=6), max_size=5),
+           st.sampled_from(["<f4", "<i8", "|b1", "<c8"]),
+           st.lists(st.integers(0, 3), max_size=3))
+    @settings(max_examples=60, deadline=None)
+    def test_ndarray_round_trip_property(self, strings, dtype, shape):
+        n = int(np.prod(shape, dtype=int))
+        arr = (np.arange(n) % 3).astype(dtype).reshape(shape)
+        uni = np.array(strings, dtype="<U8")
+        for a in (arr, uni):
+            out = round_trip(a)
+            assert out.dtype == a.dtype and out.shape == a.shape
+            assert out.tobytes() == a.tobytes()
+
+    def test_message_plain_json_and_unknown_fields(self):
+        # curl-style: plain nested lists for tensors, plain dicts for
+        # nested messages
+        req = wire.decode_message(api.PredictRequest, {
+            "model_spec": {"name": "clf", "version": 2},
+            "inputs": {"tokens": [[1, 2], [3, 4]]}, "batched": False})
+        assert req.model_spec == api.ModelSpec("clf", 2)
+        assert isinstance(req.inputs["tokens"], np.ndarray)
+        with pytest.raises(wire.WireError):
+            wire.decode_message(api.PredictRequest,
+                                {"model_sepc": {"name": "clf"}})
+
+    def test_message_round_trip_typed(self):
+        resp = api.GetModelStatusResponse(
+            api.ModelSpec("clf"),
+            (api.ModelVersionStatus(1, "READY"),
+             api.ModelVersionStatus(2, "LOADING", "boom")),
+            {"stable": 1})
+        out = wire.decode_message(
+            api.GetModelStatusResponse,
+            json.loads(json.dumps(wire.encode_message(resp))))
+        assert out == resp and isinstance(out.versions, tuple)
+
+
+# ---------------------------------------------------------------------------
+# Live server fixtures
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def stack(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("models")
+    for v in (1, 2):
+        params = MD.init_params(jax.random.PRNGKey(v), CFG)
+        save_checkpoint(str(tmp), "clf", v, params, {"arch": CFG.name})
+    srv = ModelServer({"clf": os.path.join(str(tmp), "clf")},
+                      cfg_for=lambda n: CFG)
+    srv.start_sync()
+    http = srv.serve_http()
+    client = ServingClient(*http.address)
+    yield srv, http, client
+    client.close()
+    http.stop()
+    srv.stop()
+
+
+def batch(b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": rng.integers(0, CFG.vocab_size, (b, s))}
+
+
+def raw_post(addr, path, payload):
+    conn = HTTPConnection(*addr)
+    try:
+        conn.request("POST", path, json.dumps(payload).encode("utf-8"),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        return resp.status, json.loads(resp.read())
+    finally:
+        conn.close()
+
+
+class TestOverTheWire:
+    def test_predict_bit_identical(self, stack):
+        srv, _, client = stack
+        b = batch()
+        resp = client.predict(api.PredictRequest(
+            api.ModelSpec("clf"), b, batched=False))
+        ref = srv.predict("clf", b, batched=False)
+        assert resp.model_spec == api.ModelSpec("clf", 2)
+        assert resp.outputs.dtype == ref.dtype
+        assert resp.outputs.tobytes() == ref.tobytes()
+
+    def test_generic_call_and_multi_inference(self, stack):
+        srv, _, client = stack
+        b = batch()
+        out = client.call(api.ModelSpec("clf"), "predict", b)
+        assert out.tobytes() == srv.predict("clf", b,
+                                            batched=False).tobytes()
+        mi = client.multi_inference(api.MultiInferenceRequest(
+            api.ModelSpec("clf"), b, k=3))
+        ref = srv.multi_inference("clf", b, k=3)
+        np.testing.assert_array_equal(mi.classify.classes,
+                                      ref.classify.classes)
+        np.testing.assert_array_equal(mi.regress.values.astype(
+            np.float32), ref.regress.values.astype(np.float32))
+
+    def test_model_status_and_labels(self, stack):
+        srv, _, client = stack
+        st_ = client.get_model_status(api.GetModelStatusRequest(
+            api.ModelSpec("clf")))
+        assert {v.version: v.state for v in st_.versions} == {
+            1: "DISABLED", 2: "READY"} or all(
+            v.state == "READY" for v in st_.versions)
+        client.set_version_labels("clf", {"prod": 2})
+        assert srv.manager.version_labels("clf")["prod"] == 2
+        resp = client.predict(api.PredictRequest(
+            api.ModelSpec("clf", label="prod"), batch(), batched=False))
+        assert resp.model_spec.version == 2
+        client.set_version_labels("clf", {"prod": None})
+
+    def test_status_codes_all_four(self, stack):
+        """NOT_FOUND->404, INVALID_ARGUMENT->400,
+        FAILED_PRECONDITION->412 here; UNAVAILABLE->503 asserted in
+        TestDrain (same map, real drain)."""
+        _, http, client = stack
+        addr = http.address
+        status, body = raw_post(addr, "/v1/predict", {
+            "model_spec": {"name": "ghost"}, "inputs": {}})
+        assert (status, body["error"]["code"]) == (404, "NOT_FOUND")
+        status, body = raw_post(addr, "/v1/predict", {
+            "model_spec": {"name": "clf", "version": 1,
+                           "label": "stable"}, "inputs": {}})
+        assert (status, body["error"]["code"]) == (400,
+                                                   "INVALID_ARGUMENT")
+        status, body = raw_post(addr, "/v1/set_version_labels", {
+            "name": "clf", "labels": {"prod": 99}})
+        assert (status, body["error"]["code"]) == (412,
+                                                   "FAILED_PRECONDITION")
+        assert STATUS_FOR_CODE["UNAVAILABLE"] == 503
+        # and the client maps them back into the typed taxonomy
+        with pytest.raises(api.NotFound):
+            client.predict(api.PredictRequest(api.ModelSpec("ghost"),
+                                              batch(), batched=False))
+        with pytest.raises(api.InvalidArgument):
+            client.predict(api.PredictRequest(
+                api.ModelSpec("clf", 1, "stable"), batch(),
+                batched=False))
+        with pytest.raises(api.FailedPrecondition):
+            client.set_version_labels("clf", {"prod": 99})
+
+    def test_malformed_body_and_unknown_route(self, stack):
+        _, http, _ = stack
+        addr = http.address
+        status, body = raw_post(addr, "/v1/predict",
+                                {"model_sepc": {"name": "clf"}})
+        assert (status, body["error"]["code"]) == (400,
+                                                   "INVALID_ARGUMENT")
+        status, body = raw_post(addr, "/v1/frobnicate", {})
+        assert status == 404
+
+    def test_reload_config_over_wire(self, stack, tmp_path):
+        srv, _, client = stack
+        params = MD.init_params(jax.random.PRNGKey(7), CFG)
+        save_checkpoint(str(tmp_path), "m2", 1, params,
+                        {"arch": CFG.name})
+        clf_dir = srv.source.current_config()["clf"][0]
+        resp = client.reload_config(api.ReloadConfigRequest({
+            "clf": api.ModelDirConfig(clf_dir),
+            "m2": api.ModelDirConfig(os.path.join(str(tmp_path), "m2"))}))
+        assert resp.added == ("m2",)
+        out = client.predict(api.PredictRequest(
+            api.ModelSpec("m2"), batch(), batched=False))
+        assert out.model_spec == api.ModelSpec("m2", 1)
+        resp = client.reload_config(api.ReloadConfigRequest(
+            {"clf": api.ModelDirConfig(clf_dir)}))
+        assert resp.removed == ("m2",)
+        with pytest.raises(api.NotFound):
+            client.predict(api.PredictRequest(api.ModelSpec("m2"),
+                                              batch(), batched=False))
+
+
+class TestStreamingOverTheWire:
+    def test_stream_concat_bit_identical_to_blocking(self, stack):
+        srv, _, client = stack
+        toks = batch(b=1, s=12, seed=3)["tokens"][0].astype(np.int32)
+        blocking = srv.generate("clf", tokens=toks, max_new=6)
+        chunks = list(client.generate(api.GenerateRequest(
+            api.ModelSpec("clf"), tokens=toks, max_new=6, stream=True)))
+        assert len(chunks) == 6
+        assert [c.index for c in chunks] == list(range(6))
+        assert all(not c.final for c in chunks[:-1]) and chunks[-1].final
+        np.testing.assert_array_equal(
+            np.asarray([c.token for c in chunks], np.int32), blocking[0])
+        wire_blocking = client.generate(api.GenerateRequest(
+            api.ModelSpec("clf"), tokens=toks, max_new=6))
+        np.testing.assert_array_equal(wire_blocking.tokens, blocking)
+
+    def test_disconnect_mid_stream_frees_engine_blocks(self, stack):
+        """A client that hangs up mid-stream must cancel the decode
+        request: the slot retires and every paged KV block returns to
+        the free list (asserted via engine stats)."""
+        srv, _, client = stack
+        toks = batch(b=1, s=8, seed=4)["tokens"][0].astype(np.int32)
+        # ensure the engine exists and note its quiescent state
+        srv.generate("clf", tokens=toks, max_new=2)
+        eng = srv.prediction._engines["clf@v2"]
+        cancelled0 = eng.stats["cancelled"]
+        it = client.generate(api.GenerateRequest(
+            api.ModelSpec("clf"), tokens=toks, max_new=400, stream=True))
+        got = [next(it) for _ in range(2)]
+        assert len(got) == 2
+        it.close()                          # socket closes -> disconnect
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            if (eng.stats["cancelled"] > cancelled0
+                    and eng.free_block_count() == eng.num_blocks - 1
+                    and eng.active_slots() == 0):
+                break
+            time.sleep(0.02)
+        assert eng.stats["cancelled"] > cancelled0
+        assert eng.free_block_count() == eng.num_blocks - 1
+        assert eng.active_slots() == 0
+
+    def test_stream_invalid_request_is_typed(self, stack):
+        _, _, client = stack
+        with pytest.raises(api.InvalidArgument):
+            client.generate(api.GenerateRequest(
+                api.ModelSpec("clf"), tokens=batch()["tokens"],
+                max_new=4, stream=True))
+        with pytest.raises(api.NotFound):
+            client.generate(api.GenerateRequest(
+                api.ModelSpec("ghost"),
+                tokens=np.arange(4, dtype=np.int32), max_new=4,
+                stream=True))
+
+
+# ---------------------------------------------------------------------------
+# Graceful drain (lightweight servables; no JAX)
+# ---------------------------------------------------------------------------
+
+
+class _SlowServable(Servable):
+    def call(self, method, request):
+        if method == "oserror":
+            raise OSError("backing store went away")
+        time.sleep(float(request.get("delay", 0)))
+        return {"served": True}
+
+
+@pytest.fixture()
+def slow_server():
+    sid = ServableId("slow", 1)
+    manager = AspiredVersionsManager()
+    manager.set_aspired_versions("slow", [AspiredVersion(
+        sid, CallableLoader(sid, lambda: _SlowServable(sid),
+                            ResourceEstimate(ram_bytes=1)))])
+    assert manager.await_idle()
+    ps = api.PredictionService(manager)
+    http = HttpServingServer(ps, drain_timeout_s=30).start()
+    yield http, ServingClient(*http.address)
+    http.stop()
+    manager.shutdown()
+
+
+class TestServerRobustness:
+    def test_service_oserror_is_500_not_disconnect(self, slow_server):
+        """An OSError raised by SERVICE code must come back as a real
+        500 response — not be mistaken for a client disconnect and
+        silently dropped (which would make the client retry blindly)."""
+        http, _ = slow_server
+        status, body = raw_post(http.address, "/v1/call", {
+            "model_spec": {"name": "slow"}, "method": "oserror",
+            "request": {}})
+        assert status == 500
+        assert body["error"]["code"] == "UNKNOWN"
+        assert "backing store" in body["error"]["message"]
+
+    def test_error_paths_keep_keepalive_in_sync(self, slow_server):
+        """Error responses must still drain the request body: the next
+        request on the same keep-alive connection has to parse cleanly
+        (leftover body bytes would desync the framing)."""
+        http, _ = slow_server
+        conn = HTTPConnection(*http.address)
+        try:
+            for path in ("/v1/no_such_route", "/v1/reload_config"):
+                # /v1/reload_config raises FailedPrecondition (no
+                # ModelService here) BEFORE the body would be parsed
+                conn.request("POST", path,
+                             json.dumps({"junk": "x" * 4096}).encode(),
+                             {"Content-Type": "application/json"})
+                resp = conn.getresponse()
+                assert resp.status in (404, 412)
+                resp.read()
+                # same connection, next request must still work
+                conn.request("POST", "/v1/call", json.dumps({
+                    "model_spec": {"name": "slow"}, "method": "work",
+                    "request": {"delay": 0}}).encode(),
+                    {"Content-Type": "application/json"})
+                resp = conn.getresponse()
+                assert resp.status == 200
+                assert json.loads(resp.read())["result"] == {
+                    "served": True}
+        finally:
+            conn.close()
+
+
+class TestDrain:
+    def test_inflight_finishes_new_requests_503(self, slow_server):
+        http, client = slow_server
+        addr = http.address
+        results, errors = [], []
+
+        def inflight():
+            try:
+                results.append(client.call(api.ModelSpec("slow"), "work",
+                                           {"delay": 1.0}))
+            except Exception as exc:            # any failure is the bug
+                errors.append(exc)
+
+        t = threading.Thread(target=inflight)
+        t.start()
+        deadline = time.monotonic() + 10
+        while http._inflight == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert http._inflight == 1              # request is executing
+        stopper = threading.Thread(target=http.stop)
+        stopper.start()
+        deadline = time.monotonic() + 10
+        while not http.draining and time.monotonic() < deadline:
+            time.sleep(0.01)
+        # a request arriving during the drain: clean 503, not a reset
+        status, body = raw_post(addr, "/v1/call", {
+            "model_spec": {"name": "slow"}, "method": "work",
+            "request": {"delay": 0}})
+        assert (status, body["error"]["code"]) == (503, "UNAVAILABLE")
+        with pytest.raises(api.Unavailable):
+            ServingClient(*addr).call(api.ModelSpec("slow"), "work",
+                                      {"delay": 0})
+        t.join(timeout=30)
+        stopper.join(timeout=30)
+        assert not errors, errors               # in-flight ran to completion
+        assert results == [{"served": True}]
+        # post-shutdown: the listener is gone entirely
+        with pytest.raises(api.Unavailable):
+            ServingClient(*addr).call(api.ModelSpec("slow"), "work", {})
