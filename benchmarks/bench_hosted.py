@@ -1,14 +1,25 @@
-"""Paper §3.1 (TFS²): Controller bin-packing quality and Router hedged-
-request tail-latency reduction [21].
+"""Paper §3.1 (TFS²): Controller bin-packing quality, Router hedged-
+request tail-latency reduction [21], and the zero-drop scenario sweep.
 
 Packing: place a fleet of models with varied RAM estimates onto jobs;
 report placement success and capacity utilization spread.
 
 Hedging: replicas inject a heavy latency tail (base 1ms, 50ms tail at
 10%); compare client p99 with hedging off vs. on.
+
+Scenario sweep (promoted from tests/test_hosted_transport.py): replicas
+serve on real sockets while label-addressed traffic runs CONCURRENTLY
+with a canary rollout, a promote via Synchronizer-propagated
+SetVersionLabels, and a live version reconfiguration. Per-phase
+drop/latency SLOs (zero drops, p99 under ``SLO_P99_MS``) are asserted
+and written to ``BENCH_hosted.json`` — CI uploads it as the
+control-plane perf-trajectory artifact.
 """
 from __future__ import annotations
 
+import json
+import os
+import threading
 import time
 
 import numpy as np
@@ -16,8 +27,13 @@ import numpy as np
 from repro.core import (CallableLoader, RawDictServable, ResourceEstimate,
                         ServableId)
 from repro.hosted import (AdmissionError, Autoscaler, AutoscalerConfig,
-                          Controller, LatencyModel, Router, ServingJob,
-                          Synchronizer, TransactionalStore)
+                          Controller, LatencyModel, ModelSpec, Router,
+                          ServingJob, Synchronizer, TransactionalStore)
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+PHASE_S = 0.35 if SMOKE else 1.5        # live-traffic window per phase
+SWEEP_CLIENTS = 4
+SLO_P99_MS = 500.0                      # generous: CI runners are noisy
 
 
 def loader_factory(name, version, ref, ram):
@@ -118,10 +134,109 @@ def bench_autoscale(report):
         j.shutdown()
 
 
+def bench_scenario_sweep(report):
+    """Canary -> promote -> live-reconfig under concurrent socket load:
+    zero dropped or mis-routed requests, per-phase latency SLOs."""
+    jobs = {"j1": ServingJob("j1", 10_000, min_replicas=2,
+                             serve_replicas=True)}
+    store = TransactionalStore()
+    ctrl = Controller(store, {"j1": 10_000})
+    sync = Synchronizer("dc", ctrl, jobs, loader_factory)
+    router = Router(sync, jobs, hedge_delay_s=None)
+    ctrl.add_model("m", 100)
+    sync.sync_once()
+    sync.set_version_labels("m", {"prod": 1})
+
+    phases = ("canary", "promote", "reconfig")
+    phase_box = ["canary"]
+    lock = threading.Lock()
+    lat = {p: [] for p in phases}
+    drops = {p: [] for p in phases}
+    prod_seen = set()
+    stop = threading.Event()
+
+    def client():
+        while not stop.is_set():
+            p = phase_box[0]
+            t0 = time.perf_counter()
+            try:
+                v_prod = router.infer(ModelSpec("m", label="prod"), "v",
+                                      method="lookup")
+                dt = time.perf_counter() - t0
+                with lock:
+                    lat[p].append(dt)
+                    prod_seen.add(v_prod)
+                if v_prod not in (1, 2):        # mis-route is a drop
+                    raise AssertionError(f"prod routed to v{v_prod}")
+            except Exception as exc:    # noqa: BLE001 — any failure drops
+                with lock:
+                    drops[p].append(repr(exc))
+                return
+
+    ts = [threading.Thread(target=client) for _ in range(SWEEP_CLIENTS)]
+    [t.start() for t in ts]
+    try:
+        # (1) canary rollout under load
+        ctrl.add_version("m", 2)
+        ctrl.set_policy("m", "canary")
+        sync.sync_once()
+        assert router.infer(ModelSpec("m", label="canary"), "v",
+                            method="lookup") == 2
+        time.sleep(PHASE_S)
+        # (2) promote prod 1 -> 2 cluster-wide via the Synchronizer
+        phase_box[0] = "promote"
+        sync.set_version_labels("m", {"prod": 2})
+        time.sleep(PHASE_S)
+        # (3) live reconfiguration: v3 arrives with traffic in flight
+        phase_box[0] = "reconfig"
+        ctrl.add_version("m", 3)
+        sync.sync_once()
+        time.sleep(PHASE_S)
+    finally:
+        stop.set()
+        [t.join(timeout=60) for t in ts]
+        router.shutdown()
+        sync.shutdown()
+        for j in jobs.values():
+            j.shutdown()
+
+    results = {"clients": SWEEP_CLIENTS, "phase_seconds": PHASE_S,
+               "slo": {"drops": 0, "p99_ms": SLO_P99_MS},
+               "prod_versions_seen": sorted(prod_seen),
+               "phases": {}}
+    all_ok = True
+    for p in phases:
+        ms = np.asarray(lat[p]) * 1e3
+        served = int(ms.size)
+        p50 = float(np.percentile(ms, 50)) if served else float("nan")
+        p99 = float(np.percentile(ms, 99)) if served else float("nan")
+        ok = (not drops[p]) and served > 0 and p99 < SLO_P99_MS
+        all_ok &= ok
+        results["phases"][p] = {
+            "served": served, "drops": len(drops[p]),
+            "drop_details": drops[p][:5], "p50_ms": p50, "p99_ms": p99,
+            "slo_ok": ok}
+        report(f"hosted_sweep_{p}_p99", p99 * 1e3,
+               f"served={served} drops={len(drops[p])} "
+               f"p50={p50:.2f}ms p99={p99:.2f}ms "
+               f"slo={'OK' if ok else 'VIOLATED'}")
+    results["zero_drops"] = all(not drops[p] for p in phases)
+    results["all_slos_ok"] = bool(all_ok)
+    out = os.environ.get("REPRO_BENCH_OUT", ".")
+    path = os.path.join(out, "BENCH_hosted.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {path}")
+    assert results["zero_drops"], results   # a drop fails the bench job
+    assert results["all_slos_ok"], results  # so does a latency SLO miss
+    assert prod_seen <= {1, 2}, prod_seen
+
+
 def main(report):
     bench_binpack(report)
     bench_hedging(report)
     bench_autoscale(report)
+    bench_scenario_sweep(report)
 
 
 if __name__ == "__main__":

@@ -10,6 +10,15 @@ reused G times from VMEM — the GQA arithmetic-intensity win, explicit.
 Variable-length batches: ``lengths`` (B,) lives in SMEM via
 PrefetchScalarGridSpec; kv blocks beyond a row's length are masked (and
 compute-skippable — §Perf).
+
+``paged_flash_decode`` is the block-table variant for the serving
+engine's paged KV pool: K/V live block-major in a shared page pool and
+each row owns a table of physical block ids. The (num_slots,
+blocks_per_slot) table is scalar-prefetched so the BlockSpec index map
+can chase it — the kernel streams each row's blocks *in place* from the
+pool, so no contiguous per-slot view is ever materialized (the XLA
+fallback's per-tick O(num_slots x capacity) gather disappears) and
+``num_blocks`` may exceed what a gathered view could express.
 """
 from __future__ import annotations
 
@@ -109,4 +118,122 @@ def flash_decode(q, k_cache, v_cache, lengths, *, block_k: int = 512,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, qg, k_cache, v_cache)
+    return out.reshape(b, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: block tables chased in the BlockSpec index map
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(tables_ref,           # scalar prefetch: (B, bps)
+                         lengths_ref,          # scalar prefetch: (B,)
+                         q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr,
+                         *, bs: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)                       # logical block index
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+
+    # Blocks entirely beyond the row's length are skipped outright: the
+    # streamed pages hold stale tokens (or the NaN-laden trash block for
+    # table entries the row never owned) and a masked-but-computed
+    # update would still touch them (0 * NaN = NaN). Skipping is exact:
+    # a fully-masked block's online-softmax update is the identity.
+    @pl.when(j * bs < length)
+    def _accum():
+        q = q_ref[0, 0].astype(jnp.float32)                # (G, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bs, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < length
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
+                       scale=None, interpret: bool = False) -> jnp.ndarray:
+    """Decode attention over a paged KV pool, walking block tables.
+
+    q:            (B, Hq, D) one query token per row.
+    k/v_pages:    (num_blocks, Hk, block_size, D) shared page pool.
+    block_tables: (B, blocks_per_slot) int32 physical block ids; entries
+                  the row does not own must be clamped to 0 (the trash
+                  block) by the caller — the kernel never reads past
+                  ``lengths[b]`` so their contents are irrelevant.
+    lengths:      (B,) int32 valid KV prefix per row.
+
+    Returns (B, Hq, D). The table and lengths ride in SMEM via scalar
+    prefetch; the K/V BlockSpec index maps chase ``tables[b, j]``, so
+    each row's blocks stream straight out of the pool — no gather, no
+    per-tick O(B x capacity) transient, and physical ids are unbounded
+    (``num_blocks`` beyond gatherable capacity is fine).
+
+    Logical blocks are visited in order with the same online-softmax
+    update as ``flash_decode``, so outputs match a contiguous gather of
+    the same blocks run through ``flash_decode(block_k=block_size)``
+    exactly.
+    """
+    b, hq, d = q.shape
+    nb, hk, bs, _ = k_pages.shape
+    g = hq // hk
+    bps = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hk, g, d)
+
+    grid = (b, hk, bps)
+    kernel = functools.partial(_paged_decode_kernel, bs=bs, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d),
+                             lambda b_, h, j, tab, lens: (b_, h, 0, 0)),
+                pl.BlockSpec((1, 1, bs, d),
+                             lambda b_, h, j, tab, lens:
+                             (tab[b_, j], h, 0, 0)),
+                pl.BlockSpec((1, 1, bs, d),
+                             lambda b_, h, j, tab, lens:
+                             (tab[b_, j], h, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda b_, h, j, tab, lens:
+                                   (b_, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ]),
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, lengths, qg, k_pages, v_pages)
     return out.reshape(b, hq, d)

@@ -11,7 +11,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention import flash_decode
+from repro.kernels.decode_attention import flash_decode, paged_flash_decode
 from repro.kernels.flash_attention import flash_attention
 
 LANE = 128
@@ -87,4 +87,33 @@ def flash_decode_op(q, k_cache, v_cache, lengths, *, block_k: int = 512,
     out = flash_decode(qt, kt, vt, lengths.astype(jnp.int32),
                        block_k=bk, scale=1.0 / (d ** 0.5),
                        interpret=interpret)
+    return out[:, :, :d][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode_op(q, k_pages, v_pages, block_tables, lengths, *,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Model layout: q (B,1,Hq,D); pages (num_blocks, Hk, block_size, D);
+    block_tables (B, blocks_per_slot) int32 (< 0 = unassigned); lengths
+    (B,). Returns (B,1,Hq,D).
+
+    The pool stays put — only q is padded to the lane width. Padding the
+    head dim of the pages themselves would copy the whole pool per tick
+    (the transient this kernel exists to kill), so head_dim is padded
+    only when it is not already lane-aligned: that path is the
+    CPU/interpret validation one; serving configs keep head_dim at a
+    multiple of 128 and stream the pool in place.
+    """
+    b, one, hq, d = q.shape
+    nb, hk, bs, _ = k_pages.shape
+    qt = q[:, 0].astype(k_pages.dtype)                    # (B,Hq,D)
+    dp = _round_up(d, LANE)
+    if d != dp:
+        qt = _pad_to(qt, dp, 2)
+        k_pages = _pad_to(k_pages, dp, 3)
+        v_pages = _pad_to(v_pages, dp, 3)
+    tab = jnp.where(block_tables < 0, 0, block_tables).astype(jnp.int32)
+    out = paged_flash_decode(qt, k_pages, v_pages, tab,
+                             lengths.astype(jnp.int32),
+                             scale=1.0 / (d ** 0.5), interpret=interpret)
     return out[:, :, :d][:, None]

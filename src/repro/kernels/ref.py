@@ -34,6 +34,31 @@ def ref_flash_attention(q, k, v, *, causal: bool = True,
     return out.reshape(b, hq, sq, d).astype(q.dtype)
 
 
+def ref_paged_decode(q, k_pages, v_pages, block_tables,
+                     lengths) -> jnp.ndarray:
+    """Gathered-view oracle for the paged decode kernel.
+
+    q: (B,Hq,D); pages: (num_blocks, Hk, block_size, D); block_tables:
+    (B, blocks_per_slot) int32 (entries < 0 = unassigned); lengths: (B,).
+
+    Materializes exactly the contiguous view the XLA fallback gathers —
+    each row's blocks in logical order, invalid lanes zeroed — and runs
+    the masked-softmax decode reference over it. Returns (B, Hq, D).
+    """
+    b = q.shape[0]
+    nb, hk, bs, d = k_pages.shape
+    bps = block_tables.shape[1]
+    tab = jnp.where(block_tables < 0, 0, block_tables)
+    # (B, bps, Hk, bs, D) -> (B, Hk, bps * bs, D)
+    kg = jnp.moveaxis(k_pages[tab], 2, 1).reshape(b, hk, bps * bs, d)
+    vg = jnp.moveaxis(v_pages[tab], 2, 1).reshape(b, hk, bps * bs, d)
+    lane = jnp.arange(bps * bs)[None, :]
+    live = lane < lengths[:, None]                       # (B, bps*bs)
+    kg = jnp.where(live[:, None, :, None], kg, 0)
+    vg = jnp.where(live[:, None, :, None], vg, 0)
+    return ref_flash_decode(q, kg, vg, lengths)
+
+
 def ref_flash_decode(q, k_cache, v_cache, lengths) -> jnp.ndarray:
     """q: (B,Hq,D); caches: (B,Hk,S,D); lengths: (B,) valid prefix sizes.
 

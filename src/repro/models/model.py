@@ -198,22 +198,33 @@ def cache_reset_slot(cfg: ModelConfig, pool, slot, max_len: int):
 # slot, so device memory scales with *capacity*. The paged layout stores
 # attention K/V in fixed-size blocks shared by all slots:
 #
-#   k/v:  (num_blocks, block_size, num_kv_heads, head_dim)
+#   k/v:  (num_blocks, num_kv_heads, block_size, head_dim)
 #   pos:  (num_blocks, block_size)      absolute positions, -1 = invalid
 #
-# plus a per-slot **block table** (num_slots, blocks_per_slot) mapping the
-# slot's logical block j to a physical block id (-1 = unassigned). A slot
-# holds only the blocks its live tokens need; freed blocks return to the
-# engine's shared free list on retire, so memory scales with live tokens
-# and a fixed byte budget admits far more concurrent slots.
+# (head-major within a block, so the Pallas paged kernel streams one
+# (block_size, head_dim) tile per (head, block) grid cell with clean
+# sublane x lane tiling) plus a per-slot **block table** (num_slots,
+# blocks_per_slot) mapping the slot's logical block j to a physical block
+# id (-1 = unassigned). A slot holds only the blocks its live tokens
+# need; freed blocks return to the engine's shared free list on retire,
+# so memory scales with live tokens and a fixed byte budget admits far
+# more concurrent slots.
 #
 # Physical block 0 is a *trash block* by convention: it is never handed
 # out by the engine's allocator, and decode writes of free/retired rows
 # (whose table entries are -1) are clamped onto it so they can never
-# corrupt a live slot. The per-tick gather reorders a slot's blocks into
-# a contiguous (blocks_per_slot * block_size) prefix view, so the masked
-# attention sees exactly the layout of the contiguous pool — greedy
-# outputs stay bit-identical (asserted by tests/test_decode_engine.py).
+# corrupt a live slot.
+#
+# Two decode paths consume the pool (``_attn_mixer``):
+#   * pallas: ``paged_flash_decode`` walks each row's block table
+#     in-place (table + lengths scalar-prefetched into SMEM), so nothing
+#     is gathered and ``num_blocks`` may exceed what a gathered view
+#     could express;
+#   * xla (fallback): the per-tick gather reorders a slot's blocks into
+#     a contiguous (blocks_per_slot * block_size) prefix view, so the
+#     masked attention sees exactly the layout of the contiguous pool.
+# Greedy outputs are bit-identical across both and the contiguous pool
+# (asserted by tests/test_decode_engine.py + tests/test_kernels.py).
 #
 # Recurrent mixer state (mamba conv/ssm, xLSTM) is O(1) per slot and
 # stays a dense (num_slots, ...) row per slot — only attention KV pages.
@@ -261,9 +272,9 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq_len: int,
     for slot, mix in enumerate(cfg.pattern):
         if mix == "attn":
             per[f"s{slot}"] = {
-                "k": jnp.zeros((num_blocks, block_size, cfg.num_kv_heads,
+                "k": jnp.zeros((num_blocks, cfg.num_kv_heads, block_size,
                                 cfg.head_dim), dt),
-                "v": jnp.zeros((num_blocks, block_size, cfg.num_kv_heads,
+                "v": jnp.zeros((num_blocks, cfg.num_kv_heads, block_size,
                                 cfg.head_dim), dt),
                 "pos": jnp.full((num_blocks, block_size), -1, jnp.int32),
             }
@@ -303,13 +314,17 @@ def cache_insert_slot_paged(cfg: ModelConfig, pool, row_cache, slot,
     for key, pslot in pool["layers"].items():
         rslot = row_cache["layers"][key]
         if cfg.pattern[int(key[1:])] == "attn":
-            bs = pslot["k"].shape[2]            # (P, NB, bs, H, D)
+            bs = pslot["k"].shape[3]            # (P, NB, Hk, bs, D)
             nl = {}
-            for f in ("k", "v", "pos"):
+            for f in ("k", "v"):
                 p, r = pslot[f], rslot[f]
-                r = r[:, 0, :need * bs]         # (P, need*bs, ...)
+                r = r[:, 0, :need * bs]         # (P, need*bs, Hk, D)
                 r = r.reshape((r.shape[0], need, bs) + r.shape[2:])
+                r = jnp.moveaxis(r, 3, 2)       # (P, need, Hk, bs, D)
                 nl[f] = p.at[:, blocks].set(r.astype(p.dtype))
+            rp = rslot["pos"][:, 0, :need * bs]
+            rp = rp.reshape((rp.shape[0], need, bs))
+            nl["pos"] = pslot["pos"].at[:, blocks].set(rp)
             new_layers[key] = nl
         else:
             new_layers[key] = jax.tree_util.tree_map(
@@ -383,8 +398,37 @@ def _rope_positions(cfg: ModelConfig, batch, b, s, cache_len=None):
     return base
 
 
+def _paged_gather(kc, vc, pc, block_tables):
+    """Reorder each row's blocks into a contiguous prefix view.
+
+    kc/vc: (num_blocks, Hk, bs, D); pc: (num_blocks, bs); block_tables:
+    (B, bps). Returns (kg, vg, pg) with kg/vg (B, bps*bs, Hk, D) and pg
+    (B, bps*bs) — the XLA fallback's per-tick transient. Gathered K/V at
+    invalid positions is zeroed: unassigned table entries gather the
+    trash block, which absorbs the (NaN-laden) writes of fully-masked
+    free rows — and 0 * NaN = NaN would leak through the masked
+    softmax's weighted sum. Zeros match the contiguous pool's
+    untouched-lane contribution bit-exactly (masked weight is exactly
+    0, and 0 * 0 = 0 = 0 * garbage).
+    """
+    b, bps = block_tables.shape
+    bs_blk = kc.shape[2]
+    tab = jnp.where(block_tables < 0, 0, block_tables)
+    kg = jnp.swapaxes(kc[tab], 2, 3)            # (B, bps, bs, Hk, D)
+    vg = jnp.swapaxes(vc[tab], 2, 3)
+    kg = kg.reshape(b, bps * bs_blk, *kg.shape[3:])
+    vg = vg.reshape(b, bps * bs_blk, *vg.shape[3:])
+    pg = jnp.where((block_tables < 0)[:, :, None], -1, pc[tab])
+    pg = pg.reshape(b, bps * bs_blk)
+    live = (pg >= 0)[:, :, None, None]
+    kg = jnp.where(live, kg, 0)
+    vg = jnp.where(live, vg, 0)
+    return kg, vg, pg
+
+
 def _attn_mixer(cfg: ModelConfig, p, x, positions, mode, slot_cache,
-                cache_len, shard_kv=None, block_tables=None):
+                cache_len, shard_kv=None, block_tables=None,
+                paged_prefill=None):
     if shard_kv is None:
         shard_kv = lambda t: t
     b, s, _ = x.shape
@@ -393,7 +437,72 @@ def _attn_mixer(cfg: ModelConfig, p, x, positions, mode, slot_cache,
     q = L.apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
     k = L.apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
 
-    if mode in ("train", "prefill"):
+    if mode == "prefill" and paged_prefill is not None:
+        # Prefill straight into the prompt's assigned blocks — no
+        # contiguous B=1 staging row, no scatter afterwards. ``blocks``
+        # is the slot's full (bps,) table row (-1 padded); writes clamp
+        # padding onto trash block 0.
+        blocks = jnp.asarray(paged_prefill["blocks"], jnp.int32)
+        pos0 = jnp.asarray(paged_prefill["pos0"], jnp.int32)
+        bs_blk = slot_cache["k"].shape[2]
+        bps = blocks.shape[0]
+        if paged_prefill["fresh"]:
+            # Fresh slot: the chunk is the whole written prefix, so
+            # plain causal self-attention over the chunk is exact (and
+            # bit-identical to the contiguous prefill path).
+            if cfg.attention_impl.startswith("pallas"):
+                from repro.kernels.ops import flash_attention_op
+                out = flash_attention_op(
+                    q, k, v, causal=cfg.causal, window=None,
+                    interpret=cfg.attention_impl == "pallas_interpret")
+            else:
+                out = L.attention_chunked(
+                    q, k, v, causal=cfg.causal, window=None,
+                    chunk=cfg.attn_chunk)
+            # Whole-block writes for the chunk, and stale positions of
+            # EVERY assigned block invalidated first: the slot's later
+            # blocks may still carry a previous occupant's positions,
+            # which would corrupt the gathered view's validity mask.
+            need_p = -(-s // bs_blk)
+            blk_all = jnp.where(blocks < 0, 0, blocks)
+            blk_w = blk_all[:need_p]
+            pad = need_p * bs_blk - s
+            kw = jnp.pad(k[0], ((0, pad), (0, 0), (0, 0)))
+            vw = jnp.pad(v[0], ((0, pad), (0, 0), (0, 0)))
+            kw = jnp.moveaxis(kw.reshape(need_p, bs_blk, *kw.shape[1:]),
+                              2, 1)             # (need_p, Hk, bs, D)
+            vw = jnp.moveaxis(vw.reshape(need_p, bs_blk, *vw.shape[1:]),
+                              2, 1)
+            pw = jnp.pad(jnp.arange(s, dtype=jnp.int32), (0, pad),
+                         constant_values=-1).reshape(need_p, bs_blk)
+            kc = slot_cache["k"].at[blk_w].set(
+                kw.astype(slot_cache["k"].dtype))
+            vc = slot_cache["v"].at[blk_w].set(
+                vw.astype(slot_cache["v"].dtype))
+            pc = slot_cache["pos"].at[blk_all].set(-1).at[blk_w].set(pw)
+        else:
+            # Continuation chunk (chunked prefill): write this chunk's
+            # K/V at its absolute positions, then attend causally over
+            # the slot's gathered prefix (earlier chunks + this one).
+            # Chunk boundaries change float accumulation order, so this
+            # path is allclose-not-bitwise vs whole-prompt prefill;
+            # the engine keeps it opt-in (prefill_chunk).
+            pos_abs = pos0 + jnp.arange(s, dtype=jnp.int32)
+            logical = jnp.clip(pos_abs // bs_blk, 0, bps - 1)
+            phys = blocks[logical]
+            phys = jnp.where(phys < 0, 0, phys)
+            off = pos_abs % bs_blk
+            kc = slot_cache["k"].at[phys, :, off].set(
+                k[0].astype(slot_cache["k"].dtype))
+            vc = slot_cache["v"].at[phys, :, off].set(
+                v[0].astype(slot_cache["v"].dtype))
+            pc = slot_cache["pos"].at[phys, off].set(pos_abs)
+            kg, vg, pg = _paged_gather(kc, vc, pc, blocks[None])
+            out = L.attention_chunked(q, kg, vg, causal=True,
+                                      window=None, chunk=cfg.attn_chunk,
+                                      q_offset=pos0)
+        new_cache = {"k": shard_kv(kc), "v": shard_kv(vc), "pos": pc}
+    elif mode in ("train", "prefill"):
         if cfg.attention_impl.startswith("pallas"):
             from repro.kernels.ops import flash_attention_op
             out = flash_attention_op(
@@ -423,12 +532,14 @@ def _attn_mixer(cfg: ModelConfig, p, x, positions, mode, slot_cache,
             new_cache = {"k": shard_kv(kc), "v": shard_kv(vc),
                          "pos": pc}
     elif block_tables is not None:  # decode into a paged block pool
-        # K/V live block-major: (num_blocks, block_size, Hk, D). Each
+        # K/V live block-major: (num_blocks, Hk, block_size, D). Each
         # row writes this tick's K/V at its own (physical block, offset)
-        # via its block table, then gathers its table into a contiguous
-        # prefix view — identical in content to the contiguous pool row,
-        # so masked attention is bit-identical.
-        bs_blk = slot_cache["k"].shape[1]
+        # via its block table; then either the Pallas paged kernel walks
+        # the tables in place (nothing gathered), or the XLA fallback
+        # gathers each row's table into a contiguous prefix view —
+        # identical in content to the contiguous pool row, so masked
+        # attention is bit-identical.
+        bs_blk = slot_cache["k"].shape[2]
         bps = block_tables.shape[1]
         lens = jnp.asarray(cache_len, jnp.int32).reshape(-1)
         rows = jnp.arange(b)
@@ -436,35 +547,24 @@ def _attn_mixer(cfg: ModelConfig, p, x, positions, mode, slot_cache,
         phys = block_tables[rows, logical]
         # Rows without an assigned block (free/retired slots riding
         # along in the fused step) write into trash block 0 — never
-        # gathered, so they cannot corrupt a live slot.
+        # read for a live row, so they cannot corrupt a live slot.
         phys = jnp.where(phys < 0, 0, phys)
         off = lens % bs_blk
-        kc = slot_cache["k"].at[phys, off].set(k[:, 0])
-        vc = slot_cache["v"].at[phys, off].set(v[:, 0])
+        kc = slot_cache["k"].at[phys, :, off].set(k[:, 0])
+        vc = slot_cache["v"].at[phys, :, off].set(v[:, 0])
         pc = slot_cache["pos"].at[phys, off].set(lens)
         kc, vc = shard_kv(kc), shard_kv(vc)
-        tab = jnp.where(block_tables < 0, 0, block_tables)
-        kg = kc[tab].reshape(b, bps * bs_blk, *kc.shape[2:])
-        vg = vc[tab].reshape(b, bps * bs_blk, *vc.shape[2:])
-        pg = jnp.where((block_tables < 0)[:, :, None], -1, pc[tab])
-        pg = pg.reshape(b, bps * bs_blk)
-        # Zero gathered K/V at invalid positions: unassigned table
-        # entries gather the trash block, which absorbs the (NaN-laden)
-        # writes of fully-masked free rows — and 0 * NaN = NaN would
-        # leak through the masked softmax's weighted sum. Zeros match
-        # the contiguous pool's untouched-lane contribution bit-exactly
-        # (masked weight is exactly 0, and 0 * 0 = 0 = 0 * garbage).
-        live = (pg >= 0)[:, :, None, None]
-        kg = jnp.where(live, kg, 0)
-        vg = jnp.where(live, vg, 0)
         if cfg.attention_impl.startswith("pallas"):
-            # The gathered view is an exact prefix (logical position i at
-            # index i), so the prefix-length kernel applies unchanged.
-            from repro.kernels.ops import flash_decode_op
-            out = flash_decode_op(
-                q, kg, vg, lens + 1,
+            # Walk the block tables directly: the (B, bps) table and
+            # per-row lengths are scalar-prefetched, each row's blocks
+            # stream straight out of the pool, and the O(B x capacity)
+            # gather transient disappears.
+            from repro.kernels.ops import paged_flash_decode_op
+            out = paged_flash_decode_op(
+                q, kc, vc, block_tables, lens + 1,
                 interpret=cfg.attention_impl == "pallas_interpret")
         else:
+            kg, vg, pg = _paged_gather(kc, vc, pc, block_tables)
             out = L.attention_decode(q, kg, vg, pg >= 0)
         new_cache = {"k": kc, "v": vc, "pos": pc}
     else:  # decode
@@ -515,7 +615,8 @@ def _attn_mixer(cfg: ModelConfig, p, x, positions, mode, slot_cache,
 
 
 def _run_period(cfg: ModelConfig, pp, x, positions, mode, cache_p,
-                cache_len, aux, shard_kv=None, block_tables=None):
+                cache_len, aux, shard_kv=None, block_tables=None,
+                paged_prefill=None):
     new_cache = {}
     for slot, (mix, ffn) in enumerate(zip(cfg.pattern, cfg.ffn_pattern)):
         h = L.rms_norm(x, pp[f"norm1_{slot}"], cfg.norm_eps)
@@ -523,7 +624,7 @@ def _run_period(cfg: ModelConfig, pp, x, positions, mode, cache_p,
         if mix == "attn":
             out, nc = _attn_mixer(cfg, pp[f"mixer_{slot}"], h, positions,
                                   mode, sc, cache_len, shard_kv,
-                                  block_tables)
+                                  block_tables, paged_prefill)
         elif mix == "mamba":
             if mode == "decode":
                 out, nc = M.mamba_decode(pp[f"mixer_{slot}"], h, sc)
@@ -549,6 +650,21 @@ def _run_period(cfg: ModelConfig, pp, x, positions, mode, cache_p,
                                       remat=cfg.remat and mode == "train")
         else:
             raise ValueError(mix)
+        if (paged_prefill is not None and mode == "prefill"
+                and mix != "attn"):
+            # Paged prefill runs against the slot POOL: recurrent state
+            # comes back as a B=1 row — splice it into the pool at the
+            # target slot so the fused decode picks it up. (Chunked
+            # continuation would need state seeding; the engine gates
+            # prefill_chunk to attention-only patterns.)
+            if not paged_prefill["fresh"]:
+                raise ValueError(
+                    "chunked prefill requires an attention-only pattern")
+            nc = jax.tree_util.tree_map(
+                lambda pl_, r: jax.lax.dynamic_update_slice_in_dim(
+                    pl_, r.astype(pl_.dtype), paged_prefill["slot"],
+                    axis=0),
+                sc, nc)
         x = x + out
         if mode != "train" and nc is not None:
             new_cache[f"s{slot}"] = nc
@@ -592,7 +708,8 @@ def embed_inputs(params, cfg: ModelConfig, batch) -> jnp.ndarray:
 def forward_hidden(params, cfg: ModelConfig, batch,
                    mode: str = "train",
                    cache: Optional[dict] = None,
-                   shard_act=None, shard_kv=None
+                   shard_act=None, shard_kv=None,
+                   paged_prefill=None
                    ) -> Tuple[jnp.ndarray, Optional[dict], Dict]:
     """Returns (hidden (B,S,D) post-final-norm, new_cache, aux).
 
@@ -659,11 +776,30 @@ def forward_hidden(params, cfg: ModelConfig, batch,
             x, aux = carry
             pp, cp = xs
             x, nc, aux = _run_period(cfg, pp, x, positions, "prefill", cp,
-                                     None, aux, shard_kv)
+                                     None, aux, shard_kv,
+                                     paged_prefill=paged_prefill)
             return (shard_act(x), aux), nc
         (x, aux), stacked = jax.lax.scan(
             step, (x, aux0), (params["periods"], cache["layers"]))
-        new_cache = {"len": jnp.asarray(s, jnp.int32), "layers": stacked}
+        if paged_prefill is not None:
+            # Prefilling straight into a paged pool: only the target
+            # slot's length/table row change; everything else rides
+            # through untouched.
+            slot = paged_prefill["slot"]
+            new_len = jax.lax.dynamic_update_index_in_dim(
+                jnp.asarray(cache["len"], jnp.int32),
+                (jnp.asarray(paged_prefill["pos0"], jnp.int32)
+                 + jnp.asarray(s, jnp.int32)).reshape(()),
+                slot, axis=0)
+            tables = jax.lax.dynamic_update_slice_in_dim(
+                cache["tables"],
+                jnp.asarray(paged_prefill["blocks"], jnp.int32)[None],
+                slot, axis=0)
+            new_cache = {"len": new_len, "tables": tables,
+                         "layers": stacked}
+        else:
+            new_cache = {"len": jnp.asarray(s, jnp.int32),
+                         "layers": stacked}
     elif mode == "decode":
         assert cache is not None
         # A "tables" key marks a paged pool (block-major attention KV);
@@ -700,6 +836,50 @@ def prefill(params, cfg: ModelConfig, batch, cache, shard_act=None,
                                           cache, shard_act, shard_kv)
     logits = logits_from_hidden(params, cfg, hidden[:, -1:])[:, 0]
     return logits, new_cache
+
+
+def prefill_paged(params, cfg: ModelConfig, batch, pool, slot, blocks,
+                  pos0=0, *, fresh: bool = True, shard_act=None,
+                  shard_kv=None) -> Tuple[jnp.ndarray, dict]:
+    """Prefill a B=1 prompt (or chunk of one) STRAIGHT into its assigned
+    blocks of a paged pool — no contiguous staging row, no post-hoc
+    scatter.
+
+    ``pool``   paged pool from ``init_paged_cache``.
+    ``slot``   target slot index (traced ok).
+    ``blocks`` the slot's full (blocks_per_slot,) table row: assigned
+               physical block ids in logical order, padded with -1.
+    ``pos0``   absolute position of the chunk's first token (traced ok,
+               so chunked prefill reuses one compiled program per chunk
+               length). 0 for a whole prompt.
+    ``fresh``  static: True when nothing of this prompt has been
+               prefilled yet (whole prompt, or the first chunk) — the
+               chunk self-attends exactly like the contiguous prefill
+               path and stale positions of every assigned block are
+               invalidated. False for continuation chunks, which attend
+               over the slot's gathered prefix (attention-only
+               patterns; recurrent mixers cannot seed chunk state).
+
+    Returns (last-token logits (B,V), updated pool).
+    """
+    toks = batch.get("tokens")
+    b = (toks.shape[0] if toks is not None else batch["embeds"].shape[0])
+    s = (toks.shape[1] if toks is not None else batch["embeds"].shape[1])
+    assert b == 1, "paged prefill is per-request (B=1)"
+    if "positions" not in batch:
+        base = (jnp.asarray(pos0, jnp.int32)
+                + jnp.arange(s, dtype=jnp.int32))[None]
+        if cfg.mrope_sections is not None:
+            base = jnp.broadcast_to(
+                base[..., None], base.shape + (len(cfg.mrope_sections),))
+        batch = {**batch, "positions": base}
+    pp = {"slot": slot, "blocks": jnp.asarray(blocks, jnp.int32),
+          "pos0": pos0, "fresh": bool(fresh)}
+    hidden, new_pool, _ = forward_hidden(params, cfg, batch, "prefill",
+                                         pool, shard_act, shard_kv,
+                                         paged_prefill=pp)
+    logits = logits_from_hidden(params, cfg, hidden[:, -1:])[:, 0]
+    return logits, new_pool
 
 
 def decode_step(params, cfg: ModelConfig, batch, cache, shard_act=None,

@@ -296,7 +296,8 @@ class PredictionService:
                  use_decode_engine: bool = False,
                  decode_engine_slots: int = 8,
                  decode_engine_block_size: Optional[int] = None,
-                 decode_engine_num_blocks: Optional[int] = None):
+                 decode_engine_num_blocks: Optional[int] = None,
+                 decode_engine_prefill_chunk: Optional[int] = None):
         self.manager = manager
         self._scheduler = scheduler
         self._batching = batching or BatchingOptions()
@@ -310,6 +311,10 @@ class PredictionService:
         # what the engine will actually allocate — ModelServer does.
         self.decode_engine_block_size = decode_engine_block_size
         self.decode_engine_num_blocks = decode_engine_num_blocks
+        # Chunked prefill (paged, attention-only): long prompts split
+        # across engine ticks so active slots' inter-token latency is
+        # bounded by one chunk's prefill, not a whole prompt's.
+        self.decode_engine_prefill_chunk = decode_engine_prefill_chunk
         self._engines: Dict[str, DecodeScheduler] = {}
         self._engines_lock = threading.Lock()
         self._closed = False
@@ -546,6 +551,8 @@ class PredictionService:
             kw["block_size"] = self.decode_engine_block_size
         if self.decode_engine_num_blocks is not None:
             kw["num_blocks"] = self.decode_engine_num_blocks
+        if self.decode_engine_prefill_chunk is not None:
+            kw["prefill_chunk"] = self.decode_engine_prefill_chunk
         eng = DecodeScheduler(
             s.cfg, s.params,
             num_slots=self.decode_engine_slots,

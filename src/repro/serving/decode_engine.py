@@ -14,8 +14,20 @@ jit-stable throughout:
     along masked-out (their rows are garbage, never read);
   * prompts prefill one row at a time at their exact length (the jit
     cache specializes per prompt length; no right-padding, so the
-    recurrent mixers — mamba/xLSTM — stay exact too) and are spliced
-    into the pool with the cache-insert helpers.
+    recurrent mixers — mamba/xLSTM — stay exact too). On the paged
+    layout they prefill STRAIGHT into their assigned blocks
+    (``prefill_paged``) — the contiguous B=1 staging row + post-hoc
+    scatter of the old path is gone; the contiguous layout keeps the
+    staging-row + ``cache_insert_slot`` splice.
+
+Long prompts and head-of-line latency: a whole-prompt prefill stalls
+every active slot for the prompt's full forward pass. With
+``prefill_chunk=N`` (paged, attention-only patterns) the engine splits
+prompts longer than N across ticks — one chunk per engine pass, decode
+ticks interleaved — so active slots wait at most one chunk's prefill
+time. Chunk boundaries change float accumulation order, so chunked
+prefill is opt-in: greedy outputs are asserted equal in tests but the
+default path stays bit-identical-by-construction.
 
 KV memory comes in two layouts (``models/model.py``):
 
@@ -105,6 +117,16 @@ class _Slot:
     out: List[int]
     last: int
     rng: Optional[np.random.Generator]
+    # Chunked prefill: prompt tokens not yet prefilled (None once the
+    # slot is decoding), the absolute position the next chunk starts
+    # at, and the slot's full (-1 padded) block-table row.
+    pending: Optional[np.ndarray] = None
+    pos: int = 0
+    table_row: Optional[np.ndarray] = None
+
+    @property
+    def decoding(self) -> bool:
+        return self.pending is None
 
 
 class DecodeScheduler:
@@ -126,7 +148,8 @@ class DecodeScheduler:
                  idle_wait_s: float = 0.01,
                  paged: Optional[bool] = None,
                  block_size: int = MD.DEFAULT_BLOCK_SIZE,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
@@ -142,6 +165,18 @@ class DecodeScheduler:
             raise ValueError("paged KV requires non-windowed attention")
         self.paged = paged
 
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            if not paged:
+                raise ValueError(
+                    "prefill_chunk requires the paged KV layout")
+            if any(m != "attn" for m in cfg.pattern):
+                raise ValueError(
+                    "chunked prefill requires an attention-only pattern "
+                    "(recurrent mixers cannot seed per-chunk state)")
+        self.prefill_chunk = prefill_chunk
+
         self._cond = threading.Condition()
         self._queue: "deque[DecodeRequest]" = deque()
         self._slots: List[Optional[_Slot]] = [None] * num_slots
@@ -149,20 +184,17 @@ class DecodeScheduler:
         self._thread: Optional[threading.Thread] = None
         self._stats: Dict[str, float] = {
             "requests": 0, "finished": 0, "cancelled": 0, "prefills": 0,
-            "ticks": 0, "slot_steps": 0, "active_steps": 0,
-            "slot_utilization": 0.0, "admission_waits": 0}
+            "prefill_chunks": 0, "ticks": 0, "slot_steps": 0,
+            "active_steps": 0, "slot_utilization": 0.0,
+            "admission_waits": 0}
 
         cfgc = cfg
-
-        @jax.jit
-        def _prefill(params, batch, cache):
-            return MD.prefill(params, cfgc, batch, cache)
 
         @jax.jit
         def _decode(params, batch, cache):
             return MD.decode_step(params, cfgc, batch, cache)
 
-        self._prefill_fn, self._decode_fn = _prefill, _decode
+        self._decode_fn = _decode
 
         if self.paged:
             self.block_size = block_size
@@ -182,16 +214,28 @@ class DecodeScheduler:
                 cfg, num_slots, max_seq_len, num_blocks=self.num_blocks,
                 block_size=block_size)
 
+            # Prompts prefill straight into their assigned blocks (no
+            # staging row, no insert): ``fresh`` is a compile-time
+            # branch, so a whole prompt / first chunk and continuation
+            # chunks are two programs.
             @jax.jit
-            def _insert(pool, row, slot, blocks):
-                return MD.cache_insert_slot_paged(cfgc, pool, row, slot,
-                                                  blocks)
+            def _prefill_fresh(params, batch, pool, slot, blocks, pos0):
+                return MD.prefill_paged(params, cfgc, batch, pool, slot,
+                                        blocks, pos0, fresh=True)
+
+            @jax.jit
+            def _prefill_cont(params, batch, pool, slot, blocks, pos0):
+                return MD.prefill_paged(params, cfgc, batch, pool, slot,
+                                        blocks, pos0, fresh=False)
 
             @jax.jit
             def _release(pool, slot):
                 return MD.cache_release_slot_paged(pool, slot)
 
-            self._insert_fn = _insert
+            self._prefill_fresh_fn = _prefill_fresh
+            self._prefill_cont_fn = _prefill_cont
+            self._prefill_fn = None
+            self._insert_fn = None
             self._release_fn = _release
         else:
             self.block_size = 0
@@ -202,9 +246,14 @@ class DecodeScheduler:
             self._pool = MD.init_pool_cache(cfg, num_slots, max_seq_len)
 
             @jax.jit
+            def _prefill(params, batch, cache):
+                return MD.prefill(params, cfgc, batch, cache)
+
+            @jax.jit
             def _insert(pool, row, slot):
                 return MD.cache_insert_slot(pool, row, slot)
 
+            self._prefill_fn = _prefill
             self._insert_fn = _insert
             self._release_fn = None
 
@@ -321,8 +370,14 @@ class DecodeScheduler:
                     continue
             try:
                 self._retire_cancelled()
+                # Advance BEFORE backfill: a slot admitted this pass got
+                # its first chunk in _backfill, so each pending slot
+                # advances exactly one chunk per pass with a decode tick
+                # in between — the chunked-prefill latency bound.
+                self._advance_prefills()
                 self._backfill()
-                if any(s is not None for s in self._slots):
+                if any(s is not None and s.decoding
+                       for s in self._slots):
                     self._tick()
             except BaseException as exc:     # fail in-flight, keep serving
                 log.warning("decode engine tick failed: %s", exc)
@@ -354,12 +409,15 @@ class DecodeScheduler:
                 slot.req._fail(RuntimeError("request cancelled"))
 
     def _backfill(self) -> None:
-        """Fill free slots from the queue: exact-length B=1 prefill,
-        splice the row into the pool, emit the first token. In paged
-        mode a request is admitted only when the free list covers its
-        worst-case block need (reserved up front, so a slot can never
-        stall mid-decode); the queue stays FIFO — an oversized head
-        waits for retiring slots rather than being overtaken."""
+        """Fill free slots from the queue. Paged layout: the prompt (or
+        its first ``prefill_chunk`` tokens) prefills STRAIGHT into the
+        blocks reserved for it — no contiguous staging row, no scatter.
+        Contiguous layout: exact-length B=1 staging prefill spliced in
+        with ``cache_insert_slot``. In paged mode a request is admitted
+        only when the free list covers its worst-case block need
+        (reserved up front, so a slot can never stall mid-decode); the
+        queue stays FIFO — an oversized head waits for retiring slots
+        rather than being overtaken."""
         for i in range(self.num_slots):
             if self._slots[i] is not None:
                 continue
@@ -380,42 +438,111 @@ class DecodeScheduler:
                         return
                     blocks = [self._free_blocks.pop() for _ in range(need)]
                 self._queue.popleft()
-            try:
-                row = MD.init_cache(self.cfg, 1, self._row_cap)
-                logits, row = self._prefill_fn(
-                    self.params,
-                    {"tokens": jnp.asarray(req.tokens[None])}, row)
-                if self.paged:
-                    self._pool = self._insert_fn(
-                        self._pool, row, i,
-                        jnp.asarray(np.asarray(blocks, np.int32)))
-                else:
+            rng = req.sampling.make_rng() if req.sampling else None
+            if not self.paged:
+                try:
+                    row = MD.init_cache(self.cfg, 1, self._row_cap)
+                    logits, row = self._prefill_fn(
+                        self.params,
+                        {"tokens": jnp.asarray(req.tokens[None])}, row)
                     self._pool = self._insert_fn(self._pool, row, i)
-                rng = req.sampling.make_rng() if req.sampling else None
-                tok = sample_token(np.asarray(logits)[0], req.sampling,
-                                   rng)
+                    tok = sample_token(np.asarray(logits)[0],
+                                       req.sampling, rng)
+                except BaseException as exc:
+                    # Fail only this request: once popped it is in
+                    # neither the queue nor a slot, so nobody else would
+                    # wake its waiter — and a request-local failure (bad
+                    # prompt, compile OOM at a new length) must not nuke
+                    # unrelated in-flight slots (pool updates are
+                    # functional, so a failed insert left it untouched).
+                    log.warning("prefill failed, failing request: %s",
+                                exc)
+                    req._fail(exc)
+                    continue
+                slot = _Slot(req=req, out=[tok], last=tok, rng=rng)
+                with self._cond:
+                    self._slots[i] = slot
+                    self._stats["prefills"] += 1
+                req._emit_token(0, tok)
+                self._maybe_retire(i, slot)
+                continue
+
+            table_row = np.full(self.blocks_per_slot, -1, np.int32)
+            table_row[:len(blocks)] = blocks
+            tokens = req.tokens
+            chunked = (self.prefill_chunk is not None
+                       and tokens.shape[0] > self.prefill_chunk)
+            first = tokens[:self.prefill_chunk] if chunked else tokens
+            try:
+                logits, self._pool = self._prefill_fresh_fn(
+                    self.params, {"tokens": jnp.asarray(first[None])},
+                    self._pool, np.int32(i), jnp.asarray(table_row),
+                    np.int32(0))
             except BaseException as exc:
-                # Fail only this request: once popped it is in neither
-                # the queue nor a slot, so nobody else would wake its
-                # waiter — and a request-local failure (bad prompt,
-                # compile OOM at a new length) must not nuke unrelated
-                # in-flight slots (pool updates are functional, so a
-                # failed insert left it untouched — but a *successful*
-                # insert may have published the table row, so detach it
-                # before the blocks go back to the free list).
+                # As above — and a *successful* partial prefill may have
+                # published the table row, so detach it before the
+                # blocks go back to the free list.
                 log.warning("prefill failed, failing request: %s", exc)
-                if self.paged and blocks:
-                    self._pool = self._release_fn(self._pool, i)
-                    with self._cond:
-                        self._free_blocks.extend(blocks)
+                self._pool = self._release_fn(self._pool, i)
+                with self._cond:
+                    self._free_blocks.extend(blocks)
                 req._fail(exc)
                 continue
-            slot = _Slot(req=req, out=[tok], last=tok, rng=rng)
+            if chunked:
+                slot = _Slot(req=req, out=[], last=-1, rng=rng,
+                             pending=tokens[self.prefill_chunk:],
+                             pos=int(first.shape[0]), table_row=table_row)
+                with self._cond:
+                    self._slots[i] = slot
+                    self._slot_blocks[i] = blocks
+                    self._stats["prefill_chunks"] += 1
+                continue
+            tok = sample_token(np.asarray(logits)[0], req.sampling, rng)
+            slot = _Slot(req=req, out=[tok], last=tok, rng=rng,
+                         table_row=table_row)
             with self._cond:
                 self._slots[i] = slot
                 self._slot_blocks[i] = blocks
                 self._stats["prefills"] += 1
             req._emit_token(0, tok)
+            self._maybe_retire(i, slot)
+
+    def _advance_prefills(self) -> None:
+        """Feed ONE chunk per mid-prefill slot per engine pass, so
+        active slots get a decode tick between chunks — head-of-line
+        latency is bounded by a single chunk's prefill, not the whole
+        prompt's. The final chunk's logits seed the first sampled
+        token, exactly like an unchunked prefill."""
+        for i, slot in enumerate(self._slots):
+            if slot is None or slot.decoding or slot.req.cancelled:
+                continue
+            take = min(self.prefill_chunk, int(slot.pending.shape[0]))
+            piece, rest = slot.pending[:take], slot.pending[take:]
+            try:
+                logits, self._pool = self._prefill_cont_fn(
+                    self.params, {"tokens": jnp.asarray(piece[None])},
+                    self._pool, np.int32(i),
+                    jnp.asarray(slot.table_row), np.int32(slot.pos))
+            except BaseException as exc:
+                log.warning("chunked prefill failed, failing request: %s",
+                            exc)
+                self._release_slot(i)
+                slot.req._fail(exc)
+                continue
+            slot.pos += take
+            with self._cond:
+                self._stats["prefill_chunks"] += 1
+            if rest.shape[0]:
+                slot.pending = rest
+                continue
+            slot.pending = None
+            tok = sample_token(np.asarray(logits)[0], slot.req.sampling,
+                               slot.rng)
+            slot.out.append(tok)
+            slot.last = tok
+            with self._cond:
+                self._stats["prefills"] += 1
+            slot.req._emit_token(0, tok)
             self._maybe_retire(i, slot)
 
     def _maybe_retire(self, i: int, slot: _Slot) -> None:
@@ -434,14 +561,25 @@ class DecodeScheduler:
         toks = np.zeros((self.num_slots, 1), np.int32)
         n_active = 0
         for i, slot in enumerate(self._slots):
-            if slot is not None:
+            if slot is not None and slot.decoding:
                 toks[i, 0] = slot.last
                 n_active += 1
         logits, self._pool = self._decode_fn(
             self.params, {"tokens": jnp.asarray(toks)}, self._pool)
         raw = np.asarray(logits)
         for i, slot in enumerate(self._slots):
-            if slot is None:
+            if slot is None or not slot.decoding:
+                continue
+            if slot.req.cancelled:
+                # Cancelled mid-tick (e.g. the client hung up while the
+                # fused step ran): a disconnected stream must never
+                # receive post-cancel tokens, so retire EAGERLY instead
+                # of emitting now and reaping at the next
+                # ``_retire_cancelled`` pass.
+                self._release_slot(i)
+                with self._cond:
+                    self._stats["cancelled"] += 1
+                slot.req._fail(RuntimeError("request cancelled"))
                 continue
             tok = sample_token(raw[i], slot.req.sampling, slot.rng)
             slot.out.append(tok)

@@ -44,7 +44,8 @@ class ModelServer:
                  use_decode_engine: bool = True,
                  decode_engine_slots: int = 8,
                  decode_engine_block_size: Optional[int] = None,
-                 decode_engine_num_blocks: Optional[int] = None):
+                 decode_engine_num_blocks: Optional[int] = None,
+                 decode_engine_prefill_chunk: Optional[int] = None):
         self.inference_log = InferenceLog()
         self.source = FileSystemSource(model_dirs, policies)
         # The block-sizing knobs feed BOTH the loader estimate and the
@@ -73,7 +74,8 @@ class ModelServer:
             use_decode_engine=use_decode_engine,
             decode_engine_slots=decode_engine_slots,
             decode_engine_block_size=decode_engine_block_size,
-            decode_engine_num_blocks=decode_engine_num_blocks)
+            decode_engine_num_blocks=decode_engine_num_blocks,
+            decode_engine_prefill_chunk=decode_engine_prefill_chunk)
         self.models = api.ModelService(self.manager, self.source)
 
     # -- lifecycle ---------------------------------------------------------

@@ -127,7 +127,10 @@ class _Handler(BaseHTTPRequestHandler):
 
     def _send_json(self, status: int, payload: Any,
                    close: bool = False) -> None:
-        body = json.dumps(payload).encode("utf-8")
+        # allow_nan=False: non-finite floats must arrive here already
+        # tagged by the wire codec — a bare NaN/Infinity literal is not
+        # JSON and would poison strict client-side parsers.
+        body = json.dumps(payload, allow_nan=False).encode("utf-8")
         try:
             self.send_response(status)
             self.send_header("Content-Type", "application/json")
@@ -282,8 +285,8 @@ class _Handler(BaseHTTPRequestHandler):
             out.close()
 
     def _write_chunk(self, obj: Optional[dict]) -> None:
-        data = b"" if obj is None else (json.dumps(obj).encode("utf-8")
-                                        + b"\n")
+        data = b"" if obj is None else (
+            json.dumps(obj, allow_nan=False).encode("utf-8") + b"\n")
         try:
             self.wfile.write(f"{len(data):x}\r\n".encode("ascii") + data
                              + b"\r\n")
@@ -431,6 +434,16 @@ class ServingClient:
         self._local = threading.local()
         self._conns_lock = threading.Lock()
         self._conns: set = set()            # LIVE connections only
+        # Bumped by close(): per-thread keep-alives are cached in
+        # ``threading.local``, so close() cannot reach into other
+        # threads' caches to clear them — instead every cached conn
+        # remembers the generation it was created under and is
+        # discarded (not silently reused) once a close() has passed.
+        # Without this, a thread surviving a close() would keep using
+        # its cached conn object, whose next request() transparently
+        # REOPENS the closed socket — an untracked connection that no
+        # later close() can find (one leaked socket per pool thread).
+        self._gen = 0
 
     # -- transport ---------------------------------------------------------
     def _new_connection(self) -> HTTPConnection:
@@ -444,10 +457,14 @@ class ServingClient:
         freshly created (a fresh connection that fails did NOT die to a
         stale keep-alive, so it must not be retried)."""
         conn = getattr(self._local, "conn", None)
-        if conn is not None:
+        if conn is not None and getattr(self._local, "gen", -1) == self._gen:
             return conn, False
+        if conn is not None:            # cached across a close(): drop it
+            self._discard(conn)
+            self._local.conn = None
         conn = self._new_connection()
         self._local.conn = conn
+        self._local.gen = self._gen
         return conn, True
 
     def _discard(self, conn: HTTPConnection) -> None:
@@ -470,7 +487,7 @@ class ServingClient:
     def _request(self, method: str, path: str,
                  payload: Optional[Any]) -> Any:
         body = (None if payload is None
-                else json.dumps(payload).encode("utf-8"))
+                else json.dumps(payload, allow_nan=False).encode("utf-8"))
         headers = {"Content-Type": "application/json"} if body else {}
         while True:
             conn, fresh = self._thread_conn()
@@ -548,8 +565,8 @@ class ServingClient:
         conn = self._new_connection()       # dedicated to this stream
         try:
             conn.request("POST", "/v1/generate",
-                         body=json.dumps(
-                             wire.encode_message(req)).encode("utf-8"),
+                         body=json.dumps(wire.encode_message(req),
+                                         allow_nan=False).encode("utf-8"),
                          headers={"Content-Type": "application/json"})
             resp = conn.getresponse()
             if resp.status != 200:
@@ -617,8 +634,15 @@ class ServingClient:
         return self._request("GET", "/healthz", None)
 
     def close(self) -> None:
+        """Close EVERY connection this client ever opened and still
+        holds — including keep-alives cached by other (possibly already
+        dead) threads — not just the calling thread's. The generation
+        bump keeps surviving threads from resurrecting their cached
+        conn objects as untracked sockets; a client used again after
+        close() simply opens fresh, tracked connections."""
         with self._conns_lock:
             conns, self._conns = self._conns, set()
+            self._gen += 1
         for conn in conns:
             try:
                 conn.close()

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import base64
 import dataclasses
+import math
 import typing
 from typing import Any, Dict
 
@@ -55,6 +56,39 @@ WIRE_DATACLASSES: Dict[str, type] = {
 
 class WireError(api.InvalidArgument):
     """Payload cannot be encoded/decoded (taxonomy: INVALID_ARGUMENT)."""
+
+
+# ---------------------------------------------------------------------------
+# Non-finite floats
+# ---------------------------------------------------------------------------
+#
+# ``json.dumps`` happily emits bare ``NaN``/``Infinity`` literals, which
+# are NOT JSON: strict parsers (and curl-side tooling) reject the whole
+# body. Scalar non-finite floats therefore travel as a tagged string —
+# ``{"__wire__": "float", "value": "nan"|"inf"|"-inf"}`` — in BOTH
+# codec paths (ndarray payloads are unaffected: their bytes are base64,
+# exact for every bit pattern). The transport serializes with
+# ``allow_nan=False`` so a bare literal can never reach the wire.
+
+_NONFINITE = {"nan": math.nan, "inf": math.inf, "-inf": -math.inf}
+
+
+def _encode_float(x: float) -> Any:
+    if math.isfinite(x):
+        return x
+    return {TAG: "float",
+            "value": "nan" if math.isnan(x) else
+            ("inf" if x > 0 else "-inf")}
+
+
+def _decode_float(obj: Dict[str, Any]) -> float:
+    raw = obj.get("value")
+    # isinstance guard first: an unhashable payload (list/dict) would
+    # raise TypeError out of dict.get — a 500 instead of the typed 400.
+    val = _NONFINITE.get(raw) if isinstance(raw, str) else None
+    if val is None:
+        raise WireError(f"malformed non-finite float {raw!r}")
+    return val
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +150,8 @@ def decode_ndarray(obj: Dict[str, Any]) -> np.ndarray:
 
 
 def encode_value(obj: Any) -> Any:
+    if isinstance(obj, float) and not isinstance(obj, bool):
+        return _encode_float(obj)
     if obj is None or isinstance(obj, (bool, int, float, str)):
         return obj
     if isinstance(obj, (np.ndarray, np.generic)):
@@ -150,6 +186,8 @@ def decode_value(obj: Any) -> Any:
             return {k: decode_value(v) for k, v in obj.items()}
         if kind == "ndarray":
             return decode_ndarray(obj)
+        if kind == "float":
+            return _decode_float(obj)
         if kind == "tuple":
             return tuple(decode_value(x) for x in obj["items"])
         if kind == "dict":
@@ -178,6 +216,8 @@ def decode_value(obj: Any) -> Any:
 def encode_message(obj: Any) -> Any:
     """Dataclass -> plain JSON object keyed by field name (recursive);
     tensors keep the tagged-triple form so they stay exact."""
+    if isinstance(obj, float) and not isinstance(obj, bool):
+        return _encode_float(obj)
     if obj is None or isinstance(obj, (bool, int, float, str)):
         return obj
     if isinstance(obj, (np.ndarray, np.generic)):
@@ -244,6 +284,8 @@ def _coerce(tp: Any, val: Any) -> Any:
         (it,) = typing.get_args(tp) or (Any,)
         return [_coerce(it, x) for x in val]
     if tp in (int, float, bool, str, Any):
+        if isinstance(val, dict) and val.get(TAG) == "float":
+            return _decode_float(val)
         return val
     return decode_value(val)
 

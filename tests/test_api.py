@@ -195,6 +195,35 @@ class TestStreamingGenerate:
             server.generate("clf", embeds=np.zeros((1, 4, 8), np.float32),
                             max_new=4, stream=True)
 
+    def test_token_stream_cancel_mid_decode_stops_emission(self, server):
+        """TokenStream.cancel mid-decode (the transport's disconnect
+        path): the engine must retire the slot eagerly — no post-cancel
+        tokens reach the stream's buffer, and the slot's KV blocks
+        return to the free list."""
+        import time as _time
+
+        toks = batch(b=1, s=8)["tokens"]
+        stream = server.generate("clf", tokens=toks, max_new=200,
+                                 stream=True)
+        got = [next(stream), next(stream)]
+        stream.cancel()
+        eng = server.prediction._engines["clf@v2"]
+        deadline = _time.monotonic() + 60
+        while eng.active_slots() and _time.monotonic() < deadline:
+            _time.sleep(0.005)
+        assert eng.active_slots() == 0
+        assert eng.free_block_count() == eng.num_blocks - 1
+        assert eng.stats["cancelled"] >= 1
+        # far fewer than max_new tokens were ever produced: emission
+        # stopped at the cancel instead of running to 200 (the buffered
+        # remainder may legitimately end in the cancellation error)
+        tail = []
+        try:
+            tail = list(stream)
+        except Exception:
+            pass
+        assert len(got) + len(tail) < 50
+
     def test_abandoned_stream_does_not_wedge_unload(self, server):
         """A stream iterator the client never consumes must not pin the
         version forever: the worker owns the handle and releases it when

@@ -387,3 +387,205 @@ def test_sample_token_greedy_and_top_k():
     picks = {sample_token(logits, sp, np.random.default_rng(s))
              for s in range(50)}
     assert picks <= {1, 2}                       # never outside top-2
+
+
+class TestPagedPrefill:
+    """Prefill-into-blocks (no staging row) + chunked prefill."""
+
+    def test_prefill_paged_matches_staging_insert_exactly(self, params):
+        """prefill_paged must leave the pool in EXACTLY the state the
+        old staging-row + cache_insert_slot_paged path produced —
+        logits, lengths, tables, and every cache leaf."""
+        toks = np.arange(13, dtype=np.int32) % CFG.vocab_size
+        bs, max_seq = 8, 64
+        bps, _ = MD.paged_layout(max_seq, bs)
+        need = -(-(13 + 6 - 1) // bs)
+        blocks = np.arange(2, 2 + need, dtype=np.int32)
+
+        pool_a = MD.init_paged_cache(CFG, 3, max_seq, block_size=bs)
+        row = MD.init_cache(CFG, 1, max_seq)
+        logits_a, row = MD.prefill(params, CFG, {"tokens": toks[None]},
+                                   row)
+        pool_a = MD.cache_insert_slot_paged(CFG, pool_a, row, 1,
+                                            jnp.asarray(blocks))
+
+        pool_b = MD.init_paged_cache(CFG, 3, max_seq, block_size=bs)
+        table_row = np.full(bps, -1, np.int32)
+        table_row[:need] = blocks
+        logits_b, pool_b = MD.prefill_paged(
+            params, CFG, {"tokens": toks[None]}, pool_b, 1, table_row, 0,
+            fresh=True)
+
+        np.testing.assert_array_equal(np.asarray(logits_a),
+                                      np.asarray(logits_b))
+        for leaf_a, leaf_b in zip(
+                jax.tree_util.tree_leaves(pool_a),
+                jax.tree_util.tree_leaves(pool_b)):
+            np.testing.assert_array_equal(np.asarray(leaf_a),
+                                          np.asarray(leaf_b))
+
+    def test_fresh_prefill_invalidates_stale_positions(self, params):
+        """A reused block still carrying a previous occupant's positions
+        must come back invalid (-1) after a fresh prefill assigns it —
+        beyond the new prompt's extent — or the gathered validity mask
+        would resurrect dead tokens."""
+        bs, max_seq = 8, 64
+        bps, _ = MD.paged_layout(max_seq, bs)
+        pool = MD.init_paged_cache(CFG, 2, max_seq, block_size=bs)
+        # occupant A: 16 tokens across blocks [3, 4]
+        row_a = np.full(bps, -1, np.int32)
+        row_a[:2] = [3, 4]
+        toksa = np.arange(16, dtype=np.int32) % CFG.vocab_size
+        _, pool = MD.prefill_paged(params, CFG, {"tokens": toksa[None]},
+                                   pool, 0, row_a, 0, fresh=True)
+        pos = np.asarray(pool["layers"]["s0"]["pos"])
+        assert np.all(pos[:, 4] >= 0)            # block 4 fully written
+        # occupant B reuses blocks [4, 3] (reversed!) for a 5-token
+        # prompt: block 3 (logical 1) is assigned-but-unwritten and must
+        # be invalidated, not keep A's stale positions.
+        row_b = np.full(bps, -1, np.int32)
+        row_b[:2] = [4, 3]
+        toksb = np.arange(5, dtype=np.int32) % CFG.vocab_size
+        _, pool = MD.prefill_paged(params, CFG, {"tokens": toksb[None]},
+                                   pool, 1, row_b, 0, fresh=True)
+        pos = np.asarray(pool["layers"]["s0"]["pos"])
+        np.testing.assert_array_equal(pos[0, 4, :5], np.arange(5))
+        assert np.all(pos[0, 4, 5:] == -1)
+        assert np.all(pos[0, 3] == -1)           # stale A positions gone
+
+    def test_chunked_prefill_greedy_identical(self, params):
+        """prefill_chunk splits long prompts across ticks; greedy
+        outputs must match the whole-prompt engine and the per-request
+        reference."""
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(0, CFG.vocab_size, int(n)).astype(np.int32)
+                   for n in rng.integers(3, 30, 8)]
+        max_news = [int(m) for m in rng.integers(1, 8, 8)]
+        eng = DecodeScheduler(CFG, params, num_slots=3, max_seq_len=64,
+                              paged=True, block_size=8, prefill_chunk=6)
+        eng.start()
+        try:
+            reqs = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+            outs = [r.wait(240) for r in reqs]
+            for out, p, m in zip(outs, prompts, max_news):
+                np.testing.assert_array_equal(
+                    out, reference_generate(params, p, m))
+            stats = eng.stats
+            assert stats["prefill_chunks"] > 0       # chunking engaged
+            assert eng.free_block_count() == eng.num_blocks - 1
+        finally:
+            eng.stop()
+
+    def test_chunked_prefill_interleaves_ticks(self, params):
+        """While a long prompt chunk-prefills, an already-active slot
+        must keep receiving decode ticks (the head-of-line bound)."""
+        eng = DecodeScheduler(CFG, params, num_slots=2, max_seq_len=128,
+                              paged=True, block_size=8, prefill_chunk=4)
+        eng.start()
+        try:
+            seen_during = []
+            long_prompt = (np.arange(48, dtype=np.int32)
+                           % CFG.vocab_size)
+            active = eng.submit(np.arange(6, dtype=np.int32), max_new=60,
+                                on_token=lambda i, t:
+                                seen_during.append(i))
+            deadline = time.monotonic() + 60
+            while eng.active_slots() == 0 and time.monotonic() < deadline:
+                time.sleep(0.002)
+            late = eng.submit(long_prompt, max_new=2)
+            late.wait(240)
+            # 48/4 = 12 chunk passes ran; the active slot must have
+            # decoded during them, not stalled until the prefill ended.
+            assert len(seen_during) > 2
+            active.cancel()
+        finally:
+            eng.stop()
+
+    def test_prefill_chunk_validation(self, params):
+        with pytest.raises(ValueError, match="paged"):
+            DecodeScheduler(CFG, params, num_slots=2, max_seq_len=32,
+                            paged=False, prefill_chunk=8)
+        with pytest.raises(ValueError, match=">= 1"):
+            DecodeScheduler(CFG, params, num_slots=2, max_seq_len=32,
+                            prefill_chunk=0)
+
+    def test_pallas_paged_kernel_engine_matches_xla(self, params):
+        """The same workload through a pallas(-interpret) engine — the
+        paged-attention kernel walking block tables — and the XLA
+        gathered-view engine: greedy outputs bit-identical."""
+        cfg_p = CFG.with_overrides(attention_impl="pallas_interpret")
+        rng = np.random.default_rng(17)
+        prompts = [rng.integers(0, CFG.vocab_size, int(n)).astype(np.int32)
+                   for n in rng.integers(4, 20, 3)]
+        ep = DecodeScheduler(cfg_p, params, num_slots=2, max_seq_len=64,
+                             paged=True, block_size=16)
+        ex = DecodeScheduler(CFG, params, num_slots=2, max_seq_len=64,
+                             paged=True, block_size=16)
+        ep.start()
+        ex.start()
+        try:
+            rp = [ep.submit(p, 4) for p in prompts]
+            rx = [ex.submit(p, 4) for p in prompts]
+            for a, b in zip(rp, rx):
+                np.testing.assert_array_equal(a.wait(300), b.wait(300))
+        finally:
+            ep.stop()
+            ex.stop()
+
+
+class TestCancelledActiveSlot:
+    def test_no_tokens_after_cancel(self, params):
+        """A cancelled ACTIVE slot must stop emitting immediately: the
+        tick that observes the cancel retires the slot instead of
+        emitting its sampled token (a disconnected stream must never
+        receive post-cancel tokens)."""
+        eng = DecodeScheduler(CFG, params, num_slots=2, max_seq_len=128,
+                              paged=True, block_size=8)
+        eng.start()
+        emitted = []
+        box = {}
+
+        def on_token(i, t):
+            emitted.append(i)
+            if i == 1:
+                box["req"].cancel()      # cancel from mid-decode
+
+        try:
+            req = eng.submit(np.arange(8, dtype=np.int32), max_new=60,
+                             on_token=on_token)
+            box["req"] = req
+            with pytest.raises(RuntimeError, match="cancelled"):
+                req.wait(120)
+            time.sleep(0.2)              # give stray ticks a chance
+            assert emitted == [0, 1], emitted
+            assert eng.active_slots() == 0
+            assert eng.free_block_count() == eng.num_blocks - 1
+            assert eng.stats["cancelled"] >= 1
+        finally:
+            eng.stop()
+
+    def test_on_token_cancel_from_callback_is_immediate(self, params):
+        """Cancelling from within the on_token tap (how a transport
+        reacts to a disconnect it notices while writing a chunk) stops
+        emission at exactly that token."""
+        eng = DecodeScheduler(CFG, params, num_slots=2, max_seq_len=128,
+                              paged=True, block_size=8)
+        eng.start()
+        tokens = []
+        box = {}
+
+        def on_token(i, t):
+            tokens.append((i, t))
+            box["req"].cancel()
+
+        try:
+            req = eng.submit(np.arange(5, dtype=np.int32), max_new=40,
+                             on_token=on_token)
+            box["req"] = req
+            with pytest.raises(RuntimeError, match="cancelled"):
+                req.wait(120)
+            time.sleep(0.2)
+            assert [i for i, _ in tokens] == [0], tokens
+            assert eng.free_block_count() == eng.num_blocks - 1
+        finally:
+            eng.stop()

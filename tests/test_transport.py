@@ -452,3 +452,99 @@ class TestDrain:
         # post-shutdown: the listener is gone entirely
         with pytest.raises(api.Unavailable):
             ServingClient(*addr).call(api.ModelSpec("slow"), "work", {})
+
+
+class TestNonFiniteFloats:
+    """Bare NaN/Infinity literals are not JSON: scalar non-finite floats
+    travel tagged in BOTH codec paths and strict serialization
+    (allow_nan=False) guards the transport."""
+
+    @pytest.mark.parametrize("x", [float("nan"), float("inf"),
+                                   float("-inf")])
+    def test_tagged_value_round_trip_is_strict_json(self, x):
+        enc = wire.encode_value({"x": x, "nested": (1.5, [x])})
+        s = json.dumps(enc, allow_nan=False)     # strict: must not raise
+        dec = wire.decode_value(json.loads(s))
+        got = dec["x"]
+        assert (got != got) if x != x else got == x
+        inner = dec["nested"][1][0]
+        assert (inner != inner) if x != x else inner == x
+
+    @pytest.mark.parametrize("x", [float("nan"), float("inf"),
+                                   float("-inf"), 2.5])
+    def test_typed_message_round_trip_is_strict_json(self, x):
+        req = api.GenerateRequest(
+            model_spec=api.ModelSpec("clf"),
+            tokens=np.asarray([1, 2], np.int32),
+            sampling=SamplingParams(temperature=x, seed=3))
+        s = json.dumps(wire.encode_message(req), allow_nan=False)
+        back = wire.decode_message(api.GenerateRequest, json.loads(s))
+        t = back.sampling.temperature
+        assert (t != t) if x != x else t == x
+
+    def test_ndarray_nan_payload_stays_exact(self):
+        a = np.asarray([np.nan, np.inf, -np.inf, 0.5], np.float32)
+        s = json.dumps(wire.encode_ndarray(a), allow_nan=False)
+        np.testing.assert_array_equal(
+            wire.decode_ndarray(json.loads(s)), a)
+
+    def test_nonfinite_survives_the_wire(self, stack):
+        """A non-finite scalar through the generic /v1/call route over a
+        real socket: the body is strict JSON end to end."""
+        _, http, client = stack
+        with pytest.raises(Exception):
+            # 'nan_probe' is not a real method — but the request must
+            # FAIL TYPED (server decoded the strict-JSON body fine),
+            # not die parsing.
+            client.call(api.ModelSpec("clf"), "nan_probe",
+                        {"x": float("nan"), "y": float("inf")})
+
+    def test_malformed_float_tag_rejected(self):
+        with pytest.raises(wire.WireError):
+            wire.decode_value({"__wire__": "float", "value": "huge"})
+
+
+class TestClientCloseAllThreads:
+    def test_close_reaps_every_pool_threads_connection(self, stack):
+        """A client driven from a (short-lived) thread pool opens one
+        keep-alive per worker thread; close() from the main thread must
+        close ALL of them — and threads that outlive the close() must
+        not silently resurrect their cached (now untracked) conns."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        _, http, _ = stack
+        client = ServingClient(*http.address)
+
+        def probe(_):
+            return client.health()["status"]
+
+        with ThreadPoolExecutor(max_workers=4) as pool:
+            assert list(pool.map(probe, range(8))) == ["ok"] * 8
+            # the pool threads are still alive here, conns cached
+            with client._conns_lock:
+                n_before = len(client._conns)
+            assert n_before >= 1                 # per-thread keep-alives
+            client.close()
+            with client._conns_lock:
+                assert len(client._conns) == 0   # every one reaped
+            # surviving threads re-probe: their stale thread-local conns
+            # must be REPLACED (tracked again), not reused untracked
+            assert list(pool.map(probe, range(4))) == ["ok"] * 4
+            with client._conns_lock:
+                live = set(client._conns)
+            assert live                          # fresh conns tracked
+            client.close()
+            with client._conns_lock:
+                assert len(client._conns) == 0
+            for conn in live:
+                assert conn.sock is None         # actually closed
+
+    def test_main_thread_reuse_after_close(self, stack):
+        _, http, _ = stack
+        client = ServingClient(*http.address)
+        assert client.health()["status"] == "ok"
+        client.close()
+        assert client.health()["status"] == "ok"   # fresh tracked conn
+        with client._conns_lock:
+            assert len(client._conns) == 1
+        client.close()
