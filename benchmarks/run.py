@@ -44,7 +44,7 @@ def main(argv=None) -> None:
                bench_decode_engine, bench_transport]
     if args.smoke:
         modules = [bench_lookup, bench_batching, bench_decode_engine,
-                   bench_transport, bench_hosted]
+                   bench_transport, bench_hosted, bench_isolation]
     failures = 0
     for mod in modules:
         try:

@@ -23,9 +23,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.configs import get_config
 from repro.core import CallableLoader, ResourceEstimate, ServableId
 from repro.hosted import (Autoscaler, AutoscalerConfig, Controller,
-                          LatencyModel, ModelSpec, Router, ServingJob,
-                          Synchronizer, TransactionalStore)
+                          LatencyModel, ModelSpec, RequestContext, Router,
+                          ServingJob, Synchronizer, TransactionalStore)
 from repro.models import model as MD
+from repro.serving.api import GetTenantStatsRequest
 from repro.serving.engine import JaxModelServable
 
 
@@ -85,6 +86,20 @@ def main():
     print("-- looks good; promote --")
     ctrl.set_policy("ranker", "latest")
     print("loaded:", sync.sync_once())
+
+    print("\n-- two tenants share the cluster; stats are per-tenant --")
+    for tenant, reps in (("acme", 3), ("globex", 1)):
+        ctx = RequestContext(tenant=tenant)
+        for _ in range(reps):
+            router.infer("ranker", batch, context=ctx)
+    stats = {}
+    for job in jobs.values():
+        for r in job.replicas:
+            for t in r.models.get_tenant_stats(
+                    GetTenantStatsRequest()).tenants:
+                stats[t.tenant] = stats.get(t.tenant, 0) + t.served
+    for tenant in sorted(stats):
+        print(f"  tenant {tenant!r}: served={stats[tenant]}")
 
     print("\n-- traffic burst; autoscaler reacts --")
     scaler = Autoscaler(jobs, AutoscalerConfig(target_qps_per_replica=20))

@@ -1,12 +1,14 @@
 """Inter-request batching library (paper §2.2.1), TPU-bucketized."""
 from repro.batching.graph_ops import BatchedSection, batch_section
 from repro.batching.queue import (Batch, BatchingOptions, BatchingQueue,
-                                  BatchTask, QueueFullError, pow2_buckets)
+                                  BatchTask, DeadlineExceededError,
+                                  QueueFullError, pow2_buckets)
 from repro.batching.scheduler import SharedBatchScheduler
 from repro.batching.session import BatchingSession
 
 __all__ = [
     "Batch", "BatchTask", "BatchedSection", "BatchingOptions",
-    "BatchingQueue", "BatchingSession", "QueueFullError",
-    "SharedBatchScheduler", "batch_section", "pow2_buckets",
+    "BatchingQueue", "BatchingSession", "DeadlineExceededError",
+    "QueueFullError", "SharedBatchScheduler", "batch_section",
+    "pow2_buckets",
 ]

@@ -12,6 +12,16 @@ by the owner (a BatchingSession for tensor requests, or anything else).
 TPU adaptation: merged batch sizes are padded up to a fixed bucket ladder
 (powers of two by default) so the merged computation hits a small set of
 compiled shapes instead of recompiling per batch size.
+
+Multi-tenant adaptation: tasks carry a tenant id and an optional
+(monotonic-clock) deadline. Batches are assembled at *pop* time by
+weighted deficit-round-robin across backlogged tenants — one tenant's
+flood no longer pushes every other tenant's task behind it in arrival
+order — and a task whose deadline passed while parked is completed with
+``DeadlineExceededError`` instead of occupying a batch slot (no dead
+work on the device). Single-tenant behavior is unchanged: one tenant's
+tasks assemble strictly FIFO, with identical close-on-full /
+close-on-timeout semantics.
 """
 from __future__ import annotations
 
@@ -19,9 +29,18 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Any, Callable, Generic, List, Optional, Sequence, TypeVar
+from typing import (Any, Callable, Dict, Generic, List, Optional, Sequence,
+                    TypeVar)
 
 T = TypeVar("T")
+
+DEFAULT_TENANT = "default"
+
+
+class DeadlineExceededError(RuntimeError):
+    """The request's deadline budget expired while it was parked in a
+    queue; it was dropped before doing any work (API taxonomy maps this
+    to ``Unavailable``)."""
 
 
 def pow2_buckets(max_batch_size: int) -> List[int]:
@@ -39,11 +58,14 @@ class BatchingOptions:
     # Max time the *oldest* task may wait before the batch is closed even
     # if not full. The knob trading throughput against tail latency.
     batch_timeout_s: float = 0.002
-    # Upper bound on open batches queued behind the scheduler; beyond it
+    # Upper bound on queued work (in batches of max_batch_size); beyond it
     # enqueue fails fast (load shedding) instead of growing unboundedly.
     max_enqueued_batches: int = 64
     # Pad merged batches up to a bucket (TPU shape-stability adaptation).
     pad_to_buckets: bool = True
+    # DRR: deficit added per visit to a backlogged tenant, scaled by the
+    # tenant's weight; measured in examples (task sizes).
+    drr_quantum: float = 1.0
 
     def buckets(self) -> List[int]:
         return pow2_buckets(self.max_batch_size)
@@ -67,7 +89,10 @@ class BatchTask(Generic[T]):
 
     payload: T
     size: int                      # #examples this task contributes
+    tenant: str = DEFAULT_TENANT
+    deadline_t: Optional[float] = None       # absolute, time.monotonic()
     enqueue_t: float = dataclasses.field(default_factory=time.monotonic)
+    queue_wait_s: float = 0.0                # set when batched (or dropped)
     _event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
     result: Any = None
@@ -106,59 +131,143 @@ class BatchingQueue(Generic[T]):
     """Accumulates tasks into batches for one (servable, version).
 
     Thread-safe enqueue; the scheduler thread pops *closed* batches. A
-    batch closes when (a) full to ``max_batch_size``, or (b) its oldest
-    task exceeds ``batch_timeout_s``.
+    batch is ready when (a) pending work fills ``max_batch_size``, or
+    (b) the oldest task exceeds ``batch_timeout_s`` (or the pop is
+    ``force``d). Assembly is weighted deficit-round-robin across the
+    tenants with pending tasks (FIFO within a tenant), so the batch mix
+    tracks tenant weights instead of raw arrival order.
+
+    ``weight_fn`` maps tenant -> DRR weight (default: everyone 1.0);
+    the serving layer passes ``TenancyManager.weight_for``.
     """
 
-    def __init__(self, name: str, options: BatchingOptions):
+    def __init__(self, name: str, options: BatchingOptions,
+                 weight_fn: Optional[Callable[[str], float]] = None):
         self.name = name
         self.options = options
+        self._weight_fn = weight_fn or (lambda tenant: 1.0)
         self._lock = threading.Lock()
-        self._open: Optional[Batch] = None
-        self._closed: deque = deque()
+        self._pending: Dict[str, deque] = {}     # tenant -> FIFO of tasks
+        self._rr: deque = deque()                # backlogged tenant order
+        self._deficit: Dict[str, float] = {}
+        self._total = 0                          # pending examples
         self.stats = {"enqueued": 0, "batches": 0, "shed": 0,
-                      "padded_examples": 0}
+                      "padded_examples": 0, "deadline_dropped": 0}
 
-    def enqueue(self, payload: T, size: int = 1) -> BatchTask:
+    def enqueue(self, payload: T, size: int = 1,
+                tenant: str = DEFAULT_TENANT,
+                deadline_t: Optional[float] = None) -> BatchTask:
         if size > self.options.max_batch_size:
             raise ValueError(
                 f"task size {size} > max_batch_size "
                 f"{self.options.max_batch_size}")
-        task = BatchTask(payload=payload, size=size)
+        task = BatchTask(payload=payload, size=size, tenant=tenant,
+                         deadline_t=deadline_t)
         with self._lock:
-            if len(self._closed) >= self.options.max_enqueued_batches:
+            bound = (self.options.max_enqueued_batches *
+                     self.options.max_batch_size)
+            if self._total + size > bound:
                 self.stats["shed"] += 1
                 raise QueueFullError(self.name)
-            if (self._open is not None and
-                    self._open.size + size > self.options.max_batch_size):
-                self._closed.append(self._open)
-                self._open = None
-            if self._open is None:
-                self._open = Batch(tasks=[], created_t=time.monotonic())
-                self.stats["batches"] += 1
-            self._open.tasks.append(task)
+            dq = self._pending.get(tenant)
+            if dq is None:
+                dq = self._pending[tenant] = deque()
+            if not dq:                       # tenant becomes backlogged
+                if tenant not in self._deficit:
+                    self._deficit[tenant] = 0.0
+                if tenant not in self._rr:
+                    self._rr.append(tenant)
+            dq.append(task)
+            self._total += size
             self.stats["enqueued"] += 1
-            if self._open.size == self.options.max_batch_size:
-                self._closed.append(self._open)
-                self._open = None
         return task
 
-    def _timeout_expired(self) -> bool:
-        return (self._open is not None and self._open.tasks and
-                self._open.age_s() >= self.options.batch_timeout_s)
+    # -- assembly (lock held) ----------------------------------------------
+    def _retire_tenant(self, tenant: str) -> None:
+        del self._pending[tenant]
+        self._deficit.pop(tenant, None)
+        try:
+            self._rr.remove(tenant)
+        except ValueError:
+            pass
+
+    def _drop_if_expired(self, task: BatchTask, now: float) -> bool:
+        if task.deadline_t is None or now < task.deadline_t:
+            return False
+        self._total -= task.size
+        self.stats["deadline_dropped"] += 1
+        task.queue_wait_s = now - task.enqueue_t
+        task.set_error(DeadlineExceededError(
+            f"deadline expired after {task.queue_wait_s * 1e3:.1f}ms "
+            f"in batching queue {self.name!r}"))
+        return True
+
+    def _assemble(self, now: float) -> List[BatchTask]:
+        """DRR over backlogged tenants until the batch is full, a head
+        task does not fit (close-on-overflow, as the FIFO queue did), or
+        nothing is pending. Expired tasks are dropped, never batched."""
+        tasks: List[BatchTask] = []
+        space = self.options.max_batch_size
+        visits = 0
+        # Each visit either serves/drops a task, retires an empty
+        # tenant, or grows a deficit by quantum*weight — deficits reach
+        # any head's size in bounded visits, so cap generously.
+        max_visits = 1000 * (len(self._rr) + 1) + self._total
+        while self._rr and space > 0 and visits < max_visits:
+            visits += 1
+            tenant = self._rr[0]
+            dq = self._pending.get(tenant)
+            if not dq:
+                self._retire_tenant(tenant)
+                continue
+            head = dq[0]
+            if self._drop_if_expired(head, now):
+                dq.popleft()
+                continue
+            if head.size > space:
+                break                        # batch closes (FIFO parity)
+            if len(self._rr) == 1 or self._deficit[tenant] >= head.size:
+                dq.popleft()
+                if len(self._rr) > 1:
+                    self._deficit[tenant] -= head.size
+                self._total -= head.size
+                head.queue_wait_s = now - head.enqueue_t
+                tasks.append(head)
+                space -= head.size
+                if not dq:
+                    self._retire_tenant(tenant)
+            else:
+                self._deficit[tenant] += (
+                    self.options.drr_quantum *
+                    max(self._weight_fn(tenant), 1e-6))
+                self._rr.rotate(-1)
+        return tasks
+
+    def _oldest_enqueue_t(self) -> Optional[float]:
+        heads = [dq[0].enqueue_t for dq in self._pending.values() if dq]
+        return min(heads) if heads else None
+
+    def _timeout_expired(self, now: float) -> bool:
+        oldest = self._oldest_enqueue_t()
+        return (oldest is not None and
+                now - oldest >= self.options.batch_timeout_s)
 
     def pop_ready_batch(self, *, force: bool = False) -> Optional[Batch]:
-        """Next closed batch; also closes the open batch on timeout or
-        ``force`` (used at shutdown / by the round-robin scheduler when
-        the device is idle anyway)."""
+        """Next ready batch, assembled by DRR; closes a partial batch on
+        timeout or ``force`` (used at shutdown / by the round-robin
+        scheduler when the device is idle anyway)."""
         with self._lock:
-            if not self._closed and (force or self._timeout_expired()):
-                if self._open is not None and self._open.tasks:
-                    self._closed.append(self._open)
-                    self._open = None
-            if self._closed:
-                return self._closed.popleft()
-        return None
+            if not self._total:
+                return None
+            now = time.monotonic()
+            if not (force or self._total >= self.options.max_batch_size
+                    or self._timeout_expired(now)):
+                return None
+            tasks = self._assemble(now)
+            if not tasks:                    # everything pending expired
+                return None
+            self.stats["batches"] += 1
+            return Batch(tasks=tasks, created_t=now)
 
     def add_stat(self, key: str, delta: int) -> None:
         """Mutate a stats counter under the queue lock (device threads
@@ -173,12 +282,8 @@ class BatchingQueue(Generic[T]):
 
     def has_work(self) -> bool:
         with self._lock:
-            return bool(self._closed) or (
-                self._open is not None and bool(self._open.tasks))
+            return self._total > 0
 
     def pending_tasks(self) -> int:
         with self._lock:
-            n = sum(b.size for b in self._closed)
-            if self._open is not None:
-                n += self._open.size
-            return n
+            return self._total

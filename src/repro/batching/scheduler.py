@@ -39,8 +39,10 @@ class SharedBatchScheduler(Generic[T]):
 
     # -- dynamic queue management (versions come and go) -----------------
     def add_queue(self, name: str, options: BatchingOptions,
-                  processor: BatchProcessor) -> BatchingQueue:
-        q = BatchingQueue(name, options)
+                  processor: BatchProcessor,
+                  weight_fn: Optional[Callable[[str], float]] = None
+                  ) -> BatchingQueue:
+        q = BatchingQueue(name, options, weight_fn=weight_fn)
         with self._lock:
             if name in self._queues:
                 raise KeyError(f"queue {name!r} exists")

@@ -61,21 +61,27 @@ class BatchingSession:
 
     def __init__(self, name: str, fn: Callable[[Any], Any],
                  scheduler: SharedBatchScheduler,
-                 options: Optional[BatchingOptions] = None):
+                 options: Optional[BatchingOptions] = None,
+                 weight_fn: Optional[Callable[[str], float]] = None):
         self.name = name
         self._fn = fn
         self._scheduler = scheduler
         self.options = options or BatchingOptions()
-        self._queue = scheduler.add_queue(name, self.options, self._process)
+        self._queue = scheduler.add_queue(name, self.options, self._process,
+                                          weight_fn=weight_fn)
 
-    def run(self, inputs: Any, timeout_s: float = 30.0) -> Any:
+    def run(self, inputs: Any, timeout_s: float = 30.0,
+            tenant: str = "default",
+            deadline_t: Optional[float] = None) -> Any:
         """Blocking per-request call, safe from many threads."""
-        task = self.submit(inputs)
+        task = self.submit(inputs, tenant=tenant, deadline_t=deadline_t)
         return task.wait(timeout_s)
 
-    def submit(self, inputs: Any) -> BatchTask:
+    def submit(self, inputs: Any, tenant: str = "default",
+               deadline_t: Optional[float] = None) -> BatchTask:
         size = int(jax.tree_util.tree_leaves(inputs)[0].shape[0])
-        return self._queue.enqueue(inputs, size=size)
+        return self._queue.enqueue(inputs, size=size, tenant=tenant,
+                                   deadline_t=deadline_t)
 
     def close(self, *, drain: bool = True) -> None:
         self._scheduler.remove_queue(self.name, drain=drain)

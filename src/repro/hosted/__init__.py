@@ -12,11 +12,13 @@ from repro.hosted.jobs import (JobReplica, LatencyModel, RpcSource,
 from repro.hosted.router import NoReplicaError, Router
 from repro.hosted.store import TransactionalStore, Txn, TxnConflict
 from repro.hosted.synchronizer import Synchronizer
-from repro.serving.api import ModelSpec  # request addressing (re-export)
+from repro.serving.api import (ModelSpec,  # request addressing
+                               RequestContext)  # tenant identity
 
 __all__ = [
     "AdmissionError", "Autoscaler", "AutoscalerConfig", "Controller",
     "JobReplica", "LatencyModel", "ModelEntry", "ModelSpec",
-    "NoReplicaError", "Router", "RpcSource", "ServingJob", "Synchronizer",
+    "NoReplicaError", "RequestContext", "Router", "RpcSource", "ServingJob",
+    "Synchronizer",
     "TransactionalStore", "Txn", "TxnConflict",
 ]

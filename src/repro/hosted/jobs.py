@@ -98,7 +98,8 @@ class JobReplica:
         # source — but labels/status are served (the Synchronizer
         # propagates SetVersionLabels through it).
         self.prediction = PredictionService(self.manager)
-        self.models = api.ModelService(self.manager)
+        self.models = api.ModelService(
+            self.manager, tenancy=self.prediction.tenancy)
         self._transport = None
         self._client = None
         self._client_lock = threading.Lock()
@@ -165,14 +166,16 @@ class JobReplica:
             self._req_count += 1
 
     def infer(self, model, method: str, request: Any,
-              version: Optional[int] = None) -> Any:
+              version: Optional[int] = None,
+              context: Optional[api.RequestContext] = None) -> Any:
         """Serve one RPC. ``model`` is a ``ModelSpec`` (label-aware) or a
         bare name (+ optional ``version``) for convenience; labels are
         resolved against this replica's own manager at request time."""
         spec = model if isinstance(model, ModelSpec) \
             else ModelSpec(model, version)
         self._account()
-        return self.prediction.call(spec, method, request)
+        return self.prediction.call(spec, method, request,
+                                    context=context)
 
     def take_request_count(self) -> int:
         with self._req_lock:

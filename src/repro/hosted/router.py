@@ -27,7 +27,7 @@ from typing import Any, Dict, Optional
 
 from repro.hosted.jobs import JobReplica, ServingJob
 from repro.hosted.synchronizer import Synchronizer
-from repro.serving.api import ModelSpec, NotFound
+from repro.serving.api import ModelSpec, NotFound, RequestContext
 
 
 class NoReplicaError(NotFound):
@@ -60,17 +60,22 @@ class Router:
         return []
 
     def _infer_on(self, replica: JobReplica, spec: ModelSpec,
-                  method: str, request: Any) -> Any:
+                  method: str, request: Any,
+                  context: Optional[RequestContext] = None) -> Any:
         client = None if self.transport == "inproc" else replica.client()
         if client is None:
-            return replica.infer(spec, method, request)
-        return client.call(spec, method, request)
+            return replica.infer(spec, method, request, context=context)
+        return client.call(spec, method, request, context=context)
 
     def infer(self, model, request: Any, method: str = "predict",
               version: Optional[int] = None,
-              label: Optional[str] = None) -> Any:
+              label: Optional[str] = None,
+              context: Optional[RequestContext] = None) -> Any:
         """``model`` is a ``ModelSpec`` or a bare name (+ optional
-        ``version``/``label``). Replicas resolve labels locally."""
+        ``version``/``label``). Replicas resolve labels locally; the
+        request ``context`` (tenant/priority/deadline) rides along to
+        whichever replica serves — across the wire when the replica is
+        socket-served."""
         spec = model if isinstance(model, ModelSpec) \
             else ModelSpec(model, version, label)
         replicas = self._replicas_for(spec.name)
@@ -83,10 +88,10 @@ class Router:
         primary = replicas[start % len(replicas)]
 
         if self.hedge_delay_s is None or len(replicas) == 1:
-            return self._infer_on(primary, spec, method, request)
+            return self._infer_on(primary, spec, method, request, context)
 
         f1 = self._pool.submit(self._infer_on, primary, spec, method,
-                               request)
+                               request, context)
         done, _ = wait([f1], timeout=self.hedge_delay_s)
         if done:
             return f1.result()
@@ -95,7 +100,7 @@ class Router:
         with self._stats_lock:
             self.stats["hedged"] += 1
         f2 = self._pool.submit(self._infer_on, backup, spec, method,
-                               request)
+                               request, context)
         done, _ = wait([f1, f2], return_when=FIRST_COMPLETED)
         winner = done.pop()
         if winner is f2:

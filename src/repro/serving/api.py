@@ -22,9 +22,16 @@ Key properties:
     ``TokenChunk``s emitted as decode ticks retire tokens; the
     concatenation is bit-identical to the blocking result.
   * **Typed errors** — ``NotFound`` / ``FailedPrecondition`` /
-    ``InvalidArgument`` / ``Unavailable`` — replace bare RuntimeErrors.
-    Each subclasses the matching lower-level exception so pre-existing
-    ``except`` clauses keep working.
+    ``InvalidArgument`` / ``Unavailable`` / ``ResourceExhausted`` —
+    replace bare RuntimeErrors. Each subclasses the matching lower-level
+    exception so pre-existing ``except`` clauses keep working.
+  * **Multi-tenant**: every RPC message carries an optional
+    ``RequestContext`` (tenant id, priority, deadline budget); no
+    context means the ``"default"`` tenant, so every existing caller
+    keeps working. The service enforces per-tenant quotas through a
+    shared ``TenancyManager`` (over-quota -> ``ResourceExhausted``),
+    threads the tenant into the WFQ schedulers underneath, and surfaces
+    per-tenant accounting via ``ModelService.get_tenant_stats``.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ import dataclasses
 import logging
 import queue
 import threading
+import time
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -46,6 +54,11 @@ from repro.core.servable import (Servable, ServableHandle,
 from repro.serving.decode_engine import DecodeScheduler
 from repro.serving.engine import JaxModelServable
 from repro.serving.generation import SamplingParams
+from repro.serving.tenancy import (DEFAULT_CONTEXT, DEFAULT_TENANT,
+                                   DeadlineExceededError,
+                                   QuotaExceededError, RequestContext,
+                                   TenancyManager, TenantQuota,
+                                   tenant_scope)
 
 log = logging.getLogger(__name__)
 
@@ -82,9 +95,18 @@ class InvalidArgument(ServingError, ValueError):
 
 
 class Unavailable(ServingError, RuntimeError):
-    """Transient inability to serve (engine/server shutting down)."""
+    """Transient inability to serve (engine/server shutting down,
+    deadline expired while parked in a queue)."""
 
     code = "UNAVAILABLE"
+
+
+class ResourceExhausted(ServingError, RuntimeError):
+    """A per-tenant quota (RPS, concurrent decodes, KV blocks, in-flight
+    predicts) rejected the request. Retry later or with less work; HTTP
+    transports map this to 429."""
+
+    code = "RESOURCE_EXHAUSTED"
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +131,7 @@ class PredictRequest:
     inputs: Dict[str, np.ndarray]
     batched: bool = True          # merge into the shared batch queue
     timeout_s: float = 30.0
+    context: Optional[RequestContext] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +145,7 @@ class ClassifyRequest:
     model_spec: ModelSpec
     inputs: Dict[str, np.ndarray]
     k: int = 5
+    context: Optional[RequestContext] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +159,7 @@ class ClassifyResponse:
 class RegressRequest:
     model_spec: ModelSpec
     inputs: Dict[str, np.ndarray]
+    context: Optional[RequestContext] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,6 +177,7 @@ class MultiInferenceRequest:
     inputs: Dict[str, np.ndarray]
     tasks: Tuple[str, ...] = ("classify", "regress")
     k: int = 5
+    context: Optional[RequestContext] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,6 +196,7 @@ class GenerateRequest:
     sampling: Optional[SamplingParams] = None
     stream: bool = False                     # True => iterator of chunks
     timeout_s: float = 120.0
+    context: Optional[RequestContext] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -228,6 +255,7 @@ class ModelVersionStatus:
 @dataclasses.dataclass(frozen=True)
 class GetModelStatusRequest:
     model_spec: ModelSpec                    # version/label filter optional
+    context: Optional[RequestContext] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,6 +278,7 @@ class ReloadConfigRequest:
     model_configs: Dict[str, ModelDirConfig]
     wait: bool = True                        # block until reconciled
     timeout_s: float = 60.0
+    context: Optional[RequestContext] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,6 +286,40 @@ class ReloadConfigResponse:
     added: Tuple[str, ...]
     removed: Tuple[str, ...]
     updated: Tuple[str, ...]                 # repoliced / re-pathed
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantStats:
+    """One tenant's quota limits, live usage and cumulative counters
+    (the ``GetTenantStats`` observability surface)."""
+
+    tenant: str
+    weight: float = 1.0
+    max_concurrent_decodes: Optional[int] = None
+    max_kv_blocks: Optional[int] = None
+    max_inflight_predicts: Optional[int] = None
+    rps: Optional[float] = None
+    served: int = 0
+    dropped: int = 0
+    quota_rejected: int = 0
+    deadline_dropped: int = 0
+    tokens_generated: int = 0
+    blocks_held: int = 0
+    decodes_inflight: int = 0
+    predicts_inflight: int = 0
+    queue_wait_s: float = 0.0
+    max_queue_wait_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GetTenantStatsRequest:
+    tenant: Optional[str] = None             # None => all known tenants
+    context: Optional[RequestContext] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class GetTenantStatsResponse:
+    tenants: Tuple[TenantStats, ...]
 
 
 def _validate_spec(spec: Any) -> None:
@@ -297,10 +360,16 @@ class PredictionService:
                  decode_engine_slots: int = 8,
                  decode_engine_block_size: Optional[int] = None,
                  decode_engine_num_blocks: Optional[int] = None,
-                 decode_engine_prefill_chunk: Optional[int] = None):
+                 decode_engine_prefill_chunk: Optional[int] = None,
+                 decode_engine_scheduling: str = "wfq",
+                 tenancy: Optional[TenancyManager] = None):
         self.manager = manager
         self._scheduler = scheduler
         self._batching = batching or BatchingOptions()
+        # Tenancy is always on; with no quotas configured every limit is
+        # unlimited and the default tenant's behavior is unchanged.
+        self.tenancy = tenancy or TenancyManager()
+        self.decode_engine_scheduling = decode_engine_scheduling
         self._sessions: Dict[str, BatchingSession] = {}
         self._sessions_lock = threading.Lock()
         self.use_decode_engine = use_decode_engine
@@ -330,17 +399,38 @@ class PredictionService:
         except NotFoundError as exc:
             raise NotFound(str(exc)) from exc
 
+    def _enter(self, context: Optional[RequestContext]
+               ) -> Tuple[RequestContext, Optional[float]]:
+        """Per-RPC tenancy gate: resolve the context (None -> default
+        tenant), charge the tenant's RPS token bucket, and fix the
+        absolute deadline from the relative budget — measured HERE, at
+        server receipt, which is what makes ``deadline_s`` meaningful
+        across the wire without clock sync."""
+        ctx = context if context is not None else DEFAULT_CONTEXT
+        try:
+            self.tenancy.check_rps(ctx.tenant)
+        except QuotaExceededError as exc:
+            raise ResourceExhausted(str(exc)) from exc
+        return ctx, ctx.deadline_from(time.monotonic())
+
     # -- generic escape hatch ----------------------------------------------
-    def call(self, spec: ModelSpec, method: str, request: Any) -> Any:
+    def call(self, spec: ModelSpec, method: str, request: Any,
+             context: Optional[RequestContext] = None) -> Any:
         """One handle hold around an arbitrary servable method — for
         non-model servables (lookup tables, ...) the typed RPCs don't
         cover. Spec resolution (label/default -> version) and the error
         taxonomy apply exactly as for the typed methods."""
+        ctx, _ = self._enter(context)
         with self._acquire(spec) as s:
             try:
-                return s.call(method, request)
+                with tenant_scope(ctx.tenant):
+                    out = s.call(method, request)
+                self.tenancy.account_served(ctx.tenant)
+                return out
             except ServingError:
                 raise
+            except QuotaExceededError as exc:
+                raise ResourceExhausted(str(exc)) from exc
             except ValueError as exc:
                 raise InvalidArgument(str(exc)) from exc
             except RuntimeError as exc:
@@ -356,12 +446,28 @@ class PredictionService:
         # that window blocks in the manager's refcount drain until the
         # merged batch has run, instead of failing every co-batched
         # request with NotFound (the batched-predict unload race).
+        ctx, deadline_t = self._enter(req.context)
         with self._acquire(req.model_spec) as s:
             spec = resolved_spec(s)
             if not req.batched or self._scheduler is None:
-                return PredictResponse(spec, s.call("predict", req.inputs))
-            out = self._session_for(spec.name, spec.version, s).run(
-                req.inputs, req.timeout_s)
+                with tenant_scope(ctx.tenant):
+                    out = s.call("predict", req.inputs)
+                self.tenancy.account_served(ctx.tenant)
+                return PredictResponse(spec, out)
+            try:
+                self.tenancy.acquire_predict(ctx.tenant)
+            except QuotaExceededError as exc:
+                raise ResourceExhausted(str(exc)) from exc
+            try:
+                out = self._session_for(spec.name, spec.version, s).run(
+                    req.inputs, req.timeout_s, tenant=ctx.tenant,
+                    deadline_t=deadline_t)
+            except DeadlineExceededError as exc:
+                self.tenancy.account_drop(ctx.tenant, "deadline")
+                raise Unavailable(str(exc)) from exc
+            finally:
+                self.tenancy.release_predict(ctx.tenant)
+            self.tenancy.account_served(ctx.tenant)
             return PredictResponse(spec, out)
 
     def _session_for(self, name: str, version: int,
@@ -382,20 +488,27 @@ class PredictionService:
                 def run_batch(merged, servable=servable):
                     return servable.call("predict", merged)
                 sess = BatchingSession(key, run_batch, self._scheduler,
-                                       self._batching)
+                                       self._batching,
+                                       weight_fn=self.tenancy.weight_for)
                 self._sessions[key] = sess
         return sess
 
     # -- Classify / Regress / MultiInference -------------------------------
     def classify(self, req: ClassifyRequest) -> ClassifyResponse:
+        ctx, _ = self._enter(req.context)
         with self._acquire(req.model_spec) as s:
-            out = s.call("classify", {"batch": req.inputs, "k": req.k})
+            with tenant_scope(ctx.tenant):
+                out = s.call("classify", {"batch": req.inputs, "k": req.k})
+            self.tenancy.account_served(ctx.tenant)
             return ClassifyResponse(resolved_spec(s),
                                     out["classes"], out["scores"])
 
     def regress(self, req: RegressRequest) -> RegressResponse:
+        ctx, _ = self._enter(req.context)
         with self._acquire(req.model_spec) as s:
-            out = s.call("regress", {"batch": req.inputs})
+            with tenant_scope(ctx.tenant):
+                out = s.call("regress", {"batch": req.inputs})
+            self.tenancy.account_served(ctx.tenant)
             return RegressResponse(resolved_spec(s), out["value"])
 
     def multi_inference(self,
@@ -404,24 +517,28 @@ class PredictionService:
             raise InvalidArgument("multi_inference needs at least one task")
         if not set(req.tasks) <= {"classify", "regress"}:
             raise InvalidArgument(f"unknown tasks in {req.tasks!r}")
+        ctx, _ = self._enter(req.context)
         with self._acquire(req.model_spec) as s:
             spec = resolved_spec(s)
-            try:
-                # Fused path: one forward pass for all tasks.
-                out = s.call("multi_inference",
-                             {"batch": req.inputs, "tasks": req.tasks,
-                              "k": req.k})
-            except UnsupportedMethodError:
-                # Servable without the fused method: per-task calls,
-                # still over the SAME resolved version in one hold.
-                out = {}
-                for task in req.tasks:
-                    if task == "classify":
-                        out["classify"] = s.call(
-                            "classify", {"batch": req.inputs, "k": req.k})
-                    else:
-                        out["regress"] = s.call(
-                            "regress", {"batch": req.inputs})
+            with tenant_scope(ctx.tenant):
+                try:
+                    # Fused path: one forward pass for all tasks.
+                    out = s.call("multi_inference",
+                                 {"batch": req.inputs, "tasks": req.tasks,
+                                  "k": req.k})
+                except UnsupportedMethodError:
+                    # Servable without the fused method: per-task calls,
+                    # still over the SAME resolved version in one hold.
+                    out = {}
+                    for task in req.tasks:
+                        if task == "classify":
+                            out["classify"] = s.call(
+                                "classify",
+                                {"batch": req.inputs, "k": req.k})
+                        else:
+                            out["regress"] = s.call(
+                                "regress", {"batch": req.inputs})
+        self.tenancy.account_served(ctx.tenant)
         cls = out.get("classify")
         reg = out.get("regress")
         return MultiInferenceResponse(
@@ -443,19 +560,28 @@ class PredictionService:
             raise InvalidArgument("stream=True requires token prompts")
         if req.max_new < 1:
             raise InvalidArgument("max_new must be >= 1")
+        ctx, deadline_t = self._enter(req.context)
         handle = self._acquire(req.model_spec)
         try:
             s = handle.servable
             self._maybe_attach_engine(req.model_spec.name, s, req)
             if req.stream:
-                stream = self._generate_stream(handle, s, req)
+                stream = self._generate_stream(handle, s, req, ctx,
+                                               deadline_t)
                 handle = None     # ownership moved to the stream worker
                 return stream
-            out = s.call("generate", {
-                "tokens": req.tokens, "embeds": req.embeds,
-                "max_new": req.max_new, "sampling": req.sampling,
-                "timeout_s": req.timeout_s})
+            with tenant_scope(ctx.tenant):
+                out = s.call("generate", {
+                    "tokens": req.tokens, "embeds": req.embeds,
+                    "max_new": req.max_new, "sampling": req.sampling,
+                    "timeout_s": req.timeout_s, "tenant": ctx.tenant,
+                    "priority": ctx.priority, "deadline_t": deadline_t})
+            self.tenancy.account_served(ctx.tenant)
             return GenerateResponse(resolved_spec(s), out)
+        except QuotaExceededError as exc:
+            raise ResourceExhausted(str(exc)) from exc
+        except DeadlineExceededError as exc:
+            raise Unavailable(str(exc)) from exc
         except ValueError as exc:
             raise InvalidArgument(str(exc)) from exc
         except RuntimeError as exc:
@@ -465,7 +591,8 @@ class PredictionService:
                 handle.release()
 
     def _generate_stream(self, handle: ServableHandle, s: Servable,
-                         req: GenerateRequest) -> "TokenStream":
+                         req: GenerateRequest, ctx: RequestContext,
+                         deadline_t: Optional[float]) -> "TokenStream":
         tokens = np.asarray(req.tokens, np.int32)
         if tokens.ndim == 2 and tokens.shape[0] == 1:
             tokens = tokens[0]
@@ -488,11 +615,16 @@ class PredictionService:
         # KV blocks free, then the handle releases as usual.
         def worker():
             try:
-                out = s.call("generate", {
-                    "tokens": tokens, "max_new": req.max_new,
-                    "sampling": req.sampling, "timeout_s": req.timeout_s,
-                    "on_token": lambda i, t: q.put(("tok", i, t)),
-                    "cancel": cancel_event})
+                with tenant_scope(ctx.tenant):
+                    out = s.call("generate", {
+                        "tokens": tokens, "max_new": req.max_new,
+                        "sampling": req.sampling,
+                        "timeout_s": req.timeout_s,
+                        "on_token": lambda i, t: q.put(("tok", i, t)),
+                        "cancel": cancel_event, "tenant": ctx.tenant,
+                        "priority": ctx.priority,
+                        "deadline_t": deadline_t})
+                self.tenancy.account_served(ctx.tenant)
                 q.put(("done", out, None))
             except BaseException as exc:   # surfaced on the stream
                 q.put(("err", exc, None))
@@ -525,6 +657,8 @@ class PredictionService:
                     exc = item[1]
                     if isinstance(exc, ServingError):
                         raise exc
+                    if isinstance(exc, QuotaExceededError):
+                        raise ResourceExhausted(str(exc)) from exc
                     if isinstance(exc, ValueError):
                         raise InvalidArgument(str(exc)) from exc
                     if isinstance(exc, RuntimeError):
@@ -556,7 +690,9 @@ class PredictionService:
         eng = DecodeScheduler(
             s.cfg, s.params,
             num_slots=self.decode_engine_slots,
-            max_seq_len=s.max_cache_len, **kw)
+            max_seq_len=s.max_cache_len,
+            scheduling=self.decode_engine_scheduling,
+            tenancy=self.tenancy, **kw)
         with self._engines_lock:
             if key in self._engines:
                 return
@@ -597,13 +733,30 @@ class PredictionService:
 
 
 class ModelService:
-    """Model lifecycle RPCs: status, labels, runtime config reload."""
+    """Model lifecycle RPCs: status, labels, runtime config reload,
+    per-tenant stats."""
 
     def __init__(self, manager: AspiredVersionsManager,
-                 source: Optional[FileSystemSource] = None):
+                 source: Optional[FileSystemSource] = None,
+                 tenancy: Optional[TenancyManager] = None):
         self.manager = manager
         self.source = source
+        self.tenancy = tenancy
         self._reload_lock = threading.Lock()
+
+    # -- GetTenantStats ----------------------------------------------------
+    def get_tenant_stats(
+            self, req: GetTenantStatsRequest) -> GetTenantStatsResponse:
+        """Quota limits + live usage + cumulative counters per tenant
+        (all known tenants, or just ``req.tenant``). Requires the owner
+        to share its PredictionService's TenancyManager."""
+        if self.tenancy is None:
+            raise FailedPrecondition(
+                "no tenancy manager attached to this ModelService")
+        snap = self.tenancy.snapshot(req.tenant)
+        return GetTenantStatsResponse(tuple(
+            TenantStats(tenant=name, **vals)
+            for name, vals in sorted(snap.items())))
 
     # -- GetModelStatus ----------------------------------------------------
     def get_model_status(
@@ -686,11 +839,13 @@ class ModelService:
 __all__ = [
     "ClassifyRequest", "ClassifyResponse", "FailedPrecondition",
     "GenerateRequest", "GenerateResponse", "GetModelStatusRequest",
-    "GetModelStatusResponse", "InvalidArgument", "ModelDirConfig",
+    "GetModelStatusResponse", "GetTenantStatsRequest",
+    "GetTenantStatsResponse", "InvalidArgument", "ModelDirConfig",
     "ModelService", "ModelSpec", "ModelVersionStatus",
     "MultiInferenceRequest", "MultiInferenceResponse", "NotFound",
     "PredictRequest", "PredictResponse", "PredictionService",
     "RegressRequest", "RegressResponse", "ReloadConfigRequest",
-    "ReloadConfigResponse", "ServingError", "TokenChunk", "TokenStream",
-    "Unavailable",
+    "ReloadConfigResponse", "RequestContext", "ResourceExhausted",
+    "ServingError", "TenancyManager", "TenantQuota", "TenantStats",
+    "TokenChunk", "TokenStream", "Unavailable",
 ]

@@ -56,12 +56,29 @@ so abandoned slots retire (and their blocks free) at the next tick
 instead of decoding to ``max_new`` for nobody. ``active_slots()`` and
 ``stats`` snapshot under the engine lock, so introspection never reads
 torn state.
+
+Multi-tenant admission: requests carry a tenant id and queue per
+tenant; free slots are backfilled by weighted deficit-round-robin
+across backlogged tenants (``scheduling="wfq"``, the default; cost =
+``prompt_len + max_new`` tokens of work) so one tenant's flood no
+longer pushes every other tenant behind it in arrival order.
+``scheduling="fifo"`` restores global arrival order (the
+noisy-neighbor baseline). The DRR pick is *sticky*: once selected, a
+request short on free blocks stays selected until retiring slots
+return enough — the same head-of-line starvation-freedom the FIFO
+queue had, per chosen request. Within one tenant, higher ``priority``
+admits first. A request whose ``deadline_t`` passed while parked is
+failed with ``DeadlineExceededError`` *before* any prefill work. An
+attached ``TenancyManager`` enforces slot/block quotas at ``submit``
+(reserved up front, released exactly once on the request's terminal
+transition) and receives per-tenant served/tokens/wait accounting.
 """
 from __future__ import annotations
 
 import dataclasses
 import logging
 import threading
+import time
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -73,20 +90,36 @@ from repro.configs.base import ModelConfig
 from repro.models import model as MD
 from repro.serving.generation import (GenRequest, SamplingParams,
                                       sample_token)
+from repro.serving.tenancy import (DEFAULT_TENANT, DeadlineExceededError,
+                                   TenancyManager)
 
 log = logging.getLogger(__name__)
 
 
 class DecodeRequest(GenRequest):
     """GenRequest (tokens/max_new/sampling + completion event) with
-    engine-side completion helpers and client-side cancellation."""
+    engine-side completion helpers, client-side cancellation and the
+    multi-tenant envelope (tenant/priority/deadline)."""
 
     cancelled: bool = False
+    tenant: str = DEFAULT_TENANT
+    priority: int = 0
+    deadline_t: Optional[float] = None   # absolute, time.monotonic()
+    _seq: int = 0                        # global arrival order (FIFO mode)
+    _quota_release = None                # set at submit when quotas reserved
 
     def cancel(self) -> None:
         """Mark abandoned: the engine retires the slot (freeing its
         blocks) at the next tick instead of decoding to ``max_new``."""
         self.cancelled = True
+
+    def _release_quota(self) -> None:
+        """Run the quota-release hook exactly once. Terminal transitions
+        happen only on the engine thread (or after it is joined in
+        ``stop``), so the swap-to-None is not racy."""
+        hook, self._quota_release = self._quota_release, None
+        if hook is not None:
+            hook()
 
     def _emit_token(self, index: int, token: int) -> None:
         """Streaming tap, called on the engine thread as each tick
@@ -100,10 +133,12 @@ class DecodeRequest(GenRequest):
             log.exception("on_token callback failed")
 
     def _finish(self, result: np.ndarray) -> None:
+        self._release_quota()
         self.result = result
         self._event.set()
 
     def _fail(self, exc: BaseException) -> None:
+        self._release_quota()
         if not self._event.is_set():
             self.error = exc
             self._event.set()
@@ -149,13 +184,21 @@ class DecodeScheduler:
                  paged: Optional[bool] = None,
                  block_size: int = MD.DEFAULT_BLOCK_SIZE,
                  num_blocks: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 scheduling: str = "wfq",
+                 drr_quantum: float = 16.0,
+                 tenancy: Optional[TenancyManager] = None):
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
         self.max_seq_len = max_seq_len
         self.eos = eos_token
         self._idle_wait_s = idle_wait_s
+        if scheduling not in ("wfq", "fifo"):
+            raise ValueError("scheduling must be 'wfq' or 'fifo'")
+        self.scheduling = scheduling
+        self.drr_quantum = drr_quantum
+        self.tenancy = tenancy
 
         # Ring (windowed) caches scatter positions, pages assume an
         # append-only prefix — fall back to the contiguous pool there.
@@ -178,7 +221,15 @@ class DecodeScheduler:
         self.prefill_chunk = prefill_chunk
 
         self._cond = threading.Condition()
-        self._queue: "deque[DecodeRequest]" = deque()
+        # Per-tenant FIFO admission queues (priority-ordered within a
+        # tenant), the DRR rotation over backlogged tenants, and the
+        # sticky pick (see _select_locked).
+        self._queues: Dict[str, List[DecodeRequest]] = {}
+        self._rr: "deque[str]" = deque()
+        self._deficit: Dict[str, float] = {}
+        self._qsize = 0
+        self._seq = 0
+        self._pick: Optional[DecodeRequest] = None
         self._slots: List[Optional[_Slot]] = [None] * num_slots
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -186,7 +237,8 @@ class DecodeScheduler:
             "requests": 0, "finished": 0, "cancelled": 0, "prefills": 0,
             "prefill_chunks": 0, "ticks": 0, "slot_steps": 0,
             "active_steps": 0, "slot_utilization": 0.0,
-            "admission_waits": 0}
+            "admission_waits": 0, "deadline_dropped": 0,
+            "queue_wait_s": 0.0, "max_queue_wait_s": 0.0}
 
         cfgc = cfg
 
@@ -277,7 +329,9 @@ class DecodeScheduler:
 
     def submit(self, tokens, max_new: int = 16,
                sampling: Optional[SamplingParams] = None,
-               on_token=None) -> DecodeRequest:
+               on_token=None, tenant: str = DEFAULT_TENANT,
+               priority: int = 0,
+               deadline_t: Optional[float] = None) -> DecodeRequest:
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         if tokens.shape[0] == 0:
             raise ValueError("empty prompt")
@@ -287,26 +341,63 @@ class DecodeScheduler:
                 f"exceeds max_seq_len {self.max_seq_len}")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
+        need = 0
         if self.paged:
             need = self._blocks_needed(tokens.shape[0], max_new)
             if need > self.num_blocks - 1:
                 raise ValueError(
                     f"request needs {need} KV blocks but the pool only "
                     f"has {self.num_blocks - 1}")
+        if deadline_t is not None and time.monotonic() >= deadline_t:
+            if self.tenancy is not None:
+                self.tenancy.account_drop(tenant, "deadline")
+            raise DeadlineExceededError(
+                "deadline already expired at submit")
         req = DecodeRequest(tokens=tokens, max_new=max_new,
                             sampling=sampling, on_token=on_token)
+        req.tenant = tenant
+        req.priority = priority
+        req.deadline_t = deadline_t
+        if self.tenancy is not None:
+            # Reserve the tenant's slot + worst-case blocks up front
+            # (raises QuotaExceededError); released exactly once via the
+            # hook on the request's terminal transition.
+            self.tenancy.reserve_decode(tenant, need)
+            mgr = self.tenancy
+            req._quota_release = lambda: mgr.release_decode(tenant, need)
         with self._cond:
             if self._stop.is_set():
+                req._release_quota()
                 raise RuntimeError("engine stopped")
-            self._queue.append(req)
+            self._seq += 1
+            req._seq = self._seq
+            q = self._queues.get(tenant)
+            if q is None:
+                q = self._queues[tenant] = []
+            if not q:
+                if tenant not in self._deficit:
+                    self._deficit[tenant] = 0.0
+                if tenant not in self._rr:
+                    self._rr.append(tenant)
+            # Higher priority admits first within the tenant; FIFO among
+            # equals. Cross-tenant order is the scheduler's fairness, so
+            # inflating priority buys nothing against other tenants.
+            j = len(q)
+            while j > 0 and q[j - 1].priority < priority:
+                j -= 1
+            q.insert(j, req)
+            self._qsize += 1
             self._stats["requests"] += 1
             self._cond.notify()
         return req
 
     def generate(self, tokens, max_new: int = 16,
                  sampling: Optional[SamplingParams] = None,
-                 timeout: float = 120.0) -> np.ndarray:
-        req = self.submit(tokens, max_new, sampling)
+                 timeout: float = 120.0, tenant: str = DEFAULT_TENANT,
+                 priority: int = 0,
+                 deadline_t: Optional[float] = None) -> np.ndarray:
+        req = self.submit(tokens, max_new, sampling, tenant=tenant,
+                          priority=priority, deadline_t=deadline_t)
         try:
             return req.wait(timeout)
         except BaseException:
@@ -324,6 +415,10 @@ class DecodeScheduler:
     def active_slots(self) -> int:
         with self._cond:
             return sum(s is not None for s in self._slots)
+
+    def queued(self) -> int:
+        with self._cond:
+            return self._qsize
 
     def free_block_count(self) -> int:
         with self._cond:
@@ -358,14 +453,20 @@ class DecodeScheduler:
                     self._slots[i] = None
                     self._free_blocks.extend(self._slot_blocks[i])
                     self._slot_blocks[i] = []
-            while self._queue:
-                self._queue.popleft()._fail(err)
+            for q in self._queues.values():
+                for req in q:
+                    req._fail(err)
+            self._queues.clear()
+            self._rr.clear()
+            self._deficit.clear()
+            self._qsize = 0
+            self._pick = None
 
     # -- engine loop -------------------------------------------------------
     def _run(self) -> None:
         while not self._stop.is_set():
             with self._cond:
-                if not self._queue and not any(self._slots):
+                if not self._qsize and not any(self._slots):
                     self._cond.wait(self._idle_wait_s)
                     continue
             try:
@@ -406,7 +507,121 @@ class DecodeScheduler:
                 self._release_slot(i)
                 with self._cond:
                     self._stats["cancelled"] += 1
+                if self.tenancy is not None:
+                    self.tenancy.account_drop(slot.req.tenant)
                 slot.req._fail(RuntimeError("request cancelled"))
+
+    # -- admission scheduling (lock held) ----------------------------------
+    def _weight(self, tenant: str) -> float:
+        return (self.tenancy.weight_for(tenant)
+                if self.tenancy is not None else 1.0)
+
+    def _retire_tenant_locked(self, tenant: str) -> None:
+        if tenant in self._queues and not self._queues[tenant]:
+            del self._queues[tenant]
+            self._deficit.pop(tenant, None)
+            try:
+                self._rr.remove(tenant)
+            except ValueError:
+                pass
+
+    def _drop_queued_locked(self, req: DecodeRequest, kind: str) -> None:
+        """Fail a still-queued request (cancelled or deadline-expired)
+        without it ever touching a slot or the device."""
+        q = self._queues.get(req.tenant)
+        if q is not None and req in q:
+            q.remove(req)
+            self._qsize -= 1
+            self._retire_tenant_locked(req.tenant)
+        if req is self._pick:
+            self._pick = None
+        if kind == "deadline":
+            self._stats["deadline_dropped"] += 1
+            wait = time.monotonic() - req.enqueue_t
+            exc: BaseException = DeadlineExceededError(
+                f"deadline expired after {wait * 1e3:.1f}ms in decode "
+                f"admission queue")
+        else:
+            self._stats["cancelled"] += 1
+            exc = RuntimeError("request cancelled")
+        if self.tenancy is not None:
+            self.tenancy.account_drop(req.tenant, kind)
+        req._fail(exc)
+
+    def _clean_head_locked(self, tenant: str,
+                           now: float) -> Optional[DecodeRequest]:
+        """Tenant's head after purging dead (cancelled/expired) ones;
+        None once the tenant's queue drains (tenant retired)."""
+        while tenant in self._queues and self._queues[tenant]:
+            req = self._queues[tenant][0]
+            if req.cancelled:
+                self._drop_queued_locked(req, "other")
+            elif req.deadline_t is not None and now >= req.deadline_t:
+                self._drop_queued_locked(req, "deadline")
+            else:
+                return req
+        self._retire_tenant_locked(tenant)
+        return None
+
+    def _select_locked(self, now: float) -> Optional[DecodeRequest]:
+        """Next request to admit. The pick is STICKY: once selected, a
+        request short on free blocks stays selected across engine passes
+        (overtaking a big head with small requests would starve it — the
+        same guarantee the old FIFO head-of-line wait gave, per chosen
+        request). ``fifo`` mode is global arrival order; ``wfq`` is
+        deficit-round-robin over backlogged tenants with cost
+        ``prompt_len + max_new`` tokens."""
+        if self._pick is not None:
+            req = self._pick
+            if req.cancelled:
+                self._drop_queued_locked(req, "other")
+            elif req.deadline_t is not None and now >= req.deadline_t:
+                self._drop_queued_locked(req, "deadline")
+            else:
+                return req
+        if self.scheduling == "fifo":
+            best = None
+            for tenant in list(self._queues):
+                head = self._clean_head_locked(tenant, now)
+                if head is not None and (best is None
+                                         or head._seq < best._seq):
+                    best = head
+            self._pick = best
+            return best
+        visits = 0
+        # Each visit serves a head, drops dead work, retires a drained
+        # tenant, or grows a deficit by quantum*weight — bounded.
+        max_visits = 1000 * (len(self._rr) + 1) + self._qsize
+        while self._rr and visits < max_visits:
+            visits += 1
+            tenant = self._rr[0]
+            head = self._clean_head_locked(tenant, now)
+            if head is None:
+                continue                 # tenant retired, _rr shrank
+            cost = float(head.tokens.shape[0] + head.max_new)
+            if len(self._rr) == 1 or self._deficit[tenant] >= cost:
+                if len(self._rr) > 1:
+                    self._deficit[tenant] -= cost
+                self._pick = head
+                return head
+            self._deficit[tenant] += self.drr_quantum * self._weight(tenant)
+            self._rr.rotate(-1)
+        return None
+
+    def _take_locked(self, req: DecodeRequest) -> None:
+        """Remove the admitted request from its queue + record wait."""
+        q = self._queues.get(req.tenant)
+        if q is not None and req in q:
+            q.remove(req)
+            self._qsize -= 1
+            self._retire_tenant_locked(req.tenant)
+        self._pick = None
+        wait = time.monotonic() - req.enqueue_t
+        self._stats["queue_wait_s"] += wait
+        self._stats["max_queue_wait_s"] = max(
+            self._stats["max_queue_wait_s"], wait)
+        if self.tenancy is not None:
+            self.tenancy.account_queue_wait(req.tenant, wait)
 
     def _backfill(self) -> None:
         """Fill free slots from the queue. Paged layout: the prompt (or
@@ -416,20 +631,16 @@ class DecodeScheduler:
         with ``cache_insert_slot``. In paged mode a request is admitted
         only when the free list covers its worst-case block need
         (reserved up front, so a slot can never stall mid-decode); the
-        queue stays FIFO — an oversized head waits for retiring slots
-        rather than being overtaken."""
+        chosen request waits for retiring slots rather than being
+        overtaken (sticky pick — see ``_select_locked``)."""
         for i in range(self.num_slots):
             if self._slots[i] is not None:
                 continue
             blocks: List[int] = []
             with self._cond:
-                while self._queue and self._queue[0].cancelled:
-                    dropped = self._queue.popleft()
-                    dropped._fail(RuntimeError("request cancelled"))
-                    self._stats["cancelled"] += 1
-                if not self._queue:
+                req = self._select_locked(time.monotonic())
+                if req is None:
                     return
-                req = self._queue[0]
                 if self.paged:
                     need = self._blocks_needed(req.tokens.shape[0],
                                                req.max_new)
@@ -437,7 +648,7 @@ class DecodeScheduler:
                         self._stats["admission_waits"] += 1
                         return
                     blocks = [self._free_blocks.pop() for _ in range(need)]
-                self._queue.popleft()
+                self._take_locked(req)
             rng = req.sampling.make_rng() if req.sampling else None
             if not self.paged:
                 try:
@@ -554,6 +765,11 @@ class DecodeScheduler:
             self._release_slot(i)
             with self._cond:
                 self._stats["finished"] += 1
+            if self.tenancy is not None:
+                # Tokens are the engine's to account; "served" RPC
+                # counts belong to the API layer (no double counting).
+                self.tenancy.account_tokens(slot.req.tenant,
+                                            len(slot.out))
             slot.req._finish(np.asarray(slot.out, np.int32))
 
     def _tick(self) -> None:
@@ -579,6 +795,8 @@ class DecodeScheduler:
                 self._release_slot(i)
                 with self._cond:
                     self._stats["cancelled"] += 1
+                if self.tenancy is not None:
+                    self.tenancy.account_drop(slot.req.tenant)
                 slot.req._fail(RuntimeError("request cancelled"))
                 continue
             tok = sample_token(raw[i], slot.req.sampling, slot.rng)

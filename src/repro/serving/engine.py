@@ -29,6 +29,7 @@ from repro.core.source import AspiredVersion
 from repro.core.adapter import SourceAdapter
 from repro.models import model as MD
 from repro.serving.generation import sample_token
+from repro.serving.tenancy import DEFAULT_TENANT, current_tenant
 from repro.training import checkpoint as CKPT
 
 log = logging.getLogger(__name__)
@@ -61,7 +62,12 @@ class InferenceLog:
             self._entries.append({
                 "t": time.time(), "servable": str(servable),
                 "method": method, "batch_size": batch_size,
-                "latency_ms": latency_s * 1e3})
+                "latency_ms": latency_s * 1e3,
+                # Attribution rides the request thread (the typed API
+                # wraps servable calls in tenant_scope). Merged batches
+                # run on the shared device thread and log "default" —
+                # honest: one merged batch spans many tenants.
+                "tenant": current_tenant()})
 
     def entries(self):
         with self._lock:
@@ -164,7 +170,8 @@ class JaxModelServable(Servable):
 
     def generate(self, tokens=None, embeds=None, max_new: int = 16,
                  sampling=None, timeout_s: float = 120.0,
-                 on_token=None, cancel=None, **_) -> np.ndarray:
+                 on_token=None, cancel=None, tenant: str = DEFAULT_TENANT,
+                 priority: int = 0, deadline_t=None, **_) -> np.ndarray:
         """``cancel`` is an optional ``threading.Event`` the caller may
         set to abandon the generation (a disconnected streaming client):
         engine requests are cancelled so their slots retire and their KV
@@ -189,8 +196,20 @@ class JaxModelServable(Servable):
                 # Continuous batching: each row becomes one slot
                 # request, so concurrent generate calls share the
                 # fused decode step.
-                reqs = [eng.submit(row, max_new=max_new, sampling=sampling,
-                                   on_token=on_token) for row in tokens]
+                reqs = []
+                try:
+                    for row in tokens:
+                        reqs.append(eng.submit(
+                            row, max_new=max_new, sampling=sampling,
+                            on_token=on_token, tenant=tenant,
+                            priority=priority, deadline_t=deadline_t))
+                except BaseException:
+                    # Multi-row batch half-enqueued (e.g. a quota hit on
+                    # row k): cancel the admitted rows so their slots
+                    # retire and their reservations release.
+                    for r in reqs:
+                        eng.cancel(r)
+                    raise
                 return self._wait_engine(eng, reqs, timeout_s, cancel)
         prompt = tokens if tokens is not None else embeds
         b, s = prompt.shape[:2]

@@ -30,6 +30,7 @@ from repro.core import (AspiredVersionsManager, FileSystemSource,
 from repro.core.manager import ManagerEvent
 from repro.serving import api
 from repro.serving.engine import InferenceLog, JaxModelSourceAdapter
+from repro.serving.tenancy import TenancyManager, TenantQuota
 
 log = logging.getLogger(__name__)
 
@@ -45,8 +46,16 @@ class ModelServer:
                  decode_engine_slots: int = 8,
                  decode_engine_block_size: Optional[int] = None,
                  decode_engine_num_blocks: Optional[int] = None,
-                 decode_engine_prefill_chunk: Optional[int] = None):
+                 decode_engine_prefill_chunk: Optional[int] = None,
+                 decode_engine_scheduling: str = "wfq",
+                 tenant_quotas: Optional[Dict[str, TenantQuota]] = None):
         self.inference_log = InferenceLog()
+        # One TenancyManager for the whole binary: PredictionService
+        # enforces quotas/fairness against it, ModelService reports it
+        # (GetTenantStats), and the HTTP transport exposes both.
+        self.tenancy = TenancyManager()
+        for tenant, quota in (tenant_quotas or {}).items():
+            self.tenancy.set_quota(tenant, quota)
         self.source = FileSystemSource(model_dirs, policies)
         # The block-sizing knobs feed BOTH the loader estimate and the
         # engines PredictionService attaches, so RAM-budget admission
@@ -75,8 +84,11 @@ class ModelServer:
             decode_engine_slots=decode_engine_slots,
             decode_engine_block_size=decode_engine_block_size,
             decode_engine_num_blocks=decode_engine_num_blocks,
-            decode_engine_prefill_chunk=decode_engine_prefill_chunk)
-        self.models = api.ModelService(self.manager, self.source)
+            decode_engine_prefill_chunk=decode_engine_prefill_chunk,
+            decode_engine_scheduling=decode_engine_scheduling,
+            tenancy=self.tenancy)
+        self.models = api.ModelService(self.manager, self.source,
+                                       tenancy=self.tenancy)
 
     # -- lifecycle ---------------------------------------------------------
     def start(self, poll_interval_s: float = 0.5) -> None:
@@ -177,6 +189,11 @@ class ModelServer:
         """Swap the served-model map at runtime (add/retire/repolicy)."""
         return self.models.reload_config(api.ReloadConfigRequest(
             model_configs, timeout_s=timeout_s))
+
+    def tenant_stats(self, tenant: Optional[str] = None
+                     ) -> api.GetTenantStatsResponse:
+        return self.models.get_tenant_stats(
+            api.GetTenantStatsRequest(tenant=tenant))
 
     def available_models(self):
         return self.manager.list_available()

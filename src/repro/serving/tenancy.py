@@ -1,0 +1,326 @@
+"""Multi-tenant isolation for TFS² (paper §3: a *multi-tenant* model
+hosting service).
+
+The hosted stack had versions and labels but no notion of *whose*
+request a request is: both the decode engine's admission queue and the
+shared batching queue were FIFO, so one tenant's 10k-token prompts
+starved everyone. This module supplies the identity and the policy:
+
+  * ``RequestContext`` — the per-request identity (tenant id, priority,
+    deadline budget) threaded through every typed RPC, the wire codec
+    (``x-tenant-id`` header / ``context`` envelope field) and the hosted
+    Router. Every existing caller keeps working: no context means the
+    ``"default"`` tenant.
+  * ``TenantQuota`` — per-tenant limits (concurrent decode slots, KV
+    cache blocks, in-flight batched predicts, RPS token bucket) plus the
+    tenant's weighted-fair-scheduling weight. All limits default to
+    unlimited, so tenancy is always on but inert until configured.
+  * ``TenancyManager`` — the shared enforcement + accounting object:
+    admission checks raise ``QuotaExceededError`` (mapped to the typed
+    ``ResourceExhausted`` / HTTP 429 at the API boundary) and every
+    tenant's served/dropped/queue-wait/tokens/blocks counters are
+    surfaced through ``ModelService.GetTenantStats``.
+
+Scheduling itself lives with the queues it orders: weighted
+deficit-round-robin in ``DecodeScheduler`` admission
+(``serving/decode_engine.py``) and in batch assembly
+(``batching/queue.py``), both consulting ``TenancyManager.weight_for``.
+
+Deadlines are a *relative* budget (``deadline_s`` seconds from server
+receipt, like a gRPC timeout) so they survive the wire without clock
+sync; a request whose budget expires while parked in a queue is dropped
+with ``Unavailable`` *before* occupying a batch slot or prefilling KV —
+dead work is never started.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+from repro.batching.queue import DeadlineExceededError
+
+__all__ = [
+    "DEFAULT_CONTEXT", "DEFAULT_TENANT", "DeadlineExceededError",
+    "QuotaExceededError", "RequestContext", "TenancyManager",
+    "TenantQuota", "current_tenant", "tenant_scope",
+]
+
+DEFAULT_TENANT = "default"
+
+
+class QuotaExceededError(RuntimeError):
+    """A per-tenant limit (RPS, slots, blocks, in-flight) was hit. The
+    API layer maps this to ``ResourceExhausted`` (HTTP 429)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestContext:
+    """Who a request belongs to and how urgent it is.
+
+    ``deadline_s`` is a time *budget* in seconds measured from the
+    moment the serving process receives the request (not an absolute
+    timestamp — absolute deadlines do not survive the wire without
+    clock synchronization). ``priority`` orders requests *within* one
+    tenant's queue (higher first); cross-tenant ordering is the
+    scheduler's weighted fairness, never priority, so one tenant cannot
+    outrank another by inflating it."""
+
+    tenant: str = DEFAULT_TENANT
+    priority: int = 0
+    deadline_s: Optional[float] = None
+
+    def deadline_from(self, now: float) -> Optional[float]:
+        """Absolute (monotonic-clock) deadline given receipt time."""
+        if self.deadline_s is None:
+            return None
+        return now + self.deadline_s
+
+
+DEFAULT_CONTEXT = RequestContext()
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Per-tenant limits; ``None`` everywhere means unlimited (the
+    default tenant's configuration), so attaching a TenancyManager to
+    an existing stack changes nothing until quotas are set.
+
+    ``weight`` is the DRR share: a tenant with weight 2.0 gets twice
+    the admission bandwidth of a weight-1.0 tenant when both are
+    backlogged."""
+
+    weight: float = 1.0
+    max_concurrent_decodes: Optional[int] = None   # decode-engine slots
+    max_kv_blocks: Optional[int] = None            # paged KV blocks
+    max_inflight_predicts: Optional[int] = None    # batched predicts
+    rps: Optional[float] = None                    # token-bucket rate
+    burst: Optional[float] = None                  # bucket depth (~rps)
+
+
+class _Account:
+    """Mutable per-tenant usage + cumulative counters (lock held by the
+    owning TenancyManager)."""
+
+    __slots__ = ("served", "dropped", "quota_rejected", "deadline_dropped",
+                 "tokens_generated", "blocks_held", "decodes_inflight",
+                 "predicts_inflight", "queue_wait_s", "max_queue_wait_s",
+                 "bucket", "bucket_t")
+
+    def __init__(self):
+        self.served = 0
+        self.dropped = 0
+        self.quota_rejected = 0
+        self.deadline_dropped = 0
+        self.tokens_generated = 0
+        self.blocks_held = 0
+        self.decodes_inflight = 0
+        self.predicts_inflight = 0
+        self.queue_wait_s = 0.0
+        self.max_queue_wait_s = 0.0
+        self.bucket: Optional[float] = None       # None until first check
+        self.bucket_t = 0.0
+
+
+class TenancyManager:
+    """Quota enforcement + per-tenant accounting, shared by the typed
+    services, the decode engine(s) and the batching sessions of one
+    serving process (one per replica in the hosted stack).
+
+    All mutation happens under one lock; the acquire/release pairs are
+    written so a failed acquire never leaks usage and a release is
+    idempotent at the call-site level (engine requests release exactly
+    once through their terminal-state hook)."""
+
+    def __init__(self, quotas: Optional[Dict[str, TenantQuota]] = None,
+                 default_quota: Optional[TenantQuota] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self._lock = threading.Lock()
+        self._quotas: Dict[str, TenantQuota] = dict(quotas or {})
+        self._default = default_quota or TenantQuota()
+        self._accounts: Dict[str, _Account] = {}
+        self._clock = clock
+
+    # -- configuration -----------------------------------------------------
+    def set_quota(self, tenant: str, quota: TenantQuota) -> None:
+        with self._lock:
+            self._quotas[tenant] = quota
+
+    def quota_for(self, tenant: str) -> TenantQuota:
+        with self._lock:
+            return self._quotas.get(tenant, self._default)
+
+    def weight_for(self, tenant: str) -> float:
+        return max(self.quota_for(tenant).weight, 1e-6)
+
+    def _acct(self, tenant: str) -> _Account:
+        acct = self._accounts.get(tenant)
+        if acct is None:
+            acct = self._accounts[tenant] = _Account()
+        return acct
+
+    # -- admission (each raises QuotaExceededError on violation) -----------
+    def check_rps(self, tenant: str) -> None:
+        """Token bucket: one token per request, refilled at ``rps``;
+        depth ``burst`` (default ``max(1, rps)``)."""
+        with self._lock:
+            quota = self._quotas.get(tenant, self._default)
+            if quota.rps is None:
+                return
+            acct = self._acct(tenant)
+            depth = (quota.burst if quota.burst is not None
+                     else max(1.0, quota.rps))
+            now = self._clock()
+            if acct.bucket is None:
+                acct.bucket, acct.bucket_t = depth, now
+            else:
+                acct.bucket = min(depth, acct.bucket +
+                                  (now - acct.bucket_t) * quota.rps)
+                acct.bucket_t = now
+            if acct.bucket < 1.0:
+                acct.quota_rejected += 1
+                acct.dropped += 1
+                raise QuotaExceededError(
+                    f"tenant {tenant!r} exceeded {quota.rps} rps")
+            acct.bucket -= 1.0
+
+    def acquire_predict(self, tenant: str) -> None:
+        with self._lock:
+            quota = self._quotas.get(tenant, self._default)
+            acct = self._acct(tenant)
+            limit = quota.max_inflight_predicts
+            if limit is not None and acct.predicts_inflight >= limit:
+                acct.quota_rejected += 1
+                acct.dropped += 1
+                raise QuotaExceededError(
+                    f"tenant {tenant!r} already has {limit} batched "
+                    f"predict(s) in flight")
+            acct.predicts_inflight += 1
+
+    def release_predict(self, tenant: str) -> None:
+        with self._lock:
+            self._acct(tenant).predicts_inflight -= 1
+
+    def reserve_decode(self, tenant: str, blocks: int) -> None:
+        """Reserve one decode-slot admission plus its worst-case KV
+        blocks (mirrors the engine's reserve-at-admission accounting:
+        a request's full block need is held from submit to terminal
+        state, so a tenant can never stall mid-decode *and* can never
+        exceed its block quota even transiently)."""
+        with self._lock:
+            quota = self._quotas.get(tenant, self._default)
+            acct = self._acct(tenant)
+            limit = quota.max_concurrent_decodes
+            if limit is not None and acct.decodes_inflight >= limit:
+                acct.quota_rejected += 1
+                acct.dropped += 1
+                raise QuotaExceededError(
+                    f"tenant {tenant!r} already has {limit} concurrent "
+                    f"decode(s)")
+            blimit = quota.max_kv_blocks
+            if blimit is not None and acct.blocks_held + blocks > blimit:
+                acct.quota_rejected += 1
+                acct.dropped += 1
+                raise QuotaExceededError(
+                    f"tenant {tenant!r} would hold "
+                    f"{acct.blocks_held + blocks} KV blocks "
+                    f"(quota {blimit})")
+            acct.decodes_inflight += 1
+            acct.blocks_held += blocks
+
+    def release_decode(self, tenant: str, blocks: int) -> None:
+        with self._lock:
+            acct = self._acct(tenant)
+            acct.decodes_inflight -= 1
+            acct.blocks_held -= blocks
+
+    # -- accounting --------------------------------------------------------
+    def account_served(self, tenant: str) -> None:
+        with self._lock:
+            self._acct(tenant).served += 1
+
+    def account_drop(self, tenant: str, kind: str = "other") -> None:
+        with self._lock:
+            acct = self._acct(tenant)
+            acct.dropped += 1
+            if kind == "deadline":
+                acct.deadline_dropped += 1
+
+    def account_tokens(self, tenant: str, n: int = 1) -> None:
+        with self._lock:
+            self._acct(tenant).tokens_generated += n
+
+    def account_queue_wait(self, tenant: str, wait_s: float) -> None:
+        with self._lock:
+            acct = self._acct(tenant)
+            acct.queue_wait_s += wait_s
+            acct.max_queue_wait_s = max(acct.max_queue_wait_s, wait_s)
+
+    # -- introspection -----------------------------------------------------
+    def tenants(self):
+        with self._lock:
+            return sorted(set(self._accounts) | set(self._quotas))
+
+    def snapshot(self, tenant: Optional[str] = None
+                 ) -> Dict[str, Dict[str, Any]]:
+        """Consistent per-tenant snapshot: quota limits + live usage +
+        cumulative counters, keyed by tenant. Plain dicts so lower
+        layers never import the API message types."""
+        with self._lock:
+            names = ([tenant] if tenant is not None else
+                     sorted(set(self._accounts) | set(self._quotas)))
+            out = {}
+            for name in names:
+                quota = self._quotas.get(name, self._default)
+                acct = self._accounts.get(name) or _Account()
+                out[name] = {
+                    "weight": quota.weight,
+                    "max_concurrent_decodes": quota.max_concurrent_decodes,
+                    "max_kv_blocks": quota.max_kv_blocks,
+                    "max_inflight_predicts": quota.max_inflight_predicts,
+                    "rps": quota.rps,
+                    "served": acct.served,
+                    "dropped": acct.dropped,
+                    "quota_rejected": acct.quota_rejected,
+                    "deadline_dropped": acct.deadline_dropped,
+                    "tokens_generated": acct.tokens_generated,
+                    "blocks_held": acct.blocks_held,
+                    "decodes_inflight": acct.decodes_inflight,
+                    "predicts_inflight": acct.predicts_inflight,
+                    "queue_wait_s": acct.queue_wait_s,
+                    "max_queue_wait_s": acct.max_queue_wait_s,
+                }
+            return out
+
+
+# ---------------------------------------------------------------------------
+# Current-tenant propagation (InferenceLog attribution)
+# ---------------------------------------------------------------------------
+#
+# The InferenceLog records inside ``Servable.call`` — below the typed
+# API, which is the layer that knows the tenant. A thread-local carries
+# the attribution across that boundary without changing the servable
+# contract (the call happens on the request thread; merged *batches*
+# execute on the shared device thread and stay unattributed, which is
+# honest — one merged batch spans many tenants).
+
+_TLS = threading.local()
+
+
+def current_tenant() -> str:
+    return getattr(_TLS, "tenant", DEFAULT_TENANT)
+
+
+@contextlib.contextmanager
+def tenant_scope(tenant: str):
+    prev = getattr(_TLS, "tenant", None)
+    _TLS.tenant = tenant
+    try:
+        yield
+    finally:
+        if prev is None:
+            del _TLS.tenant
+        else:
+            _TLS.tenant = prev

@@ -40,12 +40,14 @@ Everything here is stdlib-only: ``http.server`` + ``http.client``.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import logging
 import socket
 import threading
 import time
 from http.client import HTTPConnection, HTTPException, RemoteDisconnected
+from urllib.parse import parse_qs
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, Iterator, Optional, Tuple, Union
 
@@ -57,6 +59,7 @@ STATUS_FOR_CODE = {
     "INVALID_ARGUMENT": 400,
     "NOT_FOUND": 404,
     "FAILED_PRECONDITION": 412,
+    "RESOURCE_EXHAUSTED": 429,
     "UNAVAILABLE": 503,
     "UNKNOWN": 500,
 }
@@ -64,6 +67,7 @@ EXC_FOR_CODE = {
     "INVALID_ARGUMENT": api.InvalidArgument,
     "NOT_FOUND": api.NotFound,
     "FAILED_PRECONDITION": api.FailedPrecondition,
+    "RESOURCE_EXHAUSTED": api.ResourceExhausted,
     "UNAVAILABLE": api.Unavailable,
 }
 CODE_FOR_STATUS = {v: k for k, v in STATUS_FOR_CODE.items()}
@@ -101,7 +105,25 @@ class _Handler(BaseHTTPRequestHandler):
                                  "get_model_status"),
         "/v1/reload_config": ("models", api.ReloadConfigRequest,
                               "reload_config"),
+        "/v1/get_tenant_stats": ("models", api.GetTenantStatsRequest,
+                                 "get_tenant_stats"),
     }
+
+    # -- request context ---------------------------------------------------
+    def _header_context(self) -> Optional[api.RequestContext]:
+        tenant = self.headers.get("x-tenant-id")
+        return api.RequestContext(tenant=tenant) if tenant else None
+
+    def _apply_context(self, req):
+        """Attach the tenant identity to a decoded request: an explicit
+        ``context`` in the body wins; otherwise the ``x-tenant-id``
+        header supplies the tenant (curl-friendly); otherwise the
+        request stays context-less (the default tenant)."""
+        if getattr(req, "context", False) is None:
+            ctx = self._header_context()
+            if ctx is not None:
+                return dataclasses.replace(req, context=ctx)
+        return req
 
     def log_message(self, fmt, *args):      # route to logging, not stderr
         log.debug("%s %s", self.address_string(), fmt % args)
@@ -152,15 +174,26 @@ class _Handler(BaseHTTPRequestHandler):
                         close=close)
 
     # -- HTTP verbs --------------------------------------------------------
-    def do_GET(self):       # health / readiness probe (curl-able)
+    def do_GET(self):       # health probe + tenant stats (curl-able)
+        owner: "HttpServingServer" = self.server.owner
         try:
-            if self.path != "/healthz":
-                self._send_json(404, {"error": {"code": "NOT_FOUND",
-                                                "message": self.path}})
+            path, _, query = self.path.partition("?")
+            if path == "/healthz":
+                self._send_json(200, {"status": "draining"
+                                      if owner.draining else "ok"})
                 return
-            owner: "HttpServingServer" = self.server.owner
-            self._send_json(200, {"status": "draining" if owner.draining
-                                  else "ok"})
+            if path == "/v1/tenants":
+                try:
+                    tenant = (parse_qs(query).get("tenant")
+                              or [None])[0] if query else None
+                    resp = owner.require_models().get_tenant_stats(
+                        api.GetTenantStatsRequest(tenant=tenant))
+                    self._send_json(200, wire.encode_message(resp))
+                except api.ServingError as exc:
+                    self._send_error_json(exc)
+                return
+            self._send_json(404, {"error": {"code": "NOT_FOUND",
+                                            "message": self.path}})
         except _ClientGone:
             self.close_connection = True
 
@@ -204,9 +237,14 @@ class _Handler(BaseHTTPRequestHandler):
             body = self._parse_body(raw)
             spec = wire.decode_message(api.ModelSpec,
                                        body.get("model_spec") or {})
+            raw_ctx = body.get("context")
+            context = (wire.decode_message(api.RequestContext, raw_ctx)
+                       if isinstance(raw_ctx, dict)
+                       else self._header_context())
             out = owner.prediction.call(spec, body.get("method", ""),
                                         wire.decode_value(
-                                            body.get("request")))
+                                            body.get("request")),
+                                        context=context)
             self._send_json(200, {"result": wire.encode_value(out)})
             return
         if self.path == "/v1/set_version_labels":
@@ -227,15 +265,17 @@ class _Handler(BaseHTTPRequestHandler):
         service_attr, req_cls, method = route
         service = (owner.prediction if service_attr == "prediction"
                    else owner.require_models())
-        req = wire.decode_message(req_cls, self._parse_body(raw))
+        req = self._apply_context(
+            wire.decode_message(req_cls, self._parse_body(raw)))
         resp = getattr(service, method)(req)
         self._send_json(200, wire.encode_message(resp))
 
     # -- streaming generate ------------------------------------------------
     def _handle_generate(self, owner: "HttpServingServer",
                          raw: bytes) -> None:
-        req = wire.decode_message(api.GenerateRequest,
-                                  self._parse_body(raw))
+        req = self._apply_context(
+            wire.decode_message(api.GenerateRequest,
+                                self._parse_body(raw)))
         out = owner.prediction.generate(req)
         if not req.stream:
             self._send_json(200, wire.encode_message(out))
@@ -546,10 +586,14 @@ class ServingClient:
             api.MultiInferenceResponse,
             self._post("/v1/multi_inference", wire.encode_message(req)))
 
-    def call(self, spec: api.ModelSpec, method: str, request: Any) -> Any:
-        out = self._post("/v1/call", {
+    def call(self, spec: api.ModelSpec, method: str, request: Any,
+             context: Optional[api.RequestContext] = None) -> Any:
+        envelope = {
             "model_spec": wire.encode_message(spec), "method": method,
-            "request": wire.encode_value(request)})
+            "request": wire.encode_value(request)}
+        if context is not None:
+            envelope["context"] = wire.encode_message(context)
+        out = self._post("/v1/call", envelope)
         return wire.decode_value(out.get("result"))
 
     def generate(self, req: api.GenerateRequest
@@ -628,6 +672,12 @@ class ServingClient:
         return wire.decode_message(
             api.ReloadConfigResponse,
             self._post("/v1/reload_config", wire.encode_message(req)))
+
+    def get_tenant_stats(self, req: api.GetTenantStatsRequest
+                         ) -> api.GetTenantStatsResponse:
+        return wire.decode_message(
+            api.GetTenantStatsResponse,
+            self._post("/v1/get_tenant_stats", wire.encode_message(req)))
 
     # -- misc --------------------------------------------------------------
     def health(self) -> Dict[str, Any]:

@@ -44,12 +44,14 @@ WIRE_DATACLASSES: Dict[str, type] = {
     cls.__name__: cls for cls in (
         api.ClassifyRequest, api.ClassifyResponse, api.GenerateRequest,
         api.GenerateResponse, api.GetModelStatusRequest,
-        api.GetModelStatusResponse, api.ModelDirConfig, api.ModelSpec,
+        api.GetModelStatusResponse, api.GetTenantStatsRequest,
+        api.GetTenantStatsResponse, api.ModelDirConfig, api.ModelSpec,
         api.ModelVersionStatus, api.MultiInferenceRequest,
         api.MultiInferenceResponse, api.PredictRequest,
         api.PredictResponse, api.RegressRequest, api.RegressResponse,
         api.ReloadConfigRequest, api.ReloadConfigResponse,
-        api.TokenChunk, SamplingParams, ServableVersionPolicy,
+        api.RequestContext, api.TenantStats, api.TokenChunk,
+        SamplingParams, ServableVersionPolicy,
     )
 }
 

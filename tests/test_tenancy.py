@@ -1,0 +1,552 @@
+"""Multi-tenant serving: quotas, weighted-fair scheduling, deadlines,
+per-tenant accounting — at every layer. Scheduler-policy tests drive the
+decode engine's admission logic directly (no engine thread) so admission
+order is asserted deterministically; socket tests run a real
+ModelServer + HttpServingServer and assert the HTTP contract (429 for
+quota, ``x-tenant-id`` header, GET /v1/tenants, GetTenantStats RPC)."""
+import json
+import time
+from http.client import HTTPConnection
+
+import jax
+import numpy as np
+import pytest
+
+from repro.batching import (BatchingOptions, BatchingQueue,
+                            DeadlineExceededError)
+from repro.configs import get_config
+from repro.models import model as MD
+from repro.serving import api, wire
+from repro.serving.decode_engine import DecodeScheduler
+from repro.serving.server import ModelServer
+from repro.serving.tenancy import (QuotaExceededError, RequestContext,
+                                   TenancyManager, TenantQuota,
+                                   current_tenant, tenant_scope)
+from repro.serving.transport import (STATUS_FOR_CODE, ServingClient)
+from repro.training.checkpoint import save_checkpoint
+
+CFG = get_config("tfs-classifier", smoke=True).with_overrides(
+    dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return MD.init_params(jax.random.PRNGKey(0), CFG)
+
+
+# ---------------------------------------------------------------------------
+# TenancyManager: quotas + accounting (no JAX)
+# ---------------------------------------------------------------------------
+
+
+class TestTenancyManager:
+    def test_unconfigured_tenant_is_unlimited(self):
+        mgr = TenancyManager()
+        for _ in range(100):
+            mgr.check_rps("anyone")
+            mgr.acquire_predict("anyone")
+        for _ in range(10):
+            mgr.reserve_decode("anyone", blocks=1000)
+
+    def test_decode_slot_and_block_quota(self):
+        mgr = TenancyManager()
+        mgr.set_quota("t", TenantQuota(max_concurrent_decodes=2,
+                                       max_kv_blocks=10))
+        mgr.reserve_decode("t", 4)
+        mgr.reserve_decode("t", 4)
+        with pytest.raises(QuotaExceededError):     # slot limit
+            mgr.reserve_decode("t", 1)
+        mgr.release_decode("t", 4)
+        with pytest.raises(QuotaExceededError):     # block limit: 4+8>10
+            mgr.reserve_decode("t", 8)
+        mgr.reserve_decode("t", 6)
+        snap = mgr.snapshot("t")["t"]
+        assert snap["blocks_held"] == 10
+        assert snap["decodes_inflight"] == 2
+        assert snap["quota_rejected"] == 2
+        mgr.release_decode("t", 6)
+        mgr.release_decode("t", 4)
+        snap = mgr.snapshot("t")["t"]
+        assert snap["blocks_held"] == 0 and snap["decodes_inflight"] == 0
+
+    def test_predict_inflight_quota(self):
+        mgr = TenancyManager()
+        mgr.set_quota("t", TenantQuota(max_inflight_predicts=1))
+        mgr.acquire_predict("t")
+        with pytest.raises(QuotaExceededError):
+            mgr.acquire_predict("t")
+        mgr.release_predict("t")
+        mgr.acquire_predict("t")            # freed capacity reusable
+
+    def test_rps_token_bucket_refills(self):
+        t = [0.0]
+        mgr = TenancyManager(clock=lambda: t[0])
+        mgr.set_quota("t", TenantQuota(rps=2.0, burst=2.0))
+        mgr.check_rps("t")
+        mgr.check_rps("t")                  # burst of 2 spent
+        with pytest.raises(QuotaExceededError):
+            mgr.check_rps("t")
+        t[0] = 0.5                          # +1 token at 2 rps
+        mgr.check_rps("t")
+        with pytest.raises(QuotaExceededError):
+            mgr.check_rps("t")
+        assert mgr.snapshot("t")["t"]["quota_rejected"] == 2
+
+    def test_weight_for_and_snapshot_fields(self):
+        mgr = TenancyManager()
+        mgr.set_quota("vip", TenantQuota(weight=4.0))
+        assert mgr.weight_for("vip") == 4.0
+        assert mgr.weight_for("other") == 1.0
+        mgr.account_served("vip")
+        mgr.account_tokens("vip", 7)
+        mgr.account_drop("vip", "deadline")
+        mgr.account_queue_wait("vip", 0.25)
+        snap = mgr.snapshot()["vip"]
+        assert snap["served"] == 1
+        assert snap["tokens_generated"] == 7
+        assert snap["dropped"] == 1 and snap["deadline_dropped"] == 1
+        assert snap["max_queue_wait_s"] == pytest.approx(0.25)
+
+    def test_tenant_scope_thread_local(self):
+        assert current_tenant() == "default"
+        with tenant_scope("acme"):
+            assert current_tenant() == "acme"
+            with tenant_scope("inner"):
+                assert current_tenant() == "inner"
+            assert current_tenant() == "acme"
+        assert current_tenant() == "default"
+
+
+# ---------------------------------------------------------------------------
+# RequestContext + wire codec
+# ---------------------------------------------------------------------------
+
+
+class TestRequestContext:
+    def test_defaults_and_deadline(self):
+        ctx = RequestContext()
+        assert ctx.tenant == "default" and ctx.priority == 0
+        assert ctx.deadline_from(100.0) is None
+        ctx = RequestContext(tenant="a", deadline_s=1.5)
+        assert ctx.deadline_from(100.0) == 101.5
+
+    def test_wire_round_trip_bit_exact(self):
+        """Context survives the exact JSON the socket carries."""
+        ctx = RequestContext(tenant="acme", priority=3, deadline_s=2.5)
+        req = api.PredictRequest(api.ModelSpec("m", 1),
+                                 {"tokens": np.arange(6).reshape(2, 3)},
+                                 context=ctx)
+        enc = json.loads(json.dumps(wire.encode_message(req)))
+        back = wire.decode_message(api.PredictRequest, enc)
+        assert back.context == ctx
+        # absent context stays absent (back-compat with old clients)
+        enc = json.loads(json.dumps(wire.encode_message(
+            api.GetModelStatusRequest(api.ModelSpec("m")))))
+        assert wire.decode_message(api.GetModelStatusRequest,
+                                   enc).context is None
+
+
+# ---------------------------------------------------------------------------
+# Batching queue: DRR assembly + deadline drops (no JAX)
+# ---------------------------------------------------------------------------
+
+
+class TestBatchingQueueDRR:
+    def test_batch_mix_interleaves_tenants(self):
+        """A flooding tenant no longer owns the whole batch: DRR splits
+        the 4 slots 2/2 even though the hog enqueued first."""
+        q = BatchingQueue("q", BatchingOptions(max_batch_size=4))
+        for _ in range(6):
+            q.enqueue("hog-task", tenant="hog")
+        for _ in range(2):
+            q.enqueue("small-task", tenant="small")
+        batch = q.pop_ready_batch()          # 8 pending >= max_batch_size
+        tenants = [t.tenant for t in batch.tasks]
+        assert sorted(tenants) == ["hog", "hog", "small", "small"]
+
+    def test_single_tenant_stays_fifo(self):
+        q = BatchingQueue("q", BatchingOptions(max_batch_size=3))
+        for i in range(5):
+            q.enqueue(i)
+        batch = q.pop_ready_batch(force=True)
+        assert [t.payload for t in batch.tasks] == [0, 1, 2]
+        batch = q.pop_ready_batch(force=True)
+        assert [t.payload for t in batch.tasks] == [3, 4]
+
+    def test_weight_skews_batch_mix(self):
+        weights = {"vip": 3.0, "std": 1.0}
+        q = BatchingQueue("q", BatchingOptions(max_batch_size=4),
+                          weight_fn=lambda t: weights.get(t, 1.0))
+        for _ in range(6):
+            q.enqueue("s", tenant="std")
+        for _ in range(6):
+            q.enqueue("v", tenant="vip")
+        batch = q.pop_ready_batch()
+        tenants = [t.tenant for t in batch.tasks]
+        assert tenants.count("vip") == 3 and tenants.count("std") == 1
+
+    def test_expired_task_dropped_not_batched(self):
+        q = BatchingQueue("q", BatchingOptions(max_batch_size=4))
+        now = time.monotonic()
+        dead = q.enqueue("dead", tenant="a", deadline_t=now - 0.01)
+        live = q.enqueue("live", tenant="a", deadline_t=now + 60)
+        batch = q.pop_ready_batch(force=True)
+        assert [t.payload for t in batch.tasks] == ["live"]
+        with pytest.raises(DeadlineExceededError):
+            dead.wait(0)
+        assert live.deadline_t is not None
+        assert q.stats_snapshot()["deadline_dropped"] == 1
+        assert q.pending_tasks() == 0        # accounting drained
+
+
+# ---------------------------------------------------------------------------
+# Decode-engine admission: WFQ vs FIFO, deadlines, quota release
+# (engine thread NOT started — admission driven directly, deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _admission_order(eng):
+    """Drain the engine's admission queue through the real scheduler
+    (select + take, exactly what _backfill does) and return tenants in
+    admission order."""
+    order = []
+    with eng._cond:
+        while True:
+            req = eng._select_locked(time.monotonic())
+            if req is None:
+                break
+            eng._take_locked(req)
+            order.append(req.tenant)
+    return order
+
+
+class TestDecodeAdmission:
+    def _engine(self, params, **kw):
+        return DecodeScheduler(CFG, params, num_slots=2, max_seq_len=64,
+                               drr_quantum=16.0, **kw)
+
+    def _flood(self, eng, prompt):
+        for _ in range(6):
+            eng.submit(prompt, max_new=8, tenant="hog")
+        for _ in range(2):
+            eng.submit(prompt, max_new=8, tenant="small")
+
+    def test_fifo_starves_late_tenant(self, params):
+        """The regression baseline: under FIFO the small tenant's first
+        request sits behind the hog's entire backlog."""
+        eng = self._engine(params, scheduling="fifo")
+        prompt = np.arange(8, dtype=np.int32)
+        self._flood(eng, prompt)
+        order = _admission_order(eng)
+        assert order == ["hog"] * 6 + ["small"] * 2   # starved to the back
+
+    def test_wfq_interleaves_tenants(self, params):
+        """Same arrival pattern, WFQ: the small tenant is served within
+        the first admissions instead of after the hog's whole backlog."""
+        eng = self._engine(params, scheduling="wfq")
+        prompt = np.arange(8, dtype=np.int32)
+        self._flood(eng, prompt)
+        order = _admission_order(eng)
+        assert sorted(order) == sorted(["hog"] * 6 + ["small"] * 2)
+        assert "small" in order[:3]          # not starved
+        assert order.index("small") < 4
+
+    def test_wfq_weight_shifts_share(self, params):
+        mgr = TenancyManager()
+        mgr.set_quota("vip", TenantQuota(weight=2.0))
+        eng = self._engine(params, scheduling="wfq", tenancy=mgr)
+        prompt = np.arange(8, dtype=np.int32)
+        for _ in range(6):
+            eng.submit(prompt, max_new=8, tenant="std")
+        for _ in range(6):
+            eng.submit(prompt, max_new=8, tenant="vip")
+        order = _admission_order(eng)
+        first6 = order[:6]
+        assert first6.count("vip") > first6.count("std")
+
+    def test_priority_orders_within_tenant_only(self, params):
+        """priority jumps the tenant's own queue but cannot outrank
+        another tenant's fair share."""
+        eng = self._engine(params, scheduling="wfq")
+        prompt = np.arange(8, dtype=np.int32)
+        a_lo = eng.submit(prompt, max_new=8, tenant="a", priority=0)
+        a_hi = eng.submit(prompt, max_new=8, tenant="a", priority=5)
+        eng.submit(prompt, max_new=8, tenant="b", priority=100)
+        with eng._cond:
+            q = eng._queues["a"]
+            assert q[0] is a_hi and q[1] is a_lo
+        order = _admission_order(eng)
+        assert sorted(order) == ["a", "a", "b"]
+        assert order.index("b") <= 1         # fair share, not priority 100
+
+    def test_expired_at_submit_raises_immediately(self, params):
+        mgr = TenancyManager()
+        eng = self._engine(params, tenancy=mgr)
+        with pytest.raises(DeadlineExceededError):
+            eng.submit(np.arange(8, dtype=np.int32), max_new=4,
+                       tenant="t", deadline_t=time.monotonic() - 1)
+        snap = mgr.snapshot("t")["t"]
+        assert snap["deadline_dropped"] == 1
+        assert snap["decodes_inflight"] == 0     # nothing leaked
+
+    def test_expired_while_parked_never_prefills(self, params):
+        """Regression: a request whose deadline passes while parked
+        behind a busy slot is dropped BEFORE any prefill — no wasted KV
+        work for a caller that already gave up."""
+        eng = DecodeScheduler(CFG, params, num_slots=1, max_seq_len=64)
+        prompt = np.arange(8, dtype=np.int32)
+        first = eng.submit(prompt, max_new=3)
+        parked = eng.submit(prompt, max_new=3,
+                            deadline_t=time.monotonic() + 0.05)
+        eng._backfill()                      # slot 0 -> first; parked waits
+        assert eng.stats["prefills"] == 1
+        time.sleep(0.1)                      # parked's budget expires
+        while eng.active_slots():            # drive first to completion
+            eng._tick()
+        first.wait(5)
+        eng._backfill()                      # must DROP parked, not admit
+        assert eng.stats["prefills"] == 1    # no prefill for dead work
+        assert eng.stats["deadline_dropped"] == 1
+        with pytest.raises(DeadlineExceededError):
+            parked.wait(0)
+        assert eng.active_slots() == 0 and eng.queued() == 0
+
+    def test_quota_reserved_at_submit_released_on_cancel(self, params):
+        """Block/slot quota usage returns to zero when a queued request
+        is cancelled before ever touching a slot."""
+        mgr = TenancyManager()
+        mgr.set_quota("t", TenantQuota(max_concurrent_decodes=1,
+                                       max_kv_blocks=64))
+        eng = self._engine(params, tenancy=mgr)
+        req = eng.submit(np.arange(8, dtype=np.int32), max_new=4,
+                         tenant="t")
+        snap = mgr.snapshot("t")["t"]
+        assert snap["decodes_inflight"] == 1 and snap["blocks_held"] > 0
+        with pytest.raises(QuotaExceededError):    # second concurrent
+            eng.submit(np.arange(8, dtype=np.int32), max_new=4,
+                       tenant="t")
+        eng.cancel(req)
+        eng._backfill()                      # reaps the cancelled pick
+        snap = mgr.snapshot("t")["t"]
+        assert snap["decodes_inflight"] == 0 and snap["blocks_held"] == 0
+        with pytest.raises(RuntimeError):
+            req.wait(0)
+        # capacity is reusable afterwards
+        eng.submit(np.arange(8, dtype=np.int32), max_new=4, tenant="t")
+
+    def test_quota_released_after_normal_finish(self, params):
+        mgr = TenancyManager()
+        mgr.set_quota("t", TenantQuota(max_concurrent_decodes=2))
+        eng = DecodeScheduler(CFG, params, num_slots=2, max_seq_len=64,
+                              tenancy=mgr)
+        eng.start()
+        try:
+            out = eng.generate(np.arange(8, dtype=np.int32), max_new=4,
+                               tenant="t")
+            assert out.shape == (4,)
+        finally:
+            eng.stop()
+        snap = mgr.snapshot("t")["t"]
+        assert snap["decodes_inflight"] == 0 and snap["blocks_held"] == 0
+        assert snap["tokens_generated"] == 4
+
+    def test_stop_releases_queued_quota(self, params):
+        mgr = TenancyManager()
+        mgr.set_quota("t", TenantQuota(max_concurrent_decodes=4))
+        eng = self._engine(params, tenancy=mgr)
+        for _ in range(3):
+            eng.submit(np.arange(8, dtype=np.int32), max_new=4,
+                       tenant="t")
+        eng.stop()
+        snap = mgr.snapshot("t")["t"]
+        assert snap["decodes_inflight"] == 0 and snap["blocks_held"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Over a real socket: 429, x-tenant-id, GET /v1/tenants, GetTenantStats
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def stack(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("models")
+    params = MD.init_params(jax.random.PRNGKey(1), CFG)
+    save_checkpoint(str(tmp), "clf", 1, params, {"arch": CFG.name})
+    srv = ModelServer({"clf": str(tmp / "clf")}, cfg_for=lambda n: CFG)
+    srv.start_sync()
+    http = srv.serve_http()
+    client = ServingClient(*http.address)
+    yield srv, http, client
+    client.close()
+    http.stop()
+    srv.stop()
+
+
+def batch(b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": rng.integers(0, CFG.vocab_size, (b, s))}
+
+
+def http_request(addr, method, path, payload=None, headers=None):
+    conn = HTTPConnection(*addr)
+    try:
+        body = (json.dumps(payload).encode("utf-8")
+                if payload is not None else None)
+        hdrs = {"Content-Type": "application/json"}
+        hdrs.update(headers or {})
+        conn.request(method, path, body, hdrs)
+        resp = conn.getresponse()
+        return resp.status, json.loads(resp.read())
+    finally:
+        conn.close()
+
+
+class TestOverTheWire:
+    def test_resource_exhausted_maps_to_429(self):
+        assert STATUS_FOR_CODE["RESOURCE_EXHAUSTED"] == 429
+        assert api.ResourceExhausted("x").code == "RESOURCE_EXHAUSTED"
+
+    def test_rps_quota_rejected_with_429(self, stack):
+        srv, http, client = stack
+        srv.tenancy.set_quota("limited", TenantQuota(rps=1e-9, burst=1.0))
+        ctx = RequestContext(tenant="limited")
+        req = api.PredictRequest(api.ModelSpec("clf"), batch(),
+                                 context=ctx)
+        client.predict(req)                  # burst token
+        with pytest.raises(api.ResourceExhausted):
+            client.predict(req)              # typed client raises
+        status, body = http_request(
+            http.address, "POST", "/v1/predict",
+            wire.encode_message(req))
+        assert status == 429                 # raw HTTP status
+        assert body["error"]["code"] == "RESOURCE_EXHAUSTED"
+        snap = srv.tenancy.snapshot("limited")["limited"]
+        assert snap["quota_rejected"] >= 2
+        assert snap["served"] == 1
+
+    def test_inflight_predict_quota_over_wire(self, stack):
+        srv, http, _ = stack
+        srv.tenancy.set_quota("nopredict",
+                              TenantQuota(max_inflight_predicts=0))
+        req = api.PredictRequest(api.ModelSpec("clf"), batch(),
+                                 context=RequestContext(tenant="nopredict"))
+        status, body = http_request(http.address, "POST", "/v1/predict",
+                                    wire.encode_message(req))
+        assert status == 429
+        # the unbatched path doesn't hold a batch slot -> not limited
+        req2 = api.PredictRequest(api.ModelSpec("clf"), batch(),
+                                  batched=False,
+                                  context=RequestContext(
+                                      tenant="nopredict"))
+        status, _ = http_request(http.address, "POST", "/v1/predict",
+                                 wire.encode_message(req2))
+        assert status == 200
+
+    def test_header_sets_tenant_without_body_context(self, stack):
+        srv, http, _ = stack
+        payload = wire.encode_message(api.PredictRequest(
+            api.ModelSpec("clf"), batch()))
+        assert "context" not in json.dumps(payload) or True
+        status, _ = http_request(http.address, "POST", "/v1/predict",
+                                 payload,
+                                 headers={"x-tenant-id": "hdr-tenant"})
+        assert status == 200
+        snap = srv.tenancy.snapshot("hdr-tenant")["hdr-tenant"]
+        assert snap["served"] >= 1
+
+    def test_body_context_wins_over_header(self, stack):
+        srv, http, _ = stack
+        before = srv.tenancy.snapshot("body-t").get(
+            "body-t", {}).get("served", 0)
+        payload = wire.encode_message(api.PredictRequest(
+            api.ModelSpec("clf"), batch(),
+            context=RequestContext(tenant="body-t")))
+        status, _ = http_request(http.address, "POST", "/v1/predict",
+                                 payload,
+                                 headers={"x-tenant-id": "hdr-t"})
+        assert status == 200
+        assert srv.tenancy.snapshot("body-t")["body-t"]["served"] \
+            == before + 1
+        assert srv.tenancy.snapshot("hdr-t")["hdr-t"]["served"] == 0
+
+    def test_no_context_is_default_tenant(self, stack):
+        srv, _, client = stack
+        before = srv.tenancy.snapshot("default")["default"]["served"]
+        client.predict(api.PredictRequest(api.ModelSpec("clf"), batch()))
+        after = srv.tenancy.snapshot("default")["default"]["served"]
+        assert after == before + 1
+
+    def test_get_tenant_stats_rpc_and_http_get(self, stack):
+        srv, http, client = stack
+        client.predict(api.PredictRequest(
+            api.ModelSpec("clf"), batch(),
+            context=RequestContext(tenant="statsy")))
+        resp = client.get_tenant_stats(api.GetTenantStatsRequest())
+        by_name = {t.tenant: t for t in resp.tenants}
+        assert by_name["statsy"].served >= 1
+        assert "default" in by_name
+        # filtered, over GET (curl-able)
+        status, body = http_request(
+            http.address, "GET", "/v1/tenants?tenant=statsy")
+        assert status == 200
+        assert [t["tenant"] for t in body["tenants"]] == ["statsy"]
+        assert body["tenants"][0]["served"] >= 1
+        status, body = http_request(http.address, "GET", "/v1/tenants")
+        assert status == 200
+        assert {t["tenant"] for t in body["tenants"]} >= {"statsy",
+                                                          "default"}
+
+    def test_generate_accounts_tokens_per_tenant(self, stack):
+        srv, _, client = stack
+        toks = batch(b=1, s=8, seed=7)["tokens"][0].astype(np.int32)
+        resp = client.generate(api.GenerateRequest(
+            api.ModelSpec("clf"), tokens=toks, max_new=4,
+            context=RequestContext(tenant="gen-t")))
+        assert resp.tokens.shape == (1, 4)
+        snap = srv.tenancy.snapshot("gen-t")["gen-t"]
+        assert snap["tokens_generated"] == 4
+        assert snap["served"] == 1
+        assert snap["decodes_inflight"] == 0 and snap["blocks_held"] == 0
+
+    def test_disconnect_mid_stream_returns_tenant_blocks(self, stack):
+        """Client hangs up mid-stream: the tenant's reserved blocks and
+        decode slot must drain back to zero (quota not leaked)."""
+        srv, _, client = stack
+        toks = batch(b=1, s=8, seed=8)["tokens"][0].astype(np.int32)
+        srv.tenancy.set_quota("streamer",
+                              TenantQuota(max_concurrent_decodes=2))
+        it = client.generate(api.GenerateRequest(
+            api.ModelSpec("clf"), tokens=toks, max_new=400, stream=True,
+            context=RequestContext(tenant="streamer")))
+        assert next(it) is not None
+        it.close()                           # disconnect
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            snap = srv.tenancy.snapshot("streamer")["streamer"]
+            if (snap["decodes_inflight"] == 0
+                    and snap["blocks_held"] == 0):
+                break
+            time.sleep(0.02)
+        assert snap["decodes_inflight"] == 0
+        assert snap["blocks_held"] == 0
+
+    def test_decode_slot_quota_maps_to_429(self, stack):
+        srv, http, _ = stack
+        srv.tenancy.set_quota("nodecodes",
+                              TenantQuota(max_concurrent_decodes=0))
+        toks = batch(b=1, s=8, seed=9)["tokens"][0].astype(np.int32)
+        status, body = http_request(
+            http.address, "POST", "/v1/generate",
+            wire.encode_message(api.GenerateRequest(
+                api.ModelSpec("clf"), tokens=toks, max_new=4,
+                context=RequestContext(tenant="nodecodes"))))
+        assert status == 429
+        assert body["error"]["code"] == "RESOURCE_EXHAUSTED"
+
+    def test_call_envelope_carries_context(self, stack):
+        srv, _, client = stack
+        out = client.call(api.ModelSpec("clf"), "predict", batch(),
+                          context=RequestContext(tenant="enveloped"))
+        assert np.asarray(out).shape[0] == 2
+        assert srv.tenancy.snapshot(
+            "enveloped")["enveloped"]["served"] >= 1
