@@ -1,0 +1,154 @@
+"""Closed-loop traffic simulation (paper §3.1): a seeded 3-phase trace
+(calm -> burst -> decay) of mixed typed RPCs from Zipf-skewed tenants is
+fired through the Router at socket-served replicas while the Autoscaler
+runs on its timer. The headline SLO is the paper's serving economics:
+**zero in-quota drops** — the only rejected requests are the ones the
+quota policy is SUPPOSED to reject (429s for the rate-limited tenant) —
+while the job provably scales out for the burst and back in afterwards.
+
+Writes ``BENCH_loadgen.json`` (the full per-phase report: offered vs
+served RPS, drop partition, latency/first-token percentiles, replica +
+queue-depth gauge envelopes) to ``REPRO_BENCH_OUT``; CI uploads it as
+the traffic-simulation perf-trajectory artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import CallableLoader, ResourceEstimate, ServableId
+from repro.hosted import (Autoscaler, AutoscalerConfig, Controller, Router,
+                          ServingJob, Synchronizer, TransactionalStore)
+from repro.loadgen import (LoadRunner, OnOffProcess, Phase, PhasedTrace,
+                           PoissonProcess, RouterTarget, ServiceTimeModel,
+                           SLO, SyntheticServable, Workload, WorkloadSpec,
+                           build_report, format_report)
+from repro.serving.tenancy import TenantQuota
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+SEED = 7
+# calm / burst / decay durations (s)
+PHASES_S = (1.5, 2.5, 2.0) if SMOKE else (4.0, 6.0, 5.0)
+TARGET_QPS_PER_REPLICA = 30.0
+# "t1" is deliberately starved: its 429s prove quota policy engages
+# under load and that the report partitions them out of in-quota drops.
+TENANT_QUOTAS = {"t1": TenantQuota(rps=2.0, burst=2.0)}
+
+
+def loader_factory(name, version, ref, ram):
+    sid = ServableId(name, version)
+    svc = ServiceTimeModel(base_s=0.002, per_output_token_s=0.0005,
+                           seed=version)
+    return CallableLoader(sid, lambda: SyntheticServable(sid, svc),
+                          ResourceEstimate(ram_bytes=ram))
+
+
+def _build_trace():
+    calm_s, burst_s, decay_s = PHASES_S
+    return PhasedTrace([
+        Phase("calm", calm_s, PoissonProcess(10.0)),
+        Phase("burst", burst_s, OnOffProcess(on_rate=120.0, off_rate=20.0,
+                                             mean_on_s=1.0,
+                                             mean_off_s=0.3)),
+        Phase("decay", decay_s, PoissonProcess(5.0)),
+    ])
+
+
+def bench_closed_loop(report):
+    store = TransactionalStore()
+    ctrl = Controller(store, {"job0": 1 << 20})
+    jobs = {"job0": ServingJob("job0", capacity_bytes=1 << 20,
+                               min_replicas=1, max_replicas=4,
+                               serve_replicas=True,
+                               tenant_quotas=TENANT_QUOTAS)}
+    ctrl.add_model("m", ram_bytes=1024, version=1, loader_ref="synthetic")
+    sync = Synchronizer("dc0", ctrl, jobs, loader_factory)
+    sync.sync_once()
+    sync.set_version_labels("m", {"prod": 1})
+    job = jobs["job0"]
+    router = Router(sync, jobs, hedge_delay_s=0.05)
+    asc = Autoscaler(jobs, AutoscalerConfig(
+        target_qps_per_replica=TARGET_QPS_PER_REPLICA,
+        target_queue_per_replica=4.0, cooldown_s=1.0,
+        scale_down_stable_ticks=2)).start(interval_s=0.4)
+
+    trace = _build_trace()
+    workload = Workload(WorkloadSpec(model="m", label="prod"))
+
+    def gauges():
+        sig = job.load_signals()
+        return {"replicas": float(sig["replicas"]),
+                "queue_depth": float(sig["queue_depth"])}
+
+    runner = LoadRunner(RouterTarget(router, "m", label="prod"),
+                        workload, trace, seed=SEED, gauges=gauges)
+    t0 = time.perf_counter()
+    try:
+        collector = runner.run()
+        # quiet drain past the cooldown so the scale-down is observable
+        deadline = time.monotonic() + 10.0
+        while (job.num_replicas() > job.min_replicas
+               and time.monotonic() < deadline):
+            time.sleep(0.2)
+    finally:
+        asc.stop()
+    wall_s = time.perf_counter() - t0
+
+    slos = {p: SLO(max_in_quota_drops=0) for p in ("calm", "burst",
+                                                   "decay")}
+    result = build_report(collector, slos, meta={
+        "seed": SEED, "smoke": SMOKE, "phases_s": PHASES_S,
+        "target_qps_per_replica": TARGET_QPS_PER_REPLICA,
+        "quota_tenants": sorted(TENANT_QUOTAS),
+        "wall_s": wall_s,
+        "max_dispatch_lateness_s": runner.max_lateness_s,
+        "router_stats": dict(router.stats),
+        "scale_decisions": [
+            {"job": d.job_id, "old": d.old_n, "new": d.new_n,
+             "reason": d.reason} for d in asc.decisions],
+        "final_replicas": job.num_replicas(),
+    })
+    print(format_report(result))
+
+    replica_curve = [g["replicas"] for g in collector.gauge_timeline()]
+    max_replicas_seen = int(max(replica_curve)) if replica_curve else 1
+    for name, phase in result["phases"].items():
+        report(f"loadgen_{name}_p99", phase["latency_ms"]["p99"],
+               f"offered={phase['offered']} served={phase['served']} "
+               f"rps={phase['served_rps']:.1f} "
+               f"429s={phase['quota_rejections']} "
+               f"in_quota_drops={phase['in_quota_drops']} "
+               f"slo={'OK' if phase['ok'] else 'VIOLATED'}")
+    report("loadgen_autoscale_replicas", max_replicas_seen,
+           f"burst->{max_replicas_seen} replicas, "
+           f"drained->{job.num_replicas()} "
+           f"(decisions={len(asc.decisions)}, "
+           f"evicted={router.stats['replicas_evicted']})")
+
+    out = os.environ.get("REPRO_BENCH_OUT", ".")
+    path = os.path.join(out, "BENCH_loadgen.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {path}")
+
+    router.shutdown()
+    for j in jobs.values():
+        j.shutdown()
+
+    # -- the headline SLOs fail the bench job when violated ----------------
+    assert result["total_in_quota_drops"] == 0, result["phases"]
+    assert result["all_slos_ok"], result["phases"]
+    # quota policy engaged: the starved tenant saw 429s...
+    assert result["total_quota_rejections"] > 0, result["phases"]
+    # ...and the loop closed in both directions.
+    assert max_replicas_seen >= 2, replica_curve
+    assert result["meta"]["final_replicas"] == job.min_replicas
+
+
+def main(report):
+    bench_closed_loop(report)
+
+
+if __name__ == "__main__":
+    main(lambda *a: print(*a))

@@ -36,15 +36,16 @@ def main(argv=None) -> None:
         print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
     from benchmarks import (bench_batching, bench_decode_engine,
-                            bench_hosted, bench_isolation, bench_lookup,
-                            bench_serving_engine, bench_transitions,
-                            bench_transport)
+                            bench_hosted, bench_isolation, bench_loadgen,
+                            bench_lookup, bench_serving_engine,
+                            bench_transitions, bench_transport)
     modules = [bench_lookup, bench_isolation, bench_batching,
                bench_transitions, bench_hosted, bench_serving_engine,
-               bench_decode_engine, bench_transport]
+               bench_decode_engine, bench_transport, bench_loadgen]
     if args.smoke:
         modules = [bench_lookup, bench_batching, bench_decode_engine,
-                   bench_transport, bench_hosted, bench_isolation]
+                   bench_transport, bench_hosted, bench_isolation,
+                   bench_loadgen]
     failures = 0
     for mod in modules:
         try:

@@ -102,13 +102,19 @@ def main():
         print(f"  tenant {tenant!r}: served={stats[tenant]}")
 
     print("\n-- traffic burst; autoscaler reacts --")
-    scaler = Autoscaler(jobs, AutoscalerConfig(target_qps_per_replica=20))
+    # Multi-signal: qps per replica, queue depth per replica, p99 vs
+    # SLO all vote; cooldown + stable-tick hysteresis damp flapping.
+    scaler = Autoscaler(jobs, AutoscalerConfig(
+        target_qps_per_replica=20, target_queue_per_replica=8.0,
+        p99_slo_ms=500.0, cooldown_s=2.0, scale_down_stable_ticks=2))
     t0 = time.time()
     n = 0
     while time.time() - t0 < 1.0:
         router.infer("scorer", batch)
         n += 1
     print(f"{n} requests in 1s ->", scaler.tick())
+    for d in scaler.decisions:
+        print(f"  scale {d.old_n}->{d.new_n} ({d.reason})")
 
     router.shutdown()
     sync.shutdown()

@@ -5,7 +5,8 @@ Autoscaler. Replicas can serve their typed API over HTTP on real
 localhost sockets (``ServingJob(serve_replicas=True)``); without it the
 stack runs fully in-process for tests.
 """
-from repro.hosted.autoscaler import Autoscaler, AutoscalerConfig
+from repro.hosted.autoscaler import (Autoscaler, AutoscalerConfig,
+                                     ScaleDecision)
 from repro.hosted.controller import AdmissionError, Controller, ModelEntry
 from repro.hosted.jobs import (JobReplica, LatencyModel, RpcSource,
                                ServingJob)
@@ -18,7 +19,7 @@ from repro.serving.api import (ModelSpec,  # request addressing
 __all__ = [
     "AdmissionError", "Autoscaler", "AutoscalerConfig", "Controller",
     "JobReplica", "LatencyModel", "ModelEntry", "ModelSpec",
-    "NoReplicaError", "RequestContext", "Router", "RpcSource", "ServingJob",
-    "Synchronizer",
+    "NoReplicaError", "RequestContext", "Router", "RpcSource",
+    "ScaleDecision", "ServingJob", "Synchronizer",
     "TransactionalStore", "Txn", "TxnConflict",
 ]

@@ -1,15 +1,42 @@
 """Reactive autoscaler (paper §3.1): "a separate system that reactively
 autoscales each serving job (dynamically adding and removing job
-replicas as load fluctuates)". Scaling signal: requests/sec per replica
-over the last tick, with hysteresis to avoid flapping.
+replicas as load fluctuates)".
+
+Multi-signal: the scaling decision is the max pressure across three
+signals —
+
+  * **qps** per replica vs ``target_qps_per_replica`` (the original,
+    always on),
+  * **queue depth** per replica vs ``target_queue_per_replica``
+    (admitted-but-unanswered RPCs from ``ServingJob.load_signals``),
+  * **p99 latency** vs ``p99_slo_ms`` over recent routed RPCs.
+
+Scale-up is immediate (underprovisioning costs drops); scale-down is
+damped twice: a ``cooldown_s`` window after any scale-up during which no
+scale-down fires (a burst's echo must not remove the replicas the burst
+just bought), and ``scale_down_stable_ticks`` consecutive cold ticks of
+hysteresis so a single quiet tick inside noisy traffic can't deflate the
+job. Defaults keep the original one-tick semantics (no cooldown, one
+cold tick) for callers that drive ``tick()`` by hand.
+
+``start(interval_s)`` runs the loop on a daemon timer — the closed-loop
+deployment shape: loadgen drives traffic, replicas report load, the
+autoscaler calls ``ServingJob.scale_to``, the job's replica hooks
+converge labels (Synchronizer) and evict routing state (Router).
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
+import math
+import threading
 import time
-from typing import Dict
+from collections import deque
+from typing import Callable, Dict, Optional
 
 from repro.hosted.jobs import ServingJob
+
+log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -18,38 +45,145 @@ class AutoscalerConfig:
     scale_up_threshold: float = 1.2      # >120% of target -> scale up
     scale_down_threshold: float = 0.5    # <50% of target  -> scale down
     max_step: int = 2                    # replicas added/removed per tick
+    # Multi-signal (None disables a signal):
+    target_queue_per_replica: Optional[float] = None
+    p99_slo_ms: Optional[float] = None
+    # Scale-down damping:
+    cooldown_s: float = 0.0              # no down this long after an up
+    scale_down_stable_ticks: int = 1     # consecutive cold ticks required
+    max_decisions: int = 512             # bounded decision history
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDecision:
+    t: float
+    job_id: str
+    old_n: int
+    new_n: int
+    reason: str
+    qps: float
+    queue_depth: Optional[float]
+    p99_ms: Optional[float]
 
 
 class Autoscaler:
     def __init__(self, jobs: Dict[str, ServingJob],
-                 cfg: AutoscalerConfig = None):
+                 cfg: AutoscalerConfig = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.jobs = jobs
         self.cfg = cfg or AutoscalerConfig()
-        self._last_tick = time.monotonic()
-        self.decisions = []
+        self._clock = clock
+        self._last_tick = clock()
+        self.decisions: deque = deque(maxlen=self.cfg.max_decisions)
+        self._last_scale_up: Dict[str, float] = {}
+        self._cold_ticks: Dict[str, int] = {}
+        self._timer: Optional[threading.Thread] = None
+        self._stop = threading.Event()
 
+    # -- the control loop ---------------------------------------------------
     def tick(self) -> Dict[str, int]:
-        """Returns job -> new replica count."""
-        now = time.monotonic()
+        """Returns job -> replica count after this tick's decisions."""
+        now = self._clock()
         dt = max(now - self._last_tick, 1e-3)
         self._last_tick = now
-        out = {}
-        for jid, job in self.jobs.items():
-            qps = job.take_request_count() / dt
-            n = job.num_replicas()
-            per_replica = qps / max(n, 1)
-            target = self.cfg.target_qps_per_replica
-            new_n = n
-            if per_replica > target * self.cfg.scale_up_threshold:
-                import math
-                want = math.ceil(qps / target)
-                new_n = min(n + self.cfg.max_step, max(want, n + 1))
-            elif per_replica < target * self.cfg.scale_down_threshold \
-                    and n > job.min_replicas:
-                new_n = max(n - self.cfg.max_step, job.min_replicas,
-                            int(qps / target) or job.min_replicas)
-            if new_n != n:
-                job.scale_to(new_n)
-                self.decisions.append((now, jid, n, new_n, qps))
-            out[jid] = job.num_replicas()
-        return out
+        return {jid: self._tick_job(jid, job, now, dt)
+                for jid, job in self.jobs.items()}
+
+    def _tick_job(self, jid: str, job: ServingJob, now: float,
+                  dt: float) -> int:
+        cfg = self.cfg
+        qps = job.take_request_count() / dt
+        n = max(job.num_replicas(), 1)
+
+        queue_depth: Optional[float] = None
+        p99_ms: Optional[float] = None
+        signals = getattr(job, "load_signals", None)
+        if signals is not None and (cfg.target_queue_per_replica is not None
+                                    or cfg.p99_slo_ms is not None):
+            try:
+                s = signals()
+                queue_depth = s.get("queue_depth")
+                p99_ms = s.get("p99_ms")
+            except Exception:   # noqa: BLE001 — a bad probe must not stop
+                log.exception("load_signals failed for job %s", jid)
+
+        # Each enabled signal votes a wanted replica count when hot, and
+        # vetoes coldness when it is not comfortably below target.
+        wants = []   # (want_n, reason) — scale-up pressure
+        cold = True
+        target = cfg.target_qps_per_replica
+        if target:
+            per_replica = qps / n
+            if per_replica > target * cfg.scale_up_threshold:
+                wants.append((math.ceil(qps / target), f"qps={qps:.1f}"))
+            if per_replica >= target * cfg.scale_down_threshold:
+                cold = False
+        if cfg.target_queue_per_replica is not None \
+                and queue_depth is not None:
+            tq = cfg.target_queue_per_replica
+            if queue_depth / n > tq * cfg.scale_up_threshold:
+                wants.append((math.ceil(queue_depth / tq),
+                              f"queue={queue_depth:.0f}"))
+            if queue_depth / n >= tq * cfg.scale_down_threshold:
+                cold = False
+        if cfg.p99_slo_ms is not None and p99_ms is not None:
+            if p99_ms > cfg.p99_slo_ms:
+                # No capacity model for latency: step up one and let the
+                # next tick re-evaluate.
+                wants.append((n + 1, f"p99={p99_ms:.0f}ms"))
+                cold = False
+
+        new_n, reason = n, ""
+        if wants:
+            self._cold_ticks[jid] = 0
+            want = max(w for w, _ in wants)
+            new_n = min(n + cfg.max_step, max(want, n + 1))
+            reason = "up: " + ",".join(r for _, r in wants)
+        elif cold and n > job.min_replicas:
+            self._cold_ticks[jid] = self._cold_ticks.get(jid, 0) + 1
+            last_up = self._last_scale_up.get(jid)
+            in_cooldown = (last_up is not None
+                           and now - last_up < cfg.cooldown_s)
+            if (self._cold_ticks[jid] >= cfg.scale_down_stable_ticks
+                    and not in_cooldown):
+                new_n = max(n - cfg.max_step, job.min_replicas,
+                            int(qps / target) if target else 0)
+                reason = f"down: qps={qps:.1f}"
+        else:
+            self._cold_ticks[jid] = 0
+
+        if new_n != n:
+            job.scale_to(new_n)
+            if new_n > n:
+                self._last_scale_up[jid] = now
+            else:
+                self._cold_ticks[jid] = 0
+            self.decisions.append(ScaleDecision(
+                now, jid, n, new_n, reason, qps, queue_depth, p99_ms))
+        return job.num_replicas()
+
+    # -- timer loop ---------------------------------------------------------
+    def start(self, interval_s: float = 1.0) -> "Autoscaler":
+        """Run ``tick`` every ``interval_s`` on a daemon thread
+        (idempotent); the closed-loop deployment shape."""
+        if self._timer is not None:
+            return self
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.wait(interval_s):
+                try:
+                    self.tick()
+                except Exception:   # noqa: BLE001 — loop must survive
+                    log.exception("autoscaler tick failed")
+
+        self._timer = threading.Thread(target=loop, daemon=True,
+                                       name="tfs2-autoscaler")
+        self._timer.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        timer, self._timer = self._timer, None
+        if timer is not None:
+            timer.join(timeout=5)

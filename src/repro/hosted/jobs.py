@@ -18,14 +18,19 @@ benchmarks without real hardware contention.
 """
 from __future__ import annotations
 
+import logging
 import random
 import threading
 import time
+from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import AspiredVersion, AspiredVersionsManager, Source
 from repro.serving import api
 from repro.serving.api import ModelSpec, PredictionService
+from repro.serving.tenancy import TenancyManager, TenantQuota
+
+log = logging.getLogger(__name__)
 
 
 class RpcSource(Source):
@@ -69,8 +74,11 @@ class _ReplicaTransportFacade:
             return fn
 
         def accounted(*args, **kwargs):
-            self._replica._account()
-            return fn(*args, **kwargs)
+            t0 = self._replica._begin()
+            try:
+                return fn(*args, **kwargs)
+            finally:
+                self._replica._finish(t0)
 
         return accounted
 
@@ -80,7 +88,8 @@ class JobReplica:
 
     def __init__(self, job_id: str, replica_idx: int,
                  capacity_bytes: int,
-                 latency: Optional[LatencyModel] = None):
+                 latency: Optional[LatencyModel] = None,
+                 tenant_quotas: Optional[Dict[str, TenantQuota]] = None):
         self.job_id = job_id
         self.replica_idx = replica_idx
         self.name = f"{job_id}/r{replica_idx}"
@@ -97,7 +106,9 @@ class JobReplica:
         # has no file-system source here — versions arrive over the RPC
         # source — but labels/status are served (the Synchronizer
         # propagates SetVersionLabels through it).
-        self.prediction = PredictionService(self.manager)
+        tenancy = (TenancyManager(quotas=dict(tenant_quotas))
+                   if tenant_quotas else None)
+        self.prediction = PredictionService(self.manager, tenancy=tenancy)
         self.models = api.ModelService(
             self.manager, tenancy=self.prediction.tenancy)
         self._transport = None
@@ -105,6 +116,12 @@ class JobReplica:
         self._client_lock = threading.Lock()
         self._req_count = 0
         self._req_lock = threading.Lock()
+        # Routed-RPC load window: outstanding gauge + recent latencies,
+        # fed by _begin/_finish around every accounted request (both the
+        # socket facade and the in-process paths).
+        self._load_lock = threading.Lock()
+        self._outstanding = 0
+        self._latencies: deque = deque(maxlen=512)
 
     # -- Synchronizer-facing -------------------------------------------------
     def sync_aspirations(
@@ -158,12 +175,23 @@ class JobReplica:
             return self._client
 
     # -- Router-facing ---------------------------------------------------------
-    def _account(self) -> None:
+    def _begin(self) -> float:
+        """Account one request in: simulated latency, request counter
+        (autoscaler qps signal), outstanding gauge. Returns the start
+        time for ``_finish``."""
         delay = self.latency.sample()
         if delay:
             time.sleep(delay)
         with self._req_lock:
             self._req_count += 1
+        with self._load_lock:
+            self._outstanding += 1
+        return time.monotonic()
+
+    def _finish(self, t0: float) -> None:
+        with self._load_lock:
+            self._outstanding -= 1
+            self._latencies.append(time.monotonic() - t0)
 
     def infer(self, model, method: str, request: Any,
               version: Optional[int] = None,
@@ -173,9 +201,23 @@ class JobReplica:
         resolved against this replica's own manager at request time."""
         spec = model if isinstance(model, ModelSpec) \
             else ModelSpec(model, version)
-        self._account()
-        return self.prediction.call(spec, method, request,
-                                    context=context)
+        t0 = self._begin()
+        try:
+            return self.prediction.call(spec, method, request,
+                                        context=context)
+        finally:
+            self._finish(t0)
+
+    def generate_stream(self, req: "api.GenerateRequest"):
+        """In-process streamed generate for the Router (the socket path
+        goes through ``client().generate`` instead). Accounted like any
+        routed RPC; the replica-level sample covers stream *setup* —
+        per-token inflight lives in ``prediction.load``."""
+        t0 = self._begin()
+        try:
+            return self.prediction.generate(req)
+        finally:
+            self._finish(t0)
 
     def take_request_count(self) -> int:
         with self._req_lock:
@@ -183,15 +225,45 @@ class JobReplica:
             self._req_count = 0
             return n
 
+    def load_stats(self) -> Dict[str, float]:
+        """Autoscaler-facing load signal for this replica: routed-RPC
+        outstanding + the service core's inflight/engine queues, with
+        ``queue_depth`` as the combined headline number."""
+        svc = self.prediction.load_stats()
+        with self._load_lock:
+            svc["replica_outstanding"] = float(self._outstanding)
+        # Routed RPCs count in BOTH gauges (the facade wraps the service
+        # core), so the true admitted-but-unanswered depth is the max —
+        # outstanding covers the latency-model sleep before the core
+        # sees a request, inflight covers stream workers after the
+        # routed call returned.
+        svc["queue_depth"] = max(svc["queue_depth"],
+                                 svc["replica_outstanding"])
+        return svc
+
+    def latency_samples(self) -> List[float]:
+        """Recent end-to-end latencies (s) of routed RPCs, for job-level
+        percentile pooling."""
+        with self._load_lock:
+            return list(self._latencies)
+
     def ram_used(self) -> int:
         return self.manager.ram_committed_bytes
 
-    def shutdown(self) -> None:
+    def close_client(self) -> None:
+        """Close + drop the cached typed client (idempotent). Called on
+        scale-down eviction so stale keep-alive connections can never be
+        handed to later requests; in-flight calls on the closed client
+        surface as ``Unavailable`` and fail over at the Router."""
         with self._client_lock:
             client, self._client = self._client, None
-            transport, self._transport = self._transport, None
         if client is not None:
             client.close()
+
+    def shutdown(self) -> None:
+        self.close_client()
+        with self._client_lock:
+            transport, self._transport = self._transport, None
         if transport is not None:
             transport.stop()
         self.manager.shutdown()
@@ -207,28 +279,58 @@ class ServingJob:
     def __init__(self, job_id: str, capacity_bytes: int,
                  latency_factory: Callable[[int], LatencyModel] = None,
                  min_replicas: int = 1, max_replicas: int = 8,
-                 serve_replicas: bool = False, host: str = "127.0.0.1"):
+                 serve_replicas: bool = False, host: str = "127.0.0.1",
+                 tenant_quotas: Optional[Dict[str, TenantQuota]] = None):
         self.job_id = job_id
         self.capacity_bytes = capacity_bytes
         self.min_replicas = min_replicas
         self.max_replicas = max_replicas
         self.serve_replicas = serve_replicas
         self.host = host
+        self.tenant_quotas = tenant_quotas
         self._latency_factory = latency_factory or (lambda i: LatencyModel())
         self._lock = threading.Lock()
         self.replicas: List[JobReplica] = []
         self._aspirations: Dict[str, Sequence[AspiredVersion]] = {}
+        self._added_cbs: List[Callable[[JobReplica], None]] = []
+        self._removed_cbs: List[Callable[[JobReplica], None]] = []
         for _ in range(min_replicas):
             self._add_replica_locked()
+
+    def add_replica_listener(
+            self,
+            added: Optional[Callable[[JobReplica], None]] = None,
+            removed: Optional[Callable[[JobReplica], None]] = None) -> None:
+        """Scale-event hooks. ``added`` runs INSIDE the job lock, after
+        the new replica synced aspirations but before any
+        ``replica_snapshot`` can see it — the Synchronizer converges
+        version labels there, so label-addressed traffic never reaches
+        an unconverged replica. ``removed`` runs after the replica left
+        the snapshot, before its shutdown — the Router evicts routing
+        state and closes the cached client there. Callbacks must not
+        call back into job-level methods that take the job lock."""
+        if added is not None:
+            self._added_cbs.append(added)
+        if removed is not None:
+            self._removed_cbs.append(removed)
 
     def _add_replica_locked(self) -> JobReplica:
         idx = len(self.replicas)
         r = JobReplica(self.job_id, idx, self.capacity_bytes,
-                       self._latency_factory(idx))
+                       self._latency_factory(idx),
+                       tenant_quotas=self.tenant_quotas)
         if self.serve_replicas:
             r.serve(host=self.host)
         self.replicas.append(r)
         return r
+
+    def _notify(self, cbs: List[Callable[[JobReplica], None]],
+                r: JobReplica) -> None:
+        for cb in cbs:
+            try:
+                cb(r)
+            except Exception:   # noqa: BLE001 — hooks must not break scaling
+                log.exception("replica listener failed for %s", r.name)
 
     def scale_to(self, n: int) -> None:
         n = max(self.min_replicas, min(self.max_replicas, n))
@@ -237,12 +339,17 @@ class ServingJob:
             while len(self.replicas) < n:
                 r = self._add_replica_locked()
                 r.sync_aspirations(self._aspirations)
+                # Still under the lock: the replica is invisible to
+                # replica_snapshot() until we release, so added-hooks
+                # (label convergence) complete before it takes traffic.
+                self._notify(self._added_cbs, r)
             while len(self.replicas) > n:
                 removed.append(self.replicas.pop())
         # Shut down OUTSIDE the lock: a serving replica drains its HTTP
         # transport (bounded but slow), and holding the lock here would
         # stall routing/sync for the whole job meanwhile.
         for r in removed:
+            self._notify(self._removed_cbs, r)
             r.shutdown()
 
     def num_replicas(self) -> int:
@@ -280,9 +387,27 @@ class ServingJob:
         with self._lock:
             return sum(r.take_request_count() for r in self.replicas)
 
+    def load_signals(self) -> Dict[str, Any]:
+        """Job-wide autoscaling signals: summed queue depth, pooled p99
+        (ms) over recent routed-RPC latencies, replica count. ``p99_ms``
+        is None until any replica has served a request."""
+        replicas = self.replica_snapshot()
+        queue_depth = 0.0
+        latencies: List[float] = []
+        for r in replicas:
+            queue_depth += r.load_stats()["queue_depth"]
+            latencies.extend(r.latency_samples())
+        p99_ms: Optional[float] = None
+        if latencies:
+            latencies.sort()
+            p99_ms = latencies[int(0.99 * (len(latencies) - 1))] * 1e3
+        return {"replicas": len(replicas), "queue_depth": queue_depth,
+                "p99_ms": p99_ms}
+
     def shutdown(self) -> None:
         with self._lock:
             replicas = list(self.replicas)
             self.replicas.clear()
         for r in replicas:
+            self._notify(self._removed_cbs, r)
             r.shutdown()

@@ -4,6 +4,14 @@ to cut tail latency from transient replica slowness: the request goes to
 one replica; if no reply within ``hedge_delay_s``, a backup goes to a
 second replica; first reply wins.
 
+Placement is **least-outstanding-requests**: the router tracks how many
+of its requests are in flight on each replica and sends new work to the
+least-loaded one (round-robin tie-break), so a slow or draining replica
+sheds load instead of queueing it. ``Unavailable`` replies (a replica
+draining mid-scale-down, a dropped keep-alive) **fail over** to a
+not-yet-tried replica — safe to resend because inference RPCs are pure;
+quota rejections (``ResourceExhausted``) are policy and never retried.
+
 Requests are addressed by ``ModelSpec`` (name + version OR label): the
 router places by name, and the chosen replica resolves version/label
 against its own manager at request time, so a canary promote propagating
@@ -12,22 +20,24 @@ through the Synchronizer flips routing without restarting anything.
 Transport: replicas that are serving on a port (``JobReplica.serve`` /
 ``ServingJob(serve_replicas=True)``) are reached through the replica's
 own shared ``ServingClient`` over a real localhost socket — the request
-crosses the wire exactly as in a multi-process deployment, and the
-client dies with its replica (no per-consumer cache to leak after a
-scale-down). Replicas without an address fall back to direct in-process
-calls (the unit-test configuration). ``transport="inproc"`` forces the
-fallback everywhere.
+crosses the wire exactly as in a multi-process deployment. On scale-down
+the router's removed-replica hook evicts the replica's routing state and
+closes that client, so stale keep-alive connections can never serve
+later requests. Replicas without an address fall back to direct
+in-process calls (the unit-test configuration); ``transport="inproc"``
+forces the fallback everywhere.
 """
 from __future__ import annotations
 
 import itertools
 import threading
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Iterator, List, Optional
 
 from repro.hosted.jobs import JobReplica, ServingJob
 from repro.hosted.synchronizer import Synchronizer
-from repro.serving.api import ModelSpec, NotFound, RequestContext
+from repro.serving.api import (GenerateRequest, ModelSpec, NotFound,
+                               RequestContext, Unavailable)
 
 
 class NoReplicaError(NotFound):
@@ -39,26 +49,68 @@ class Router:
                  jobs: Dict[str, ServingJob],
                  hedge_delay_s: Optional[float] = 0.010,
                  max_workers: int = 32,
-                 transport: str = "auto"):
+                 transport: str = "auto",
+                 max_attempts: int = 3):
         if transport not in ("auto", "inproc"):
             raise ValueError(f"unknown transport {transport!r}")
         self.sync = synchronizer
         self.jobs = jobs
         self.hedge_delay_s = hedge_delay_s
         self.transport = transport
+        self.max_attempts = max_attempts
         self._rr = itertools.count()
         self._pool = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="tfs2-router")
-        self.stats = {"requests": 0, "hedged": 0, "hedge_wins": 0}
+        self.stats = {"requests": 0, "hedged": 0, "hedge_wins": 0,
+                      "retries": 0, "streams": 0, "replicas_evicted": 0}
         self._stats_lock = threading.Lock()
+        # Outstanding routed requests per live replica, keyed by object
+        # identity; entries appear lazily and are evicted on scale-down.
+        self._load_lock = threading.Lock()
+        self._outstanding: Dict[int, int] = {}
+        for job in jobs.values():
+            add = getattr(job, "add_replica_listener", None)
+            if add is not None:
+                add(removed=self.evict_replica)
 
-    def _replicas_for(self, model: str):
+    # -- replica bookkeeping ------------------------------------------------
+    def evict_replica(self, replica: JobReplica) -> None:
+        """Scale-down hook: forget the replica's routing state and close
+        its cached client (stale keep-alives must not outlive it).
+        Requests already in flight there surface ``Unavailable`` and
+        fail over."""
+        with self._load_lock:
+            self._outstanding.pop(id(replica), None)
+        with self._stats_lock:
+            self.stats["replicas_evicted"] += 1
+        replica.close_client()
+
+    def outstanding_snapshot(self) -> Dict[int, int]:
+        with self._load_lock:
+            return dict(self._outstanding)
+
+    def _replicas_for(self, model: str) -> List[JobReplica]:
         loaded = self.sync.loaded_status()
         for jid, models in loaded.items():
             if model in models and models[model]:
                 return self.jobs[jid].replica_snapshot()
         return []
 
+    def _pick(self, replicas: List[JobReplica],
+              k: int = 1) -> List[JobReplica]:
+        """Up to ``k`` distinct replicas, least-outstanding first;
+        round-robin rotation breaks ties so equal-load replicas share
+        work instead of the list head taking everything."""
+        rr = next(self._rr)
+        n = len(replicas)
+        with self._load_lock:
+            ranked = sorted(
+                range(n),
+                key=lambda i: (self._outstanding.get(id(replicas[i]), 0),
+                               (i - rr) % n))
+        return [replicas[i] for i in ranked[:k]]
+
+    # -- dispatch -----------------------------------------------------------
     def _infer_on(self, replica: JobReplica, spec: ModelSpec,
                   method: str, request: Any,
                   context: Optional[RequestContext] = None) -> Any:
@@ -66,6 +118,27 @@ class Router:
         if client is None:
             return replica.infer(spec, method, request, context=context)
         return client.call(spec, method, request, context=context)
+
+    def _acquire(self, replica: JobReplica) -> int:
+        key = id(replica)
+        with self._load_lock:
+            self._outstanding[key] = self._outstanding.get(key, 0) + 1
+        return key
+
+    def _release(self, key: int) -> None:
+        with self._load_lock:
+            n = self._outstanding.get(key)
+            if n is not None:    # evicted entries stay gone
+                self._outstanding[key] = max(0, n - 1)
+
+    def _infer_tracked(self, replica: JobReplica, spec: ModelSpec,
+                       method: str, request: Any,
+                       context: Optional[RequestContext]) -> Any:
+        key = self._acquire(replica)
+        try:
+            return self._infer_on(replica, spec, method, request, context)
+        finally:
+            self._release(key)
 
     def infer(self, model, request: Any, method: str = "predict",
               version: Optional[int] = None,
@@ -75,31 +148,58 @@ class Router:
         ``version``/``label``). Replicas resolve labels locally; the
         request ``context`` (tenant/priority/deadline) rides along to
         whichever replica serves — across the wire when the replica is
-        socket-served."""
+        socket-served. ``Unavailable`` fails over to an untried replica
+        (up to ``max_attempts``); other typed errors propagate as-is."""
         spec = model if isinstance(model, ModelSpec) \
             else ModelSpec(model, version, label)
-        replicas = self._replicas_for(spec.name)
-        if not replicas:
-            raise NoReplicaError(
-                f"model {spec.name!r} not loaded anywhere")
         with self._stats_lock:
             self.stats["requests"] += 1
-        start = next(self._rr)
-        primary = replicas[start % len(replicas)]
+        tried: set = set()
+        last_exc: Optional[Unavailable] = None
+        for attempt in range(self.max_attempts):
+            # Re-snapshot each attempt: the replica set may have changed
+            # under us (that's often WHY the last attempt failed).
+            candidates = [r for r in self._replicas_for(spec.name)
+                          if id(r) not in tried]
+            if not candidates:
+                break
+            if attempt:
+                with self._stats_lock:
+                    self.stats["retries"] += 1
+            try:
+                return self._infer_once(candidates, spec, method, request,
+                                        context, tried)
+            except Unavailable as exc:
+                last_exc = exc
+        if last_exc is not None:
+            raise last_exc
+        raise NoReplicaError(f"model {spec.name!r} not loaded anywhere")
 
+    def _infer_once(self, replicas: List[JobReplica], spec: ModelSpec,
+                    method: str, request: Any,
+                    context: Optional[RequestContext],
+                    tried: set) -> Any:
+        """One placement round (with hedging). Adds every replica it
+        touched to ``tried`` so the failover loop never resends to a
+        replica that already failed."""
         if self.hedge_delay_s is None or len(replicas) == 1:
-            return self._infer_on(primary, spec, method, request, context)
-
-        f1 = self._pool.submit(self._infer_on, primary, spec, method,
+            primary = self._pick(replicas)[0]
+            tried.add(id(primary))
+            return self._infer_tracked(primary, spec, method, request,
+                                       context)
+        picks = self._pick(replicas, 2)
+        primary, backup = picks[0], picks[1]
+        tried.add(id(primary))
+        f1 = self._pool.submit(self._infer_tracked, primary, spec, method,
                                request, context)
         done, _ = wait([f1], timeout=self.hedge_delay_s)
         if done:
             return f1.result()
-        # hedge: backup to the next replica
-        backup = replicas[(start + 1) % len(replicas)]
+        # hedge: backup request to the second-least-loaded replica
+        tried.add(id(backup))
         with self._stats_lock:
             self.stats["hedged"] += 1
-        f2 = self._pool.submit(self._infer_on, backup, spec, method,
+        f2 = self._pool.submit(self._infer_tracked, backup, spec, method,
                                request, context)
         done, _ = wait([f1, f2], return_when=FIRST_COMPLETED)
         winner = done.pop()
@@ -111,6 +211,57 @@ class Router:
         except BaseException:
             other = f2 if winner is f1 else f1
             return other.result()
+
+    # -- streaming ----------------------------------------------------------
+    def stream_generate(self, model, tokens, max_new: int = 16,
+                        sampling=None, timeout_s: float = 120.0,
+                        version: Optional[int] = None,
+                        label: Optional[str] = None,
+                        context: Optional[RequestContext] = None
+                        ) -> Iterator:
+        """Route a streamed Generate to the least-outstanding replica
+        and yield its ``TokenChunk``s. The replica stays charged in the
+        outstanding gauge until the stream is exhausted or closed, so
+        long-lived streams repel new placements. No hedging/failover:
+        a stream is stateful — resending after first tokens were
+        consumed would replay them."""
+        spec = model if isinstance(model, ModelSpec) \
+            else ModelSpec(model, version, label)
+        replicas = self._replicas_for(spec.name)
+        if not replicas:
+            raise NoReplicaError(f"model {spec.name!r} not loaded anywhere")
+        with self._stats_lock:
+            self.stats["requests"] += 1
+            self.stats["streams"] += 1
+        primary = self._pick(replicas)[0]
+        req = GenerateRequest(model_spec=spec, tokens=tokens,
+                              max_new=max_new, sampling=sampling,
+                              stream=True, timeout_s=timeout_s,
+                              context=context)
+        key = self._acquire(primary)
+        try:
+            client = None if self.transport == "inproc" \
+                else primary.client()
+            stream = (primary.generate_stream(req) if client is None
+                      else client.generate(req))
+        except BaseException:
+            self._release(key)
+            raise
+
+        def guarded() -> Iterator:
+            try:
+                for chunk in stream:
+                    yield chunk
+            finally:
+                self._release(key)
+                close = getattr(stream, "close", None)
+                if close is not None:
+                    try:
+                        close()
+                    except Exception:   # noqa: BLE001 — best-effort
+                        pass
+
+        return guarded()
 
     def shutdown(self) -> None:
         self._pool.shutdown(wait=False)

@@ -50,6 +50,13 @@ class Synchronizer:
         # every replica converges (clears are idempotent no-ops once
         # applied), or a stale pin would survive on that replica.
         self._desired_labels: Dict[str, Dict[str, Optional[int]]] = {}
+        # Converge labels onto scale-up replicas BEFORE they take
+        # traffic: the job invokes the added-hook while the new replica
+        # is still invisible to Router snapshots.
+        for job in jobs.values():
+            add = getattr(job, "add_replica_listener", None)
+            if add is not None:
+                add(added=self._converge_replica)
 
     def sync_once(self) -> Dict[str, Dict[str, Tuple[int, ...]]]:
         """Push desired state to every job; gather loaded status;
@@ -134,6 +141,29 @@ class Synchronizer:
             return {lbl: v for lbl, v in
                     self._desired_labels.get(name, {}).items()
                     if v is not None}
+
+    def _converge_replica(self, replica: JobReplica) -> None:
+        """Scale-up hook (runs INSIDE the job's replica lock, after the
+        new replica synced aspirations but before any snapshot can see
+        it): push every applicable desired label so label-addressed
+        traffic never reaches an unconverged replica. Deliberately uses
+        only ``replica.loaded_status()`` — job-level status helpers take
+        the job lock this hook already holds."""
+        with self._lock:
+            desired = {m: dict(ls) for m, ls in
+                       self._desired_labels.items() if ls}
+        for name, labels in desired.items():
+            have = set(replica.loaded_status().get(name, ()))
+            applicable = {lbl: v for lbl, v in labels.items()
+                          if v is None or v in have}
+            if not applicable:
+                continue
+            try:
+                self._model_service(replica).set_version_labels(
+                    name, applicable)
+            except ServingError as exc:
+                log.warning("label converge %s on new replica %s "
+                            "failed: %s", applicable, replica.name, exc)
 
     def _reassert_labels(self, loaded) -> None:
         with self._lock:

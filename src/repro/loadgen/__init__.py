@@ -1,0 +1,29 @@
+"""Traffic simulation for the hosted TFS² stack (paper §3.1): seeded
+open-loop arrival processes + heavy-tailed synthetic workloads fired
+through the real socket stack, with per-phase metrics and SLO verdicts
+— the driver that makes the autoscaler's closed loop observable.
+"""
+from repro.loadgen.arrivals import (ArrivalProcess, ConstantProcess,
+                                    DiurnalProcess, OnOffProcess, Phase,
+                                    PhasedTrace, PoissonProcess)
+from repro.loadgen.metrics import (DROP_CODES, ERROR, IN_QUOTA_DROP_CODES,
+                                   OK, QUOTA, UNAVAILABLE,
+                                   MetricsCollector, RequestRecord,
+                                   percentiles)
+from repro.loadgen.report import SLO, build_report, format_report
+from repro.loadgen.runner import ClientTarget, LoadRunner, RouterTarget
+from repro.loadgen.synthetic import ServiceTimeModel, SyntheticServable
+from repro.loadgen.workload import (METHODS, LengthDist, RpcProfile,
+                                    SyntheticRequest, Workload,
+                                    WorkloadSpec, ZipfTenants)
+
+__all__ = [
+    "ArrivalProcess", "ClientTarget", "ConstantProcess", "DROP_CODES",
+    "DiurnalProcess", "ERROR", "IN_QUOTA_DROP_CODES", "LengthDist",
+    "LoadRunner", "METHODS", "MetricsCollector", "OK", "OnOffProcess",
+    "Phase", "PhasedTrace", "PoissonProcess", "QUOTA", "RequestRecord",
+    "RouterTarget", "RpcProfile", "SLO", "ServiceTimeModel",
+    "SyntheticRequest", "SyntheticServable", "UNAVAILABLE", "Workload",
+    "WorkloadSpec", "ZipfTenants", "build_report", "format_report",
+    "percentiles",
+]

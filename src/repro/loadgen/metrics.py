@@ -1,0 +1,192 @@
+"""Metrics collection for simulated traffic runs.
+
+One ``MetricsCollector`` per run: worker threads record an outcome per
+request (latency, first-token latency for streams, status code, phase,
+tenant, method) and a probe thread records gauge samples (replica
+count, queue depth, ...) on a fixed cadence, forming the timeline the
+report correlates against the load curve.
+
+Status codes partition drops into *out-of-quota* (the stack correctly
+rejected an over-quota tenant: ``"quota"``, HTTP 429) and *in-quota*
+(everything else: transport failures, deadline expiry, errors). The
+headline SLO of the autoscaling scenario is **zero in-quota drops at
+steady state** — quota rejections are policy, in-quota drops are
+capacity failures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+OK = "ok"
+QUOTA = "quota"                     # ResourceExhausted / HTTP 429
+UNAVAILABLE = "unavailable"         # transport / drain / deadline
+ERROR = "error"                     # anything else
+
+DROP_CODES = (QUOTA, UNAVAILABLE, ERROR)
+IN_QUOTA_DROP_CODES = (UNAVAILABLE, ERROR)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    t: float                        # arrival offset from run start (s)
+    phase: str
+    method: str
+    tenant: str
+    code: str                       # OK / QUOTA / UNAVAILABLE / ERROR
+    latency_s: float
+    first_token_s: Optional[float] = None   # streams only
+    detail: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.code == OK
+
+
+def percentiles(values: Sequence[float],
+                qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
+    """{"p50": ..., ...} in the units of ``values``; NaN when empty."""
+    if not len(values):
+        return {f"p{int(q)}": float("nan") for q in qs}
+    arr = np.asarray(list(values), dtype=np.float64)
+    return {f"p{int(q)}": float(np.percentile(arr, q)) for q in qs}
+
+
+class MetricsCollector:
+    """Thread-safe request + gauge recording with per-phase summaries."""
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._records: List[RequestRecord] = []
+        self._gauges: List[Dict[str, float]] = []
+        self._phase_spans: List[Tuple[str, float, float]] = []
+        self._t0: Optional[float] = None
+
+    # -- run framing -------------------------------------------------------
+    def start_run(self, phase_spans: Sequence[Tuple[str, float, float]]
+                  ) -> None:
+        with self._lock:
+            self._t0 = self._clock()
+            self._phase_spans = list(phase_spans)
+
+    @property
+    def t0(self) -> Optional[float]:
+        with self._lock:
+            return self._t0
+
+    def elapsed(self) -> float:
+        with self._lock:
+            return 0.0 if self._t0 is None else self._clock() - self._t0
+
+    def phase_spans(self) -> List[Tuple[str, float, float]]:
+        with self._lock:
+            return list(self._phase_spans)
+
+    # -- recording ---------------------------------------------------------
+    def record(self, rec: RequestRecord) -> None:
+        with self._lock:
+            self._records.append(rec)
+
+    def sample_gauges(self, **gauges: float) -> None:
+        with self._lock:
+            t = 0.0 if self._t0 is None else self._clock() - self._t0
+            self._gauges.append({"t": t, **gauges})
+
+    # -- views -------------------------------------------------------------
+    def records(self, phase: Optional[str] = None) -> List[RequestRecord]:
+        with self._lock:
+            recs = list(self._records)
+        if phase is None:
+            return recs
+        return [r for r in recs if r.phase == phase]
+
+    def gauge_timeline(self) -> List[Dict[str, float]]:
+        with self._lock:
+            return list(self._gauges)
+
+    def window_rps(self, now_offset: float, window_s: float = 1.0,
+                   code: Optional[str] = OK) -> float:
+        """Sliding-window rate over arrivals in
+        (now_offset - window_s, now_offset]."""
+        lo = now_offset - window_s
+        with self._lock:
+            n = sum(1 for r in self._records
+                    if lo < r.t <= now_offset
+                    and (code is None or r.code == code))
+        return n / window_s if window_s > 0 else float("nan")
+
+    def rps_timeline(self, window_s: float = 1.0,
+                     step_s: float = 0.5) -> List[Tuple[float, float]]:
+        """[(offset, served RPS over the trailing window)] — pairs with
+        the gauge timeline to show the control loop following load."""
+        with self._lock:
+            if not self._records:
+                return []
+            horizon = max(r.t for r in self._records)
+        out, t = [], window_s
+        while t <= horizon + step_s:
+            out.append((t, self.window_rps(t, window_s)))
+            t += step_s
+        return out
+
+    # -- summaries ---------------------------------------------------------
+    def phase_summary(self, phase: str) -> Dict[str, Any]:
+        recs = self.records(phase)
+        span = next((s for s in self.phase_spans() if s[0] == phase),
+                    None)
+        duration = (span[2] - span[1]) if span else float("nan")
+        offered = len(recs)
+        served = [r for r in recs if r.ok]
+        codes = {c: sum(1 for r in recs if r.code == c)
+                 for c in DROP_CODES}
+        in_quota_drops = sum(codes[c] for c in IN_QUOTA_DROP_CODES)
+        lat_ms = [r.latency_s * 1e3 for r in served]
+        ft_ms = [r.first_token_s * 1e3 for r in served
+                 if r.first_token_s is not None]
+        by_method = {}
+        for r in recs:
+            by_method.setdefault(r.method, [0, 0])
+            by_method[r.method][0] += 1
+            by_method[r.method][1] += r.ok
+        by_tenant: Dict[str, int] = {}
+        for r in served:
+            by_tenant[r.tenant] = by_tenant.get(r.tenant, 0) + 1
+        return {
+            "phase": phase,
+            "duration_s": duration,
+            "offered": offered,
+            "served": len(served),
+            "offered_rps": (offered / duration
+                            if duration and duration == duration
+                            else float("nan")),
+            "served_rps": (len(served) / duration
+                           if duration and duration == duration
+                           else float("nan")),
+            "drops": offered - len(served),
+            "drop_rate": ((offered - len(served)) / offered
+                          if offered else 0.0),
+            "quota_rejections": codes[QUOTA],
+            "in_quota_drops": in_quota_drops,
+            "latency_ms": percentiles(lat_ms),
+            "first_token_ms": percentiles(ft_ms, (50, 95)),
+            "methods": {m: {"offered": o, "served": s}
+                        for m, (o, s) in sorted(by_method.items())},
+            "served_by_tenant": dict(sorted(by_tenant.items())),
+        }
+
+    def summary(self) -> Dict[str, Any]:
+        phases = [name for name, _, _ in self.phase_spans()]
+        if not phases:
+            phases = sorted({r.phase for r in self.records()})
+        return {p: self.phase_summary(p) for p in phases}
+
+
+__all__ = [
+    "DROP_CODES", "ERROR", "IN_QUOTA_DROP_CODES", "MetricsCollector",
+    "OK", "QUOTA", "RequestRecord", "UNAVAILABLE", "percentiles",
+]

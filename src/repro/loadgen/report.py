@@ -1,0 +1,125 @@
+"""SLO report + verdicts over a simulated-traffic run.
+
+Takes a ``MetricsCollector`` and per-phase SLOs, returns a plain-dict
+report (JSON-serializable — the benchmarks write it verbatim as
+``BENCH_loadgen.json``) with a pass/fail verdict per phase and overall.
+"On the Cost of Model-Serving Frameworks" motivates reporting the
+*economics* per phase — offered vs served RPS, drop partition, tail
+latency — not just a single throughput number.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Union
+
+from repro.loadgen.metrics import MetricsCollector
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Per-phase objectives; ``None`` disables a check.
+
+    ``max_in_quota_drops`` defaults to 0: quota rejections (429s) are
+    policy and never counted against it, every other drop is a capacity
+    failure."""
+
+    p99_ms: Optional[float] = None
+    first_token_p95_ms: Optional[float] = None
+    max_drop_rate: Optional[float] = None
+    max_in_quota_drops: Optional[int] = 0
+
+
+def _check(slo: SLO, summary: Dict[str, Any]) -> Dict[str, Any]:
+    checks: Dict[str, bool] = {}
+    if slo.p99_ms is not None:
+        p99 = summary["latency_ms"]["p99"]
+        checks["p99_ms"] = (not math.isnan(p99)) and p99 <= slo.p99_ms
+    if slo.first_token_p95_ms is not None:
+        ft = summary["first_token_ms"]["p95"]
+        # Phases that happened to schedule no streams pass vacuously.
+        checks["first_token_p95_ms"] = (
+            math.isnan(ft) or ft <= slo.first_token_p95_ms)
+    if slo.max_drop_rate is not None:
+        checks["drop_rate"] = summary["drop_rate"] <= slo.max_drop_rate
+    if slo.max_in_quota_drops is not None:
+        checks["in_quota_drops"] = (
+            summary["in_quota_drops"] <= slo.max_in_quota_drops)
+    return {"checks": checks, "ok": all(checks.values())}
+
+
+def build_report(collector: MetricsCollector,
+                 slos: Union[SLO, Dict[str, SLO], None] = None,
+                 meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """``slos`` may be one SLO for every phase or a per-phase dict
+    (missing phases get no checks and pass)."""
+    summaries = collector.summary()
+    phases: Dict[str, Any] = {}
+    all_ok = True
+    for name, summary in summaries.items():
+        slo = slos.get(name) if isinstance(slos, dict) else slos
+        verdict = (_check(slo, summary) if slo is not None
+                   else {"checks": {}, "ok": True})
+        entry = dict(summary)
+        entry["slo"] = dataclasses.asdict(slo) if slo else None
+        entry.update(verdict)
+        phases[name] = entry
+        all_ok &= verdict["ok"]
+
+    timeline = collector.gauge_timeline()
+    gauge_keys = sorted({k for g in timeline for k in g if k != "t"})
+    per_phase_gauges: Dict[str, Any] = {}
+    for name, start, end in collector.phase_spans():
+        in_phase = [g for g in timeline if start <= g["t"] < end]
+        per_phase_gauges[name] = {
+            k: {"min": min((g[k] for g in in_phase if k in g),
+                           default=float("nan")),
+                "max": max((g[k] for g in in_phase if k in g),
+                           default=float("nan"))}
+            for k in gauge_keys}
+
+    report: Dict[str, Any] = {
+        "meta": dict(meta or {}),
+        "phases": phases,
+        "gauges_by_phase": per_phase_gauges,
+        "gauge_timeline": timeline,
+        "served_rps_timeline": collector.rps_timeline(),
+        "total_offered": sum(p["offered"] for p in phases.values()),
+        "total_served": sum(p["served"] for p in phases.values()),
+        "total_in_quota_drops": sum(p["in_quota_drops"]
+                                    for p in phases.values()),
+        "total_quota_rejections": sum(p["quota_rejections"]
+                                      for p in phases.values()),
+        "all_slos_ok": bool(all_ok),
+    }
+    return report
+
+
+def format_report(report: Dict[str, Any]) -> str:
+    """Human-readable per-phase table (what the example prints)."""
+    lines: List[str] = []
+    header = (f"{'phase':<10} {'offered':>7} {'served':>7} {'rps':>7} "
+              f"{'drops':>5} {'429s':>5} {'p50ms':>8} {'p99ms':>8} "
+              f"{'ft95ms':>8}  verdict")
+    lines.append(header)
+    lines.append("-" * len(header))
+    for name, p in report["phases"].items():
+        lat, ft = p["latency_ms"], p["first_token_ms"]
+        lines.append(
+            f"{name:<10} {p['offered']:>7} {p['served']:>7} "
+            f"{p['served_rps']:>7.1f} {p['in_quota_drops']:>5} "
+            f"{p['quota_rejections']:>5} {lat['p50']:>8.2f} "
+            f"{lat['p99']:>8.2f} {ft['p95']:>8.2f}  "
+            f"{'OK' if p['ok'] else 'VIOLATED'}")
+    for name, gauges in report.get("gauges_by_phase", {}).items():
+        reps = gauges.get("replicas")
+        if reps:
+            lines.append(f"{name:<10} replicas {reps['min']:.0f}"
+                         f"->{reps['max']:.0f}")
+    lines.append(f"overall: {'OK' if report['all_slos_ok'] else 'VIOLATED'}"
+                 f" (in-quota drops={report['total_in_quota_drops']},"
+                 f" 429s={report['total_quota_rejections']})")
+    return "\n".join(lines)
+
+
+__all__ = ["SLO", "build_report", "format_report"]

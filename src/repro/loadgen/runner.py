@@ -1,0 +1,224 @@
+"""The open-loop load runner: walks a seeded arrival schedule in real
+time and fires each synthetic request at the serving stack through a
+worker pool, recording outcomes into a ``MetricsCollector``.
+
+Two targets:
+
+  * ``RouterTarget`` — the hosted TFS² path: requests go through the
+    ``Router`` (least-outstanding replica spread, failover, streamed
+    generate), crossing real sockets when replicas serve on ports.
+  * ``ClientTarget`` — a single ``ServingClient`` against one
+    ``HttpServingServer`` (the stand-alone deployment shape).
+
+Open loop means the schedule never waits for responses: arrivals are
+materialized up front from the seed, the dispatch thread sleeps to each
+arrival time and hands the request to the pool. A saturated server
+shows up as latency and drops — never as a silently-reduced offered
+rate, which is exactly the failure mode closed-loop load tests hide.
+"""
+from __future__ import annotations
+
+import logging
+import random
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.loadgen.arrivals import PhasedTrace
+from repro.loadgen.metrics import (ERROR, OK, QUOTA, UNAVAILABLE,
+                                   MetricsCollector, RequestRecord)
+from repro.loadgen.workload import SyntheticRequest, Workload
+from repro.serving import api
+
+log = logging.getLogger(__name__)
+
+
+class RouterTarget:
+    """Fires synthetic requests through the hosted Router."""
+
+    def __init__(self, router, model: str, label: Optional[str] = None):
+        self.router = router
+        self.model = model
+        self.label = label
+
+    def _spec(self) -> api.ModelSpec:
+        return api.ModelSpec(self.model, label=self.label)
+
+    def dispatch(self, sreq: SyntheticRequest) -> Optional[float]:
+        """Serve one request; returns first-token latency for streams
+        (None otherwise). Typed serving errors propagate to the runner,
+        which classifies them into drop codes."""
+        spec = self._spec()
+        if sreq.method == "predict":
+            self.router.infer(spec, {"tokens": sreq.tokens},
+                              method="predict", context=sreq.context)
+            return None
+        if sreq.method == "classify":
+            self.router.infer(spec,
+                              {"batch": {"tokens": sreq.tokens}, "k": 3},
+                              method="classify", context=sreq.context)
+            return None
+        if sreq.method == "generate":
+            self.router.infer(spec,
+                              {"tokens": sreq.tokens,
+                               "max_new": sreq.max_new},
+                              method="generate", context=sreq.context)
+            return None
+        if sreq.method == "generate_stream":
+            t0 = time.monotonic()
+            first: Optional[float] = None
+            stream = self.router.stream_generate(
+                spec, sreq.tokens, max_new=sreq.max_new,
+                context=sreq.context)
+            try:
+                for _chunk in stream:
+                    if first is None:
+                        first = time.monotonic() - t0
+            finally:
+                close = getattr(stream, "close", None)
+                if close is not None:
+                    close()
+            return first
+        raise ValueError(f"unknown method {sreq.method!r}")
+
+
+class ClientTarget:
+    """Fires synthetic requests at one server through a ServingClient
+    (works identically with an in-process ``PredictionService``)."""
+
+    def __init__(self, client, model: str, label: Optional[str] = None):
+        self.client = client
+        self.model = model
+        self.label = label
+
+    def _spec(self) -> api.ModelSpec:
+        return api.ModelSpec(self.model, label=self.label)
+
+    def dispatch(self, sreq: SyntheticRequest) -> Optional[float]:
+        spec = self._spec()
+        if sreq.method == "predict":
+            self.client.predict(api.PredictRequest(
+                spec, {"tokens": sreq.tokens}, context=sreq.context))
+            return None
+        if sreq.method == "classify":
+            self.client.classify(api.ClassifyRequest(
+                spec, {"tokens": sreq.tokens}, k=3, context=sreq.context))
+            return None
+        if sreq.method == "generate":
+            self.client.generate(api.GenerateRequest(
+                spec, tokens=sreq.tokens, max_new=sreq.max_new,
+                context=sreq.context))
+            return None
+        if sreq.method == "generate_stream":
+            t0 = time.monotonic()
+            first: Optional[float] = None
+            stream = self.client.generate(api.GenerateRequest(
+                spec, tokens=sreq.tokens, max_new=sreq.max_new,
+                stream=True, context=sreq.context))
+            try:
+                for _chunk in stream:
+                    if first is None:
+                        first = time.monotonic() - t0
+            finally:
+                close = getattr(stream, "close", None)
+                if close is not None:
+                    close()
+            return first
+        raise ValueError(f"unknown method {sreq.method!r}")
+
+
+class LoadRunner:
+    """Drives one scenario: schedule -> worker pool -> metrics.
+
+    ``gauges``: optional zero-arg callable returning a dict of floats
+    (replica count, queue depth, ...) sampled every
+    ``probe_interval_s`` onto the collector's gauge timeline.
+    """
+
+    def __init__(self, target, workload: Workload, trace: PhasedTrace, *,
+                 seed: int = 0, max_workers: int = 64,
+                 collector: Optional[MetricsCollector] = None,
+                 gauges: Optional[Callable[[], Dict[str, float]]] = None,
+                 probe_interval_s: float = 0.05,
+                 request_timeout_s: float = 60.0):
+        self.target = target
+        self.workload = workload
+        self.trace = trace
+        self.seed = seed
+        self.max_workers = max_workers
+        self.collector = collector or MetricsCollector()
+        self.gauges = gauges
+        self.probe_interval_s = probe_interval_s
+        self.request_timeout_s = request_timeout_s
+        self.max_lateness_s = 0.0   # dispatch-loop skew (open-loop QA)
+
+    # -- deterministic schedule --------------------------------------------
+    def build_schedule(self) -> List[Tuple[float, str, SyntheticRequest]]:
+        """(arrival offset, phase, request) — a pure function of the
+        seed; two runners with the same seed offer identical traffic."""
+        rng = random.Random(self.seed)
+        arrivals = self.trace.schedule(rng)
+        return [(t, phase, self.workload.sample(rng, seq))
+                for seq, (t, phase) in enumerate(arrivals)]
+
+    # -- execution ---------------------------------------------------------
+    def _fire(self, t_offset: float, phase: str,
+              sreq: SyntheticRequest) -> None:
+        t0 = time.perf_counter()
+        code, first, detail = OK, None, ""
+        try:
+            first = self.target.dispatch(sreq)
+        except api.ResourceExhausted as exc:
+            code, detail = QUOTA, str(exc)
+        except (api.Unavailable, TimeoutError) as exc:
+            code, detail = UNAVAILABLE, repr(exc)
+        except Exception as exc:    # noqa: BLE001 — any failure is a drop
+            code, detail = ERROR, repr(exc)
+        self.collector.record(RequestRecord(
+            t=t_offset, phase=phase, method=sreq.method,
+            tenant=sreq.tenant, code=code,
+            latency_s=time.perf_counter() - t0,
+            first_token_s=first, detail=detail))
+
+    def run(self) -> MetricsCollector:
+        schedule = self.build_schedule()
+        self.collector.start_run(self.trace.spans())
+        stop_probe = threading.Event()
+        probe = None
+        if self.gauges is not None:
+            def probe_loop():
+                while not stop_probe.wait(self.probe_interval_s):
+                    try:
+                        self.collector.sample_gauges(**self.gauges())
+                    except Exception:   # noqa: BLE001 — probe best-effort
+                        log.debug("gauge probe failed", exc_info=True)
+            probe = threading.Thread(target=probe_loop, daemon=True,
+                                     name="loadgen-probe")
+            probe.start()
+
+        pool = ThreadPoolExecutor(max_workers=self.max_workers,
+                                  thread_name_prefix="loadgen")
+        futures = []
+        try:
+            t0 = time.monotonic()
+            for t_arrival, phase, sreq in schedule:
+                delay = t_arrival - (time.monotonic() - t0)
+                if delay > 0:
+                    time.sleep(delay)
+                else:
+                    self.max_lateness_s = max(self.max_lateness_s, -delay)
+                futures.append(
+                    pool.submit(self._fire, t_arrival, phase, sreq))
+            deadline = time.monotonic() + self.request_timeout_s
+            for f in futures:
+                f.result(timeout=max(0.1, deadline - time.monotonic()))
+        finally:
+            stop_probe.set()
+            if probe is not None:
+                probe.join(timeout=5)
+            pool.shutdown(wait=False)
+        return self.collector
+
+
+__all__ = ["ClientTarget", "LoadRunner", "RouterTarget"]

@@ -1,0 +1,165 @@
+"""A model-shaped servable with *simulated* service times.
+
+Traffic simulation exercises the control plane — routing, quotas,
+autoscaling, label convergence — and its economics depend on service
+times, not on what the model computes. ``SyntheticServable`` implements
+the full typed RPC surface (predict / classify / regress / generate,
+including per-token ``on_token`` streaming and ``cancel``) with a
+deterministic output function and a configurable ``ServiceTimeModel``
+(base + per-prompt-token + per-output-token + occasional heavy tail),
+so scenario runs are fast, CPU-only, and reproducible while the
+requests still cross the real socket stack end to end.
+
+Outputs encode the serving version (predict returns arrays filled with
+``version``; generated tokens mix the prompt hash with the version), so
+scenario assertions can detect mis-routing exactly like the hosted
+benchmarks do with ``RawDictServable``.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.servable import (ResourceEstimate, Servable, ServableId,
+                                 UnsupportedMethodError)
+
+
+class ServiceTimeModel:
+    """Deterministic-seed service-time sampler.
+
+    ``prefill(n)`` costs ``base_s + n * per_prompt_token_s`` (+ a tail
+    with probability ``tail_prob``); each decode step costs
+    ``per_output_token_s``. Zero everywhere by default — pure
+    control-plane overhead measurement."""
+
+    def __init__(self, base_s: float = 0.0,
+                 per_prompt_token_s: float = 0.0,
+                 per_output_token_s: float = 0.0,
+                 tail_s: float = 0.0, tail_prob: float = 0.0,
+                 seed: int = 0):
+        self.base_s = base_s
+        self.per_prompt_token_s = per_prompt_token_s
+        self.per_output_token_s = per_output_token_s
+        self.tail_s = tail_s
+        self.tail_prob = tail_prob
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+
+    def prefill_s(self, prompt_tokens: int) -> float:
+        with self._lock:
+            tail = self._rng.random() < self.tail_prob
+        return (self.base_s + prompt_tokens * self.per_prompt_token_s
+                + (self.tail_s if tail else 0.0))
+
+    def step_s(self) -> float:
+        return self.per_output_token_s
+
+
+class SyntheticServable(Servable):
+    """Typed-RPC-complete servable backed by sleeps instead of math."""
+
+    def __init__(self, servable_id: ServableId,
+                 service: Optional[ServiceTimeModel] = None,
+                 vocab: int = 512, dim: int = 8, ram_bytes: int = 1 << 10):
+        super().__init__(servable_id)
+        self.service = service or ServiceTimeModel()
+        self.vocab = vocab
+        self.dim = dim
+        self._ram = ram_bytes
+        self._unloaded = False
+
+    # -- Servable API ------------------------------------------------------
+    def call(self, method: str, request: Any) -> Any:
+        if self._unloaded:
+            raise RuntimeError(f"{self.id} already unloaded")
+        if method == "predict":
+            return self._predict(request)
+        if method == "classify":
+            return self._classify(request["batch"], request.get("k", 5))
+        if method == "regress":
+            return self._regress(request["batch"])
+        if method == "multi_inference":
+            out = {}
+            for task in request.get("tasks", ("classify", "regress")):
+                if task == "classify":
+                    out["classify"] = self._classify(
+                        request["batch"], request.get("k", 5))
+                elif task == "regress":
+                    out["regress"] = self._regress(request["batch"])
+                else:
+                    raise ValueError(f"unknown task {task!r}")
+            return out
+        if method == "generate":
+            return self.generate(**request)
+        raise UnsupportedMethodError(f"unknown method {method!r}")
+
+    def unload(self) -> None:
+        self._unloaded = True
+
+    def resource_estimate(self) -> ResourceEstimate:
+        return ResourceEstimate(ram_bytes=self._ram)
+
+    # -- methods -----------------------------------------------------------
+    @staticmethod
+    def _prompt(request: Any) -> np.ndarray:
+        tokens = np.asarray(request["tokens"])
+        return tokens if tokens.ndim == 2 else tokens[None]
+
+    def _work(self, n_tokens: int) -> None:
+        delay = self.service.prefill_s(n_tokens)
+        if delay > 0:
+            time.sleep(delay)
+
+    def _predict(self, request: Any) -> np.ndarray:
+        tokens = self._prompt(request)
+        self._work(int(tokens.shape[0] * tokens.shape[1]))
+        return np.full((tokens.shape[0], self.dim),
+                       float(self.id.version), dtype=np.float32)
+
+    def _classify(self, batch: Any, k: int) -> dict:
+        tokens = self._prompt(batch)
+        self._work(int(tokens.shape[0] * tokens.shape[1]))
+        b = tokens.shape[0]
+        classes = np.tile(np.arange(k, dtype=np.int64), (b, 1))
+        scores = np.full((b, k), float(self.id.version), dtype=np.float32)
+        return {"classes": classes, "scores": scores}
+
+    def _regress(self, batch: Any) -> dict:
+        tokens = self._prompt(batch)
+        self._work(int(tokens.shape[0] * tokens.shape[1]))
+        return {"value": np.full((tokens.shape[0],),
+                                 float(self.id.version), np.float32)}
+
+    def generate(self, tokens=None, embeds=None, max_new: int = 16,
+                 sampling=None, timeout_s: float = 120.0, on_token=None,
+                 cancel=None, **_) -> np.ndarray:
+        """Same contract as ``JaxModelServable.generate``: (B, max_new)
+        int tokens, ``on_token(i, tok)`` per step for B=1 streams, and
+        ``cancel`` (a ``threading.Event``) aborts between steps."""
+        if tokens is None:
+            raise ValueError("synthetic generate needs token prompts")
+        prompt = np.asarray(tokens)
+        if prompt.ndim == 1:
+            prompt = prompt[None]
+        if on_token is not None and prompt.shape[0] != 1:
+            raise ValueError("streaming requires a single sequence")
+        self._work(int(prompt.shape[0] * prompt.shape[1]))
+        base = int(prompt.sum()) + self.id.version
+        out = np.empty((prompt.shape[0], max_new), dtype=np.int32)
+        for i in range(max_new):
+            if cancel is not None and cancel.is_set():
+                raise RuntimeError("generation cancelled by client")
+            step = self.service.step_s()
+            if step > 0:
+                time.sleep(step)
+            out[:, i] = (base + i) % self.vocab
+            if on_token is not None:
+                on_token(i, int(out[0, i]))
+        return out
+
+
+__all__ = ["ServiceTimeModel", "SyntheticServable"]

@@ -1,0 +1,169 @@
+"""Request synthesis: what each simulated arrival actually asks for.
+
+The shape of the offered work matters as much as its timing: the
+serving papers this repo reproduces are explicit that batching,
+serialization and replica count interact with *heavy-tailed* request
+sizes and *skewed* tenant populations. So:
+
+  * prompt and output lengths draw from lognormal or bounded-Pareto
+    distributions (a few huge requests among many small ones);
+  * the RPC mix spans the typed surface — predict / classify /
+    generate / streamed generate — with configurable weights;
+  * tenants are Zipf-distributed (rank-1 tenant dominates), each
+    request carrying a real ``RequestContext`` so per-tenant quotas and
+    WFQ scheduling in the stack under test actually engage.
+
+Everything samples from a caller-owned ``random.Random``: one seed,
+one workload, bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.tenancy import RequestContext
+
+METHODS = ("predict", "classify", "generate", "generate_stream")
+
+
+@dataclasses.dataclass(frozen=True)
+class LengthDist:
+    """Bounded heavy-tailed length sampler.
+
+    ``kind="lognormal"``: exp(N(mu, sigma)) — ``median`` sets exp(mu).
+    ``kind="pareto"``: lo * (1/U)^(1/alpha) — classic bounded Pareto.
+    Samples clamp to [lo, hi] and round to int.
+    """
+
+    kind: str = "lognormal"
+    median: float = 32.0            # lognormal: exp(mu)
+    sigma: float = 0.8              # lognormal: shape
+    alpha: float = 1.5              # pareto: tail index (smaller=fatter)
+    lo: int = 1
+    hi: int = 256
+
+    def sample(self, rng: random.Random) -> int:
+        if self.kind == "lognormal":
+            x = self.median * math.exp(rng.gauss(0.0, self.sigma))
+        elif self.kind == "pareto":
+            x = self.lo * (1.0 / max(rng.random(), 1e-12)) ** (
+                1.0 / self.alpha)
+        else:
+            raise ValueError(f"unknown length distribution {self.kind!r}")
+        return max(self.lo, min(self.hi, int(round(x))))
+
+
+class ZipfTenants:
+    """Zipf(s) over a fixed tenant list: P(rank k) ~ 1/k^s. Rank 0 is
+    the heaviest tenant; ``s=0`` degenerates to uniform."""
+
+    def __init__(self, tenants: Sequence[str], s: float = 1.1):
+        if not tenants:
+            raise ValueError("need at least one tenant")
+        self.tenants = list(tenants)
+        weights = [1.0 / (k + 1) ** s for k in range(len(self.tenants))]
+        total = sum(weights)
+        self._cdf: List[float] = []
+        acc = 0.0
+        for w in weights:
+            acc += w / total
+            self._cdf.append(acc)
+        self._cdf[-1] = 1.0         # guard fp drift
+
+    def sample(self, rng: random.Random) -> str:
+        u = rng.random()
+        for i, c in enumerate(self._cdf):
+            if u <= c:
+                return self.tenants[i]
+        return self.tenants[-1]
+
+
+class RpcProfile:
+    """Weighted mix over the typed RPC surface."""
+
+    def __init__(self, weights: Optional[Dict[str, float]] = None):
+        weights = dict(weights or {"predict": 0.45, "classify": 0.20,
+                                   "generate": 0.25,
+                                   "generate_stream": 0.10})
+        unknown = set(weights) - set(METHODS)
+        if unknown:
+            raise ValueError(f"unknown methods in profile: {unknown}")
+        total = sum(weights.values())
+        if total <= 0:
+            raise ValueError("profile weights must sum to > 0")
+        self.weights = {m: w / total for m, w in weights.items() if w > 0}
+        self._items = sorted(self.weights.items())
+
+    def sample(self, rng: random.Random) -> str:
+        u = rng.random()
+        acc = 0.0
+        for method, w in self._items:
+            acc += w
+            if u <= acc:
+                return method
+        return self._items[-1][0]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticRequest:
+    """One fully-materialized simulated request."""
+
+    seq: int
+    method: str                     # one of METHODS
+    tenant: str
+    context: RequestContext
+    prompt_len: int
+    max_new: int
+    tokens: np.ndarray              # (1, prompt_len) int32
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Knobs of the synthetic population."""
+
+    model: str = "m"
+    label: Optional[str] = None
+    vocab: int = 512
+    prompt_len: LengthDist = LengthDist("lognormal", median=24.0,
+                                        sigma=0.8, lo=1, hi=128)
+    output_len: LengthDist = LengthDist("pareto", alpha=1.6, lo=1, hi=32)
+    mix: Optional[Dict[str, float]] = None      # RpcProfile weights
+    tenants: Tuple[str, ...] = ("t0", "t1", "t2", "t3")
+    tenant_skew: float = 1.1                    # Zipf exponent
+    priority: int = 0
+    deadline_s: Optional[float] = None
+
+
+class Workload:
+    """Samples ``SyntheticRequest``s from a ``WorkloadSpec``."""
+
+    def __init__(self, spec: WorkloadSpec):
+        self.spec = spec
+        self.profile = RpcProfile(spec.mix)
+        self.zipf = ZipfTenants(spec.tenants, spec.tenant_skew)
+
+    def sample(self, rng: random.Random, seq: int) -> SyntheticRequest:
+        spec = self.spec
+        method = self.profile.sample(rng)
+        tenant = self.zipf.sample(rng)
+        prompt_len = spec.prompt_len.sample(rng)
+        max_new = (spec.output_len.sample(rng)
+                   if method.startswith("generate") else 0)
+        tokens = np.asarray(
+            [[rng.randrange(spec.vocab) for _ in range(prompt_len)]],
+            dtype=np.int32)
+        ctx = RequestContext(tenant=tenant, priority=spec.priority,
+                             deadline_s=spec.deadline_s)
+        return SyntheticRequest(seq=seq, method=method, tenant=tenant,
+                                context=ctx, prompt_len=prompt_len,
+                                max_new=max_new, tokens=tokens)
+
+
+__all__ = [
+    "LengthDist", "METHODS", "RpcProfile", "SyntheticRequest", "Workload",
+    "WorkloadSpec", "ZipfTenants",
+]

@@ -35,11 +35,14 @@ Key properties:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
 import logging
 import queue
 import threading
 import time
+from collections import deque
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -342,6 +345,67 @@ def resolved_spec(servable: Servable) -> ModelSpec:
 # ---------------------------------------------------------------------------
 
 
+class LoadTracker:
+    """In-flight gauge + recent-latency window for one serving process.
+
+    This is the load signal the hosted autoscaler consumes: ``inflight``
+    approximates instantaneous queue depth at the RPC layer (requests
+    admitted but not yet answered), the latency deque feeds p99. Bounded
+    window, lock-guarded, cheap enough to wrap every RPC."""
+
+    def __init__(self, window: int = 512):
+        self._lock = threading.Lock()
+        self._latencies: deque = deque(maxlen=window)
+        self._inflight = 0
+        self._total = 0
+
+    def begin(self) -> float:
+        with self._lock:
+            self._inflight += 1
+            self._total += 1
+        return time.monotonic()
+
+    def end(self, t0: float) -> None:
+        dt = time.monotonic() - t0
+        with self._lock:
+            self._inflight -= 1
+            self._latencies.append(dt)
+
+    @contextlib.contextmanager
+    def track(self):
+        t0 = self.begin()
+        try:
+            yield
+        finally:
+            self.end(t0)
+
+    def latency_samples(self) -> List[float]:
+        with self._lock:
+            return list(self._latencies)
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            lat = list(self._latencies)
+            inflight = self._inflight
+            total = self._total
+        out: Dict[str, float] = {"inflight": float(inflight),
+                                 "requests_total": float(total)}
+        if lat:
+            arr = np.sort(np.asarray(lat)) * 1e3
+            out["p50_ms"] = float(arr[int(0.50 * (len(arr) - 1))])
+            out["p99_ms"] = float(arr[int(0.99 * (len(arr) - 1))])
+        return out
+
+
+def _tracked(fn):
+    """Wrap an RPC entry point in ``self.load.track()``."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self.load.track():
+            return fn(self, *args, **kwargs)
+    return wrapper
+
+
 class PredictionService:
     """The inference core every entry point routes through.
 
@@ -386,6 +450,7 @@ class PredictionService:
         self.decode_engine_prefill_chunk = decode_engine_prefill_chunk
         self._engines: Dict[str, DecodeScheduler] = {}
         self._engines_lock = threading.Lock()
+        self.load = LoadTracker()
         self._closed = False
 
     # -- handle / error mapping -------------------------------------------
@@ -414,6 +479,7 @@ class PredictionService:
         return ctx, ctx.deadline_from(time.monotonic())
 
     # -- generic escape hatch ----------------------------------------------
+    @_tracked
     def call(self, spec: ModelSpec, method: str, request: Any,
              context: Optional[RequestContext] = None) -> Any:
         """One handle hold around an arbitrary servable method — for
@@ -437,6 +503,7 @@ class PredictionService:
                 raise Unavailable(str(exc)) from exc
 
     # -- Predict -----------------------------------------------------------
+    @_tracked
     def predict(self, req: PredictRequest) -> PredictResponse:
         # Resolve the spec (label/default -> concrete version) now, so
         # the batch queue is per-(servable, version) and a label flip
@@ -494,6 +561,7 @@ class PredictionService:
         return sess
 
     # -- Classify / Regress / MultiInference -------------------------------
+    @_tracked
     def classify(self, req: ClassifyRequest) -> ClassifyResponse:
         ctx, _ = self._enter(req.context)
         with self._acquire(req.model_spec) as s:
@@ -503,6 +571,7 @@ class PredictionService:
             return ClassifyResponse(resolved_spec(s),
                                     out["classes"], out["scores"])
 
+    @_tracked
     def regress(self, req: RegressRequest) -> RegressResponse:
         ctx, _ = self._enter(req.context)
         with self._acquire(req.model_spec) as s:
@@ -511,6 +580,7 @@ class PredictionService:
             self.tenancy.account_served(ctx.tenant)
             return RegressResponse(resolved_spec(s), out["value"])
 
+    @_tracked
     def multi_inference(self,
                         req: MultiInferenceRequest) -> MultiInferenceResponse:
         if not req.tasks:
@@ -560,15 +630,21 @@ class PredictionService:
             raise InvalidArgument("stream=True requires token prompts")
         if req.max_new < 1:
             raise InvalidArgument("max_new must be >= 1")
-        ctx, deadline_t = self._enter(req.context)
-        handle = self._acquire(req.model_spec)
+        load_t0 = self.load.begin()
+        load_owned = True
+        handle = None
         try:
+            ctx, deadline_t = self._enter(req.context)
+            handle = self._acquire(req.model_spec)
             s = handle.servable
             self._maybe_attach_engine(req.model_spec.name, s, req)
             if req.stream:
                 stream = self._generate_stream(handle, s, req, ctx,
-                                               deadline_t)
-                handle = None     # ownership moved to the stream worker
+                                               deadline_t, load_t0)
+                # ownership of the handle AND the load slot moved to the
+                # stream worker — inflight stays up until it finishes.
+                handle = None
+                load_owned = False
                 return stream
             with tenant_scope(ctx.tenant):
                 out = s.call("generate", {
@@ -578,6 +654,11 @@ class PredictionService:
                     "priority": ctx.priority, "deadline_t": deadline_t})
             self.tenancy.account_served(ctx.tenant)
             return GenerateResponse(resolved_spec(s), out)
+        except ServingError:
+            # Already typed (e.g. _enter's ResourceExhausted, which also
+            # subclasses RuntimeError) — must not fall through to the
+            # RuntimeError->Unavailable fallback below.
+            raise
         except QuotaExceededError as exc:
             raise ResourceExhausted(str(exc)) from exc
         except DeadlineExceededError as exc:
@@ -589,10 +670,13 @@ class PredictionService:
         finally:
             if handle is not None:
                 handle.release()
+            if load_owned:
+                self.load.end(load_t0)
 
     def _generate_stream(self, handle: ServableHandle, s: Servable,
                          req: GenerateRequest, ctx: RequestContext,
-                         deadline_t: Optional[float]) -> "TokenStream":
+                         deadline_t: Optional[float],
+                         load_t0: float) -> "TokenStream":
         tokens = np.asarray(req.tokens, np.int32)
         if tokens.ndim == 2 and tokens.shape[0] == 1:
             tokens = tokens[0]
@@ -630,6 +714,7 @@ class PredictionService:
                 q.put(("err", exc, None))
             finally:
                 handle.release()
+                self.load.end(load_t0)
 
         threading.Thread(target=worker, daemon=True,
                          name="generate-stream").start()
@@ -699,6 +784,27 @@ class PredictionService:
             eng.start()
             self._engines[key] = eng
             s.decode_engine = eng
+
+    # -- load signal --------------------------------------------------------
+    def load_stats(self) -> Dict[str, float]:
+        """Autoscaling signal for this process: RPC-layer inflight +
+        latency percentiles, plus decode-engine queue/slot occupancy.
+        ``queue_depth`` is the headline number — admitted-but-unanswered
+        RPCs plus generate requests parked in engine admission queues."""
+        stats = self.load.snapshot()
+        queued = active = 0
+        with self._engines_lock:
+            engines = list(self._engines.values())
+        for eng in engines:
+            queued += eng.queued()
+            active += eng.active_slots()
+        stats["engine_queued"] = float(queued)
+        stats["engine_active"] = float(active)
+        # Engine-queued generates are still inflight at the RPC layer
+        # (their threads block in s.call), so inflight alone IS the
+        # admitted-but-unanswered depth — don't double count.
+        stats["queue_depth"] = stats["inflight"]
+        return stats
 
     # -- lifecycle ---------------------------------------------------------
     def evict_version(self, key: str) -> None:

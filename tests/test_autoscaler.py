@@ -1,0 +1,243 @@
+"""Autoscaler control loop: want-replicas math, multi-signal triggers,
+cooldown + hysteresis damping, bounded decision history, and the timer
+loop — against fake jobs with an injected clock, so every test is
+deterministic and instant."""
+import time
+
+import pytest
+
+from repro.hosted import Autoscaler, AutoscalerConfig, ScaleDecision
+
+
+class FakeClock:
+    def __init__(self, t=1000.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+class FakeJob:
+    """Just enough ServingJob surface for the control loop."""
+
+    def __init__(self, n=1, min_replicas=1, max_replicas=8,
+                 signals=None):
+        self.n = n
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.pending_requests = 0
+        self.signals = signals          # dict | None (no load_signals)
+        self.scale_calls = []
+
+    def take_request_count(self):
+        n, self.pending_requests = self.pending_requests, 0
+        return n
+
+    def num_replicas(self):
+        return self.n
+
+    def scale_to(self, n):
+        n = max(self.min_replicas, min(self.max_replicas, n))
+        self.scale_calls.append(n)
+        self.n = n
+
+    def load_signals(self):
+        if self.signals is None:
+            raise AssertionError("signals not configured")
+        return dict(self.signals)
+
+
+def make(job, clock=None, **cfg_kwargs):
+    cfg = AutoscalerConfig(**cfg_kwargs)
+    return Autoscaler({"j": job}, cfg,
+                      clock=clock or FakeClock())
+
+
+def offer(asc, job, clock, qps, dt=1.0):
+    """One tick with ``qps`` offered over ``dt`` seconds."""
+    clock.advance(dt)
+    job.pending_requests = int(qps * dt)
+    return asc.tick()["j"]
+
+
+class TestWantReplicasMath:
+    def test_scale_up_converges_on_want(self):
+        clock, job = FakeClock(), FakeJob(n=1)
+        asc = make(job, clock, target_qps_per_replica=100, max_step=2)
+        # 500 qps / 100 target => want 5, capped at +2 per tick
+        assert offer(asc, job, clock, 500) == 3
+        assert offer(asc, job, clock, 500) == 5
+        assert offer(asc, job, clock, 500) == 5     # converged
+        assert job.scale_calls == [3, 5]
+
+    def test_up_threshold_gate(self):
+        clock, job = FakeClock(), FakeJob(n=2)
+        asc = make(job, clock, target_qps_per_replica=100,
+                   scale_up_threshold=1.2)
+        assert offer(asc, job, clock, 230) == 2     # 115/replica < 120%
+        assert offer(asc, job, clock, 250) == 3     # 125/replica > 120%
+
+    def test_scale_down_respects_min_replicas(self):
+        clock, job = FakeClock(), FakeJob(n=4, min_replicas=2)
+        asc = make(job, clock, target_qps_per_replica=100, max_step=4)
+        assert offer(asc, job, clock, 0) == 2
+        assert offer(asc, job, clock, 0) == 2       # floor holds
+        assert job.scale_calls == [2]
+
+    def test_scale_down_sized_by_qps(self):
+        clock, job = FakeClock(), FakeJob(n=6)
+        asc = make(job, clock, target_qps_per_replica=100, max_step=8)
+        # 310 qps on 6 replicas is cold (51/replica > 50%? no: 51.6 > 50
+        # of target => NOT cold); use 240 => 40/replica, want int(2.4)=2
+        assert offer(asc, job, clock, 240) == 2
+
+    def test_max_replicas_cap_via_job_clamp(self):
+        clock, job = FakeClock(), FakeJob(n=1, max_replicas=3)
+        asc = make(job, clock, target_qps_per_replica=10, max_step=8)
+        assert offer(asc, job, clock, 500) == 3
+
+
+class TestMultiSignal:
+    def test_queue_depth_triggers_scale_up_without_qps(self):
+        clock = FakeClock()
+        job = FakeJob(n=1, signals={"queue_depth": 20.0, "p99_ms": None,
+                                    "replicas": 1})
+        asc = make(job, clock, target_qps_per_replica=1000,
+                   target_queue_per_replica=4, max_step=8)
+        # qps signal is idle; 20 queued / 4 target => want 5
+        assert offer(asc, job, clock, 0) == 5
+        (d,) = asc.decisions
+        assert isinstance(d, ScaleDecision)
+        assert "queue" in d.reason and d.queue_depth == 20.0
+
+    def test_queue_depth_vetoes_scale_down(self):
+        clock = FakeClock()
+        job = FakeJob(n=3, signals={"queue_depth": 9.0, "p99_ms": None,
+                                    "replicas": 3})
+        asc = make(job, clock, target_qps_per_replica=100,
+                   target_queue_per_replica=4)
+        # qps cold, but 3/replica queued >= 50% of target: hold
+        assert offer(asc, job, clock, 0) == 3
+        job.signals["queue_depth"] = 0.0
+        assert offer(asc, job, clock, 0) == 1
+
+    def test_p99_slo_breach_steps_up(self):
+        clock = FakeClock()
+        job = FakeJob(n=2, signals={"queue_depth": 0.0, "p99_ms": 350.0,
+                                    "replicas": 2})
+        asc = make(job, clock, target_qps_per_replica=1000,
+                   p99_slo_ms=200.0)
+        assert offer(asc, job, clock, 0) == 3       # +1, no capacity model
+        (d,) = asc.decisions
+        assert "p99" in d.reason and d.p99_ms == 350.0
+        # back under the SLO: latency no longer vetoes the scale-down
+        job.signals["p99_ms"] = 50.0
+        assert offer(asc, job, clock, 0) == 1
+
+    def test_jobs_without_signals_still_scale_on_qps(self):
+        clock, job = FakeClock(), FakeJob(n=1, signals=None)
+        asc = make(job, clock, target_qps_per_replica=100,
+                   target_queue_per_replica=4)
+        job.load_signals = None         # simulate a foreign job object
+        assert offer(asc, job, clock, 500) == 3
+
+
+class TestDamping:
+    def test_cooldown_blocks_down_after_up(self):
+        clock, job = FakeClock(), FakeJob(n=1)
+        asc = make(job, clock, target_qps_per_replica=100,
+                   cooldown_s=10.0)
+        assert offer(asc, job, clock, 500) == 3     # up at t+1
+        assert offer(asc, job, clock, 0, dt=5.0) == 3   # inside cooldown
+        assert offer(asc, job, clock, 0, dt=6.0) == 1   # past it
+        assert job.scale_calls == [3, 1]
+
+    def test_hysteresis_needs_consecutive_cold_ticks(self):
+        clock, job = FakeClock(), FakeJob(n=4)
+        asc = make(job, clock, target_qps_per_replica=100,
+                   scale_down_stable_ticks=3)
+        assert offer(asc, job, clock, 0) == 4       # cold tick 1
+        assert offer(asc, job, clock, 0) == 4       # cold tick 2
+        assert offer(asc, job, clock, 600) == 6     # hot: resets streak
+        assert offer(asc, job, clock, 0) == 6
+        assert offer(asc, job, clock, 0) == 6
+        assert offer(asc, job, clock, 0) == 4       # third in a row
+        assert job.scale_calls == [6, 4]
+
+    def test_flapping_trace_does_not_oscillate(self):
+        """Alternating hot/cold ticks with damping configured must only
+        ever scale up — the classic flapping pathology."""
+        clock, job = FakeClock(), FakeJob(n=1)
+        asc = make(job, clock, target_qps_per_replica=100,
+                   cooldown_s=5.0, scale_down_stable_ticks=2)
+        for _ in range(10):
+            offer(asc, job, clock, 450)
+            offer(asc, job, clock, 0)
+        assert all(d.new_n > d.old_n for d in asc.decisions)
+        # ...and a sustained cold stretch does eventually deflate
+        for _ in range(8):
+            offer(asc, job, clock, 0)
+        assert job.n == 1
+
+    def test_undamped_trace_oscillates(self):
+        """Sanity check that the flapping test is meaningful: without
+        damping, the same trace thrashes down and up."""
+        clock, job = FakeClock(), FakeJob(n=1)
+        asc = make(job, clock, target_qps_per_replica=100)
+        for _ in range(4):
+            offer(asc, job, clock, 450)
+            offer(asc, job, clock, 0)
+        assert any(d.new_n < d.old_n for d in asc.decisions)
+
+
+class TestHousekeeping:
+    def test_decisions_deque_is_bounded(self):
+        clock, job = FakeClock(), FakeJob(n=1, max_replicas=100)
+        asc = make(job, clock, target_qps_per_replica=1,
+                   max_step=1, max_decisions=4)
+        for i in range(12):     # alternate to force a decision per tick
+            offer(asc, job, clock, 1000 if i % 2 == 0 else 0)
+        assert len(asc.decisions) == 4
+        assert asc.decisions.maxlen == 4
+
+    def test_zero_dt_guard(self):
+        clock, job = FakeClock(), FakeJob(n=1)
+        asc = make(job, clock, target_qps_per_replica=100)
+        job.pending_requests = 10
+        asc.tick()      # dt clamps to 1e-3; must not divide by zero
+        assert job.n >= 1
+
+    def test_timer_loop_drives_ticks(self):
+        job = FakeJob(n=1)
+        asc = Autoscaler({"j": job},
+                         AutoscalerConfig(target_qps_per_replica=10))
+        job.pending_requests = 1000
+        asc.start(interval_s=0.02)
+        assert asc.start(interval_s=0.02) is asc    # idempotent
+        deadline = time.monotonic() + 5.0
+        while not job.scale_calls and time.monotonic() < deadline:
+            time.sleep(0.01)
+        asc.stop()
+        assert job.scale_calls and job.scale_calls[0] > 1
+        asc.stop()                                  # idempotent
+
+    def test_tick_survives_bad_signal_probe(self):
+        clock = FakeClock()
+        job = FakeJob(n=1, signals=None)            # load_signals raises
+        asc = make(job, clock, target_qps_per_replica=100,
+                   target_queue_per_replica=4)
+        assert offer(asc, job, clock, 500) == 3     # qps signal still acts
+
+    def test_back_compat_single_tick_defaults(self):
+        """Default config keeps the original hand-driven semantics: one
+        cold tick scales down immediately, no cooldown."""
+        cfg = AutoscalerConfig()
+        assert cfg.cooldown_s == 0.0
+        assert cfg.scale_down_stable_ticks == 1
+        clock, job = FakeClock(), FakeJob(n=1)
+        asc = make(job, clock, target_qps_per_replica=100)
+        assert offer(asc, job, clock, 500) == 3
+        assert offer(asc, job, clock, 0) == 1       # immediate down
