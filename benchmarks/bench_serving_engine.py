@@ -36,7 +36,7 @@ def main(report):
            f"{n*4/dt:,.0f} ex/s through manager+batching+jit")
 
     t0 = time.perf_counter()
-    out = srv.generate("clf", tokens=batch["tokens"], max_new=16)
+    srv.generate("clf", tokens=batch["tokens"], max_new=16)
     dt = time.perf_counter() - t0
     report("serve_generate_16tok", dt * 1e6,
            f"{16*4/dt:,.0f} tok/s (batch 4, incl. prefill)")

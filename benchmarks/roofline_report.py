@@ -12,7 +12,6 @@ from typing import Dict, List
 
 
 def load(path: str) -> List[Dict]:
-    recs = []
     seen = {}
     for line in open(path):
         r = json.loads(line)

@@ -14,7 +14,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.batching import BatchingOptions, SharedBatchScheduler
+from repro.batching import SharedBatchScheduler
 from repro.configs import get_config
 from repro.models import model as MD
 

@@ -1,0 +1,61 @@
+"""Concurrency discipline for the serving hot paths.
+
+The real TF-Serving compiles Clang thread-safety annotations
+(``GUARDED_BY``, ``EXCLUSIVE_LOCKS_REQUIRED``) into its C++ core; this
+package is the Python equivalent for this reproduction: a declaration
+convention that costs nothing at runtime, an AST checker that enforces
+it (`repro.analysis.guarded`), a static lock-order/deadlock pass
+(`repro.analysis.lockorder`), and an opt-in runtime validator
+(`repro.analysis.instrumented`) that watches real acquisition order
+during the test suite.
+
+Declaration convention
+----------------------
+
+1. Class-level ``GUARDED_BY`` map — attribute name -> lock attribute::
+
+       class DecodeScheduler:
+           GUARDED_BY = {"_queues": "_cond", "_slots": "_cond"}
+
+2. ``@locks_required("_lock")`` on methods that must only be called
+   with the lock already held (the ``*_locked`` helper idiom). The
+   checker treats the body as holding the lock AND verifies every
+   self-call site holds it.
+
+3. Inline comment on an ``__init__`` assignment (equivalent to an
+   entry in ``GUARDED_BY``)::
+
+       self._entries = []  # guarded-by: self._lock
+
+4. A deliberate lock-free access is documented, never silent::
+
+       snap = self._snapshot  # unguarded-ok: RCU read side
+
+   The reason is mandatory; an empty reason is itself an error.
+
+Run the checker: ``python -m repro.analysis check src``.
+"""
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+F = TypeVar("F", bound=Callable)
+
+__all__ = ["locks_required"]
+
+
+def locks_required(*locks: str) -> Callable[[F], F]:
+    """Declare that a method requires ``locks`` (attribute names on
+    ``self``, e.g. ``"_lock"``) to be held by the caller.
+
+    Zero-cost at runtime: it only records the names on the function
+    object for the static checker (and for humans reading a traceback).
+    """
+    if not locks or any(not isinstance(n, str) or not n for n in locks):
+        raise ValueError("locks_required needs one or more lock names")
+
+    def mark(fn: F) -> F:
+        fn.__locks_required__ = tuple(locks)
+        return fn
+
+    return mark

@@ -1,0 +1,93 @@
+"""``python -m repro.analysis`` — run the concurrency checkers.
+
+Commands:
+    check <paths...>   guarded-by + lock-order + clock-discipline
+                       checks over the given files/directories; exits
+                       non-zero on any diagnostic.
+    graph <paths...>   dump the static lock-acquisition graph (debug).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Tuple
+
+from repro.analysis import guarded, lockorder
+
+# Directories where bare time.time() is banned (deadlines/latency math
+# must use time.monotonic; justified wall stamps use # wall-clock-ok).
+_WALLCLOCK_DIRS = (os.sep + "serving" + os.sep,
+                   os.sep + "hosted" + os.sep)
+
+
+def _collect_files(paths: List[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs if d != "__pycache__"]
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".py"))
+        elif p.endswith(".py"):
+            out.append(p)
+    return sorted(set(out))
+
+
+def _read_all(files: List[str]) -> List[Tuple[str, str]]:
+    pairs = []
+    for path in files:
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                pairs.append((path, fh.read()))
+        except OSError as exc:
+            print(f"{path}: unreadable: {exc}", file=sys.stderr)
+    return pairs
+
+
+def run_check(paths: List[str], *, no_lockorder: bool = False) -> int:
+    pairs = _read_all(_collect_files(paths))
+    diags: List[guarded.Diagnostic] = []
+    for path, source in pairs:
+        wallclock = any(mark in path for mark in _WALLCLOCK_DIRS)
+        diags.extend(guarded.check_source(source, path,
+                                          wallclock=wallclock))
+    if not no_lockorder:
+        diags.extend(lockorder.check_lockorder(pairs))
+    for d in sorted(diags, key=lambda d: (d.path, d.line, d.code)):
+        print(d)
+    n_files = len(pairs)
+    if diags:
+        print(f"\n{len(diags)} diagnostic(s) in {n_files} file(s)",
+              file=sys.stderr)
+        return 1
+    print(f"ok: {n_files} file(s) clean")
+    return 0
+
+
+def run_graph(paths: List[str]) -> int:
+    graph = lockorder.build_graph(_read_all(_collect_files(paths)))
+    for (a, b), (path, line) in sorted(graph.edges.items()):
+        print(f"{a} -> {b}    # {path}:{line}")
+    print(f"{len(graph.edges)} edge(s)", file=sys.stderr)
+    return 0
+
+
+def main(argv: List[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m repro.analysis",
+                                     description=__doc__)
+    sub = parser.add_subparsers(dest="cmd", required=True)
+    p_check = sub.add_parser("check", help="run all static checks")
+    p_check.add_argument("paths", nargs="+")
+    p_check.add_argument("--no-lockorder", action="store_true",
+                         help="skip the lock-order cycle pass")
+    p_graph = sub.add_parser("graph", help="dump lock-acquisition graph")
+    p_graph.add_argument("paths", nargs="+")
+    args = parser.parse_args(argv)
+    if args.cmd == "check":
+        return run_check(args.paths, no_lockorder=args.no_lockorder)
+    return run_graph(args.paths)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

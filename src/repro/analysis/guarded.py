@@ -1,0 +1,350 @@
+"""AST lock-discipline checker (stdlib-only; no runtime cost).
+
+Models each class's locks from three declaration forms (see package
+docstring): the class-level ``GUARDED_BY`` map, ``@locks_required``
+decorators, and inline ``# guarded-by: self._lock`` comments on
+``__init__`` assignments. It then flags:
+
+- any read/write/del of a declared-guarded ``self.<attr>`` outside a
+  ``with self.<lock>:`` block or a ``locks_required`` method
+  (``unguarded-read`` / ``unguarded-write``),
+- any ``self.<method>()`` call to a ``locks_required`` method at a
+  point where the required locks are not all held
+  (``lock-required-call``),
+- ``# unguarded-ok`` / ``# wall-clock-ok`` suppressions with a missing
+  reason (``bad-suppression``) — a suppression documents a deliberate
+  choice, so the reason is mandatory,
+- bare ``time.time()`` calls when the wall-clock rule is enabled for
+  the file (``wall-clock``) — deadline/latency math must use
+  ``time.monotonic``; a justified wall-clock stamp carries
+  ``# wall-clock-ok: <reason>``.
+
+Soundness model (deliberately simple, tuned for this codebase):
+
+- ``__init__`` is exempt: the object is not yet shared.
+- ``with self._lock:`` adds ``_lock`` to the held set for the block;
+  any other context manager contributes nothing.
+- A nested ``def`` runs on an unknown thread later, so its body is
+  checked with an EMPTY held set; a ``lambda`` inherits the
+  enclosing held set (the codebase only uses lambdas synchronously).
+- Accesses through another object (``other._attr``) are not checked —
+  the convention is per-class, like C++ ``GUARDED_BY``.
+
+A suppression comment applies to findings on its own line, or — when
+it is a comment-only line — to the line directly below it.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+__all__ = ["Diagnostic", "check_source", "check_file"]
+
+_MARKER_RE = re.compile(
+    r"#\s*(guarded-by|unguarded-ok|wall-clock-ok)\s*:?\s*(.*)$")
+
+# Methods where the object cannot be shared with other threads yet
+# (or is being torn down by its last owner).
+_EXEMPT_METHODS = frozenset({"__init__", "__new__"})
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    path: str
+    line: int
+    code: str        # unguarded-read | unguarded-write | ...
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.code}] {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# comment markers
+
+
+class _Markers:
+    """Per-line annotation comments extracted with tokenize (robust
+    against '#' inside string literals)."""
+
+    def __init__(self, source: str):
+        self.guarded_by: Dict[int, str] = {}
+        self.suppress: Dict[int, str] = {}      # unguarded-ok reasons
+        self.wallclock_ok: Dict[int, str] = {}
+        self.bad: List[Tuple[int, str]] = []    # (line, marker kind)
+        comment_only: Dict[int, bool] = {}
+        try:
+            tokens = list(tokenize.generate_tokens(
+                io.StringIO(source).readline))
+        except (tokenize.TokenError, SyntaxError):  # checker never crashes
+            tokens = []
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            line = tok.start[0]
+            comment_only[line] = tok.line[:tok.start[1]].strip() == ""
+            m = _MARKER_RE.match(tok.string)
+            if not m:
+                continue
+            kind, arg = m.group(1), m.group(2).strip()
+            if kind == "guarded-by":
+                lock = arg
+                if lock.startswith("self."):
+                    lock = lock[len("self."):]
+                if not lock:
+                    self.bad.append((line, kind))
+                else:
+                    self.guarded_by[line] = lock
+            elif kind == "unguarded-ok":
+                if not arg:
+                    self.bad.append((line, kind))
+                self.suppress[line] = arg
+            elif kind == "wall-clock-ok":
+                if not arg:
+                    self.bad.append((line, kind))
+                self.wallclock_ok[line] = arg
+        self._comment_only = comment_only
+
+    def _lookup(self, table: Dict[int, str], line: int) -> Optional[str]:
+        if line in table:
+            return table[line]
+        # a standalone comment line annotates the line below it
+        if line - 1 in table and self._comment_only.get(line - 1):
+            return table[line - 1]
+        return None
+
+    def suppressed(self, line: int) -> Optional[str]:
+        return self._lookup(self.suppress, line)
+
+    def wallclock(self, line: int) -> Optional[str]:
+        return self._lookup(self.wallclock_ok, line)
+
+
+# ---------------------------------------------------------------------------
+# class models
+
+
+def _locks_required_of(fn: ast.AST) -> Tuple[str, ...]:
+    """Lock names from a ``@locks_required("_lock")`` decorator."""
+    if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return ()
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        name = dec.func
+        target = name.attr if isinstance(name, ast.Attribute) else \
+            name.id if isinstance(name, ast.Name) else None
+        if target != "locks_required":
+            continue
+        locks = []
+        for arg in dec.args:
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                locks.append(arg.value.removeprefix("self."))
+        return tuple(locks)
+    return ()
+
+
+class ClassModel:
+    def __init__(self, node: ast.ClassDef, markers: _Markers,
+                 path: str, diags: List[Diagnostic]):
+        self.name = node.name
+        self.node = node
+        self.guarded: Dict[str, str] = {}         # attr -> lock attr
+        self.required: Dict[str, Tuple[str, ...]] = {}  # method -> locks
+        for stmt in node.body:
+            if isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == "GUARDED_BY":
+                        self._load_guarded_by(stmt.value, path, diags)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                locks = _locks_required_of(stmt)
+                if locks:
+                    self.required[stmt.name] = locks
+                # inline '# guarded-by:' comments on self.<attr> = ...
+                for sub in ast.walk(stmt):
+                    if not isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                        continue
+                    lock = markers.guarded_by.get(sub.lineno)
+                    if lock is None:
+                        continue
+                    targets = sub.targets if isinstance(sub, ast.Assign) \
+                        else [sub.target]
+                    for tgt in targets:
+                        if (isinstance(tgt, ast.Attribute)
+                                and isinstance(tgt.value, ast.Name)
+                                and tgt.value.id == "self"):
+                            self.guarded[tgt.attr] = lock
+        self.locks = set(self.guarded.values())
+        for locks in self.required.values():
+            self.locks.update(locks)
+
+    def _load_guarded_by(self, value: ast.AST, path: str,
+                         diags: List[Diagnostic]) -> None:
+        if not isinstance(value, ast.Dict):
+            diags.append(Diagnostic(
+                path, value.lineno, "bad-declaration",
+                f"{self.name}.GUARDED_BY must be a literal dict of "
+                "str -> str"))
+            return
+        for k, v in zip(value.keys, value.values):
+            if (isinstance(k, ast.Constant) and isinstance(k.value, str)
+                    and isinstance(v, ast.Constant)
+                    and isinstance(v.value, str)):
+                self.guarded[k.value] = v.value.removeprefix("self.")
+            else:
+                diags.append(Diagnostic(
+                    path, value.lineno, "bad-declaration",
+                    f"{self.name}.GUARDED_BY entries must be string "
+                    "literals"))
+
+
+# ---------------------------------------------------------------------------
+# the checker
+
+
+class _MethodChecker:
+    def __init__(self, model: ClassModel, markers: _Markers, path: str,
+                 diags: List[Diagnostic]):
+        self.model = model
+        self.markers = markers
+        self.path = path
+        self.diags = diags
+
+    def check(self, fn: ast.AST, held: FrozenSet[str]) -> None:
+        for stmt in fn.body:
+            self._stmt(stmt, held)
+
+    # -- statements, tracking the held-lock set ----------------------
+    def _stmt(self, node: ast.AST, held: FrozenSet[str]) -> None:
+        if isinstance(node, ast.With):
+            inner = set(held)
+            for item in node.items:
+                ctx = item.context_expr
+                self._expr(ctx, held)
+                lock = self._self_attr(ctx)
+                if lock is not None and lock in self.model.locks:
+                    inner.add(lock)
+                if item.optional_vars is not None:
+                    self._expr(item.optional_vars, held)
+            for stmt in node.body:
+                self._stmt(stmt, frozenset(inner))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # deferred execution: assume no lock is held when it runs
+            self.check(node, frozenset())
+        elif isinstance(node, ast.ClassDef):
+            pass
+        else:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.stmt, ast.excepthandler,
+                                      getattr(ast, "match_case", ast.stmt))):
+                    self._stmt(child, held)
+                else:
+                    self._expr(child, held)
+
+    # -- expressions -------------------------------------------------
+    def _expr(self, node: ast.AST, held: FrozenSet[str]) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Attribute):
+                self._attr(sub, held)
+            elif isinstance(sub, ast.Call):
+                self._call(sub, held)
+            # NB: lambdas inherit `held` — ast.walk descends into them.
+
+    def _self_attr(self, node: ast.AST) -> Optional[str]:
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"):
+            return node.attr
+        return None
+
+    def _attr(self, node: ast.Attribute, held: FrozenSet[str]) -> None:
+        attr = self._self_attr(node)
+        if attr is None:
+            return
+        lock = self.model.guarded.get(attr)
+        if lock is None or lock in held:
+            return
+        if self.markers.suppressed(node.lineno) is not None:
+            return
+        kind = "unguarded-read" if isinstance(node.ctx, ast.Load) \
+            else "unguarded-write"
+        self.diags.append(Diagnostic(
+            self.path, node.lineno, kind,
+            f"{self.model.name}.{attr} requires self.{lock} "
+            f"(held: {sorted(held) or 'none'})"))
+
+    def _call(self, node: ast.Call, held: FrozenSet[str]) -> None:
+        meth = self._self_attr(node.func)
+        if meth is None:
+            return
+        required = self.model.required.get(meth)
+        if not required:
+            return
+        missing = [lk for lk in required if lk not in held]
+        if not missing:
+            return
+        if self.markers.suppressed(node.lineno) is not None:
+            return
+        self.diags.append(Diagnostic(
+            self.path, node.lineno, "lock-required-call",
+            f"call to {self.model.name}.{meth} requires "
+            f"{', '.join('self.' + lk for lk in missing)}"))
+
+
+def _check_wallclock(tree: ast.Module, markers: _Markers, path: str,
+                     diags: List[Diagnostic]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if (isinstance(fn, ast.Attribute) and fn.attr == "time"
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id == "time"):
+            if markers.wallclock(node.lineno) is None:
+                diags.append(Diagnostic(
+                    path, node.lineno, "wall-clock",
+                    "bare time.time(); use time.monotonic() for "
+                    "deadline/latency math, or justify with "
+                    "'# wall-clock-ok: <reason>'"))
+
+
+def check_source(source: str, path: str = "<string>", *,
+                 wallclock: bool = False) -> List[Diagnostic]:
+    """Check one module's source; returns diagnostics (empty = clean)."""
+    diags: List[Diagnostic] = []
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [Diagnostic(path, exc.lineno or 0, "syntax-error",
+                           str(exc.msg))]
+    markers = _Markers(source)
+    for line, kind in markers.bad:
+        diags.append(Diagnostic(
+            path, line, "bad-suppression",
+            f"'# {kind}:' requires a reason"))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        model = ClassModel(node, markers, path, diags)
+        if not model.guarded and not model.required:
+            continue
+        checker = _MethodChecker(model, markers, path, diags)
+        for stmt in node.body:
+            if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if stmt.name in _EXEMPT_METHODS:
+                continue
+            checker.check(stmt, frozenset(model.required.get(stmt.name, ())))
+    if wallclock:
+        _check_wallclock(tree, markers, path, diags)
+    diags.sort(key=lambda d: (d.path, d.line, d.code))
+    return diags
+
+
+def check_file(path: str, *, wallclock: bool = False) -> List[Diagnostic]:
+    with open(path, "r", encoding="utf-8") as fh:
+        return check_source(fh.read(), path, wallclock=wallclock)

@@ -1,0 +1,369 @@
+"""Opt-in runtime lock validator — a lightweight Python "TSan".
+
+``install()`` monkeypatches ``threading.Lock/RLock/Condition`` so that
+locks created *by repro code* (creation site filtered by caller module)
+become instrumented wrappers that
+
+- record, per thread, the order in which locks are acquired, feeding a
+  global (per lock *instance*) acquisition-order graph; acquiring B
+  while holding A when a B -> ... -> A path was ever observed raises
+  ``LockOrderViolation`` at acquire time — the ABBA pattern is caught
+  without needing the actual interleaving to deadlock;
+- measure hold times and flag holds longer than ``REPRO_LOCK_HOLD_S``
+  seconds (default 10; generous so CI never flakes on slow loads) with
+  ``HoldTimeViolation``;
+- keep ``Condition.wait`` honest: the lock is removed from the
+  holder's set for the duration of the wait and re-checked against the
+  order graph on re-acquisition.
+
+Every violation is also appended to a global registry
+(``violations()``) so inversions raised on daemon threads still fail
+the suite: ``tests/conftest.py`` asserts the registry is empty at
+session end when ``REPRO_LOCK_CHECK=1``.
+
+Locks created by the stdlib (queue, concurrent.futures, logging, ...)
+are left untouched — both for speed and because their ordering is not
+ours to police.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import sys
+import threading
+import time
+from typing import Dict, List, Optional, Set
+
+__all__ = [
+    "InstrumentedLock", "InstrumentedRLock", "InstrumentedCondition",
+    "LockOrderViolation", "HoldTimeViolation",
+    "install", "uninstall", "installed", "violations", "reset",
+]
+
+_real_lock = threading.Lock
+_real_rlock = threading.RLock
+_real_condition = threading.Condition
+
+_key_counter = itertools.count(1)
+
+# -- global acquisition-order graph (keyed by per-instance key) ------
+_graph_mu = _real_lock()
+_succ: Dict[int, Set[int]] = {}          # key -> keys acquired after it
+_names: Dict[int, str] = {}
+_violation_log: List[str] = []
+
+_tls = threading.local()
+
+
+class LockOrderViolation(RuntimeError):
+    """Observed lock acquisition order inverts a previously seen one."""
+
+
+class HoldTimeViolation(RuntimeError):
+    """A lock was held longer than REPRO_LOCK_HOLD_S seconds."""
+
+
+def _hold_limit() -> float:
+    try:
+        return float(os.environ.get("REPRO_LOCK_HOLD_S", "10"))
+    except ValueError:
+        return 10.0
+
+
+def violations() -> List[str]:
+    with _graph_mu:
+        return list(_violation_log)
+
+
+def reset() -> None:
+    """Clear the order graph and violation registry (tests only)."""
+    with _graph_mu:
+        _succ.clear()
+        _names.clear()
+        _violation_log.clear()
+
+
+def _held() -> list:
+    held = getattr(_tls, "held", None)
+    if held is None:
+        held = _tls.held = []
+    return held
+
+
+class _Held:
+    __slots__ = ("lock", "count", "t0")
+
+    def __init__(self, lock, count: int = 1):
+        self.lock = lock
+        self.count = count
+        self.t0 = time.monotonic()
+
+
+def _path_exists(src: int, dst: int) -> Optional[List[int]]:
+    """BFS under _graph_mu: a path src -> ... -> dst, if any."""
+    if src == dst:
+        return [src]
+    prev = {src: src}
+    frontier = [src]
+    while frontier:
+        nxt = []
+        for n in frontier:
+            for m in _succ.get(n, ()):
+                if m in prev:
+                    continue
+                prev[m] = n
+                if m == dst:
+                    path = [m]
+                    while path[-1] != src:
+                        path.append(prev[path[-1]])
+                    return path[::-1]
+                nxt.append(m)
+        frontier = nxt
+    return None
+
+
+def _record(msg: str) -> None:
+    with _graph_mu:
+        _violation_log.append(msg)
+
+
+def _note_acquire(lock: "_InstrumentedBase") -> None:
+    held = _held()
+    for entry in held:
+        if entry.lock is lock:           # re-entrant re-acquire
+            entry.count += 1
+            return
+    _check_order(lock, held)
+    held.append(_Held(lock))
+
+
+def _check_order(lock: "_InstrumentedBase", held: list) -> None:
+    if not held:
+        return
+    with _graph_mu:
+        for entry in held:
+            a, b = entry.lock._key, lock._key
+            inv = _path_exists(b, a)
+            if inv is not None:
+                chain = " -> ".join(_names.get(k, str(k)) for k in inv)
+                msg = (f"lock-order inversion: acquiring {_names[b]} "
+                       f"while holding {_names[a]}, but the order "
+                       f"{chain} was observed earlier")
+                _violation_log.append(msg)
+                raise LockOrderViolation(msg)
+            _succ.setdefault(a, set()).add(b)
+            _succ.setdefault(b, set())
+
+
+def _note_release(lock: "_InstrumentedBase") -> None:
+    held = _held()
+    for i in range(len(held) - 1, -1, -1):
+        entry = held[i]
+        if entry.lock is not lock:
+            continue
+        entry.count -= 1
+        if entry.count > 0:
+            return
+        del held[i]
+        dt = time.monotonic() - entry.t0
+        limit = _hold_limit()
+        if dt > limit:
+            msg = (f"hold-time violation: {lock.name} held for "
+                   f"{dt:.2f}s (limit {limit:.2f}s)")
+            _record(msg)
+            raise HoldTimeViolation(msg)
+        return
+    # releasing a lock this thread never noted (e.g. acquired before
+    # install()): let the raw primitive decide whether that's legal.
+
+
+def _suspend(lock: "_InstrumentedBase") -> int:
+    """Drop the lock from this thread's held set (Condition.wait is
+    about to release it in full, whatever the recursion count)."""
+    held = _held()
+    for i in range(len(held) - 1, -1, -1):
+        if held[i].lock is lock:
+            count = held[i].count
+            del held[i]
+            return count
+    raise RuntimeError(f"wait() on {lock.name} which is not held")
+
+
+def _resume(lock: "_InstrumentedBase", count: int) -> None:
+    """Re-note the lock after Condition.wait re-acquired it; the
+    re-acquisition is order-checked like any acquire (waiting while
+    holding another lock, then waking, is a real B-after-A edge)."""
+    held = _held()
+    try:
+        _check_order(lock, held)
+    finally:
+        entry = _Held(lock, count)
+        held.append(entry)
+
+
+class _InstrumentedBase:
+    _raw_factory = staticmethod(_real_lock)
+    _reentrant = False
+
+    def __init__(self):
+        self._raw = self._raw_factory()
+        self._key = next(_key_counter)
+        try:
+            frame = sys._getframe(2)
+            site = (f"{frame.f_globals.get('__name__', '?')}:"
+                    f"{frame.f_lineno}")
+        except ValueError:
+            site = "?"
+        self.name = f"{site}#{self._key}"
+        with _graph_mu:
+            _names[self._key] = self.name
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        if not self._reentrant and \
+                any(e.lock is self for e in _held()):
+            msg = (f"self-deadlock: re-acquiring non-reentrant "
+                   f"{self.name} on the same thread")
+            _record(msg)
+            raise LockOrderViolation(msg)
+        ok = self._raw.acquire(blocking, timeout)
+        if ok:
+            _note_acquire(self)
+        return ok
+
+    def release(self) -> None:
+        try:
+            _note_release(self)
+        finally:
+            self._raw.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._raw.locked()
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name}>"
+
+
+class InstrumentedLock(_InstrumentedBase):
+    _raw_factory = staticmethod(_real_lock)
+
+
+class InstrumentedRLock(_InstrumentedBase):
+    _raw_factory = staticmethod(_real_rlock)
+    _reentrant = True
+
+    def locked(self) -> bool:  # raw RLock has no .locked() pre-3.12
+        fn = getattr(self._raw, "locked", None)
+        return fn() if fn is not None else False
+
+
+class InstrumentedCondition:
+    """Condition over an instrumented lock. The real
+    ``threading.Condition`` drives the *raw* primitive (so wait/notify
+    semantics are untouched); bookkeeping wraps around it."""
+
+    def __init__(self, lock=None):
+        if lock is None:
+            lock = InstrumentedRLock()
+        elif not isinstance(lock, _InstrumentedBase):
+            wrapped = InstrumentedRLock.__new__(InstrumentedRLock)
+            wrapped._raw = lock
+            wrapped._key = next(_key_counter)
+            wrapped.name = f"wrapped-raw#{wrapped._key}"
+            with _graph_mu:
+                _names[wrapped._key] = wrapped.name
+            lock = wrapped
+        self._ilock = lock
+        self._cond = _real_condition(lock._raw)
+        self.name = lock.name
+
+    def acquire(self, *args, **kwargs) -> bool:
+        return self._ilock.acquire(*args, **kwargs)
+
+    def release(self) -> None:
+        self._ilock.release()
+
+    def __enter__(self):
+        self._ilock.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._ilock.release()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        count = _suspend(self._ilock)
+        try:
+            return self._cond.wait(timeout)
+        finally:
+            _resume(self._ilock, count)
+
+    def wait_for(self, predicate, timeout: Optional[float] = None):
+        end = None if timeout is None else time.monotonic() + timeout
+        result = predicate()
+        while not result:
+            remaining = None if end is None else end - time.monotonic()
+            if remaining is not None and remaining <= 0:
+                break
+            self.wait(remaining)
+            result = predicate()
+        return result
+
+    def notify(self, n: int = 1) -> None:
+        self._cond.notify(n)
+
+    def notify_all(self) -> None:
+        self._cond.notify_all()
+
+
+# ---------------------------------------------------------------------------
+# installation
+
+_installed = False
+
+
+def _repro_caller() -> bool:
+    mod = sys._getframe(2).f_globals.get("__name__", "")
+    return mod == "repro" or mod.startswith("repro.")
+
+
+def _lock_factory():
+    return InstrumentedLock() if _repro_caller() else _real_lock()
+
+
+def _rlock_factory():
+    return InstrumentedRLock() if _repro_caller() else _real_rlock()
+
+
+def _condition_factory(lock=None):
+    if _repro_caller() or isinstance(lock, _InstrumentedBase):
+        return InstrumentedCondition(lock)
+    return _real_condition(lock)
+
+
+def install() -> None:
+    """Route repro-created locks through the instrumented wrappers."""
+    global _installed
+    if _installed:
+        return
+    threading.Lock = _lock_factory
+    threading.RLock = _rlock_factory
+    threading.Condition = _condition_factory
+    _installed = True
+
+
+def uninstall() -> None:
+    global _installed
+    threading.Lock = _real_lock
+    threading.RLock = _real_rlock
+    threading.Condition = _real_condition
+    _installed = False
+
+
+def installed() -> bool:
+    return _installed

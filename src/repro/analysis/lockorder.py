@@ -1,0 +1,378 @@
+"""Static lock-order (deadlock) analysis.
+
+Builds a lock-acquisition graph over every class in the checked files:
+a node is ``ClassName._lockattr``; an edge A -> B means some code path
+acquires B while holding A. Edges come from
+
+- a ``with self._b:`` nested (syntactically) inside ``with self._a:``,
+- a ``self.method()`` call made while holding A, where ``method``
+  (transitively, via a fixpoint over self-calls) acquires B,
+- a ``self.attr.method()`` call while holding A, where ``attr``'s
+  class is known (from an ``__init__`` parameter annotation, a direct
+  ``self.attr = ClassName(...)`` construction, or a class-body
+  annotation) and the callee transitively acquires B.
+
+A cycle in the graph is a potential deadlock and fails the check.
+Self-edges are reported only for plain ``threading.Lock`` attributes
+(re-entering an RLock/Condition is legal; re-entering a Lock is a
+guaranteed deadlock).
+
+Aliases are resolved: ``self._idle = threading.Condition(self._mutex)``
+makes ``_idle`` the same node as ``_mutex``.
+
+Known limitations (conservative by omission, not commission): calls
+through callbacks/getattr and locks reached through untyped attributes
+contribute no edges, and lock identity is per-class, not per-instance
+— the runtime validator (`repro.analysis.instrumented`) covers those.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.guarded import Diagnostic, _locks_required_of
+
+__all__ = ["build_graph", "find_cycles", "check_lockorder", "LockGraph"]
+
+_LOCK_CTORS = {"Lock": "lock", "RLock": "rlock", "Condition": "condition"}
+
+
+def _called_name(fn: ast.AST) -> Optional[str]:
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _annotation_class(node: Optional[ast.AST]) -> Optional[str]:
+    """Bare class name from an annotation: ``X``, ``mod.X``,
+    ``Optional[X]``, or the string form ``"X"``."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value.split(".")[-1].strip("[]\"' ")
+    if isinstance(node, ast.Subscript):  # Optional[X] / "Optional[X]"
+        val = node.value
+        name = val.attr if isinstance(val, ast.Attribute) else \
+            val.id if isinstance(val, ast.Name) else None
+        if name in ("Optional", "Union"):
+            inner = node.slice
+            if isinstance(inner, ast.Tuple):
+                for elt in inner.elts:
+                    cls = _annotation_class(elt)
+                    if cls is not None and cls != "None":
+                        return cls
+                return None
+            return _annotation_class(inner)
+    return None
+
+
+@dataclass
+class _Method:
+    required: Tuple[str, ...] = ()
+    # direct with-acquisitions: (lock, line, held-before tuple)
+    acquires: List[Tuple[str, int, Tuple[str, ...]]] = field(
+        default_factory=list)
+    # calls: (held tuple, callee class or None for self, name, line)
+    calls: List[Tuple[Tuple[str, ...], Optional[str], str, int]] = field(
+        default_factory=list)
+
+
+@dataclass
+class _Class:
+    name: str
+    path: str
+    locks: Set[str] = field(default_factory=set)
+    kinds: Dict[str, str] = field(default_factory=dict)   # attr -> kind
+    alias: Dict[str, str] = field(default_factory=dict)   # cond -> base lock
+    attr_types: Dict[str, str] = field(default_factory=dict)
+    methods: Dict[str, _Method] = field(default_factory=dict)
+
+    def canon(self, lock: str) -> str:
+        seen = set()
+        while lock in self.alias and lock not in seen:
+            seen.add(lock)
+            lock = self.alias[lock]
+        return lock
+
+    def node(self, lock: str) -> str:
+        return f"{self.name}.{self.canon(lock)}"
+
+
+@dataclass
+class LockGraph:
+    classes: Dict[str, _Class]
+    # edge (nodeA, nodeB) -> (path, line) of first witness
+    edges: Dict[Tuple[str, str], Tuple[str, int]]
+    kinds: Dict[str, str]  # node -> lock kind
+
+    def successors(self, node: str) -> List[str]:
+        return [b for (a, b) in self.edges if a == node]
+
+
+# ---------------------------------------------------------------------------
+# per-class extraction
+
+
+def _collect_class(node: ast.ClassDef, path: str) -> _Class:
+    cls = _Class(node.name, path)
+    # pass 1: declarations (locks, kinds, aliases, attribute types)
+    for stmt in node.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                          ast.Name):
+            typ = _annotation_class(stmt.annotation)
+            if typ:
+                cls.attr_types[stmt.target.id] = typ
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "GUARDED_BY" \
+                        and isinstance(stmt.value, ast.Dict):
+                    for v in stmt.value.values:
+                        if isinstance(v, ast.Constant) \
+                                and isinstance(v.value, str):
+                            cls.locks.add(v.value.removeprefix("self."))
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            cls.locks.update(_locks_required_of(stmt))
+            if stmt.name == "__init__":
+                _scan_init(cls, stmt)
+    # pass 2: method bodies (acquisitions and calls)
+    for stmt in node.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _scan_method(cls, stmt, _locks_required_of(stmt))
+    return cls
+
+
+def _scan_init(cls: _Class, fn: ast.FunctionDef) -> None:
+    ann: Dict[str, str] = {}
+    args = fn.args
+    for a in (list(args.posonlyargs) + list(args.args)
+              + list(args.kwonlyargs)):
+        typ = _annotation_class(a.annotation)
+        if typ:
+            ann[a.arg] = typ
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.AnnAssign):
+            attr = _self_attr(sub.target)
+            typ = _annotation_class(sub.annotation)
+            if attr is not None and typ:
+                cls.attr_types.setdefault(attr, typ)
+            continue
+        if not isinstance(sub, ast.Assign):
+            continue
+        for tgt in sub.targets:
+            attr = _self_attr(tgt)
+            if attr is None:
+                continue
+            val = sub.value
+            if isinstance(val, ast.Call):
+                name = _called_name(val.func)
+                if name in _LOCK_CTORS:
+                    cls.locks.add(attr)
+                    cls.kinds[attr] = _LOCK_CTORS[name]
+                    if name == "Condition" and val.args:
+                        base = _self_attr(val.args[0])
+                        if base is not None:
+                            cls.alias[attr] = base
+                elif name is not None and name[:1].isupper():
+                    cls.attr_types.setdefault(attr, name)
+            elif isinstance(val, ast.Name) and val.id in ann:
+                cls.attr_types.setdefault(attr, ann[val.id])
+
+
+def _scan_method(cls: _Class, fn: ast.AST,
+                 required: Tuple[str, ...]) -> None:
+    meth = cls.methods.setdefault(fn.name, _Method())
+    meth.required = required
+
+    def walk_stmt(node: ast.AST, held: Tuple[str, ...]) -> None:
+        if isinstance(node, ast.With):
+            inner = list(held)
+            for item in node.items:
+                scan_expr(item.context_expr, tuple(inner))
+                lock = _self_attr(item.context_expr)
+                if lock is not None and (lock in cls.locks
+                                         or lock in cls.kinds):
+                    meth.acquires.append((lock, node.lineno, tuple(inner)))
+                    if lock not in inner:
+                        inner.append(lock)
+            for stmt in node.body:
+                walk_stmt(stmt, tuple(inner))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            # nested defs run later on unknown threads: no held locks,
+            # and their acquisitions still register (held = ()).
+            for stmt in node.body:
+                walk_stmt(stmt, ())
+        else:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.stmt, ast.excepthandler)):
+                    walk_stmt(child, held)
+                else:
+                    scan_expr(child, held)
+
+    def scan_expr(node: ast.AST, held: Tuple[str, ...]) -> None:
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            fn_ = sub.func
+            # self.method(...)
+            target = _self_attr(fn_)
+            if target is not None:
+                meth.calls.append((held, None, target, sub.lineno))
+                continue
+            # self.attr.method(...)
+            if isinstance(fn_, ast.Attribute):
+                attr = _self_attr(fn_.value)
+                if attr is not None:
+                    meth.calls.append((held, attr, fn_.attr, sub.lineno))
+
+    for stmt in fn.body:
+        walk_stmt(stmt, tuple(required))
+
+
+# ---------------------------------------------------------------------------
+# graph construction
+
+
+def build_graph(files: Sequence[Tuple[str, str]]) -> LockGraph:
+    """``files`` is a sequence of ``(path, source)`` pairs."""
+    classes: Dict[str, _Class] = {}
+    for path, source in files:
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                classes[node.name] = _collect_class(node, path)
+
+    # transitive acquired-set fixpoint over (class, method)
+    acquired: Dict[Tuple[str, str], Set[str]] = {}
+    for cname, cls in classes.items():
+        for mname, meth in cls.methods.items():
+            direct = {cls.node(lk) for (lk, _, _) in meth.acquires}
+            acquired[(cname, mname)] = direct
+    changed = True
+    while changed:
+        changed = False
+        for cname, cls in classes.items():
+            for mname, meth in cls.methods.items():
+                acc = acquired[(cname, mname)]
+                for (_, via, callee, _) in meth.calls:
+                    tgt_cls = cname if via is None \
+                        else cls.attr_types.get(via)
+                    if tgt_cls is None or tgt_cls not in classes:
+                        continue
+                    key = (tgt_cls, callee)
+                    if key not in acquired:
+                        continue
+                    extra = acquired[key] - acc
+                    if extra:
+                        acc |= extra
+                        changed = True
+
+    edges: Dict[Tuple[str, str], Tuple[str, int]] = {}
+    kinds: Dict[str, str] = {}
+    for cname, cls in classes.items():
+        for attr in cls.locks | set(cls.kinds):
+            node = cls.node(attr)
+            kinds.setdefault(node, cls.kinds.get(cls.canon(attr),
+                                                 "unknown"))
+
+    def add_edge(a: str, b: str, path: str, line: int) -> None:
+        if a == b and kinds.get(a) != "lock":
+            return  # re-entering an RLock/Condition is legal
+        edges.setdefault((a, b), (path, line))
+
+    for cname, cls in classes.items():
+        for mname, meth in cls.methods.items():
+            for (lock, line, held) in meth.acquires:
+                tgt = cls.node(lock)
+                for h in held:
+                    add_edge(cls.node(h), tgt, cls.path, line)
+            for (held, via, callee, line) in meth.calls:
+                if not held:
+                    continue
+                tgt_cls = cname if via is None else cls.attr_types.get(via)
+                if tgt_cls is None or tgt_cls not in classes:
+                    continue
+                key = (tgt_cls, callee)
+                held_nodes = {cls.node(h) for h in held}
+                for b in acquired.get(key, set()):
+                    if b in held_nodes:
+                        # Re-acquiring an already-held lock adds no new
+                        # ordering — except a plain Lock, where it is a
+                        # guaranteed self-deadlock.
+                        if kinds.get(b) == "lock":
+                            add_edge(b, b, cls.path, line)
+                        continue
+                    for a in held_nodes:
+                        add_edge(a, b, cls.path, line)
+    return LockGraph(classes, edges, kinds)
+
+
+# ---------------------------------------------------------------------------
+# cycle detection
+
+
+def find_cycles(graph: LockGraph) -> List[List[str]]:
+    succ: Dict[str, List[str]] = {}
+    for (a, b) in graph.edges:
+        succ.setdefault(a, []).append(b)
+        succ.setdefault(b, [])
+    cycles: List[List[str]] = []
+    seen_cycles: Set[Tuple[str, ...]] = set()
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in succ}
+    stack: List[str] = []
+
+    def dfs(n: str) -> None:
+        color[n] = GREY
+        stack.append(n)
+        for m in succ[n]:
+            if color[m] == GREY:
+                cyc = stack[stack.index(m):] + [m]
+                # canonical rotation so each cycle reports once
+                base = cyc[:-1]
+                k = base.index(min(base))
+                canon = tuple(base[k:] + base[:k])
+                if canon not in seen_cycles:
+                    seen_cycles.add(canon)
+                    cycles.append(list(canon) + [canon[0]])
+            elif color[m] == WHITE:
+                dfs(m)
+        stack.pop()
+        color[n] = BLACK
+
+    for n in sorted(succ):
+        if color[n] == WHITE:
+            dfs(n)
+    return cycles
+
+
+def check_lockorder(files: Sequence[Tuple[str, str]]) -> List[Diagnostic]:
+    graph = build_graph(files)
+    diags: List[Diagnostic] = []
+    for cyc in find_cycles(graph):
+        hops = []
+        for a, b in zip(cyc, cyc[1:]):
+            path, line = graph.edges[(a, b)]
+            hops.append(f"{a} -> {b} ({path}:{line})")
+        first_path, first_line = graph.edges[(cyc[0], cyc[1])]
+        diags.append(Diagnostic(
+            first_path, first_line, "lock-cycle",
+            "potential deadlock: " + "; ".join(hops)))
+    return diags

@@ -29,8 +29,9 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import (Any, Callable, Dict, Generic, List, Optional, Sequence,
-                    TypeVar)
+from typing import Any, Callable, Dict, Generic, List, Optional, TypeVar
+
+from repro.analysis import locks_required
 
 T = TypeVar("T")
 
@@ -141,6 +142,10 @@ class BatchingQueue(Generic[T]):
     the serving layer passes ``TenancyManager.weight_for``.
     """
 
+    GUARDED_BY = {"_pending": "_lock", "_rr": "_lock",
+                  "_deficit": "_lock", "_total": "_lock",
+                  "stats": "_lock"}
+
     def __init__(self, name: str, options: BatchingOptions,
                  weight_fn: Optional[Callable[[str], float]] = None):
         self.name = name
@@ -183,6 +188,7 @@ class BatchingQueue(Generic[T]):
         return task
 
     # -- assembly (lock held) ----------------------------------------------
+    @locks_required("_lock")
     def _retire_tenant(self, tenant: str) -> None:
         del self._pending[tenant]
         self._deficit.pop(tenant, None)
@@ -191,6 +197,7 @@ class BatchingQueue(Generic[T]):
         except ValueError:
             pass
 
+    @locks_required("_lock")
     def _drop_if_expired(self, task: BatchTask, now: float) -> bool:
         if task.deadline_t is None or now < task.deadline_t:
             return False
@@ -202,6 +209,7 @@ class BatchingQueue(Generic[T]):
             f"in batching queue {self.name!r}"))
         return True
 
+    @locks_required("_lock")
     def _assemble(self, now: float) -> List[BatchTask]:
         """DRR over backlogged tenants until the batch is full, a head
         task does not fit (close-on-overflow, as the FIFO queue did), or
@@ -243,10 +251,12 @@ class BatchingQueue(Generic[T]):
                 self._rr.rotate(-1)
         return tasks
 
+    @locks_required("_lock")
     def _oldest_enqueue_t(self) -> Optional[float]:
         heads = [dq[0].enqueue_t for dq in self._pending.values() if dq]
         return min(heads) if heads else None
 
+    @locks_required("_lock")
     def _timeout_expired(self, now: float) -> bool:
         oldest = self._oldest_enqueue_t()
         return (oldest is not None and

@@ -22,6 +22,9 @@ BatchProcessor = Callable[[Batch], None]
 
 
 class SharedBatchScheduler(Generic[T]):
+    GUARDED_BY = {"_queues": "_lock", "_processors": "_lock",
+                  "_rr_keys": "_lock", "_started": "_lock"}
+
     def __init__(self, *, num_device_threads: int = 1,
                  idle_wait_s: float = 0.0005):
         self._lock = threading.Lock()
@@ -67,10 +70,14 @@ class SharedBatchScheduler(Generic[T]):
 
     # -- device loop ------------------------------------------------------
     def start(self) -> None:
-        if not self._started:
+        # take the lock: two concurrent start() calls must not both
+        # observe _started == False and double-start the threads
+        with self._lock:
+            if self._started:
+                return
             self._started = True
-            for t in self._threads:
-                t.start()
+        for t in self._threads:
+            t.start()
 
     def stop(self) -> None:
         self._stop.set()

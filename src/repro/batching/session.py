@@ -12,11 +12,9 @@ size for shape stability, executed once, and split back per task.
 """
 from __future__ import annotations
 
-import threading
 from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.batching.queue import Batch, BatchingOptions, BatchTask

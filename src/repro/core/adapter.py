@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from typing import Callable, Generic, Sequence, TypeVar
 
-from repro.core.loader import Loader
 from repro.core.source import AspiredVersion, Source
 
 T_in = TypeVar("T_in")

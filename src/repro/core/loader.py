@@ -7,7 +7,7 @@ RAM) and materializes the servable on ``load()``.
 from __future__ import annotations
 
 import abc
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 from repro.core.servable import ResourceEstimate, Servable, ServableId
 

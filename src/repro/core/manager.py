@@ -29,6 +29,7 @@ from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.analysis import locks_required
 from repro.core.loader import Loader
 from repro.core.rcu import RcuMap
 from repro.core.servable import (
@@ -95,6 +96,13 @@ class FailedPreconditionError(RuntimeError):
 
 
 class AspiredVersionsManager:
+    GUARDED_BY = {
+        "_aspired": "_mutex", "_managed": "_mutex",
+        "_initial_wave": "_mutex", "_ram_committed": "_mutex",
+        "_pending_ops": "_mutex", "_labels": "_mutex",
+        "_explicit_labels": "_mutex", "_events": "_mutex",
+    }
+
     def __init__(
         self,
         *,
@@ -187,6 +195,7 @@ class AspiredVersionsManager:
                 self._initial_wave = False
         return scheduled
 
+    @locks_required("_mutex")
     def _plan_servable(self, name: str) -> List[PendingAction]:
         aspired = self._aspired.get(name, {})
         managed = self._managed.setdefault(name, {})
@@ -220,12 +229,14 @@ class AspiredVersionsManager:
             to_unload=to_unload)
         return self._policy.actions(pic)
 
+    @locks_required("_mutex")
     def _ram_admits(self, loader: Loader) -> bool:
         if self._ram_budget is None:
             return True
         est = loader.estimate_resources()
         return self._ram_committed + est.peak_ram_bytes <= self._ram_budget
 
+    @locks_required("_mutex")
     def _start_action(self, name: str, action: PendingAction) -> None:
         # Called under mutex.
         managed = self._managed[name]
@@ -342,6 +353,7 @@ class AspiredVersionsManager:
     # ------------------------------------------------------------------
     # Version labels
     # ------------------------------------------------------------------
+    @locks_required("_mutex")
     def _relabel(self, name: str, ready: Tuple[int, ...]) -> None:
         """Recompute the published label map for ``name``. Called under
         the mutex on every READY-set change and explicit assignment.
@@ -393,10 +405,10 @@ class AspiredVersionsManager:
             self._relabel(name, ready)
 
     def version_labels(self, name: str) -> Dict[str, int]:
-        return dict(self._labels.get(name, {}))
+        return dict(self._labels.get(name, {}))  # unguarded-ok: atomically-swapped immutable label map
 
     def resolve_version_label(self, name: str, label: str) -> int:
-        labels = self._labels.get(name)
+        labels = self._labels.get(name)  # unguarded-ok: atomically-swapped immutable label map
         if labels is None or label not in labels:
             raise NotFoundError(
                 f"no version labeled {label!r} for servable {name!r}")
@@ -433,7 +445,7 @@ class AspiredVersionsManager:
             if snap is not None:
                 want = version
                 if label is not None:
-                    labels = self._labels.get(name)
+                    labels = self._labels.get(name)  # unguarded-ok: atomically-swapped immutable label map
                     if labels is None or label not in labels:
                         prev = snap
                         continue
@@ -543,6 +555,7 @@ class AspiredVersionsManager:
         self._unload_pool.shutdown(wait=True)
 
     # ------------------------------------------------------------------
+    @locks_required("_mutex")
     def _event(self, kind: str, sid: ServableId, detail: str = "") -> None:
         ev = ManagerEvent(time.monotonic(), kind, sid, detail)
         self._events.append(ev)
@@ -553,4 +566,5 @@ class AspiredVersionsManager:
                 log.exception("on_event callback failed")
 
     def events(self) -> List[ManagerEvent]:
+        # unguarded-ok: GIL-atomic list() of an append-only deque
         return list(self._events)

@@ -11,7 +11,7 @@ import dataclasses
 import enum
 import threading
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 
 @dataclasses.dataclass(frozen=True, order=True)

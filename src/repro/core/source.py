@@ -18,6 +18,7 @@ import re
 import threading
 from typing import Callable, Dict, Generic, List, Optional, Sequence, TypeVar
 
+from repro.analysis import locks_required
 from repro.core.servable import ServableId
 
 T = TypeVar("T")
@@ -38,6 +39,8 @@ AspiredVersionsCallback = Callable[[str, Sequence[AspiredVersion]], None]
 
 class Source(Generic[T]):
     """Base source: owns a downstream callback and pushes aspirations."""
+
+    GUARDED_BY = {"_callback": "_lock"}
 
     def __init__(self) -> None:
         self._callback: Optional[AspiredVersionsCallback] = None
@@ -114,6 +117,8 @@ class FileSystemSource(Source[str]):
 
     VERSION_RE = re.compile(r"^\d+$")
 
+    GUARDED_BY = {"_dirs": "_poll_lock", "_policies": "_poll_lock"}
+
     def __init__(self, servable_dirs: Dict[str, str],
                  policies: Optional[Dict[str, ServableVersionPolicy]] = None):
         super().__init__()
@@ -130,7 +135,10 @@ class FileSystemSource(Source[str]):
             return {name: (directory, self.policy_for(name))
                     for name, directory in list(self._dirs.items())}
 
+    @locks_required("_poll_lock")
     def policy_for(self, name: str) -> ServableVersionPolicy:
+        # setdefault MUTATES: callable only under the poll lock (the
+        # config mutators and poll() already hold it).
         return self._policies.setdefault(name, ServableVersionPolicy())
 
     # Config mutators serialize against poll() via _poll_lock: a timer
@@ -157,12 +165,20 @@ class FileSystemSource(Source[str]):
             self._emit(name, [])  # un-aspire everything
 
     def list_versions(self, name: str) -> List[int]:
-        directory = self._dirs.get(name)
+        """Public snapshot: resolve the directory under the lock, scan
+        the filesystem outside it (scans can be slow; the dir map read
+        is the only shared state)."""
+        with self._poll_lock:
+            directory = self._dirs.get(name)
+        return self._scan_versions(directory)
+
+    @classmethod
+    def _scan_versions(cls, directory: Optional[str]) -> List[int]:
         if directory is None or not os.path.isdir(directory):
             return []
         out = []
         for entry in os.listdir(directory):
-            if self.VERSION_RE.match(entry) and \
+            if cls.VERSION_RE.match(entry) and \
                     os.path.isdir(os.path.join(directory, entry)):
                 out.append(int(entry))
         return sorted(out)
@@ -170,7 +186,7 @@ class FileSystemSource(Source[str]):
     def poll(self) -> None:
         with self._poll_lock:
             for name, directory in list(self._dirs.items()):
-                available = self.list_versions(name)
+                available = self._scan_versions(directory)
                 chosen = self.policy_for(name).select(available)
                 versions = [
                     AspiredVersion(

@@ -9,7 +9,7 @@ models the pipeline emits synthetic frame/patch embeddings instead.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

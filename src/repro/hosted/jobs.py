@@ -25,6 +25,7 @@ import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.analysis import locks_required
 from repro.core import AspiredVersion, AspiredVersionsManager, Source
 from repro.serving import api
 from repro.serving.api import ModelSpec, PredictionService
@@ -43,6 +44,8 @@ class RpcSource(Source):
 
 class LatencyModel:
     """Deterministic-seed latency injection: base + occasional tail."""
+
+    GUARDED_BY = {"_rng": "_lock"}
 
     def __init__(self, base_s: float = 0.0, tail_s: float = 0.0,
                  tail_prob: float = 0.0, seed: int = 0):
@@ -85,6 +88,11 @@ class _ReplicaTransportFacade:
 
 class JobReplica:
     """One replica of a serving job: manager + RPC source + stats."""
+
+    GUARDED_BY = {"_transport": "_client_lock", "_client": "_client_lock",
+                  "_req_count": "_req_lock",
+                  "_outstanding": "_load_lock",
+                  "_latencies": "_load_lock"}
 
     def __init__(self, job_id: str, replica_idx: int,
                  capacity_bytes: int,
@@ -151,11 +159,13 @@ class JobReplica:
     @property
     def address(self) -> Optional[Tuple[str, int]]:
         """(host, port) when serving over HTTP, else None (in-process)."""
+        # unguarded-ok: single atomic snapshot read; post-stop transports stay addressable
         transport = self._transport
         return None if transport is None else transport.address
 
     @property
     def transport(self):
+        # unguarded-ok: single atomic snapshot read for tests/diagnostics
         return self._transport
 
     def client(self):
@@ -276,6 +286,9 @@ class ServingJob:
     later by ``scale_to``) up on its own localhost port, so routed
     traffic crosses real sockets."""
 
+    GUARDED_BY = {"replicas": "_lock", "_aspirations": "_lock",
+                  "_added_cbs": "_lock", "_removed_cbs": "_lock"}
+
     def __init__(self, job_id: str, capacity_bytes: int,
                  latency_factory: Callable[[int], LatencyModel] = None,
                  min_replicas: int = 1, max_replicas: int = 8,
@@ -309,11 +322,16 @@ class ServingJob:
         the snapshot, before its shutdown — the Router evicts routing
         state and closes the cached client there. Callbacks must not
         call back into job-level methods that take the job lock."""
-        if added is not None:
-            self._added_cbs.append(added)
-        if removed is not None:
-            self._removed_cbs.append(removed)
+        # Registration takes the job lock: a listener added while a
+        # scale_to runs on another thread must not race the list the
+        # scaler is iterating.
+        with self._lock:
+            if added is not None:
+                self._added_cbs.append(added)
+            if removed is not None:
+                self._removed_cbs.append(removed)
 
+    @locks_required("_lock")
     def _add_replica_locked(self) -> JobReplica:
         idx = len(self.replicas)
         r = JobReplica(self.job_id, idx, self.capacity_bytes,
@@ -345,11 +363,12 @@ class ServingJob:
                 self._notify(self._added_cbs, r)
             while len(self.replicas) > n:
                 removed.append(self.replicas.pop())
+            removed_cbs = list(self._removed_cbs)
         # Shut down OUTSIDE the lock: a serving replica drains its HTTP
         # transport (bounded but slow), and holding the lock here would
         # stall routing/sync for the whole job meanwhile.
         for r in removed:
-            self._notify(self._removed_cbs, r)
+            self._notify(removed_cbs, r)
             r.shutdown()
 
     def num_replicas(self) -> int:
@@ -408,6 +427,7 @@ class ServingJob:
         with self._lock:
             replicas = list(self.replicas)
             self.replicas.clear()
+            removed_cbs = list(self._removed_cbs)
         for r in replicas:
-            self._notify(self._removed_cbs, r)
+            self._notify(removed_cbs, r)
             r.shutdown()

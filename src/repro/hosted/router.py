@@ -45,6 +45,9 @@ class NoReplicaError(NotFound):
 
 
 class Router:
+    # _rr is an itertools.count: next() is GIL-atomic, no lock needed.
+    GUARDED_BY = {"stats": "_stats_lock", "_outstanding": "_load_lock"}
+
     def __init__(self, synchronizer: Synchronizer,
                  jobs: Dict[str, ServingJob],
                  hedge_delay_s: Optional[float] = 0.010,

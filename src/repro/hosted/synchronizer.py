@@ -34,6 +34,8 @@ LoaderFactory = Callable[[str, int, Any, int], Loader]
 
 
 class Synchronizer:
+    GUARDED_BY = {"_loaded": "_lock", "_desired_labels": "_lock"}
+
     def __init__(self, datacenter: str, controller: Controller,
                  jobs: Dict[str, ServingJob],
                  loader_factory: LoaderFactory):

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np

@@ -23,14 +23,12 @@ import argparse
 import json
 import time
 import traceback
-from functools import partial
 from typing import Any, Dict, Optional
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ARCHS, ASSIGNED, INPUT_SHAPES, get_config, \
-    shape_applicable
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config, shape_applicable
 from repro.configs.base import InputShape, ModelConfig
 from repro.launch import specs as SP
 from repro.launch.hlo_analysis import dominant_term, roofline_terms
@@ -76,7 +74,6 @@ def make_shard_act(cfg: ModelConfig, shape: InputShape, mesh,
     inserts the all-gather before attention / reduce-scatter after the
     block automatically (same bytes as the TP all-reduce it replaces).
     """
-    dp = SH.data_axes(mesh)
     b = shape.global_batch
     bs = SH.best_batch_axes(b, cfg, mesh)
     s_len = shape.seq_len if shape.kind != "decode" else 1
@@ -145,7 +142,6 @@ def build_step(cfg: ModelConfig, shape: InputShape, mesh):
                                     decode_2d=decode_2d), mesh)
 
     cap = MD.attn_cache_capacity(cfg, shape.seq_len)
-    dpax = SH.data_axes(mesh)
     kv_batch = (None if decode_2d else
                 SH.best_batch_axes(shape.global_batch, cfg, mesh))
     kv_seq = ("model" if cfg.tensor_parallel and

@@ -224,7 +224,6 @@ def analytic_residency(cfg: ModelConfig, shape: InputShape,
       buffers, loss chunk logits).
     """
     dp, mp, pods = _axis_sizes(mesh_kind)
-    chips = dp * mp * pods
     counts = cfg.param_counts()
     mode = shape.kind
     b, s = shape.global_batch, shape.seq_len

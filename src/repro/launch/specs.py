@@ -16,7 +16,6 @@ import jax.numpy as jnp
 from repro.configs.base import InputShape, ModelConfig
 from repro.models import model as MD
 from repro.training.optimizer import AdamWConfig, adamw_init
-from repro.training.train import init_train_state
 
 SDS = jax.ShapeDtypeStruct
 

@@ -13,7 +13,6 @@ CLI:
 from __future__ import annotations
 
 import argparse
-import math
 import time
 from typing import Optional
 
@@ -23,7 +22,6 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.models import model as MD
 from repro.training.checkpoint import save_checkpoint
 from repro.training.optimizer import AdamWConfig
 from repro.training.train import init_train_state, make_train_step

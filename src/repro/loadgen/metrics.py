@@ -59,6 +59,9 @@ def percentiles(values: Sequence[float],
 class MetricsCollector:
     """Thread-safe request + gauge recording with per-phase summaries."""
 
+    GUARDED_BY = {"_records": "_lock", "_gauges": "_lock",
+                  "_phase_spans": "_lock", "_t0": "_lock"}
+
     def __init__(self, clock: Callable[[], float] = time.monotonic):
         self._clock = clock
         self._lock = threading.Lock()

@@ -23,7 +23,7 @@ import random
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.loadgen.arrivals import PhasedTrace
 from repro.loadgen.metrics import (ERROR, OK, QUOTA, UNAVAILABLE,

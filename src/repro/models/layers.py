@@ -18,7 +18,6 @@ layer is a pair of functions ``init_*(rng, cfg) -> params`` and a pure
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Optional, Tuple
 
@@ -249,7 +248,6 @@ def attention_decode(q, k_cache, v_cache, valid) -> jnp.ndarray:
     reductions into small all-reduces — sequence-parallel flash-decode.
     """
     b, one, hq, d = q.shape
-    s_max = k_cache.shape[1]
     hk = k_cache.shape[2]
     g = hq // hk
     scale = 1.0 / math.sqrt(d)

@@ -18,7 +18,6 @@ buffer from which decode validity masks are derived.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -740,11 +739,6 @@ def forward_hidden(params, cfg: ModelConfig, batch,
                 # keeps one sublayer's transients live at a time, not
                 # the whole period's (§Perf iteration J1).
                 for slot in range(len(cfg.pattern)):
-                    sub_cfg = cfg.with_overrides(
-                        num_layers=len(cfg.pattern),
-                        pattern=cfg.pattern,
-                        ffn_pattern=cfg.ffn_pattern)
-
                     def one_slot(x_, aux_, slot=slot):
                         c = cfg.with_overrides(
                             num_layers=1,

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import contextlib
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,7 @@ O(S/chunk) at the cost of one extra forward over each chunk.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

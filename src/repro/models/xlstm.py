@@ -204,7 +204,6 @@ def slstm_seq(p, x, *, num_heads: int, chunk: int = 256,
               remat: bool = True, state=None
               ) -> Tuple[jnp.ndarray, dict]:
     b, s, d_model = x.shape
-    di = d_model
     wx = (x @ p["w"].astype(x.dtype)).astype(jnp.float32) + p["b"]
     if state is None:
         state = slstm_init_state(b, d_model)

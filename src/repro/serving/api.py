@@ -43,7 +43,7 @@ import queue
 import threading
 import time
 from collections import deque
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -57,11 +57,9 @@ from repro.core.servable import (Servable, ServableHandle,
 from repro.serving.decode_engine import DecodeScheduler
 from repro.serving.engine import JaxModelServable
 from repro.serving.generation import SamplingParams
-from repro.serving.tenancy import (DEFAULT_CONTEXT, DEFAULT_TENANT,
-                                   DeadlineExceededError,
-                                   QuotaExceededError, RequestContext,
-                                   TenancyManager, TenantQuota,
-                                   tenant_scope)
+from repro.serving.tenancy import (DEFAULT_CONTEXT, DeadlineExceededError,
+    QuotaExceededError, RequestContext, TenancyManager, TenantQuota,
+    tenant_scope)
 
 log = logging.getLogger(__name__)
 
@@ -353,6 +351,9 @@ class LoadTracker:
     admitted but not yet answered), the latency deque feeds p99. Bounded
     window, lock-guarded, cheap enough to wrap every RPC."""
 
+    GUARDED_BY = {"_latencies": "_lock", "_inflight": "_lock",
+                  "_total": "_lock"}
+
     def __init__(self, window: int = 512):
         self._lock = threading.Lock()
         self._latencies: deque = deque(maxlen=window)
@@ -417,6 +418,10 @@ class PredictionService:
     batches; with ``use_decode_engine`` it continuous-batches generate.
     """
 
+    GUARDED_BY = {"_sessions": "_sessions_lock",
+                  "_engines": "_engines_lock",
+                  "_closed": "_sessions_lock"}
+
     def __init__(self, manager: AspiredVersionsManager, *,
                  scheduler: Optional[SharedBatchScheduler] = None,
                  batching: Optional[BatchingOptions] = None,
@@ -456,6 +461,7 @@ class PredictionService:
     # -- handle / error mapping -------------------------------------------
     def _acquire(self, spec: ModelSpec) -> ServableHandle:
         _validate_spec(spec)
+        # unguarded-ok: monotonic shutdown flag; a stale False only widens the drain window
         if self._closed:
             raise Unavailable("prediction service is shut down")
         try:
@@ -820,8 +826,8 @@ class PredictionService:
             eng.stop()
 
     def close(self) -> None:
-        self._closed = True
         with self._sessions_lock:
+            self._closed = True
             sessions = list(self._sessions.values())
             self._sessions.clear()
         for sess in sessions:

@@ -86,6 +86,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import locks_required
 from repro.configs.base import ModelConfig
 from repro.models import model as MD
 from repro.serving.generation import (GenRequest, SamplingParams,
@@ -174,8 +175,18 @@ class DecodeScheduler:
 
     ``self._cond`` guards the queue, the slot list, the free-block list
     and the stats dict; the device pool itself is touched only by the
-    engine thread, never under the lock.
+    engine thread, never under the lock. The engine thread additionally
+    reads ``_slots`` lock-free — it is the sole mutator of slot rows
+    (every write publishes under ``_cond`` for the client-side readers),
+    marked ``# unguarded-ok`` at each site.
     """
+
+    GUARDED_BY = {
+        "_queues": "_cond", "_rr": "_cond", "_deficit": "_cond",
+        "_qsize": "_cond", "_seq": "_cond", "_pick": "_cond",
+        "_slots": "_cond", "_free_blocks": "_cond",
+        "_slot_blocks": "_cond", "_stats": "_cond",
+    }
 
     def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 8,
                  max_seq_len: int = 512,
@@ -477,12 +488,13 @@ class DecodeScheduler:
                 # in between — the chunked-prefill latency bound.
                 self._advance_prefills()
                 self._backfill()
+                # engine thread owns slot rows between publishes
                 if any(s is not None and s.decoding
-                       for s in self._slots):
+                       for s in self._slots):  # unguarded-ok: engine thread is the sole slot mutator
                     self._tick()
             except BaseException as exc:     # fail in-flight, keep serving
                 log.warning("decode engine tick failed: %s", exc)
-                for i, slot in enumerate(self._slots):
+                for i, slot in enumerate(self._slots):  # unguarded-ok: engine thread is the sole slot mutator
                     if slot is not None:
                         self._release_slot(i)
                         slot.req._fail(exc)
@@ -502,7 +514,7 @@ class DecodeScheduler:
         """Retire slots whose requests were abandoned (timed-out
         ``generate``): nobody reads their tokens, so decoding them to
         ``max_new`` would burn ticks and hold blocks for nothing."""
-        for i, slot in enumerate(self._slots):
+        for i, slot in enumerate(self._slots):  # unguarded-ok: engine thread is the sole slot mutator
             if slot is not None and slot.req.cancelled:
                 self._release_slot(i)
                 with self._cond:
@@ -516,6 +528,7 @@ class DecodeScheduler:
         return (self.tenancy.weight_for(tenant)
                 if self.tenancy is not None else 1.0)
 
+    @locks_required("_cond")
     def _retire_tenant_locked(self, tenant: str) -> None:
         if tenant in self._queues and not self._queues[tenant]:
             del self._queues[tenant]
@@ -525,6 +538,7 @@ class DecodeScheduler:
             except ValueError:
                 pass
 
+    @locks_required("_cond")
     def _drop_queued_locked(self, req: DecodeRequest, kind: str) -> None:
         """Fail a still-queued request (cancelled or deadline-expired)
         without it ever touching a slot or the device."""
@@ -548,6 +562,7 @@ class DecodeScheduler:
             self.tenancy.account_drop(req.tenant, kind)
         req._fail(exc)
 
+    @locks_required("_cond")
     def _clean_head_locked(self, tenant: str,
                            now: float) -> Optional[DecodeRequest]:
         """Tenant's head after purging dead (cancelled/expired) ones;
@@ -563,6 +578,7 @@ class DecodeScheduler:
         self._retire_tenant_locked(tenant)
         return None
 
+    @locks_required("_cond")
     def _select_locked(self, now: float) -> Optional[DecodeRequest]:
         """Next request to admit. The pick is STICKY: once selected, a
         request short on free blocks stays selected across engine passes
@@ -608,6 +624,7 @@ class DecodeScheduler:
             self._rr.rotate(-1)
         return None
 
+    @locks_required("_cond")
     def _take_locked(self, req: DecodeRequest) -> None:
         """Remove the admitted request from its queue + record wait."""
         q = self._queues.get(req.tenant)
@@ -634,7 +651,7 @@ class DecodeScheduler:
         chosen request waits for retiring slots rather than being
         overtaken (sticky pick — see ``_select_locked``)."""
         for i in range(self.num_slots):
-            if self._slots[i] is not None:
+            if self._slots[i] is not None:  # unguarded-ok: engine thread is the sole slot mutator
                 continue
             blocks: List[int] = []
             with self._cond:
@@ -724,7 +741,7 @@ class DecodeScheduler:
         latency is bounded by a single chunk's prefill, not the whole
         prompt's. The final chunk's logits seed the first sampled
         token, exactly like an unchunked prefill."""
-        for i, slot in enumerate(self._slots):
+        for i, slot in enumerate(self._slots):  # unguarded-ok: engine thread is the sole slot mutator
             if slot is None or slot.decoding or slot.req.cancelled:
                 continue
             take = min(self.prefill_chunk, int(slot.pending.shape[0]))
@@ -776,14 +793,14 @@ class DecodeScheduler:
         """One fused decode step over the whole pool."""
         toks = np.zeros((self.num_slots, 1), np.int32)
         n_active = 0
-        for i, slot in enumerate(self._slots):
+        for i, slot in enumerate(self._slots):  # unguarded-ok: engine thread is the sole slot mutator
             if slot is not None and slot.decoding:
                 toks[i, 0] = slot.last
                 n_active += 1
         logits, self._pool = self._decode_fn(
             self.params, {"tokens": jnp.asarray(toks)}, self._pool)
         raw = np.asarray(logits)
-        for i, slot in enumerate(self._slots):
+        for i, slot in enumerate(self._slots):  # unguarded-ok: engine thread is the sole slot mutator
             if slot is None or not slot.decoding:
                 continue
             if slot.req.cancelled:

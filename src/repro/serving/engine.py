@@ -47,7 +47,14 @@ class InferenceLog:
     Backed by ``deque(maxlen=capacity)`` so eviction under the lock is
     O(1) — a plain ``list.pop(0)`` is O(n) and was measurable on the
     inference hot path once the log filled. ``dropped`` counts evicted
-    entries explicitly."""
+    entries explicitly.
+
+    Entries carry both clocks: ``t`` is wall time (trace replay aligns
+    records across processes), ``t_mono`` is ``time.monotonic()`` —
+    the only clock latency/deadline math may use (NTP steps would
+    corrupt intervals)."""
+
+    GUARDED_BY = {"_entries": "_lock", "dropped": "_lock"}
 
     def __init__(self, capacity: int = 4096):
         self._lock = threading.Lock()
@@ -60,7 +67,9 @@ class InferenceLog:
             if len(self._entries) == self._entries.maxlen:
                 self.dropped += 1
             self._entries.append({
+                # wall-clock-ok: trace-replay stamp; intervals use t_mono
                 "t": time.time(), "servable": str(servable),
+                "t_mono": time.monotonic(),
                 "method": method, "batch_size": batch_size,
                 "latency_ms": latency_s * 1e3,
                 # Attribution rides the request thread (the typed API

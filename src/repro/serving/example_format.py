@@ -15,7 +15,7 @@ adapts a packed batch to the tensor API.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Sequence, Union
 
 import numpy as np
 

@@ -40,6 +40,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, Optional
 
+from repro.analysis import locks_required
 from repro.batching.queue import DeadlineExceededError
 
 __all__ = [
@@ -134,6 +135,8 @@ class TenancyManager:
     idempotent at the call-site level (engine requests release exactly
     once through their terminal-state hook)."""
 
+    GUARDED_BY = {"_quotas": "_lock", "_accounts": "_lock"}
+
     def __init__(self, quotas: Optional[Dict[str, TenantQuota]] = None,
                  default_quota: Optional[TenantQuota] = None,
                  clock: Callable[[], float] = time.monotonic):
@@ -155,6 +158,7 @@ class TenancyManager:
     def weight_for(self, tenant: str) -> float:
         return max(self.quota_for(tenant).weight, 1e-6)
 
+    @locks_required("_lock")
     def _acct(self, tenant: str) -> _Account:
         acct = self._accounts.get(tenant)
         if acct is None:

@@ -350,6 +350,9 @@ class HttpServingServer:
     within ``drain_timeout_s``.
     """
 
+    GUARDED_BY = {"_inflight": "_lock", "draining": "_lock",
+                  "requests_served": "_lock"}
+
     def __init__(self, prediction: Any,
                  models: Optional[api.ModelService] = None, *,
                  host: str = "127.0.0.1", port: int = 0,
@@ -464,6 +467,8 @@ class ServingClient:
     connections) surface as ``api.Unavailable``.
     """
 
+    GUARDED_BY = {"_conns": "_conns_lock", "_gen": "_conns_lock"}
+
     def __init__(self, host: str = "127.0.0.1",
                  port: Optional[int] = None, *, timeout_s: float = 60.0):
         if port is None:
@@ -496,15 +501,21 @@ class ServingClient:
         """This thread's persistent connection, plus whether it was
         freshly created (a fresh connection that fails did NOT die to a
         stale keep-alive, so it must not be retried)."""
+        # Snapshot the generation ONCE, under the lock: reading it
+        # twice unlocked could observe a close() in between and cache a
+        # conn stamped with the post-close generation it wasn't
+        # actually created under.
+        with self._conns_lock:
+            gen = self._gen
         conn = getattr(self._local, "conn", None)
-        if conn is not None and getattr(self._local, "gen", -1) == self._gen:
+        if conn is not None and getattr(self._local, "gen", -1) == gen:
             return conn, False
         if conn is not None:            # cached across a close(): drop it
             self._discard(conn)
             self._local.conn = None
         conn = self._new_connection()
         self._local.conn = conn
-        self._local.gen = self._gen
+        self._local.gen = gen
         return conn, True
 
     def _discard(self, conn: HTTPConnection) -> None:

@@ -13,7 +13,7 @@ import json
 import os
 import shutil
 import tempfile
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np

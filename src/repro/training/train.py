@@ -8,8 +8,7 @@ each chunk's projection (jax.checkpoint on the chunk body).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,37 @@
 # NB: no XLA_FLAGS here on purpose — smoke tests and benches must see
 # the real single CPU device; only launch/dryrun.py forces 512
 # placeholder devices (and only in its own process).
+import os
 import warnings
+
+import pytest
 
 warnings.filterwarnings(
     "ignore", message=".*default axis_types will change.*")
+
+# Opt-in runtime lock-discipline checking (CI runs the suite once with
+# this on): every Lock/RLock/Condition created by repro code becomes an
+# instrumented wrapper that records acquisition order and raises on an
+# observed inversion or an over-long hold. Installed at conftest import
+# time, before any repro module constructs a lock.
+_LOCK_CHECK = os.environ.get("REPRO_LOCK_CHECK") == "1"
+if _LOCK_CHECK:
+    from repro.analysis import instrumented
+
+    instrumented.install()
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _lock_discipline():
+    """Fail the run if any instrumented lock recorded a violation —
+    including ones raised on daemon threads, where the raise alone
+    would vanish into a thread's stderr instead of failing a test."""
+    yield
+    if not _LOCK_CHECK:
+        return
+    from repro.analysis import instrumented
+
+    violations = instrumented.violations()
+    assert not violations, (
+        "lock-discipline violations observed during the test run:\n"
+        + "\n".join(f"  - {v}" for v in violations))

@@ -1,0 +1,559 @@
+"""Tests for the concurrency static analysis + runtime lock validator.
+
+Covers the AST guarded-by checker (exact diagnostics on seeded
+violations, clean fixtures, suppressions), the static lock-order cycle
+pass, the instrumented-lock runtime validator (the same ABBA fixture
+must be caught by BOTH), the wall-clock lint, and a smoke test that the
+real batching components run clean under instrumentation.
+"""
+import threading
+import time
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis import guarded, instrumented, lockorder, locks_required
+from repro.analysis.__main__ import run_check
+
+
+def check(src, path="mod.py", **kw):
+    return guarded.check_source(textwrap.dedent(src), path, **kw)
+
+
+def cycles(src, path="mod.py"):
+    return lockorder.check_lockorder([(path, textwrap.dedent(src))])
+
+
+# ---------------------------------------------------------------------------
+# guarded-by checker
+
+
+class TestGuardedChecker:
+    def test_unguarded_read_exact_diagnostic(self):
+        diags = check("""\
+            class C:
+                GUARDED_BY = {"_items": "_lock"}
+
+                def size(self):
+                    return len(self._items)
+            """)
+        assert len(diags) == 1
+        d = diags[0]
+        assert (d.path, d.line, d.code) == ("mod.py", 5, "unguarded-read")
+        assert "C._items" in d.message and "self._lock" in d.message
+        assert str(d) == f"mod.py:5: [{d.code}] {d.message}"
+
+    def test_unguarded_write_flagged(self):
+        diags = check("""\
+            class C:
+                GUARDED_BY = {"_n": "_lock"}
+
+                def bump(self):
+                    self._n += 1
+            """)
+        assert [d.code for d in diags] == ["unguarded-write"]
+
+    def test_locked_access_is_clean(self):
+        assert check("""\
+            class C:
+                GUARDED_BY = {"_items": "_lock"}
+
+                def size(self):
+                    with self._lock:
+                        return len(self._items)
+            """) == []
+
+    def test_init_is_exempt(self):
+        assert check("""\
+            class C:
+                GUARDED_BY = {"_items": "_lock"}
+
+                def __init__(self):
+                    self._items = []
+            """) == []
+
+    def test_locks_required_method_and_call_sites(self):
+        diags = check("""\
+            class C:
+                GUARDED_BY = {"_items": "_lock"}
+
+                @locks_required("_lock")
+                def _drain(self):
+                    self._items.clear()
+
+                def good(self):
+                    with self._lock:
+                        self._drain()
+
+                def bad(self):
+                    self._drain()
+            """)
+        assert [d.code for d in diags] == ["lock-required-call"]
+        assert diags[0].line == 13
+        assert "self._lock" in diags[0].message
+
+    def test_inline_guarded_by_comment(self):
+        diags = check("""\
+            class C:
+                def __init__(self):
+                    self._q = []   # guarded-by: self._mu
+
+                def peek(self):
+                    return self._q[0]
+            """)
+        assert [d.code for d in diags] == ["unguarded-read"]
+
+    def test_suppression_with_reason(self):
+        assert check("""\
+            class C:
+                GUARDED_BY = {"_items": "_lock"}
+
+                def size(self):
+                    # unguarded-ok: snapshot read of an immutable list
+                    return len(self._items)
+            """) == []
+
+    def test_suppression_without_reason_is_rejected(self):
+        diags = check("""\
+            class C:
+                GUARDED_BY = {"_items": "_lock"}
+
+                def size(self):
+                    return len(self._items)  # unguarded-ok:
+            """)
+        assert "bad-suppression" in {d.code for d in diags}
+
+    def test_nested_def_checked_with_empty_held_set(self):
+        # The with-block lock does NOT cover a nested def: it runs
+        # later, on an unknown thread.
+        diags = check("""\
+            class C:
+                GUARDED_BY = {"_items": "_lock"}
+
+                def make(self):
+                    with self._lock:
+                        def cb():
+                            return self._items
+                        return cb
+            """)
+        assert [d.code for d in diags] == ["unguarded-read"]
+
+    def test_other_objects_attrs_unchecked(self):
+        assert check("""\
+            class C:
+                GUARDED_BY = {"_items": "_lock"}
+
+                def peek(self, other):
+                    return other._items
+            """) == []
+
+    def test_bad_guarded_by_declaration(self):
+        diags = check("""\
+            class C:
+                GUARDED_BY = ["_items"]
+            """)
+        assert [d.code for d in diags] == ["bad-declaration"]
+
+
+class TestWallClockLint:
+    def test_bare_time_time_flagged_only_when_enabled(self):
+        src = """\
+            import time
+
+            def stamp():
+                return time.time()
+            """
+        assert check(src) == []
+        diags = check(src, wallclock=True)
+        assert [d.code for d in diags] == ["wall-clock"]
+        assert diags[0].line == 4
+
+    def test_wall_clock_ok_suppresses(self):
+        assert check("""\
+            import time
+
+            def stamp():
+                # wall-clock-ok: trace-replay timestamp
+                return time.time()
+            """, wallclock=True) == []
+
+    def test_monotonic_is_fine(self):
+        assert check("""\
+            import time
+
+            def stamp():
+                return time.monotonic()
+            """, wallclock=True) == []
+
+
+# ---------------------------------------------------------------------------
+# static lock-order analysis
+
+
+class TestLockOrder:
+    def test_cross_class_abba_cycle(self):
+        src = """\
+            import threading
+
+            class A:
+                def __init__(self, b: "B"):
+                    self._la = threading.Lock()
+                    self.b = b
+
+                def ab(self):
+                    with self._la:
+                        self.b.take()
+
+                def take(self):
+                    with self._la:
+                        pass
+
+            class B:
+                def __init__(self, a: "A"):
+                    self._lb = threading.Lock()
+                    self.a = a
+
+                def ba(self):
+                    with self._lb:
+                        self.a.take()
+
+                def take(self):
+                    with self._lb:
+                        pass
+            """
+        diags = cycles(src)
+        assert [d.code for d in diags] == ["lock-cycle"]
+        msg = diags[0].message
+        assert "A._la -> B._lb" in msg and "B._lb -> A._la" in msg
+        assert "mod.py:" in msg        # every hop carries provenance
+
+    def test_same_class_nested_with_cycle(self):
+        diags = cycles("""\
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._a = threading.Lock()
+                    self._b = threading.Lock()
+
+                def ab(self):
+                    with self._a:
+                        with self._b:
+                            pass
+
+                def ba(self):
+                    with self._b:
+                        with self._a:
+                            pass
+            """)
+        assert [d.code for d in diags] == ["lock-cycle"]
+
+    def test_consistent_order_is_clean(self):
+        assert cycles("""\
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._a = threading.Lock()
+                    self._b = threading.Lock()
+
+                def ab(self):
+                    with self._a:
+                        with self._b:
+                            pass
+
+                def also_ab(self):
+                    with self._a:
+                        with self._b:
+                            pass
+            """) == []
+
+    def test_condition_alias_is_same_node(self):
+        # Condition(self._mutex) aliases _idle to _mutex; nesting them
+        # is a legal re-entry, not a 2-cycle.
+        assert cycles("""\
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._mutex = threading.RLock()
+                    self._idle = threading.Condition(self._mutex)
+
+                def work(self):
+                    with self._mutex:
+                        with self._idle:
+                            pass
+            """) == []
+
+    def test_self_edge_on_plain_lock(self):
+        diags = cycles("""\
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._lock = threading.Lock()
+
+                def outer(self):
+                    with self._lock:
+                        self.inner()
+
+                def inner(self):
+                    with self._lock:
+                        pass
+            """)
+        assert [d.code for d in diags] == ["lock-cycle"]
+
+    def test_rlock_reentry_is_legal(self):
+        assert cycles("""\
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._lock = threading.RLock()
+
+                def outer(self):
+                    with self._lock:
+                        self.inner()
+
+                def inner(self):
+                    with self._lock:
+                        pass
+            """) == []
+
+    def test_repo_hot_paths_are_acyclic(self):
+        assert run_check(["src"], no_lockorder=False) == 0
+
+
+# ---------------------------------------------------------------------------
+# runtime validator
+
+
+@pytest.fixture()
+def runtime():
+    """Snapshot/restore the global order graph + violation registry so
+    deliberate violations here never leak into the session-level
+    REPRO_LOCK_CHECK assertion (or other tests)."""
+    with instrumented._graph_mu:
+        saved_log = list(instrumented._violation_log)
+        saved_succ = {k: set(v) for k, v in instrumented._succ.items()}
+    yield instrumented
+    with instrumented._graph_mu:
+        instrumented._violation_log[:] = saved_log
+        instrumented._succ.clear()
+        instrumented._succ.update(saved_succ)
+
+
+class TestInstrumentedLocks:
+    def test_abba_caught_without_deadlocking(self, runtime):
+        a = instrumented.InstrumentedLock()
+        b = instrumented.InstrumentedLock()
+        with a:
+            with b:                       # observes A -> B
+                pass
+        before = len(runtime.violations())
+        with b:
+            with pytest.raises(instrumented.LockOrderViolation):
+                a.acquire()               # B -> A inverts it
+        assert len(runtime.violations()) == before + 1
+        assert "inversion" in runtime.violations()[-1]
+
+    def test_consistent_order_never_raises(self, runtime):
+        a = instrumented.InstrumentedLock()
+        b = instrumented.InstrumentedLock()
+        for _ in range(3):
+            with a:
+                with b:
+                    pass
+
+    def test_self_deadlock_detected_not_hung(self, runtime):
+        lk = instrumented.InstrumentedLock()
+        with lk:
+            with pytest.raises(instrumented.LockOrderViolation):
+                lk.acquire()              # would block forever un-instrumented
+
+    def test_rlock_reentry_fine(self, runtime):
+        lk = instrumented.InstrumentedRLock()
+        with lk:
+            with lk:
+                pass
+        assert lk.locked() is False       # fully released
+
+    def test_hold_time_violation(self, runtime, monkeypatch):
+        monkeypatch.setenv("REPRO_LOCK_HOLD_S", "0.01")
+        lk = instrumented.InstrumentedLock()
+        lk.acquire()
+        time.sleep(0.05)
+        with pytest.raises(instrumented.HoldTimeViolation):
+            lk.release()
+        assert not lk.locked()            # raw lock still released
+
+    def test_condition_wait_releases_held_entry(self, runtime):
+        cond = instrumented.InstrumentedCondition()
+        with cond:
+            # wait() must drop the lock from the held set (and re-note
+            # it on wake) or the timeout re-acquire would self-trip.
+            assert cond.wait(timeout=0.01) is False
+            assert cond.wait_for(lambda: False, timeout=0.01) is False
+
+    def test_cross_thread_abba(self, runtime):
+        """The canonical two-thread ABBA: thread 1 teaches A -> B, the
+        main thread then tries B -> A and is stopped at acquire time —
+        no deadlock interleaving required."""
+        a = instrumented.InstrumentedLock()
+        b = instrumented.InstrumentedLock()
+
+        def t1():
+            with a:
+                with b:
+                    pass
+
+        th = threading.Thread(target=t1)
+        th.start()
+        th.join()
+        with b:
+            with pytest.raises(instrumented.LockOrderViolation):
+                with a:
+                    pass
+
+
+class TestInstallation:
+    def test_install_uninstall_roundtrip(self):
+        was = instrumented.installed()
+        instrumented.install()
+        try:
+            assert instrumented.installed()
+            # Locks created from NON-repro modules (this test) stay raw.
+            assert not isinstance(threading.Lock(),
+                                  instrumented._InstrumentedBase)
+        finally:
+            if not was:
+                instrumented.uninstall()
+        assert instrumented.installed() == was
+
+    def test_repro_components_clean_under_instrumentation(self, runtime):
+        """Smoke: the real batching pipeline runs with instrumented
+        locks and records zero violations."""
+        from repro.batching import (BatchingOptions, BatchingSession,
+                                    SharedBatchScheduler)
+
+        was = instrumented.installed()
+        instrumented.install()
+        try:
+            before = len(runtime.violations())
+            sched = SharedBatchScheduler()
+            sched.start()
+            try:
+                sess = BatchingSession(
+                    "m", lambda x: x * 2, sched,
+                    BatchingOptions(max_batch_size=8,
+                                    batch_timeout_s=0.005))
+                outs = [None] * 6
+
+                def worker(i):
+                    outs[i] = sess.run(np.full((1, 2), float(i)))
+
+                ts = [threading.Thread(target=worker, args=(i,))
+                      for i in range(6)]
+                [t.start() for t in ts]
+                [t.join() for t in ts]
+                for i in range(6):
+                    assert np.allclose(outs[i], 2.0 * i)
+                sess.close()
+            finally:
+                sched.stop()
+            assert runtime.violations()[before:] == []
+        finally:
+            if not was:
+                instrumented.uninstall()
+
+
+# ---------------------------------------------------------------------------
+# decorator + CLI
+
+
+class TestDecorator:
+    def test_locks_required_is_zero_cost(self):
+        @locks_required("_lock", "self._other")
+        def fn(self):
+            return 42
+
+        assert fn.__locks_required__ == ("_lock", "self._other")
+        assert fn(None) == 42
+
+    def test_locks_required_validates(self):
+        with pytest.raises(ValueError):
+            locks_required()
+        with pytest.raises(ValueError):
+            locks_required(42)
+
+
+class TestCli:
+    def test_check_fails_on_seeded_violation(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text(textwrap.dedent("""\
+            class C:
+                GUARDED_BY = {"_n": "_lock"}
+
+                def bump(self):
+                    self._n += 1
+            """))
+        assert run_check([str(bad)]) == 1
+        out = capsys.readouterr().out
+        assert "unguarded-write" in out and "bad.py:5" in out
+
+    def test_check_passes_clean_file(self, tmp_path, capsys):
+        good = tmp_path / "good.py"
+        good.write_text(textwrap.dedent("""\
+            class C:
+                GUARDED_BY = {"_n": "_lock"}
+
+                def bump(self):
+                    with self._lock:
+                        self._n += 1
+            """))
+        assert run_check([str(good)]) == 0
+        assert "clean" in capsys.readouterr().out
+
+    def test_static_and_runtime_agree_on_abba(self, tmp_path, runtime):
+        """The same ABBA shape is caught by BOTH validators."""
+        src = textwrap.dedent("""\
+            import threading
+
+            class P:
+                def __init__(self, q: "Q"):
+                    self._lp = threading.Lock()
+                    self.q = q
+
+                def go(self):
+                    with self._lp:
+                        self.q.touch()
+
+                def touch(self):
+                    with self._lp:
+                        pass
+
+            class Q:
+                def __init__(self, p: "P"):
+                    self._lq = threading.Lock()
+                    self.p = p
+
+                def go(self):
+                    with self._lq:
+                        self.p.touch()
+
+                def touch(self):
+                    with self._lq:
+                        pass
+            """)
+        static = lockorder.check_lockorder([("abba.py", src)])
+        assert [d.code for d in static] == ["lock-cycle"]
+
+        lp = instrumented.InstrumentedLock()
+        lq = instrumented.InstrumentedLock()
+        with lp:
+            with lq:
+                pass
+        with lq:
+            with pytest.raises(instrumented.LockOrderViolation):
+                lp.acquire()

@@ -4,7 +4,6 @@ loop — against fake jobs with an injected clock, so every test is
 deterministic and instant."""
 import time
 
-import pytest
 
 from repro.hosted import Autoscaler, AutoscalerConfig, ScaleDecision
 

@@ -65,7 +65,8 @@ class TestQueue:
         """Property: every enqueued task appears in exactly one batch."""
         q = BatchingQueue("q", BatchingOptions(max_batch_size=8,
                                                batch_timeout_s=0))
-        tasks = [q.enqueue(i, size=s) for i, s in enumerate(sizes)]
+        for i, s in enumerate(sizes):
+            q.enqueue(i, size=s)
         seen = []
         while True:
             b = q.pop_ready_batch(force=True)

@@ -208,7 +208,14 @@ class TestScenarioSweep:
             # re-asserted, then follows v2 out when it retires)
             ctrl.add_version("m", 3)
             sync.sync_once()
-            time.sleep(0.1)         # more label-addressed load
+            # More label-addressed load: run until the clients have
+            # demonstrably served concurrent traffic (a fixed sleep
+            # makes the threshold below a machine-speed lottery).
+            deadline = time.monotonic() + 30
+            while (served[0] < 30 and not errors
+                   and any(t.is_alive() for t in ts)
+                   and time.monotonic() < deadline):
+                time.sleep(0.05)
         finally:
             stop.set()
             [t.join(timeout=60) for t in ts]

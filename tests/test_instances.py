@@ -1,5 +1,4 @@
 """TFS² instances/partitions tests (paper §3.1 Temp/Prod + §3.2 flow)."""
-import numpy as np
 import pytest
 
 from repro.core import (CallableLoader, RawDictServable, ResourceEstimate,

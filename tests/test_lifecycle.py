@@ -1,7 +1,5 @@
 """Lifecycle-library tests (paper §2.1): sources, adapters, manager,
 version policies, canary/rollback, error isolation, RAM gating."""
-import os
-import threading
 import time
 
 import pytest
@@ -126,9 +124,6 @@ class TestManager:
             assert s.call("lookup", "v") == 1
         assert mgr.await_idle()
         assert mgr.list_available() == {"m": (2,)}
-        order = [e.kind for e in mgr.events()
-                 if e.servable.name == "m" and e.kind in
-                 ("load_done", "unload_start")]
         i_load2 = [i for i, e in enumerate(mgr.events())
                    if e.kind == "load_done" and e.servable.version == 2][0]
         i_unload1 = [i for i, e in enumerate(mgr.events())

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED, SMOKE_ARCHS, get_config
+from repro.configs import ASSIGNED, SMOKE_ARCHS
 from repro.models import model as MD
 from repro.training.optimizer import AdamWConfig
 from repro.training.train import init_train_state, make_train_step
@@ -113,8 +113,6 @@ def test_sliding_window_ring_cache_long_prompt():
     hid, _, _ = MD.forward_hidden(params, cfg, {"tokens": toks}, "train")
     ref = MD.logits_from_hidden(params, cfg, hid)
     cache = MD.init_cache(cfg, 1, s + 2)
-    # cache capacity is clamped to the window
-    kv = jax.tree_util.tree_leaves(cache["layers"])
     lg, cache = MD.prefill(params, cfg, {"tokens": toks[:, :s]}, cache)
     errs = [float(np.max(np.abs(lg - ref[:, s - 1])))]
     for t in range(2):

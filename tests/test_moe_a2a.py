@@ -10,7 +10,7 @@ import jax
 import numpy as np
 
 from repro.models.moe import init_moe, moe_apply
-from repro.models.moe_a2a import current_mesh, mesh_context, moe_apply_a2a
+from repro.models.moe_a2a import current_mesh, moe_apply_a2a
 
 
 def test_fallback_without_mesh_matches_grouped():

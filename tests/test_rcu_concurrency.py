@@ -9,9 +9,7 @@ The claims under test:
   * inference continues uninterrupted through version churn.
 """
 import threading
-import time
 
-import pytest
 from _hypothesis_compat import given, settings, st  # optional dep
 
 from repro.core import (AspiredVersion, AspiredVersionsManager,

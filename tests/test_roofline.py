@@ -4,15 +4,14 @@ lower+compile of every smoke arch on the 1-device host mesh (the same
 build_step path the 512-chip dry-run uses)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import (ARCHS, ASSIGNED, INPUT_SHAPES, SMOKE_ARCHS,
-                           get_config, shape_applicable)
+    shape_applicable)
 from repro.configs.base import InputShape
 from repro.launch.hlo_analysis import collective_bytes, _shape_bytes
 from repro.launch.roofline import (analytic_dominant, analytic_residency,
-                                   analytic_roofline, layer_unit_costs)
+    analytic_roofline)
 
 
 class TestHloParser:
@@ -41,9 +40,6 @@ class TestHloParser:
 
     def test_real_compiled_module_collectives(self):
         """Parser works on an actual sharded-compiled module."""
-        mesh = jax.make_mesh((1,), ("model",))
-        from jax.sharding import NamedSharding, PartitionSpec as P
-
         @jax.jit
         def f(x):
             return x @ x.T

@@ -2,16 +2,14 @@
 equivalence, chunked loss vs direct CE, learning on the synthetic LM."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import model as MD
-from repro.training.optimizer import (AdamWConfig, adamw_init,
-                                      adamw_update, global_norm)
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 from repro.training.train import (chunked_softmax_xent, init_train_state,
-                                  loss_fn, make_train_step)
+    make_train_step)
 
 CFG = get_config("tfs-classifier", smoke=True).with_overrides(
     dtype="float32", num_layers=2, d_model=64, d_ff=128, vocab_size=128,
