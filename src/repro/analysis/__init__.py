@@ -1,16 +1,17 @@
-"""Concurrency discipline for the serving hot paths.
+"""Concurrency + resource-ownership discipline for the serving paths.
 
 The real TF-Serving compiles Clang thread-safety annotations
 (``GUARDED_BY``, ``EXCLUSIVE_LOCKS_REQUIRED``) into its C++ core; this
 package is the Python equivalent for this reproduction: a declaration
 convention that costs nothing at runtime, an AST checker that enforces
 it (`repro.analysis.guarded`), a static lock-order/deadlock pass
-(`repro.analysis.lockorder`), and an opt-in runtime validator
-(`repro.analysis.instrumented`) that watches real acquisition order
-during the test suite.
+(`repro.analysis.lockorder`), a resource acquire/release pairing pass
+(`repro.analysis.ownership`), and opt-in runtime validators
+(`repro.analysis.instrumented`, `repro.analysis.leaktrack`) that watch
+real acquisition order and live resources during the test suite.
 
-Declaration convention
-----------------------
+Lock declaration convention
+---------------------------
 
 1. Class-level ``GUARDED_BY`` map — attribute name -> lock attribute::
 
@@ -33,7 +34,31 @@ Declaration convention
 
    The reason is mandatory; an empty reason is itself an error.
 
-Run the checker: ``python -m repro.analysis check src``.
+Resource declaration convention
+-------------------------------
+
+1. Class-level ``RESOURCES`` map — acquire method -> release method::
+
+       class TenancyManager:
+           RESOURCES = {"reserve_decode": "release_decode"}
+
+2. ``@acquires("kv_blocks")`` / ``@releases("kv_blocks")`` on the
+   methods that create and destroy a resource; the ownership checker
+   verifies every acquire site reaches the paired release on all
+   paths, including exception edges.
+
+3. ``@transfers_ownership`` on a function that takes over a resource
+   passed to it (cross-function or cross-thread handoff); passing a
+   held resource to such a function discharges the caller's release
+   obligation.
+
+4. Inline markers: ``# owns: <resource>`` declares that a statement
+   acquires a resource the checker cannot see (raw pool pops);
+   ``# leak-ok: <reason>`` suppresses ownership diagnostics for the
+   acquire on that line. The reason is mandatory.
+
+Run the checkers: ``python -m repro.analysis check src`` (locks) and
+``python -m repro.analysis own src`` (ownership).
 """
 from __future__ import annotations
 
@@ -41,7 +66,7 @@ from typing import Callable, TypeVar
 
 F = TypeVar("F", bound=Callable)
 
-__all__ = ["locks_required"]
+__all__ = ["locks_required", "acquires", "releases", "transfers_ownership"]
 
 
 def locks_required(*locks: str) -> Callable[[F], F]:
@@ -59,3 +84,58 @@ def locks_required(*locks: str) -> Callable[[F], F]:
         return fn
 
     return mark
+
+
+def acquires(resource: str, *, runtime: bool = True) -> Callable[[F], F]:
+    """Declare that calling this function acquires ``resource``.
+
+    Zero-cost unless ``REPRO_LEAK_CHECK=1`` was set at import time, in
+    which case the call is routed through the runtime leak tracker
+    (`repro.analysis.leaktrack`), which stamps the live resource with
+    its acquisition stack, tenant, and age.
+
+    ``runtime=False`` registers the pair for the static checker only.
+    Use it when the function *delegates* to another ``@acquires`` site
+    for the same resource (wrapping both would register two live
+    records for one acquisition) or when callers legitimately outlive
+    the tracker's bookkeeping.
+    """
+    if not isinstance(resource, str) or not resource:
+        raise ValueError("acquires needs a resource name")
+
+    def mark(fn: F) -> F:
+        fn.__acquires__ = resource
+        if runtime:
+            from repro.analysis import leaktrack
+            if leaktrack.active():
+                return leaktrack.wrap_acquire(resource, fn)
+        return fn
+
+    return mark
+
+
+def releases(resource: str, *, runtime: bool = True) -> Callable[[F], F]:
+    """Declare that calling this function releases ``resource``
+    (the pair of an ``@acquires`` site). Zero-cost unless
+    ``REPRO_LEAK_CHECK=1`` was set at import time. ``runtime=False``
+    registers the pair for the static checker only."""
+    if not isinstance(resource, str) or not resource:
+        raise ValueError("releases needs a resource name")
+
+    def mark(fn: F) -> F:
+        fn.__releases__ = resource
+        if runtime:
+            from repro.analysis import leaktrack
+            if leaktrack.active():
+                return leaktrack.wrap_release(resource, fn)
+        return fn
+
+    return mark
+
+
+def transfers_ownership(fn: F) -> F:
+    """Declare that this function takes ownership of resources passed
+    to it (cross-function / cross-thread handoff). Zero-cost: only
+    recorded for the static checker."""
+    fn.__transfers_ownership__ = True
+    return fn

@@ -4,6 +4,8 @@ Commands:
     check <paths...>   guarded-by + lock-order + clock-discipline
                        checks over the given files/directories; exits
                        non-zero on any diagnostic.
+    own <paths...>     resource-ownership acquire/release pairing
+                       check; exits non-zero on any diagnostic.
     graph <paths...>   dump the static lock-acquisition graph (debug).
 """
 from __future__ import annotations
@@ -13,7 +15,7 @@ import os
 import sys
 from typing import List, Tuple
 
-from repro.analysis import guarded, lockorder
+from repro.analysis import guarded, lockorder, ownership
 
 # Directories where bare time.time() is banned (deadlines/latency math
 # must use time.monotonic; justified wall stamps use # wall-clock-ok).
@@ -65,6 +67,20 @@ def run_check(paths: List[str], *, no_lockorder: bool = False) -> int:
     return 0
 
 
+def run_own(paths: List[str]) -> int:
+    pairs = _read_all(_collect_files(paths))
+    diags = ownership.check_files(pairs)
+    for d in diags:
+        print(d)
+    n_files = len(pairs)
+    if diags:
+        print(f"\n{len(diags)} ownership diagnostic(s) in "
+              f"{n_files} file(s)", file=sys.stderr)
+        return 1
+    print(f"ok: {n_files} file(s) ownership-clean")
+    return 0
+
+
 def run_graph(paths: List[str]) -> int:
     graph = lockorder.build_graph(_read_all(_collect_files(paths)))
     for (a, b), (path, line) in sorted(graph.edges.items()):
@@ -81,11 +97,15 @@ def main(argv: List[str] | None = None) -> int:
     p_check.add_argument("paths", nargs="+")
     p_check.add_argument("--no-lockorder", action="store_true",
                          help="skip the lock-order cycle pass")
+    p_own = sub.add_parser("own", help="resource-ownership pairing check")
+    p_own.add_argument("paths", nargs="+")
     p_graph = sub.add_parser("graph", help="dump lock-acquisition graph")
     p_graph.add_argument("paths", nargs="+")
     args = parser.parse_args(argv)
     if args.cmd == "check":
         return run_check(args.paths, no_lockorder=args.no_lockorder)
+    if args.cmd == "own":
+        return run_own(args.paths)
     return run_graph(args.paths)
 
 

@@ -14,7 +14,12 @@ become instrumented wrappers that
   ``HoldTimeViolation``;
 - keep ``Condition.wait`` honest: the lock is removed from the
   holder's set for the duration of the wait and re-checked against the
-  order graph on re-acquisition.
+  order graph on re-acquisition;
+- sample lock *contention*: every acquire records its wait time
+  against the lock's creation site, and ``contention_report()`` ranks
+  sites by total wait to guide sharding decisions (the re-acquire
+  hidden inside the raw ``Condition.wait`` is not sampled — it is
+  dominated by the wait itself).
 
 Every violation is also appended to a global registry
 (``violations()``) so inversions raised on daemon threads still fail
@@ -38,6 +43,7 @@ __all__ = [
     "InstrumentedLock", "InstrumentedRLock", "InstrumentedCondition",
     "LockOrderViolation", "HoldTimeViolation",
     "install", "uninstall", "installed", "violations", "reset",
+    "contention_report",
 ]
 
 _real_lock = threading.Lock
@@ -51,6 +57,9 @@ _graph_mu = _real_lock()
 _succ: Dict[int, Set[int]] = {}          # key -> keys acquired after it
 _names: Dict[int, str] = {}
 _violation_log: List[str] = []
+# site -> [acquires, total wait s, max wait s]; site = creation site,
+# so all per-tenant/per-instance locks born at one line aggregate
+_contention: Dict[str, List[float]] = {}
 
 _tls = threading.local()
 
@@ -81,6 +90,38 @@ def reset() -> None:
         _succ.clear()
         _names.clear()
         _violation_log.clear()
+        _contention.clear()
+
+
+def _note_wait(site: str, wait: float) -> None:
+    with _graph_mu:
+        stats = _contention.get(site)
+        if stats is None:
+            _contention[site] = [1.0, wait, wait]
+        else:
+            stats[0] += 1.0
+            stats[1] += wait
+            if wait > stats[2]:
+                stats[2] = wait
+
+
+def contention_report(top: Optional[int] = None) -> List[dict]:
+    """Rank lock creation sites by total acquire wait.
+
+    Returns dicts with ``site``, ``acquires``, ``total_wait_s``,
+    ``max_wait_s``, sorted by total wait descending. All instances
+    born at the same source line (per-tenant locks, pool shards)
+    aggregate under one site, so the report answers "which lock
+    *declaration* should be sharded next", not "which instance was
+    unlucky"."""
+    with _graph_mu:
+        rows = [{"site": site,
+                 "acquires": int(stats[0]),
+                 "total_wait_s": stats[1],
+                 "max_wait_s": stats[2]}
+                for site, stats in _contention.items()]
+    rows.sort(key=lambda r: (-r["total_wait_s"], r["site"]))
+    return rows[:top] if top is not None else rows
 
 
 def _held() -> list:
@@ -208,12 +249,23 @@ class _InstrumentedBase:
     def __init__(self):
         self._raw = self._raw_factory()
         self._key = next(_key_counter)
+        # Attribute the lock to the first frame OUTSIDE this module:
+        # a Condition() reaches here via InstrumentedCondition.__init__
+        # and _condition_factory, and pinning a fixed depth would blame
+        # those wrappers for every condition in the process.
+        site = "?"
         try:
-            frame = sys._getframe(2)
-            site = (f"{frame.f_globals.get('__name__', '?')}:"
-                    f"{frame.f_lineno}")
+            depth = 1
+            while True:
+                frame = sys._getframe(depth)
+                mod = frame.f_globals.get("__name__", "?")
+                if mod != __name__:
+                    site = f"{mod}:{frame.f_lineno}"
+                    break
+                depth += 1
         except ValueError:
-            site = "?"
+            pass
+        self._site = site
         self.name = f"{site}#{self._key}"
         with _graph_mu:
             _names[self._key] = self.name
@@ -225,8 +277,10 @@ class _InstrumentedBase:
                    f"{self.name} on the same thread")
             _record(msg)
             raise LockOrderViolation(msg)
+        t0 = time.monotonic()
         ok = self._raw.acquire(blocking, timeout)
         if ok:
+            _note_wait(self._site, time.monotonic() - t0)
             _note_acquire(self)
         return ok
 
@@ -275,6 +329,7 @@ class InstrumentedCondition:
             wrapped = InstrumentedRLock.__new__(InstrumentedRLock)
             wrapped._raw = lock
             wrapped._key = next(_key_counter)
+            wrapped._site = "wrapped-raw"
             wrapped.name = f"wrapped-raw#{wrapped._key}"
             with _graph_mu:
                 _names[wrapped._key] = wrapped.name

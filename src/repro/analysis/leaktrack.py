@@ -1,0 +1,263 @@
+"""Opt-in runtime resource-leak validator (peer of `instrumented`).
+
+When ``REPRO_LEAK_CHECK=1`` is set **at import time**, the
+``@acquires`` / ``@releases`` decorators (`repro.analysis`) route the
+decorated calls through this tracker instead of returning the function
+unchanged:
+
+- every successful acquire registers a live-resource record stamped
+  with the resource name, the acquisition stack, the tenant (when the
+  callee takes a ``tenant`` parameter), and a monotonic birth time;
+- the paired release retires the record (matched by the returned
+  object's identity, by a primitive acquire result such as a slot key
+  or ``begin()`` timestamp passed back to the release, or by the
+  owning object + resource for count-balanced pools);
+- ``live_resources()`` exposes the registry; ``assert_empty()``
+  raises ``ResourceLeakError`` at teardown if anything is still held
+  (tests assert this at session end);
+- a record older than ``REPRO_LEAK_AGE_S`` seconds (default 120) is
+  flagged into ``violations()`` the next time any acquire or release
+  runs — long-lived holds are leaks-in-progress even before teardown.
+
+Without the environment variable the decorators stay zero-cost: no
+wrapper, no import-order dependence, nothing to disable in
+production paths.
+"""
+from __future__ import annotations
+
+import _thread
+import functools
+import inspect
+import itertools
+import os
+import time
+import traceback
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+__all__ = [
+    "LiveResource", "ResourceLeakError", "active", "install", "uninstall",
+    "installed", "live_resources", "violations", "reset", "assert_empty",
+    "wrap_acquire", "wrap_release",
+]
+
+_ACTIVE = os.environ.get("REPRO_LEAK_CHECK") == "1"
+
+# raw C lock: immune to the instrumented threading.Lock monkeypatch,
+# and this registry must never contribute lock-order edges of its own
+_mu = _thread.allocate_lock()
+_token_counter = itertools.count(1)
+
+_live: Dict[int, "LiveResource"] = {}
+_violation_log: List[str] = []
+_unmatched_releases = 0
+_enabled = _ACTIVE
+
+
+class ResourceLeakError(RuntimeError):
+    """Resources were still live at a point where none may be held."""
+
+
+@dataclass
+class LiveResource:
+    token: int
+    resource: str
+    keys: tuple          # match keys a release may present
+    tenant: Optional[str]
+    stack: str           # acquisition site, innermost frames
+    t0: float            # time.monotonic() at acquisition
+
+    def age_s(self) -> float:
+        return time.monotonic() - self.t0
+
+    def describe(self) -> str:
+        who = f" tenant={self.tenant}" if self.tenant else ""
+        return (f"{self.resource}#{self.token}{who} "
+                f"age={self.age_s():.3f}s acquired at\n{self.stack}")
+
+
+def active() -> bool:
+    """True when REPRO_LEAK_CHECK=1 was set at import time (the
+    decorators consult this once, at decoration)."""
+    return _ACTIVE
+
+
+def installed() -> bool:
+    return _enabled
+
+
+def install() -> None:
+    """(Re-)enable tracking on already-wrapped call sites. Wrapping
+    itself happens at decoration time and needs ``REPRO_LEAK_CHECK=1``
+    in the environment before repro modules are imported."""
+    global _enabled
+    _enabled = True
+
+
+def uninstall() -> None:
+    global _enabled
+    _enabled = False
+
+
+def _age_limit() -> float:
+    try:
+        return float(os.environ.get("REPRO_LEAK_AGE_S", "120"))
+    except ValueError:
+        return 120.0
+
+
+def live_resources() -> List[LiveResource]:
+    with _mu:
+        return list(_live.values())
+
+
+def violations() -> List[str]:
+    with _mu:
+        return list(_violation_log)
+
+
+def unmatched_releases() -> int:
+    return _unmatched_releases
+
+
+def reset() -> None:
+    """Clear the registry and violation log (tests only)."""
+    global _unmatched_releases
+    with _mu:
+        _live.clear()
+        _violation_log.clear()
+        _unmatched_releases = 0
+
+
+def assert_empty() -> None:
+    """Raise ResourceLeakError when anything is still held — the
+    teardown contract: by session end every acquire was released."""
+    held = live_resources()
+    if held:
+        listing = "\n---\n".join(r.describe() for r in held)
+        raise ResourceLeakError(
+            f"{len(held)} resource(s) still live at teardown:\n{listing}")
+
+
+# ---------------------------------------------------------------------------
+# matching
+
+
+_PRIMITIVE = (int, float, str, bytes, tuple, frozenset, bool)
+
+
+def _keys_for_value(resource: str, value: Any) -> tuple:
+    """Match keys under which a release can find this acquisition."""
+    if value is None:
+        return ()
+    if isinstance(value, _PRIMITIVE):
+        return ((resource, "val", value),)
+    return ((resource, "id", id(value)),)
+
+
+def _sweep_overage_locked() -> None:
+    limit = _age_limit()
+    for rec in _live.values():
+        if rec.age_s() > limit:
+            msg = (f"over-age hold: {rec.describe()} "
+                   f"(limit {limit:.1f}s)")
+            if msg not in _violation_log:
+                _violation_log.append(msg)
+
+
+def _tenant_index(fn: Callable) -> Optional[int]:
+    try:
+        params = list(inspect.signature(fn).parameters)
+    except (TypeError, ValueError):  # builtins etc.
+        return None
+    return params.index("tenant") if "tenant" in params else None
+
+
+def _tenant_of(idx: Optional[int], args: tuple,
+               kwargs: dict) -> Optional[str]:
+    if "tenant" in kwargs:
+        return str(kwargs["tenant"])
+    if idx is not None and idx < len(args):
+        return str(args[idx])
+    return None
+
+
+def _site_stack() -> str:
+    frames = traceback.extract_stack()[:-3]  # drop tracker internals
+    shown = [f for f in frames
+             if "repro" in (f.filename or "")][-4:] or frames[-3:]
+    return "".join(traceback.format_list(shown)).rstrip()
+
+
+def wrap_acquire(resource: str, fn: Callable) -> Callable:
+    tenant_idx = _tenant_index(fn)
+
+    @functools.wraps(fn)
+    def acquire(*args, **kwargs):
+        result = fn(*args, **kwargs)
+        # A conditional acquire that returns False took nothing (e.g.
+        # enter_request() while draining) — no record to pair.
+        if result is False or not _enabled:
+            return result
+        owner = args[0] if args else None
+        tenant = _tenant_of(tenant_idx, args, kwargs)
+        keys = _keys_for_value(resource, result)
+        if not keys and owner is not None:
+            # count-balanced pool acquire (returns None): match on the
+            # owning object + resource (+ tenant when declared)
+            keys = ((resource, "owner", id(owner), tenant),)
+        rec = LiveResource(
+            token=next(_token_counter), resource=resource, keys=keys,
+            tenant=tenant,
+            stack=_site_stack(), t0=time.monotonic())
+        with _mu:
+            _live[rec.token] = rec
+            _sweep_overage_locked()
+        return result
+
+    acquire.__acquires__ = resource
+    acquire.__wrapped_by_leaktrack__ = True
+    return acquire
+
+
+def wrap_release(resource: str, fn: Callable) -> Callable:
+    tenant_idx = _tenant_index(fn)
+
+    @functools.wraps(fn)
+    def release(*args, **kwargs):
+        if _enabled:
+            tenant = _tenant_of(tenant_idx, args, kwargs)
+            _retire(resource, args, kwargs, tenant)
+        return fn(*args, **kwargs)
+
+    release.__releases__ = resource
+    release.__wrapped_by_leaktrack__ = True
+    return release
+
+
+def _retire(resource: str, args: tuple, kwargs: dict,
+            tenant: Optional[str]) -> None:
+    global _unmatched_releases
+    candidates = []
+    for value in list(args) + list(kwargs.values()):
+        candidates.extend(_keys_for_value(resource, value))
+    if args:
+        candidates.append((resource, "owner", id(args[0]), tenant))
+        if tenant is not None:
+            candidates.append((resource, "owner", id(args[0]), None))
+    with _mu:
+        _sweep_overage_locked()
+        best: Optional[int] = None
+        for token, rec in _live.items():
+            if any(k in rec.keys for k in candidates):
+                # prefer the oldest exact match (FIFO retire keeps
+                # count-balanced pools honest)
+                if best is None or rec.t0 < _live[best].t0:
+                    best = token
+        if best is not None:
+            del _live[best]
+        else:
+            # a release the tracker never saw acquire (e.g. acquired
+            # before install, or idempotent second release of an
+            # already-retired handle): counted, not fatal
+            _unmatched_releases += 1

@@ -20,10 +20,23 @@ guaranteed deadlock).
 Aliases are resolved: ``self._idle = threading.Condition(self._mutex)``
 makes ``_idle`` the same node as ``_mutex``.
 
+Callback dispatch is resolved, per class, by pooling: a *callback
+slot* is an attribute (or list) assigned from a ``Callable``-annotated
+parameter; a *binding* is a bound method (``self.meth`` or a lambda
+calling one) passed as an argument to a method of a known class; an
+*invocation site* calls a callback slot, a ``Callable`` parameter, or
+a local derived from a slot. Every method ever bound into class C may
+be dispatched from any of C's invocation sites — coarse, but it makes
+callback-carried locks (``on_token``, replica listeners, manager
+``on_event``) contribute acquisition edges instead of vanishing.
+Method calls through ``Callable``-annotated *parameters* of known
+class types also resolve (``req.on_token(...)``).
+
 Known limitations (conservative by omission, not commission): calls
-through callbacks/getattr and locks reached through untyped attributes
-contribute no edges, and lock identity is per-class, not per-instance
-— the runtime validator (`repro.analysis.instrumented`) covers those.
+through ``getattr`` and locks reached through untyped attributes
+contribute no edges, bindings whose receiver type cannot be resolved
+are dropped, and lock identity is per-class, not per-instance — the
+runtime validator (`repro.analysis.instrumented`) covers those.
 """
 from __future__ import annotations
 
@@ -86,8 +99,12 @@ class _Method:
     # direct with-acquisitions: (lock, line, held-before tuple)
     acquires: List[Tuple[str, int, Tuple[str, ...]]] = field(
         default_factory=list)
-    # calls: (held tuple, callee class or None for self, name, line)
+    # calls: (held tuple, callee class or None for self, name, line);
+    # a via of "type:X" means the receiver is a parameter annotated X
     calls: List[Tuple[Tuple[str, ...], Optional[str], str, int]] = field(
+        default_factory=list)
+    # callback dispatch: (held tuple, pool class name, line)
+    cb_calls: List[Tuple[Tuple[str, ...], str, int]] = field(
         default_factory=list)
 
 
@@ -100,6 +117,10 @@ class _Class:
     alias: Dict[str, str] = field(default_factory=dict)   # cond -> base lock
     attr_types: Dict[str, str] = field(default_factory=dict)
     methods: Dict[str, _Method] = field(default_factory=dict)
+    # attrs that hold callbacks (assigned/appended from Callable params)
+    cb_slots: Set[str] = field(default_factory=set)
+    # bound methods of THIS class passed into (target class, method name)
+    cb_bindings: List[Tuple[str, str]] = field(default_factory=list)
 
     def canon(self, lock: str) -> str:
         seen = set()
@@ -127,6 +148,82 @@ class LockGraph:
 # per-class extraction
 
 
+def _is_callable_annotation(node: Optional[ast.AST]) -> bool:
+    if node is None:
+        return False
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id == "Callable":
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr == "Callable":
+            return True
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str) \
+                and "Callable" in sub.value:
+            return True
+    return False
+
+
+def _callable_params(fn: ast.AST) -> Set[str]:
+    if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return set()
+    args = fn.args
+    return {a.arg for a in (list(args.posonlyargs) + list(args.args)
+                            + list(args.kwonlyargs))
+            if _is_callable_annotation(a.annotation)}
+
+
+def _param_types(fn: ast.AST) -> Dict[str, str]:
+    if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return {}
+    args = fn.args
+    out: Dict[str, str] = {}
+    for a in (list(args.posonlyargs) + list(args.args)
+              + list(args.kwonlyargs)):
+        typ = _annotation_class(a.annotation)
+        if typ:
+            out[a.arg] = typ
+    return out
+
+
+def _collect_cb_slots(cls: _Class, node: ast.ClassDef) -> None:
+    """Attributes that hold callbacks: class-body ``Callable``
+    annotations, and assignments/appends from Callable params."""
+    for stmt in node.body:
+        if isinstance(stmt, ast.AnnAssign) \
+                and isinstance(stmt.target, ast.Name) \
+                and _is_callable_annotation(stmt.annotation):
+            cls.cb_slots.add(stmt.target.id)
+        if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        cb_params = _callable_params(stmt)
+        for sub in ast.walk(stmt):
+            if isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                targets = sub.targets if isinstance(sub, ast.Assign) \
+                    else [sub.target]
+                value = sub.value
+                if isinstance(sub, ast.AnnAssign) \
+                        and _is_callable_annotation(sub.annotation):
+                    attr = _self_attr(sub.target)
+                    if attr is not None:
+                        cls.cb_slots.add(attr)
+                if not (isinstance(value, ast.Name)
+                        and value.id in cb_params):
+                    continue
+                for tgt in targets:
+                    attr = _self_attr(tgt)
+                    if attr is not None:
+                        cls.cb_slots.add(attr)
+            elif isinstance(sub, ast.Call):
+                fn_ = sub.func
+                if (isinstance(fn_, ast.Attribute)
+                        and fn_.attr in ("append", "add")
+                        and any(isinstance(a, ast.Name)
+                                and a.id in cb_params
+                                for a in sub.args)):
+                    attr = _self_attr(fn_.value)
+                    if attr is not None:
+                        cls.cb_slots.add(attr)
+
+
 def _collect_class(node: ast.ClassDef, path: str) -> _Class:
     cls = _Class(node.name, path)
     # pass 1: declarations (locks, kinds, aliases, attribute types)
@@ -148,6 +245,8 @@ def _collect_class(node: ast.ClassDef, path: str) -> _Class:
             cls.locks.update(_locks_required_of(stmt))
             if stmt.name == "__init__":
                 _scan_init(cls, stmt)
+    # pass 1.5: callback slots (needed before invocation scanning)
+    _collect_cb_slots(cls, node)
     # pass 2: method bodies (acquisitions and calls)
     for stmt in node.body:
         if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
@@ -192,10 +291,72 @@ def _scan_init(cls: _Class, fn: ast.FunctionDef) -> None:
                 cls.attr_types.setdefault(attr, ann[val.id])
 
 
+def _cb_locals(cls: _Class, fn: ast.AST, cb_params: Set[str]) -> Set[str]:
+    """Local names derived from callback slots/params (e.g.
+    ``cbs = list(self._added_cbs)`` then ``for cb in cbs``)."""
+    out: Set[str] = set(cb_params)
+
+    def cbish(expr: ast.AST) -> bool:
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Name) and sub.id in out:
+                return True
+            attr = _self_attr(sub)
+            if attr is not None and attr in cls.cb_slots:
+                return True
+        return False
+
+    for _ in range(2):  # two passes for simple chains
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Assign) and len(sub.targets) == 1 \
+                    and isinstance(sub.targets[0], ast.Name) \
+                    and cbish(sub.value):
+                out.add(sub.targets[0].id)
+            elif isinstance(sub, (ast.For, ast.AsyncFor)) \
+                    and isinstance(sub.target, ast.Name) \
+                    and cbish(sub.iter):
+                out.add(sub.target.id)
+    return out
+
+
 def _scan_method(cls: _Class, fn: ast.AST,
                  required: Tuple[str, ...]) -> None:
     meth = cls.methods.setdefault(fn.name, _Method())
     meth.required = required
+    ptypes = _param_types(fn)
+    cb_names = _cb_locals(cls, fn, _callable_params(fn))
+
+    def bind_target(call: ast.Call) -> Optional[str]:
+        """Class receiving the call, for callback-binding purposes."""
+        fn_ = call.func
+        if isinstance(fn_, ast.Attribute):
+            base = fn_.value
+            if isinstance(base, ast.Name):
+                if base.id == "self":
+                    return cls.name
+                return ptypes.get(base.id)
+            attr = _self_attr(base)
+            if attr is not None:
+                return cls.attr_types.get(attr)
+            return None
+        if isinstance(fn_, ast.Name) and fn_.id[:1].isupper():
+            return fn_.id  # constructor
+        return None
+
+    def record_bindings(call: ast.Call) -> None:
+        tgt = bind_target(call)
+        if tgt is None:
+            return
+        values = list(call.args) + [k.value for k in call.keywords]
+        for arg in values:
+            attr = _self_attr(arg)
+            if attr is not None:
+                cls.cb_bindings.append((tgt, attr))
+            elif isinstance(arg, ast.Lambda):
+                for sub in ast.walk(arg.body):
+                    if isinstance(sub, ast.Call):
+                        m = _self_attr(sub.func)
+                        if m is not None:
+                            cls.cb_bindings.append((tgt, m))
 
     def walk_stmt(node: ast.AST, held: Tuple[str, ...]) -> None:
         if isinstance(node, ast.With):
@@ -228,16 +389,30 @@ def _scan_method(cls: _Class, fn: ast.AST,
             if not isinstance(sub, ast.Call):
                 continue
             fn_ = sub.func
-            # self.method(...)
+            record_bindings(sub)
+            # cb(...) — a Callable parameter or a slot-derived local
+            if isinstance(fn_, ast.Name) and fn_.id in cb_names:
+                meth.cb_calls.append((held, cls.name, sub.lineno))
+                continue
+            # self.method(...) / self._cb_slot(...)
             target = _self_attr(fn_)
             if target is not None:
-                meth.calls.append((held, None, target, sub.lineno))
+                if target in cls.cb_slots:
+                    meth.cb_calls.append((held, cls.name, sub.lineno))
+                else:
+                    meth.calls.append((held, None, target, sub.lineno))
                 continue
-            # self.attr.method(...)
             if isinstance(fn_, ast.Attribute):
+                # self.attr.method(...)
                 attr = _self_attr(fn_.value)
                 if attr is not None:
                     meth.calls.append((held, attr, fn_.attr, sub.lineno))
+                # param.method(...) with an annotated parameter type
+                elif isinstance(fn_.value, ast.Name) \
+                        and fn_.value.id in ptypes:
+                    meth.calls.append(
+                        (held, "type:" + ptypes[fn_.value.id],
+                         fn_.attr, sub.lineno))
 
     for stmt in fn.body:
         walk_stmt(stmt, tuple(required))
@@ -259,6 +434,33 @@ def build_graph(files: Sequence[Tuple[str, str]]) -> LockGraph:
             if isinstance(node, ast.ClassDef):
                 classes[node.name] = _collect_class(node, path)
 
+    # callback pools: every bound method ever passed into class C may
+    # be dispatched from any of C's callback-invocation sites
+    pools: Dict[str, Set[Tuple[str, str]]] = {}
+    for cname, cls in classes.items():
+        for (tgt, mname) in cls.cb_bindings:
+            if tgt in classes and mname in cls.methods:
+                pools.setdefault(tgt, set()).add((cname, mname))
+
+    def resolve_via(cname: str, cls: _Class,
+                    via: Optional[str]) -> Optional[str]:
+        if via is None:
+            return cname
+        if via.startswith("type:"):
+            return via[len("type:"):]
+        return cls.attr_types.get(via)
+
+    def call_targets(cname: str, cls: _Class, via: Optional[str],
+                     callee: str) -> List[Tuple[str, str]]:
+        """(class, method) pairs a call site may dispatch to; a call
+        of a target class's callback slot fans out to its pool."""
+        tgt = resolve_via(cname, cls, via)
+        if tgt is None or tgt not in classes:
+            return []
+        if callee in classes[tgt].cb_slots:
+            return sorted(pools.get(tgt, ()))
+        return [(tgt, callee)]
+
     # transitive acquired-set fixpoint over (class, method)
     acquired: Dict[Tuple[str, str], Set[str]] = {}
     for cname, cls in classes.items():
@@ -271,12 +473,12 @@ def build_graph(files: Sequence[Tuple[str, str]]) -> LockGraph:
         for cname, cls in classes.items():
             for mname, meth in cls.methods.items():
                 acc = acquired[(cname, mname)]
+                targets: List[Tuple[str, str]] = []
                 for (_, via, callee, _) in meth.calls:
-                    tgt_cls = cname if via is None \
-                        else cls.attr_types.get(via)
-                    if tgt_cls is None or tgt_cls not in classes:
-                        continue
-                    key = (tgt_cls, callee)
+                    targets.extend(call_targets(cname, cls, via, callee))
+                for (_, pool_cls, _) in meth.cb_calls:
+                    targets.extend(sorted(pools.get(pool_cls, ())))
+                for key in targets:
                     if key not in acquired:
                         continue
                     extra = acquired[key] - acc
@@ -297,6 +499,21 @@ def build_graph(files: Sequence[Tuple[str, str]]) -> LockGraph:
             return  # re-entering an RLock/Condition is legal
         edges.setdefault((a, b), (path, line))
 
+    def add_call_edges(cls: _Class, held: Tuple[str, ...],
+                       keys: List[Tuple[str, str]], line: int) -> None:
+        held_nodes = {cls.node(h) for h in held}
+        for key in keys:
+            for b in acquired.get(key, set()):
+                if b in held_nodes:
+                    # Re-acquiring an already-held lock adds no new
+                    # ordering — except a plain Lock, where it is a
+                    # guaranteed self-deadlock.
+                    if kinds.get(b) == "lock":
+                        add_edge(b, b, cls.path, line)
+                    continue
+                for a in held_nodes:
+                    add_edge(a, b, cls.path, line)
+
     for cname, cls in classes.items():
         for mname, meth in cls.methods.items():
             for (lock, line, held) in meth.acquires:
@@ -306,21 +523,13 @@ def build_graph(files: Sequence[Tuple[str, str]]) -> LockGraph:
             for (held, via, callee, line) in meth.calls:
                 if not held:
                     continue
-                tgt_cls = cname if via is None else cls.attr_types.get(via)
-                if tgt_cls is None or tgt_cls not in classes:
+                add_call_edges(cls, held,
+                               call_targets(cname, cls, via, callee), line)
+            for (held, pool_cls, line) in meth.cb_calls:
+                if not held:
                     continue
-                key = (tgt_cls, callee)
-                held_nodes = {cls.node(h) for h in held}
-                for b in acquired.get(key, set()):
-                    if b in held_nodes:
-                        # Re-acquiring an already-held lock adds no new
-                        # ordering — except a plain Lock, where it is a
-                        # guaranteed self-deadlock.
-                        if kinds.get(b) == "lock":
-                            add_edge(b, b, cls.path, line)
-                        continue
-                    for a in held_nodes:
-                        add_edge(a, b, cls.path, line)
+                add_call_edges(cls, held,
+                               sorted(pools.get(pool_cls, ())), line)
     return LockGraph(classes, edges, kinds)
 
 

@@ -1,0 +1,753 @@
+"""Resource-ownership static analysis (acquire/release pairing).
+
+The serving hot paths hand-pair acquire/release protocols — RCU
+servable handles, paged KV block reservations, per-tenant quota
+reservations, keep-alive sockets, in-flight request gauges — and every
+leak class fixed in this repo's history was one of these pairs broken
+on an error path. This pass makes the pairing checkable.
+
+Declarations (see the package docstring) come in three zero-cost
+forms, mirroring the lock discipline:
+
+- class-level ``RESOURCES = {"reserve_decode": "release_decode"}``
+  maps (the resource is named after the acquire method),
+- ``@acquires("kv_blocks")`` / ``@releases("kv_blocks")`` /
+  ``@transfers_ownership`` decorators,
+- ``# owns: <resource>`` inline markers on statements that acquire a
+  resource the checker cannot see (raw pool pops), and
+  ``# leak-ok: <reason>`` suppressions with a mandatory reason.
+
+The checker interprets each function body over an exception-aware
+control-flow model (try/except/finally, ``with``, early return,
+``raise``, loops with break/continue) tracking the tokens the function
+acquired, and reports:
+
+- ``leak-on-exception``  — an exception edge can leave the function
+  with the resource still held (the release is not in a ``finally`` /
+  handler that covers the acquire),
+- ``leak-on-early-return`` — some return path (including falling off
+  the end) does not release,
+- ``double-release``     — a path releases the same acquisition twice,
+- ``unbalanced-transfer`` — a resource is released or re-transferred
+  after its ownership was already transferred away,
+- ``bad-suppression`` / ``bad-declaration`` — malformed markers or
+  ``RESOURCES`` maps.
+
+Soundness model (deliberately simple, tuned for this codebase):
+
+- Matching is by callable *name* against the declarations collected
+  from the whole checked file set; a release on a variable must be a
+  method of (or take as argument) the variable that holds the token.
+- ``return``/``yield`` of the token variable transfers ownership to
+  the caller/consumer; storing it into an attribute or container
+  escapes it; passing it to an ``@transfers_ownership`` callee
+  transfers it (and releasing after that is ``unbalanced-transfer``).
+- A release reached only through a ``lambda`` or nested ``def``
+  (deferred handoff: quota-release hooks, stream-worker ``finally``
+  blocks) discharges the obligation — the responsibility moved to the
+  deferred callable, whose own body is checked independently.
+- ``with <acquire>()`` is self-releasing (the context manager owns
+  the pairing) and creates no token.
+- ``except`` handlers are assumed to catch (leaks they *cause* are
+  still seen at their own exits); any statement containing a call can
+  raise.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field, replace
+from typing import Dict, FrozenSet, Iterator, List, Optional, Sequence, \
+    Set, Tuple
+
+from repro.analysis.guarded import Diagnostic
+
+__all__ = ["Registry", "collect_registry", "check_files", "check_source"]
+
+_OWN_RE = re.compile(r"#\s*(owns|leak-ok)\s*:?\s*(.*)$")
+
+_HELD, _MAYBE, _DONE, _XFER = "held", "maybe-held", "released", "transferred"
+
+_DEFER = (ast.Lambda, ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+# ---------------------------------------------------------------------------
+# declarations
+
+
+@dataclass
+class Registry:
+    """Acquire/release/transfer callables collected from all files."""
+
+    acquires: Dict[str, Set[str]] = field(default_factory=dict)
+    releases: Dict[str, Set[str]] = field(default_factory=dict)
+    transfers: Set[str] = field(default_factory=set)
+    # resource -> release callable names (for deferred-handoff matching)
+    by_resource: Dict[str, Set[str]] = field(default_factory=dict)
+
+    def add_pair(self, resource: str, acquire: Optional[str],
+                 release: Optional[str]) -> None:
+        if acquire:
+            self.acquires.setdefault(acquire, set()).add(resource)
+        if release:
+            self.releases.setdefault(release, set()).add(resource)
+            self.by_resource.setdefault(resource, set()).add(release)
+
+    def release_names(self, resources: FrozenSet[str]) -> Set[str]:
+        out: Set[str] = set()
+        for r in resources:
+            out |= self.by_resource.get(r, set())
+        return out
+
+
+def _decorator_name(dec: ast.AST) -> Optional[str]:
+    if isinstance(dec, ast.Attribute):
+        return dec.attr
+    if isinstance(dec, ast.Name):
+        return dec.id
+    return None
+
+
+def collect_registry(trees: Sequence[Tuple[str, ast.Module]],
+                     diags: List[Diagnostic]) -> Registry:
+    reg = Registry()
+    for path, tree in trees:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                for stmt in node.body:
+                    if not isinstance(stmt, ast.Assign):
+                        continue
+                    for tgt in stmt.targets:
+                        if isinstance(tgt, ast.Name) \
+                                and tgt.id == "RESOURCES":
+                            _load_resources(node.name, stmt.value, reg,
+                                            path, diags)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call):
+                        name = _decorator_name(dec.func)
+                        if name not in ("acquires", "releases") \
+                                or not dec.args:
+                            continue
+                        arg = dec.args[0]
+                        if not (isinstance(arg, ast.Constant)
+                                and isinstance(arg.value, str)):
+                            continue
+                        if name == "acquires":
+                            reg.add_pair(arg.value, node.name, None)
+                        else:
+                            reg.add_pair(arg.value, None, node.name)
+                    elif _decorator_name(dec) == "transfers_ownership":
+                        reg.transfers.add(node.name)
+    return reg
+
+
+def _load_resources(cls: str, value: ast.AST, reg: Registry,
+                    path: str, diags: List[Diagnostic]) -> None:
+    if not isinstance(value, ast.Dict):
+        diags.append(Diagnostic(
+            path, value.lineno, "bad-declaration",
+            f"{cls}.RESOURCES must be a literal dict of str -> str"))
+        return
+    for k, v in zip(value.keys, value.values):
+        if (isinstance(k, ast.Constant) and isinstance(k.value, str)
+                and isinstance(v, ast.Constant)
+                and isinstance(v.value, str)):
+            reg.add_pair(k.value, k.value, v.value)
+        else:
+            diags.append(Diagnostic(
+                path, value.lineno, "bad-declaration",
+                f"{cls}.RESOURCES entries must be string literals"))
+
+
+# ---------------------------------------------------------------------------
+# comment markers
+
+
+class _OwnMarkers:
+    """``# owns:`` / ``# leak-ok:`` comments, tokenize-extracted. A
+    comment-only line annotates the line below it."""
+
+    def __init__(self, source: str):
+        self.owns: Dict[int, str] = {}
+        self.leak_ok: Dict[int, str] = {}
+        self.bad: List[Tuple[int, str]] = []
+        comment_only: Dict[int, bool] = {}
+        try:
+            tokens = list(tokenize.generate_tokens(
+                io.StringIO(source).readline))
+        except (tokenize.TokenError, SyntaxError):
+            tokens = []
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            line = tok.start[0]
+            comment_only[line] = tok.line[:tok.start[1]].strip() == ""
+            m = _OWN_RE.match(tok.string)
+            if not m:
+                continue
+            kind, arg = m.group(1), m.group(2).strip()
+            if not arg:
+                self.bad.append((line, kind))
+            elif kind == "owns":
+                self.owns[line] = arg
+            else:
+                self.leak_ok[line] = arg
+        self._comment_only = comment_only
+
+    def _lookup(self, table: Dict[int, str], line: int) -> Optional[str]:
+        if line in table:
+            return table[line]
+        if line - 1 in table and self._comment_only.get(line - 1):
+            return table[line - 1]
+        return None
+
+    def owned(self, line: int) -> Optional[str]:
+        return self._lookup(self.owns, line)
+
+    def suppressed(self, line: int) -> Optional[str]:
+        return self._lookup(self.leak_ok, line)
+
+
+# ---------------------------------------------------------------------------
+# tokens and state
+
+
+@dataclass
+class _Token:
+    tid: int
+    resources: FrozenSet[str]
+    var: Optional[str]
+    line: int
+    status: str = _HELD
+
+    def label(self) -> str:
+        return "/".join(sorted(self.resources))
+
+
+_State = Dict[int, _Token]
+
+
+def _copy(st: _State) -> _State:
+    return {k: replace(v) for k, v in st.items()}
+
+
+def _merge(states: List[_State]) -> _State:
+    out: _State = {}
+    for st in states:
+        for tid, tok in st.items():
+            cur = out.get(tid)
+            if cur is None:
+                out[tid] = replace(tok)
+            elif cur.status != tok.status:
+                if _XFER in (cur.status, tok.status) \
+                        and _DONE in (cur.status, tok.status):
+                    cur.status = _DONE
+                else:
+                    cur.status = _MAYBE
+    # a token missing from some branch was forgotten (escaped) there:
+    # if another branch still holds it, it is only maybe-held.
+    for st in states:
+        for tid, tok in out.items():
+            if tid not in st and tok.status == _HELD:
+                tok.status = _MAYBE
+    return out
+
+
+class _TryFrame:
+    __slots__ = ("catches", "final", "caught")
+
+    def __init__(self, catches: bool, final: Optional[List[ast.stmt]]):
+        self.catches = catches
+        self.final = final
+        self.caught: List[_State] = []
+
+
+class _LoopFrame:
+    __slots__ = ("exits",)
+
+    def __init__(self):
+        self.exits: List[_State] = []
+
+
+def _calls_in(node: ast.AST) -> Iterator[ast.Call]:
+    """Calls that execute when this statement runs (deferred bodies —
+    lambdas, nested defs — excluded)."""
+    if isinstance(node, _DEFER):
+        return
+    if isinstance(node, ast.Call):
+        yield node
+    for child in ast.iter_child_nodes(node):
+        yield from _calls_in(child)
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, _DEFER):
+            continue
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        stack.extend(ast.iter_child_nodes(n))
+    return out
+
+
+def _deferred_parts(node: ast.AST) -> Tuple[Set[str], Set[str]]:
+    """(referenced names, called names) inside lambda / nested-def
+    subtrees of this statement — deferred execution."""
+    refs: Set[str] = set()
+    called: Set[str] = set()
+
+    def inner(n: ast.AST) -> None:
+        for sub in ast.walk(n):
+            if isinstance(sub, ast.Name):
+                refs.add(sub.id)
+            elif isinstance(sub, ast.Call):
+                name = _call_name(sub.func)
+                if name:
+                    called.add(name)
+
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, _DEFER):
+            inner(n)
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+    return refs, called
+
+
+def _call_name(fn: ast.AST) -> Optional[str]:
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def _can_raise(node: ast.AST) -> bool:
+    if any(True for _ in _calls_in(node)):
+        return True
+    return any(isinstance(sub, (ast.Assert, ast.Subscript))
+               for sub in ast.walk(node))
+
+
+# ---------------------------------------------------------------------------
+# the per-function checker
+
+
+class _FnChecker:
+    def __init__(self, reg: Registry, markers: _OwnMarkers, path: str,
+                 diags: List[Diagnostic]):
+        self.reg = reg
+        self.markers = markers
+        self.path = path
+        self.diags = diags
+        self.quiet = 0
+        self.reported: Set[Tuple[int, FrozenSet[str]]] = set()
+        self._next_tid = 0
+
+    # -- diagnostics -------------------------------------------------
+    def _diag(self, line: int, code: str, msg: str) -> None:
+        if self.quiet:
+            return
+        if self.markers.suppressed(line) is not None:
+            return
+        self.diags.append(Diagnostic(self.path, line, code, msg))
+
+    def _leak(self, tok: _Token, code: str, exit_line: int,
+              kind: str) -> None:
+        if self.quiet:
+            return
+        key = (tok.line, tok.resources)
+        if key in self.reported:
+            return
+        if self.markers.suppressed(tok.line) is not None:
+            return
+        self.reported.add(key)
+        rels = sorted(self.reg.release_names(tok.resources)) or ["?"]
+        self.diags.append(Diagnostic(
+            self.path, tok.line, code,
+            f"{tok.label()} acquired here is not released on the {kind} "
+            f"path exiting at line {exit_line} "
+            f"(expected {'/'.join(rels)})"))
+
+    def _check_leaks(self, st: _State, code: str, exit_line: int,
+                     kind: str) -> None:
+        for tok in st.values():
+            if tok.status in (_HELD, _MAYBE):
+                self._leak(tok, code, exit_line, kind)
+
+    # -- entry -------------------------------------------------------
+    def run(self, fn: ast.AST) -> None:
+        end = self._block(fn.body, {}, [])
+        if end is not None:
+            last = fn.body[-1].end_lineno or fn.body[-1].lineno
+            self._check_leaks(end, "leak-on-early-return", last,
+                              "fall-through return")
+
+    # -- statement walk ----------------------------------------------
+    def _block(self, stmts: List[ast.stmt], st: _State,
+               frames: List) -> Optional[_State]:
+        for stmt in stmts:
+            st = self._stmt(stmt, st, frames)
+            if st is None:
+                return None
+        return st
+
+    def _stmt(self, node: ast.stmt, st: _State,
+              frames: List) -> Optional[_State]:
+        if isinstance(node, ast.Return):
+            return self._do_return(node, st, frames)
+        if isinstance(node, ast.Raise):
+            if node.exc is not None:
+                self._maybe_raise(node.exc, st, frames)
+            self._route_exception(_copy(st), frames, node.lineno)
+            return None
+        if isinstance(node, (ast.Break, ast.Continue)):
+            self._do_break(st, frames)
+            return None
+        if isinstance(node, ast.If):
+            return self._do_if(node, st, frames)
+        if isinstance(node, (ast.While, ast.For, ast.AsyncFor)):
+            return self._do_loop(node, st, frames)
+        if isinstance(node, ast.Try):
+            return self._do_try(node, st, frames)
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            return self._do_with(node, st, frames)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            # deferred body: a release inside it discharges (handoff)
+            self._forget_deferred(node, st)
+            return st
+        if hasattr(ast, "Match") and isinstance(node, ast.Match):
+            self._maybe_raise(node.subject, st, frames)
+            self._effects(node.subject, st, node)
+            ends = []
+            for case in node.cases:
+                out = self._block(case.body, _copy(st), frames)
+                if out is not None:
+                    ends.append(out)
+            ends.append(st)  # no case may match
+            return _merge(ends)
+        # simple statement
+        if _can_raise(node):
+            self._maybe_raise(node, st, frames)
+        self._effects(node, st, node)
+        return st
+
+    # -- control-flow pieces -----------------------------------------
+    def _do_return(self, node: ast.Return, st: _State,
+                   frames: List) -> None:
+        fresh: Set[int] = set()
+        if node.value is not None:
+            self._maybe_raise(node.value, st, frames)
+            fresh = self._acquire_pass(node.value, st, None, node.lineno)
+            names = _names_in(node.value)
+            for tok in st.values():
+                if tok.tid in fresh or (tok.var and tok.var in names):
+                    if tok.status in (_HELD, _MAYBE):
+                        tok.status = _DONE  # ownership returns to caller
+        st2 = self._apply_finallys(_copy(st), frames)
+        self._check_leaks(st2, "leak-on-early-return", node.lineno,
+                          "return")
+        return None
+
+    def _do_break(self, st: _State, frames: List) -> None:
+        st2 = _copy(st)
+        for i in range(len(frames) - 1, -1, -1):
+            frame = frames[i]
+            if isinstance(frame, _LoopFrame):
+                frame.exits.append(st2)
+                return
+            if isinstance(frame, _TryFrame) and frame.final:
+                st2 = self._quiet_apply(frame.final, st2)
+        # break/continue outside a loop: syntactically invalid; ignore
+
+    def _do_if(self, node: ast.If, st: _State,
+               frames: List) -> Optional[_State]:
+        self._maybe_raise(node.test, st, frames)
+        self._effects(node.test, st, node)
+        a = self._block(node.body, _copy(st), frames)
+        b = self._block(node.orelse, _copy(st), frames)
+        ends = [x for x in (a, b) if x is not None]
+        return _merge(ends) if ends else None
+
+    def _do_loop(self, node, st: _State, frames: List) -> Optional[_State]:
+        header = node.test if isinstance(node, ast.While) else node.iter
+        self._maybe_raise(header, st, frames)
+        self._effects(header, st, node)
+        lf = _LoopFrame()
+        body_end = self._block(node.body, _copy(st), frames + [lf])
+        ends = [st]                       # zero iterations
+        if body_end is not None:
+            ends.append(body_end)
+        ends.extend(lf.exits)
+        merged = _merge(ends)
+        if node.orelse:
+            out = self._block(node.orelse, merged, frames)
+            return out
+        return merged
+
+    def _do_try(self, node: ast.Try, st: _State,
+                frames: List) -> Optional[_State]:
+        final = node.finalbody or None
+        tf = _TryFrame(bool(node.handlers), final)
+        after = _TryFrame(False, final)   # handler/else region
+        body_end = self._block(node.body, _copy(st), frames + [tf])
+        ends: List[_State] = []
+        if body_end is not None:
+            if node.orelse:
+                out = self._block(node.orelse, body_end, frames + [after])
+                if out is not None:
+                    ends.append(out)
+            else:
+                ends.append(body_end)
+        if node.handlers and tf.caught:
+            entry = _merge(tf.caught)
+            for handler in node.handlers:
+                out = self._block(handler.body, _copy(entry),
+                                  frames + [after])
+                if out is not None:
+                    ends.append(out)
+        if final:
+            if not ends:
+                # every path inside terminated; still walk the finally
+                # once for its own diagnostics
+                seed = _merge(tf.caught) if tf.caught else {}
+                self._block(final, seed, frames)
+                return None
+            return self._block(final, _merge(ends), frames)
+        return _merge(ends) if ends else None
+
+    def _do_with(self, node, st: _State, frames: List) -> Optional[_State]:
+        for item in node.items:
+            self._maybe_raise(item.context_expr, st, frames)
+            self._effects(item.context_expr, st, node, in_with=True)
+        return self._block(node.body, st, frames)
+
+    # -- exception routing -------------------------------------------
+    def _maybe_raise(self, node: ast.AST, st: _State,
+                     frames: List) -> None:
+        if not _can_raise(node):
+            return
+        # On the exception edge, acquires in this statement have not
+        # happened yet, but releases are modelled as completed (the
+        # release call itself is treated as atomic-success) — else
+        # every `finally: x.release()` would flag itself.
+        exc = _copy(st)
+        self.quiet += 1
+        try:
+            self._release_pass(node, exc, set())
+        finally:
+            self.quiet -= 1
+        self._route_exception(exc, frames, node.lineno)
+
+    def _route_exception(self, st: _State, frames: List,
+                         line: int) -> None:
+        for frame in reversed(frames):
+            if isinstance(frame, _LoopFrame):
+                continue
+            if frame.catches:
+                frame.caught.append(st)
+                return
+            if frame.final:
+                st = self._quiet_apply(frame.final, st)
+        self._check_leaks(st, "leak-on-exception", line, "exception")
+
+    def _apply_finallys(self, st: _State, frames: List) -> _State:
+        for frame in reversed(frames):
+            if isinstance(frame, _TryFrame) and frame.final:
+                st = self._quiet_apply(frame.final, st)
+        return st
+
+    def _quiet_apply(self, stmts: List[ast.stmt], st: _State) -> _State:
+        """Apply a finally body's *effects* to a state copy, without
+        emitting diagnostics (the body is also walked for real once)."""
+        self.quiet += 1
+        try:
+            out = self._block(stmts, st, [])
+        finally:
+            self.quiet -= 1
+        return out if out is not None else st
+
+    # -- statement effects -------------------------------------------
+    def _forget_deferred(self, node: ast.AST, st: _State) -> None:
+        refs, called = _deferred_parts(node)
+        if not refs and not called:
+            return
+        for tid in list(st):
+            tok = st[tid]
+            if tok.var is not None and tok.var in refs:
+                del st[tid]
+            elif called & self.reg.release_names(tok.resources):
+                del st[tid]
+
+    def _effects(self, node: ast.AST, st: _State, stmt: ast.stmt,
+                 in_with: bool = False) -> None:
+        self._forget_deferred(node, st)
+        fresh = set() if in_with else \
+            self._acquire_pass(node, st, stmt, stmt.lineno)
+        self._release_pass(node, st, fresh)
+        self._escape_pass(node, st, stmt)
+
+    def _acquire_pass(self, node: ast.AST, st: _State,
+                      stmt: Optional[ast.stmt], line: int) -> Set[int]:
+        """Create tokens for declared acquire calls / ``# owns:``
+        markers in this statement; returns fresh token ids."""
+        var = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            var = stmt.targets[0].id
+        elif isinstance(stmt, ast.AnnAssign) \
+                and isinstance(stmt.target, ast.Name):
+            var = stmt.target.id
+        fresh: Set[int] = set()
+        for call in _calls_in(node):
+            name = _call_name(call.func)
+            resources = self.reg.acquires.get(name or "")
+            if not resources:
+                continue
+            if self.markers.suppressed(call.lineno) is not None:
+                continue
+            fresh.add(self._add_token(st, frozenset(resources), var,
+                                      call.lineno))
+        owned = self.markers.owned(line)
+        if owned is not None and stmt is not None \
+                and self.markers.suppressed(line) is None:
+            fresh.add(self._add_token(st, frozenset({owned}), var, line))
+        return fresh
+
+    def _add_token(self, st: _State, resources: FrozenSet[str],
+                   var: Optional[str], line: int) -> int:
+        self._next_tid += 1
+        st[self._next_tid] = _Token(self._next_tid, resources, var, line)
+        return self._next_tid
+
+    def _release_pass(self, node: ast.AST, st: _State,
+                      fresh: Set[int]) -> None:
+        for call in _calls_in(node):
+            name = _call_name(call.func)
+            if name is None:
+                continue
+            arg_names = {a.id for a in call.args
+                         if isinstance(a, ast.Name)}
+            arg_names |= {k.value.id for k in call.keywords
+                          if isinstance(k.value, ast.Name)}
+            if name in self.reg.transfers:
+                self._transfer(call, st, arg_names, fresh)
+            resources = self.reg.releases.get(name)
+            if resources:
+                self._release(call, st, frozenset(resources),
+                              arg_names)
+
+    def _transfer(self, call: ast.Call, st: _State,
+                  arg_names: Set[str], fresh: Set[int]) -> None:
+        for tok in st.values():
+            direct_arg = tok.tid in fresh and tok.var is None
+            if not direct_arg and (tok.var is None
+                                   or tok.var not in arg_names):
+                continue
+            if tok.status == _XFER:
+                self._diag(call.lineno, "unbalanced-transfer",
+                           f"{tok.label()} (acquired at line {tok.line}) "
+                           "transferred again after its ownership was "
+                           "already transferred")
+            elif tok.status in (_HELD, _MAYBE):
+                tok.status = _XFER
+
+    def _release(self, call: ast.Call, st: _State,
+                 resources: FrozenSet[str], arg_names: Set[str]) -> None:
+        recv = None
+        if isinstance(call.func, ast.Attribute) \
+                and isinstance(call.func.value, ast.Name):
+            recv = call.func.value.id
+
+        def matches(tok: _Token) -> bool:
+            if not (tok.resources & resources):
+                return False
+            if tok.var is not None:
+                return tok.var == recv or tok.var in arg_names
+            return True
+
+        candidates = [t for t in st.values() if matches(t)]
+        if not candidates:
+            return  # releasing on behalf of a caller — not ours to check
+        live = [t for t in candidates if t.status in (_HELD, _MAYBE)]
+        if live:
+            # consume the most recent acquisition
+            max(live, key=lambda t: t.line).status = _DONE
+            return
+        xfer = [t for t in candidates if t.status == _XFER]
+        if xfer:
+            tok = xfer[-1]
+            self._diag(call.lineno, "unbalanced-transfer",
+                       f"{tok.label()} (acquired at line {tok.line}) "
+                       "released after its ownership was transferred "
+                       "away")
+            return
+        tok = candidates[-1]
+        self._diag(call.lineno, "double-release",
+                   f"{tok.label()} (acquired at line {tok.line}) "
+                   "already released on this path")
+
+    def _escape_pass(self, node: ast.AST, st: _State,
+                     stmt: ast.stmt) -> None:
+        escaped: Set[str] = set()
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                if isinstance(tgt, (ast.Attribute, ast.Subscript,
+                                    ast.Tuple, ast.List)):
+                    escaped |= _names_in(stmt.value)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None \
+                and isinstance(stmt.target, (ast.Attribute, ast.Subscript)):
+            escaped |= _names_in(stmt.value)
+        for sub in ast.walk(node) if not isinstance(node, _DEFER) else ():
+            if isinstance(sub, (ast.Yield, ast.YieldFrom)) \
+                    and sub.value is not None:
+                escaped |= _names_in(sub.value)
+        if not escaped:
+            return
+        for tid in list(st):
+            tok = st[tid]
+            if tok.var is not None and tok.var in escaped:
+                del st[tid]
+
+
+# ---------------------------------------------------------------------------
+# entry points
+
+
+def check_files(pairs: Sequence[Tuple[str, str]]) -> List[Diagnostic]:
+    """Check ``(path, source)`` pairs; declarations are collected from
+    the whole set, then every function body is verified."""
+    diags: List[Diagnostic] = []
+    trees: List[Tuple[str, ast.Module]] = []
+    sources: Dict[str, str] = {}
+    for path, source in pairs:
+        try:
+            trees.append((path, ast.parse(source, filename=path)))
+            sources[path] = source
+        except SyntaxError as exc:
+            diags.append(Diagnostic(path, exc.lineno or 0, "syntax-error",
+                                    str(exc.msg)))
+    reg = collect_registry(trees, diags)
+    for path, tree in trees:
+        markers = _OwnMarkers(sources[path])
+        for line, kind in markers.bad:
+            diags.append(Diagnostic(
+                path, line, "bad-suppression",
+                f"'# {kind}:' requires a reason"))
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _FnChecker(reg, markers, path, diags).run(node)
+    diags.sort(key=lambda d: (d.path, d.line, d.code))
+    return diags
+
+
+def check_source(source: str, path: str = "<string>") -> List[Diagnostic]:
+    return check_files([(path, source)])

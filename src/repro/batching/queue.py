@@ -31,7 +31,7 @@ import time
 from collections import deque
 from typing import Any, Callable, Dict, Generic, List, Optional, TypeVar
 
-from repro.analysis import locks_required
+from repro.analysis import acquires, locks_required, releases
 
 T = TypeVar("T")
 
@@ -99,14 +99,22 @@ class BatchTask(Generic[T]):
     result: Any = None
     error: Optional[BaseException] = None
 
+    # runtime=False on the batch_task pair: a popped batch's tasks are
+    # completed by the *scheduler* thread while the submitter blocks in
+    # wait() — the runtime tracker's caller-retires model doesn't fit,
+    # but the static pass still verifies every enqueue-side holder
+    # either returns the task or waits on it.
+    @releases("batch_task", runtime=False)
     def set_result(self, result: Any) -> None:
         self.result = result
         self._event.set()
 
+    @releases("batch_task", runtime=False)
     def set_error(self, error: BaseException) -> None:
         self.error = error
         self._event.set()
 
+    @releases("batch_task", runtime=False)
     def wait(self, timeout: Optional[float] = None) -> Any:
         if not self._event.wait(timeout):
             raise TimeoutError("batched request timed out")
@@ -159,6 +167,7 @@ class BatchingQueue(Generic[T]):
         self.stats = {"enqueued": 0, "batches": 0, "shed": 0,
                       "padded_examples": 0, "deadline_dropped": 0}
 
+    @acquires("batch_task", runtime=False)
     def enqueue(self, payload: T, size: int = 1,
                 tenant: str = DEFAULT_TENANT,
                 deadline_t: Optional[float] = None) -> BatchTask:

@@ -29,7 +29,7 @@ from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.analysis import locks_required
+from repro.analysis import acquires, locks_required
 from repro.core.loader import Loader
 from repro.core.rcu import RcuMap
 from repro.core.servable import (
@@ -417,6 +417,7 @@ class AspiredVersionsManager:
     # ------------------------------------------------------------------
     # Inference-side API — wait-free lookup + refcounted handles.
     # ------------------------------------------------------------------
+    @acquires("servable_handle")
     def get_servable_handle(self, name: str,
                             version: Optional[int] = None,
                             *, label: Optional[str] = None

@@ -13,6 +13,13 @@ This is exactly RCU's grace-period-free publish side; the grace period
 (safe reclamation of the old snapshot) is handled by Python GC, and safe
 reclamation of *servables* is handled by the refcounted handles, not by
 the map.
+
+Ownership: the map itself hands out no resources — the handles served
+*through* it are the tracked resource. ``@acquires("servable_handle")``
+on ``AspiredVersionsManager.get_servable_handle`` and
+``@releases("servable_handle")`` on ``ServableHandle.release`` declare
+that pair; ``python -m repro.analysis own src`` checks every holder,
+and ``REPRO_LEAK_CHECK=1`` stamps live handles at runtime.
 """
 from __future__ import annotations
 

@@ -13,6 +13,8 @@ import threading
 import time
 from typing import Any, Optional
 
+from repro.analysis import releases
+
 
 @dataclasses.dataclass(frozen=True, order=True)
 class ServableId:
@@ -142,6 +144,7 @@ class ServableHandle:
     def id(self) -> ServableId:
         return self._entry.servable.id
 
+    @releases("servable_handle")
     def release(self) -> None:
         if not self._released:
             self._released = True

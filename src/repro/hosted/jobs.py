@@ -25,7 +25,7 @@ import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.analysis import locks_required
+from repro.analysis import acquires, locks_required, releases
 from repro.core import AspiredVersion, AspiredVersionsManager, Source
 from repro.serving import api
 from repro.serving.api import ModelSpec, PredictionService
@@ -185,6 +185,7 @@ class JobReplica:
             return self._client
 
     # -- Router-facing ---------------------------------------------------------
+    @acquires("replica_request")
     def _begin(self) -> float:
         """Account one request in: simulated latency, request counter
         (autoscaler qps signal), outstanding gauge. Returns the start
@@ -198,6 +199,7 @@ class JobReplica:
             self._outstanding += 1
         return time.monotonic()
 
+    @releases("replica_request")
     def _finish(self, t0: float) -> None:
         with self._load_lock:
             self._outstanding -= 1

@@ -34,6 +34,7 @@ import threading
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from typing import Any, Dict, Iterator, List, Optional
 
+from repro.analysis import acquires, releases
 from repro.hosted.jobs import JobReplica, ServingJob
 from repro.hosted.synchronizer import Synchronizer
 from repro.serving.api import (GenerateRequest, ModelSpec, NotFound,
@@ -122,12 +123,14 @@ class Router:
             return replica.infer(spec, method, request, context=context)
         return client.call(spec, method, request, context=context)
 
+    @acquires("replica_slot")
     def _acquire(self, replica: JobReplica) -> int:
         key = id(replica)
         with self._load_lock:
             self._outstanding[key] = self._outstanding.get(key, 0) + 1
         return key
 
+    @releases("replica_slot")
     def _release(self, key: int) -> None:
         with self._load_lock:
             n = self._outstanding.get(key)

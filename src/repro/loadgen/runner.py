@@ -68,6 +68,9 @@ class RouterTarget:
         if sreq.method == "generate_stream":
             t0 = time.monotonic()
             first: Optional[float] = None
+            # Must be closed on every exit so the replica's outstanding
+            # gauge and the server's handle drop.
+            # owns: token_stream
             stream = self.router.stream_generate(
                 spec, sreq.tokens, max_new=sreq.max_new,
                 context=sreq.context)
@@ -76,9 +79,7 @@ class RouterTarget:
                     if first is None:
                         first = time.monotonic() - t0
             finally:
-                close = getattr(stream, "close", None)
-                if close is not None:
-                    close()
+                stream.close()
             return first
         raise ValueError(f"unknown method {sreq.method!r}")
 
@@ -113,6 +114,9 @@ class ClientTarget:
         if sreq.method == "generate_stream":
             t0 = time.monotonic()
             first: Optional[float] = None
+            # Closing tears down the dedicated stream socket (client)
+            # or generator (inproc).
+            # owns: token_stream
             stream = self.client.generate(api.GenerateRequest(
                 spec, tokens=sreq.tokens, max_new=sreq.max_new,
                 stream=True, context=sreq.context))
@@ -121,9 +125,7 @@ class ClientTarget:
                     if first is None:
                         first = time.monotonic() - t0
             finally:
-                close = getattr(stream, "close", None)
-                if close is not None:
-                    close()
+                stream.close()
             return first
         raise ValueError(f"unknown method {sreq.method!r}")
 

@@ -47,6 +47,7 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis import acquires, releases, transfers_ownership
 from repro.batching import BatchingOptions, BatchingSession, \
     SharedBatchScheduler
 from repro.core import (AspiredVersionsManager, FileSystemSource,
@@ -241,6 +242,9 @@ class TokenStream:
     def cancel(self) -> None:
         self._cancel.set()
 
+    # runtime=False: streams are acquired via generate(stream=True),
+    # which the tracker already observes through the handle/load pair.
+    @releases("token_stream", runtime=False)
     def close(self) -> None:
         self.cancel()
         self._gen.close()
@@ -360,12 +364,14 @@ class LoadTracker:
         self._inflight = 0
         self._total = 0
 
+    @acquires("load_slot")
     def begin(self) -> float:
         with self._lock:
             self._inflight += 1
             self._total += 1
         return time.monotonic()
 
+    @releases("load_slot")
     def end(self, t0: float) -> None:
         dt = time.monotonic() - t0
         with self._lock:
@@ -459,6 +465,9 @@ class PredictionService:
         self._closed = False
 
     # -- handle / error mapping -------------------------------------------
+    # runtime=False: delegates to the manager's (runtime-tracked)
+    # get_servable_handle — wrapping both would double-register one hold.
+    @acquires("servable_handle", runtime=False)
     def _acquire(self, spec: ModelSpec) -> ServableHandle:
         _validate_spec(spec)
         # unguarded-ok: monotonic shutdown flag; a stale False only widens the drain window
@@ -636,30 +645,10 @@ class PredictionService:
             raise InvalidArgument("stream=True requires token prompts")
         if req.max_new < 1:
             raise InvalidArgument("max_new must be >= 1")
-        load_t0 = self.load.begin()
-        load_owned = True
-        handle = None
         try:
-            ctx, deadline_t = self._enter(req.context)
-            handle = self._acquire(req.model_spec)
-            s = handle.servable
-            self._maybe_attach_engine(req.model_spec.name, s, req)
             if req.stream:
-                stream = self._generate_stream(handle, s, req, ctx,
-                                               deadline_t, load_t0)
-                # ownership of the handle AND the load slot moved to the
-                # stream worker — inflight stays up until it finishes.
-                handle = None
-                load_owned = False
-                return stream
-            with tenant_scope(ctx.tenant):
-                out = s.call("generate", {
-                    "tokens": req.tokens, "embeds": req.embeds,
-                    "max_new": req.max_new, "sampling": req.sampling,
-                    "timeout_s": req.timeout_s, "tenant": ctx.tenant,
-                    "priority": ctx.priority, "deadline_t": deadline_t})
-            self.tenancy.account_served(ctx.tenant)
-            return GenerateResponse(resolved_spec(s), out)
+                return self._generate_stream_rpc(req)
+            return self._generate_blocking(req)
         except ServingError:
             # Already typed (e.g. _enter's ResourceExhausted, which also
             # subclasses RuntimeError) — must not fall through to the
@@ -673,12 +662,47 @@ class PredictionService:
             raise InvalidArgument(str(exc)) from exc
         except RuntimeError as exc:
             raise Unavailable(str(exc)) from exc
-        finally:
-            if handle is not None:
-                handle.release()
-            if load_owned:
-                self.load.end(load_t0)
 
+    def _generate_blocking(self, req: GenerateRequest) -> GenerateResponse:
+        load_t0 = self.load.begin()
+        try:
+            ctx, deadline_t = self._enter(req.context)
+            with self._acquire(req.model_spec) as s:
+                self._maybe_attach_engine(req.model_spec.name, s, req)
+                with tenant_scope(ctx.tenant):
+                    out = s.call("generate", {
+                        "tokens": req.tokens, "embeds": req.embeds,
+                        "max_new": req.max_new, "sampling": req.sampling,
+                        "timeout_s": req.timeout_s, "tenant": ctx.tenant,
+                        "priority": ctx.priority,
+                        "deadline_t": deadline_t})
+                self.tenancy.account_served(ctx.tenant)
+                return GenerateResponse(resolved_spec(s), out)
+        finally:
+            self.load.end(load_t0)
+
+    def _generate_stream_rpc(self, req: GenerateRequest) -> "TokenStream":
+        # Each acquisition is paired structurally: the handle and the
+        # load slot either move to the stream worker (which holds the
+        # inflight gauge up until it finishes) or are released on the
+        # exception edge that kept them here.
+        load_t0 = self.load.begin()
+        try:
+            ctx, deadline_t = self._enter(req.context)
+            handle = self._acquire(req.model_spec)
+            try:
+                s = handle.servable
+                self._maybe_attach_engine(req.model_spec.name, s, req)
+                return self._generate_stream(handle, s, req, ctx,
+                                             deadline_t, load_t0)
+            except BaseException:
+                handle.release()   # idempotent if the callee released
+                raise
+        except BaseException:
+            self.load.end(load_t0)
+            raise
+
+    @transfers_ownership
     def _generate_stream(self, handle: ServableHandle, s: Servable,
                          req: GenerateRequest, ctx: RequestContext,
                          deadline_t: Optional[float],

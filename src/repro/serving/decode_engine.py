@@ -86,7 +86,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis import locks_required
+from repro.analysis import locks_required, releases
 from repro.configs.base import ModelConfig
 from repro.models import model as MD
 from repro.serving.generation import (GenRequest, SamplingParams,
@@ -462,8 +462,10 @@ class DecodeScheduler:
                 if slot is not None:
                     slot.req._fail(err)
                     self._slots[i] = None
-                    self._free_blocks.extend(self._slot_blocks[i])
-                    self._slot_blocks[i] = []
+                # The ledger may hold a reservation even for an empty
+                # slot (admission raced the stop) — always reclaim.
+                self._free_blocks.extend(self._slot_blocks[i])
+                self._slot_blocks[i] = []
             for q in self._queues.values():
                 for req in q:
                     req._fail(err)
@@ -498,7 +500,12 @@ class DecodeScheduler:
                     if slot is not None:
                         self._release_slot(i)
                         slot.req._fail(exc)
+                    elif self._slot_blocks[i]:  # unguarded-ok: engine thread is the sole slot mutator
+                        # Reservation orphaned mid-admission (raised
+                        # between the pool pop and the slot publish).
+                        self._release_slot(i)
 
+    @releases("kv_block", runtime=False)
     def _release_slot(self, i: int) -> None:
         """Free slot ``i``: detach its block-table row (so its masked
         per-tick writes clamp onto the trash block, never a reallocated
@@ -664,7 +671,14 @@ class DecodeScheduler:
                     if need > len(self._free_blocks):
                         self._stats["admission_waits"] += 1
                         return
+                    # Raw pool pop, recorded in the slot ledger in the
+                    # same locked section: ownership of popped blocks
+                    # lives in _slot_blocks, never in a local, so every
+                    # exit — prefill failure, engine-tick crash, stop()
+                    # — reclaims through _release_slot (the registered
+                    # kv_block release).
                     blocks = [self._free_blocks.pop() for _ in range(need)]
+                    self._slot_blocks[i] = blocks
                 self._take_locked(req)
             rng = req.sampling.make_rng() if req.sampling else None
             if not self.paged:
@@ -708,12 +722,10 @@ class DecodeScheduler:
                     np.int32(0))
             except BaseException as exc:
                 # As above — and a *successful* partial prefill may have
-                # published the table row, so detach it before the
-                # blocks go back to the free list.
+                # published the table row, so _release_slot detaches it
+                # before the blocks go back to the free list.
                 log.warning("prefill failed, failing request: %s", exc)
-                self._pool = self._release_fn(self._pool, i)
-                with self._cond:
-                    self._free_blocks.extend(blocks)
+                self._release_slot(i)
                 req._fail(exc)
                 continue
             if chunked:
@@ -722,7 +734,6 @@ class DecodeScheduler:
                              pos=int(first.shape[0]), table_row=table_row)
                 with self._cond:
                     self._slots[i] = slot
-                    self._slot_blocks[i] = blocks
                     self._stats["prefill_chunks"] += 1
                 continue
             tok = sample_token(np.asarray(logits)[0], req.sampling, rng)
@@ -730,7 +741,6 @@ class DecodeScheduler:
                          table_row=table_row)
             with self._cond:
                 self._slots[i] = slot
-                self._slot_blocks[i] = blocks
                 self._stats["prefills"] += 1
             req._emit_token(0, tok)
             self._maybe_retire(i, slot)

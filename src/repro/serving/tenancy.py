@@ -40,7 +40,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, Optional
 
-from repro.analysis import locks_required
+from repro.analysis import acquires, locks_required, releases
 from repro.batching.queue import DeadlineExceededError
 
 __all__ = [
@@ -190,6 +190,7 @@ class TenancyManager:
                     f"tenant {tenant!r} exceeded {quota.rps} rps")
             acct.bucket -= 1.0
 
+    @acquires("predict_quota")
     def acquire_predict(self, tenant: str) -> None:
         with self._lock:
             quota = self._quotas.get(tenant, self._default)
@@ -203,10 +204,12 @@ class TenancyManager:
                     f"predict(s) in flight")
             acct.predicts_inflight += 1
 
+    @releases("predict_quota")
     def release_predict(self, tenant: str) -> None:
         with self._lock:
             self._acct(tenant).predicts_inflight -= 1
 
+    @acquires("decode_quota")
     def reserve_decode(self, tenant: str, blocks: int) -> None:
         """Reserve one decode-slot admission plus its worst-case KV
         blocks (mirrors the engine's reserve-at-admission accounting:
@@ -234,6 +237,7 @@ class TenancyManager:
             acct.decodes_inflight += 1
             acct.blocks_held += blocks
 
+    @releases("decode_quota")
     def release_decode(self, tenant: str, blocks: int) -> None:
         with self._lock:
             acct = self._acct(tenant)

@@ -51,6 +51,7 @@ from urllib.parse import parse_qs
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, Iterator, Optional, Tuple, Union
 
+from repro.analysis import acquires, releases
 from repro.serving import api, wire
 
 log = logging.getLogger(__name__)
@@ -201,6 +202,7 @@ class _Handler(BaseHTTPRequestHandler):
         owner: "HttpServingServer" = self.server.owner
         try:
             raw = self._read_raw()          # always drain the body
+            # leak-ok: False (draining) takes no slot; finally pairs True
             if not owner.enter_request():
                 # Draining: a clean typed 503, never a connection reset.
                 self._send_error_json(
@@ -352,6 +354,7 @@ class HttpServingServer:
 
     GUARDED_BY = {"_inflight": "_lock", "draining": "_lock",
                   "requests_served": "_lock"}
+    RESOURCES = {"enter_request": "exit_request"}
 
     def __init__(self, prediction: Any,
                  models: Optional[api.ModelService] = None, *,
@@ -491,6 +494,7 @@ class ServingClient:
         self._gen = 0
 
     # -- transport ---------------------------------------------------------
+    @acquires("client_conn")
     def _new_connection(self) -> HTTPConnection:
         conn = HTTPConnection(*self._addr, timeout=self._timeout)
         with self._conns_lock:
@@ -518,6 +522,7 @@ class ServingClient:
         self._local.gen = gen
         return conn, True
 
+    @releases("client_conn")
     def _discard(self, conn: HTTPConnection) -> None:
         """Close a connection and stop tracking it — dead connections
         must not accumulate in a long-lived client (the Router and
@@ -700,15 +705,17 @@ class ServingClient:
         dead) threads — not just the calling thread's. The generation
         bump keeps surviving threads from resurrecting their cached
         conn objects as untracked sockets; a client used again after
-        close() simply opens fresh, tracked connections."""
+        close() simply opens fresh, tracked connections.
+
+        Every close routes through ``_discard`` — the single release
+        path — so the ownership tracker sees each connection retired
+        exactly once (closing the swapped-out set directly used to
+        leave the per-connection records live)."""
         with self._conns_lock:
             conns, self._conns = self._conns, set()
             self._gen += 1
         for conn in conns:
-            try:
-                conn.close()
-            except Exception:       # noqa: BLE001 — best-effort teardown
-                pass
+            self._discard(conn)
 
 
 __all__ = [

@@ -1,6 +1,7 @@
 # NB: no XLA_FLAGS here on purpose — smoke tests and benches must see
 # the real single CPU device; only launch/dryrun.py forces 512
 # placeholder devices (and only in its own process).
+import json
 import os
 import warnings
 
@@ -20,6 +21,17 @@ if _LOCK_CHECK:
 
     instrumented.install()
 
+# Opt-in runtime resource-leak checking (CI runs the suite once with
+# this on): @acquires/@releases call sites are routed through the
+# leak tracker, which stamps every live resource with its acquisition
+# stack, tenant, and age. The env var must be set before repro modules
+# are imported (decoration-time wrapping); default the over-age limit
+# up — individual tests legitimately hold e.g. a client connection for
+# minutes — the session-end empty check is the contract here.
+_LEAK_CHECK = os.environ.get("REPRO_LEAK_CHECK") == "1"
+if _LEAK_CHECK:
+    os.environ.setdefault("REPRO_LEAK_AGE_S", "900")
+
 
 @pytest.fixture(autouse=True, scope="session")
 def _lock_discipline():
@@ -35,3 +47,47 @@ def _lock_discipline():
     assert not violations, (
         "lock-discipline violations observed during the test run:\n"
         + "\n".join(f"  - {v}" for v in violations))
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _resource_ownership():
+    """Session-end teardown contract under REPRO_LEAK_CHECK=1: every
+    tracked acquire was released — ``live_resources()`` must be empty.
+    Each leaked record's acquisition stack is in the failure message."""
+    yield
+    if not _LEAK_CHECK:
+        return
+    import gc
+
+    from repro.analysis import leaktrack
+
+    # Handles parked on about-to-die objects release via __del__;
+    # collect so a test that dropped its last reference moments ago
+    # isn't misreported as a leak.
+    gc.collect()
+    leaktrack.assert_empty()
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """Dump the lock-contention ranking when asked (CI uploads it as an
+    artifact): REPRO_LOCK_CONTENTION_OUT=<path> with REPRO_LOCK_CHECK=1
+    writes the per-creation-site wait totals as JSON."""
+    out = os.environ.get("REPRO_LOCK_CONTENTION_OUT")
+    if not out or not _LOCK_CHECK:
+        return
+    from repro.analysis import instrumented
+
+    rows = instrumented.contention_report()
+    with open(out, "w", encoding="utf-8") as fh:
+        json.dump(rows, fh, indent=2)
+    top = rows[:5]
+    if top:
+        tr = session.config.pluginmanager.getplugin("terminalreporter")
+        lines = [f"  {r['site']}: {r['acquires']} acquires, "
+                 f"{r['total_wait_s'] * 1e3:.1f}ms total wait, "
+                 f"{r['max_wait_s'] * 1e3:.1f}ms max" for r in top]
+        msg = "top contended lock sites:\n" + "\n".join(lines)
+        if tr is not None:
+            tr.write_line(msg)
+        else:
+            print(msg)

@@ -337,11 +337,14 @@ def runtime():
     with instrumented._graph_mu:
         saved_log = list(instrumented._violation_log)
         saved_succ = {k: set(v) for k, v in instrumented._succ.items()}
+        saved_cont = {k: list(v) for k, v in instrumented._contention.items()}
     yield instrumented
     with instrumented._graph_mu:
         instrumented._violation_log[:] = saved_log
         instrumented._succ.clear()
         instrumented._succ.update(saved_succ)
+        instrumented._contention.clear()
+        instrumented._contention.update(saved_cont)
 
 
 class TestInstrumentedLocks:
@@ -557,3 +560,106 @@ class TestCli:
         with lq:
             with pytest.raises(instrumented.LockOrderViolation):
                 lp.acquire()
+
+
+# ---------------------------------------------------------------------------
+# callback-carried lock-order edges
+
+
+class TestCallbackLockOrder:
+    # The PR-8 follow-on: a lock acquired inside a *callback* must
+    # contribute ordering edges at every dispatch site the callback may
+    # run from — the manager/event-bus shape where the inversion hides
+    # behind a function-valued attribute.
+    ABBA = """\
+        import threading
+        from typing import Callable
+
+
+        class Notifier:
+            def __init__(self):
+                self._mu_b = threading.Lock()
+                self._subs: list = []
+
+            def subscribe(self, fn: Callable[[], None]) -> None:
+                self._subs.append(fn)
+
+            def fire(self) -> None:
+                with self._mu_b:
+                    for cb in list(self._subs):
+                        cb()
+
+
+        class Listener:
+            def __init__(self, notifier: Notifier):
+                self._mu_a = threading.Lock()
+                self.notifier = notifier
+                notifier.subscribe(self._on_event)
+
+            def _on_event(self) -> None:
+                with self._mu_a:
+                    pass
+
+            def poke(self) -> None:
+                with self._mu_a:
+                    self.notifier.fire()
+        """
+
+    def test_callback_abba_cycle_detected(self):
+        diags = cycles(self.ABBA)
+        assert diags and all(d.code == "lock-cycle" for d in diags)
+        msgs = " ; ".join(d.message for d in diags)
+        # The callback-carried edge: fire() holds _mu_b while the pooled
+        # listener callback acquires _mu_a...
+        assert "Notifier._mu_b -> Listener._mu_a" in msgs
+        # ...inverting poke()'s _mu_a-held call into fire().
+        assert "Listener._mu_a -> Notifier._mu_b" in msgs
+
+    def test_dispatch_outside_locks_is_clean(self):
+        # Snapshot-then-dispatch on both sides breaks every edge.
+        safe = self.ABBA.replace("""\
+                with self._mu_b:
+                    for cb in list(self._subs):
+                        cb()
+""", """\
+                with self._mu_b:
+                    subs = list(self._subs)
+                for cb in subs:
+                    cb()
+""").replace("""\
+                with self._mu_a:
+                    self.notifier.fire()
+""", """\
+                with self._mu_a:
+                    pass
+                self.notifier.fire()
+""")
+        assert cycles(safe) == []
+
+
+# ---------------------------------------------------------------------------
+# lock-contention sampling
+
+
+class TestContentionSampling:
+    def test_report_ranks_waiting_sites(self, runtime):
+        lk = instrumented.InstrumentedLock()
+        lk.acquire()
+        t = threading.Thread(target=lambda: (lk.acquire(), lk.release()))
+        t.start()
+        time.sleep(0.05)            # the thread blocks in acquire()
+        lk.release()
+        t.join()
+        row = next(r for r in instrumented.contention_report()
+                   if r["site"] == lk._site)
+        assert row["acquires"] >= 2
+        assert row["total_wait_s"] >= 0.03
+        assert 0 < row["max_wait_s"] <= row["total_wait_s"]
+
+    def test_top_n_and_reset(self, runtime):
+        lk = instrumented.InstrumentedLock()
+        with lk:
+            pass
+        assert len(instrumented.contention_report(top=1)) == 1
+        instrumented.reset()
+        assert instrumented.contention_report() == []

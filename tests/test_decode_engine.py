@@ -589,3 +589,37 @@ class TestCancelledActiveSlot:
             assert eng.free_block_count() == eng.num_blocks - 1
         finally:
             eng.stop()
+
+
+class _ExplodingSampling:
+    """Truthy sampling stand-in whose make_rng raises: injects a crash
+    between the free-list pop and the slot publish in ``_backfill``."""
+
+    def make_rng(self):
+        raise RuntimeError("injected mid-admission failure")
+
+
+class TestOrphanedReservationReclaim:
+    def test_blocks_reclaimed_after_mid_admission_crash(self, params):
+        """A failure after blocks are popped but before the slot
+        publishes used to orphan the reservation forever (neither the
+        tick-crash handler nor stop() saw it in a slot). The ledger now
+        records ownership at the pop, so the engine-loop handler
+        reclaims it and the pool returns to full."""
+        eng = DecodeScheduler(CFG, params, num_slots=2, max_seq_len=64)
+        eng.start()
+        try:
+            total = eng.free_block_count()
+            toks = np.arange(6, dtype=np.int32) % CFG.vocab_size
+            eng.submit(toks, max_new=4, sampling=_ExplodingSampling())
+            # Admitted strictly after the crash above: its completion
+            # orders the reclaim check after the injected failure.
+            out = eng.generate(toks, max_new=3)
+            assert out.shape[0] == 3       # engine survived the crash
+            deadline = time.monotonic() + 20
+            while (eng.free_block_count() != total
+                   and time.monotonic() < deadline):
+                time.sleep(0.01)
+            assert eng.free_block_count() == total
+        finally:
+            eng.stop()

@@ -1,0 +1,413 @@
+"""Resource-ownership analysis: exact static diagnostics for every
+leak class, the ``own`` CLI contract, the runtime leak tracker, the
+static/runtime agreement on one seeded KV-block-reservation leak, and
+regression coverage for the true leak the pass found in
+``ServingClient.close``."""
+import os
+
+import pytest
+
+from repro.analysis import leaktrack, ownership
+from repro.analysis.__main__ import run_own
+from repro.serving.transport import ServingClient
+
+# Shared fixture preamble: the registry is collected from the checked
+# file set itself, so every fixture carries its own declarations.
+PRE = '''\
+from repro.analysis import acquires, releases, transfers_ownership
+
+
+class Pool:
+    @acquires("kv_block")
+    def take(self):
+        return object()
+
+    @releases("kv_block")
+    def give(self, blk):
+        pass
+
+    def raw_pop(self):
+        return object()
+
+
+@transfers_ownership
+def hand_off(blk):
+    pass
+
+
+def might_raise():
+    pass
+
+
+'''
+
+
+def diags_of(body: str):
+    return ownership.check_source(PRE + body, "fix.py")
+
+
+class TestStaticDiagnostics:
+    def test_leak_on_exception_exact(self):
+        d, = diags_of('''\
+def use(pool):
+    blk = pool.take()
+    might_raise()
+    pool.give(blk)
+''')
+        assert (d.path, d.line, d.code) == ("fix.py", 27,
+                                            "leak-on-exception")
+        assert d.message == ("kv_block acquired here is not released on "
+                             "the exception path exiting at line 28 "
+                             "(expected give)")
+
+    def test_leak_on_early_return_exact(self):
+        d, = diags_of('''\
+def use(pool, flag):
+    blk = pool.take()
+    if flag:
+        return None
+    pool.give(blk)
+''')
+        assert (d.path, d.line, d.code) == ("fix.py", 27,
+                                            "leak-on-early-return")
+        assert d.message == ("kv_block acquired here is not released on "
+                             "the return path exiting at line 29 "
+                             "(expected give)")
+
+    def test_fall_through_is_a_return_path(self):
+        d, = diags_of('''\
+def use(pool):
+    blk = pool.take()
+''')
+        assert d.code == "leak-on-early-return"
+        assert "fall-through return path" in d.message
+
+    def test_double_release_exact(self):
+        d, = diags_of('''\
+def use(pool):
+    blk = pool.take()
+    try:
+        pool.give(blk)
+    finally:
+        pool.give(blk)
+''')
+        assert (d.line, d.code) == (31, "double-release")
+        assert d.message == ("kv_block (acquired at line 27) already "
+                             "released on this path")
+
+    def test_unbalanced_transfer_exact(self):
+        d, = diags_of('''\
+def use(pool):
+    blk = pool.take()
+    try:
+        hand_off(blk)
+    finally:
+        pool.give(blk)
+''')
+        assert (d.line, d.code) == (31, "unbalanced-transfer")
+        assert d.message == ("kv_block (acquired at line 27) released "
+                             "after its ownership was transferred away")
+
+    def test_try_finally_is_clean(self):
+        assert diags_of('''\
+def use(pool):
+    blk = pool.take()
+    try:
+        might_raise()
+    finally:
+        pool.give(blk)
+''') == []
+
+    def test_with_acquire_is_self_releasing(self):
+        assert diags_of('''\
+def use(pool):
+    with pool.take():
+        might_raise()
+''') == []
+
+    def test_return_transfers_to_caller(self):
+        assert diags_of('''\
+def use(pool):
+    blk = pool.take()
+    return blk
+''') == []
+
+    def test_deferred_release_discharges(self):
+        # The quota-hook shape: the release moves into a lambda, and the
+        # handler pairs the registration's own failure edge.
+        assert diags_of('''\
+def use(pool, defer):
+    blk = pool.take()
+    try:
+        defer(lambda: pool.give(blk))
+    except BaseException:
+        pool.give(blk)
+        raise
+''') == []
+
+    def test_owns_marker_creates_obligation(self):
+        d, = diags_of('''\
+def use(pool):
+    # owns: kv_block
+    blk = pool.raw_pop()
+''')
+        assert (d.line, d.code) == (28, "leak-on-early-return")
+        assert diags_of('''\
+def use(pool):
+    # owns: kv_block
+    blk = pool.raw_pop()
+    try:
+        might_raise()
+    finally:
+        pool.give(blk)
+''') == []
+
+    def test_leak_ok_with_reason_suppresses(self):
+        assert diags_of('''\
+def use(pool):
+    # leak-ok: fixture intentionally holds
+    blk = pool.take()
+''') == []
+
+    def test_leak_ok_without_reason_rejected(self):
+        diags = diags_of('''\
+def use(pool):
+    # leak-ok:
+    blk = pool.take()
+''')
+        assert [d.code for d in diags] == ["bad-suppression",
+                                           "leak-on-early-return"]
+        assert diags[0].message == "'# leak-ok:' requires a reason"
+
+    def test_resources_class_map(self):
+        d, = diags_of('''\
+class Srv:
+    RESOURCES = {"enter": "leave"}
+
+    def enter(self):
+        pass
+
+    def leave(self):
+        pass
+
+
+def use(srv, flag):
+    srv.enter()
+    if flag:
+        return None
+    srv.leave()
+''')
+        assert (d.line, d.code) == (37, "leak-on-early-return")
+        assert "enter acquired here" in d.message
+        assert "(expected leave)" in d.message
+
+    def test_bad_resources_declaration(self):
+        d, = diags_of('''\
+class Srv:
+    RESOURCES = "nope"
+''')
+        assert d.code == "bad-declaration"
+        assert d.message == ("Srv.RESOURCES must be a literal dict of "
+                             "str -> str")
+
+
+LEAKY = PRE + '''\
+def use(pool):
+    blk = pool.take()
+    might_raise()
+    pool.give(blk)
+'''
+
+CLEAN = PRE + '''\
+def use(pool):
+    blk = pool.take()
+    try:
+        might_raise()
+    finally:
+        pool.give(blk)
+'''
+
+
+class TestOwnCli:
+    def test_exit_1_and_diagnostic_on_seeded_leak(self, tmp_path, capsys):
+        (tmp_path / "leaky.py").write_text(LEAKY)
+        assert run_own([str(tmp_path)]) == 1
+        out = capsys.readouterr()
+        assert "[leak-on-exception]" in out.out
+        assert "1 ownership diagnostic(s) in 1 file(s)" in out.err
+
+    def test_exit_0_on_clean_tree(self, tmp_path, capsys):
+        (tmp_path / "clean.py").write_text(CLEAN)
+        assert run_own([str(tmp_path)]) == 0
+        assert "ok: 1 file(s) ownership-clean" in capsys.readouterr().out
+
+    def test_annotated_serving_tree_is_clean(self, capsys):
+        # The acceptance gate CI enforces: the real tree stays at zero.
+        root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+        assert run_own([os.path.join(root, d) for d in
+                        ("serving", "hosted", "core", "batching")]) == 0
+
+
+@pytest.fixture()
+def tracker():
+    """Live tracker around one test. State is snapshot/restored so the
+    deliberate leaks seeded here never feed the session-end
+    ``live_resources()`` assertion when the suite itself runs under
+    REPRO_LEAK_CHECK=1 — and real records from long-lived fixtures
+    (pooled client sockets) survive untouched."""
+    was = leaktrack.installed()
+    with leaktrack._mu:
+        saved_live = dict(leaktrack._live)
+        saved_viol = list(leaktrack._violation_log)
+    saved_unmatched = leaktrack.unmatched_releases()
+    leaktrack.reset()
+    leaktrack.install()
+    yield leaktrack
+    with leaktrack._mu:
+        leaktrack._live.clear()
+        leaktrack._live.update(saved_live)
+        leaktrack._violation_log[:] = saved_viol
+    leaktrack._unmatched_releases = saved_unmatched
+    leaktrack._enabled = was
+
+
+class TestLeakTracker:
+    def test_identity_keyed_acquire_release(self, tracker):
+        take = tracker.wrap_acquire("kv_block", lambda: object())
+        give = tracker.wrap_release("kv_block", lambda blk: None)
+        blk = take()
+        rec, = tracker.live_resources()
+        assert rec.resource == "kv_block"
+        assert rec.stack                     # acquisition provenance
+        assert rec.describe().startswith("kv_block#")
+        give(blk)
+        assert tracker.live_resources() == []
+
+    def test_false_result_registers_nothing(self, tracker):
+        enter = tracker.wrap_acquire("http_request", lambda: False)
+        assert enter() is False
+        assert tracker.live_resources() == []
+
+    def test_owner_and_tenant_keyed_pool(self, tracker):
+        class Quota:
+            pass
+
+        q = Quota()
+        reserve = tracker.wrap_acquire(
+            "decode_quota", lambda owner, tenant: None)
+        release = tracker.wrap_release(
+            "decode_quota", lambda owner, tenant: None)
+        reserve(q, "tenant-a")
+        release(q, "tenant-b")     # wrong tenant: no match
+        rec, = tracker.live_resources()
+        assert rec.tenant == "tenant-a"
+        assert tracker.unmatched_releases() == 1
+        release(q, "tenant-a")
+        assert tracker.live_resources() == []
+
+    def test_fifo_retire_keeps_pools_honest(self, tracker):
+        class Quota:
+            pass
+
+        q = Quota()
+        reserve = tracker.wrap_acquire("predict_quota", lambda owner: None)
+        release = tracker.wrap_release("predict_quota", lambda owner: None)
+        reserve(q)
+        first_token = tracker.live_resources()[0].token
+        reserve(q)
+        release(q)
+        rec, = tracker.live_resources()
+        assert rec.token != first_token      # the OLDER record retired
+
+    def test_overage_flags_violation(self, tracker, monkeypatch):
+        monkeypatch.setenv("REPRO_LEAK_AGE_S", "0")
+        take = tracker.wrap_acquire("kv_block", lambda: object())
+        blk = take()
+        take()     # any later acquire runs the sweep
+        assert any("over-age hold" in v for v in tracker.violations())
+        del blk
+
+    def test_assert_empty_raises_with_stack(self, tracker):
+        take = tracker.wrap_acquire("client_conn", lambda: object())
+        take()
+        with pytest.raises(tracker.ResourceLeakError,
+                           match="1 resource.s. still live"):
+            tracker.assert_empty()
+
+    def test_unmatched_release_counted_not_fatal(self, tracker):
+        give = tracker.wrap_release("kv_block", lambda blk: None)
+        give(object())
+        assert tracker.unmatched_releases() == 1
+        assert tracker.violations() == []
+
+
+# One seeded leak, caught by BOTH validators: a KV-block-style
+# reservation that skips its release on the early-return path.
+RESERVATION = '''\
+from repro.analysis import acquires, releases
+
+
+class BlockPool:
+    @acquires("kv_block")
+    def reserve(self):
+        return object()
+
+    @releases("kv_block")
+    def release(self, blk):
+        pass
+
+
+def serve(pool, fail):
+    blk = pool.reserve()
+    if fail:
+        return None
+    pool.release(blk)
+    return blk
+'''
+
+
+class TestStaticAndRuntimeAgree:
+    def test_both_catch_the_seeded_reservation_leak(self, tracker):
+        diags = ownership.check_source(RESERVATION, "reservation.py")
+        assert [d.code for d in diags] == ["leak-on-early-return"]
+        assert diags[0].line == 15          # blk = pool.reserve()
+
+        ns: dict = {}
+        exec(compile(RESERVATION, "reservation.py", "exec"), ns)
+        pool = ns["BlockPool"]()
+        # Without REPRO_LEAK_CHECK=1 at import the decorators left the
+        # pair unwrapped — wrap it the way they would have. (Under the
+        # env the exec above already wrapped at decoration time.)
+        if not getattr(pool.reserve, "__wrapped_by_leaktrack__", False):
+            pool.reserve = tracker.wrap_acquire("kv_block", pool.reserve)
+            pool.release = tracker.wrap_release("kv_block", pool.release)
+        ns["serve"](pool, fail=True)
+        rec, = tracker.live_resources()
+        assert rec.resource == "kv_block"
+        with pytest.raises(tracker.ResourceLeakError):
+            tracker.assert_empty()
+        tracker.reset()
+        ns["serve"](pool, fail=False)       # the released path is clean
+        tracker.assert_empty()
+
+
+class TestClientCloseRegression:
+    def test_close_routes_every_conn_through_discard(self):
+        """close() used to shut pooled sockets directly, bypassing
+        ``_discard`` — the single release path — which left every
+        per-connection ownership record live."""
+        client = ServingClient("127.0.0.1", 9)   # lazy: never connects
+        conns = {client._new_connection() for _ in range(3)}
+        assert client._conns == conns
+
+        discarded = []
+        inner = ServingClient._discard
+
+        def spying_discard(conn):
+            discarded.append(conn)
+            inner(client, conn)
+
+        client._discard = spying_discard
+        client.close()
+        assert set(discarded) == conns
+        assert client._conns == set()

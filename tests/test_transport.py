@@ -366,7 +366,9 @@ def slow_server():
     assert manager.await_idle()
     ps = api.PredictionService(manager)
     http = HttpServingServer(ps, drain_timeout_s=30).start()
-    yield http, ServingClient(*http.address)
+    client = ServingClient(*http.address)
+    yield http, client
+    client.close()
     http.stop()
     manager.shutdown()
 
@@ -442,16 +444,24 @@ class TestDrain:
             "model_spec": {"name": "slow"}, "method": "work",
             "request": {"delay": 0}})
         assert (status, body["error"]["code"]) == (503, "UNAVAILABLE")
-        with pytest.raises(api.Unavailable):
-            ServingClient(*addr).call(api.ModelSpec("slow"), "work",
-                                      {"delay": 0})
+        drain_probe = ServingClient(*addr)
+        try:
+            with pytest.raises(api.Unavailable):
+                drain_probe.call(api.ModelSpec("slow"), "work",
+                                 {"delay": 0})
+        finally:
+            drain_probe.close()
         t.join(timeout=30)
         stopper.join(timeout=30)
         assert not errors, errors               # in-flight ran to completion
         assert results == [{"served": True}]
         # post-shutdown: the listener is gone entirely
-        with pytest.raises(api.Unavailable):
-            ServingClient(*addr).call(api.ModelSpec("slow"), "work", {})
+        dead_probe = ServingClient(*addr)
+        try:
+            with pytest.raises(api.Unavailable):
+                dead_probe.call(api.ModelSpec("slow"), "work", {})
+        finally:
+            dead_probe.close()
 
 
 class TestNonFiniteFloats:
