@@ -191,6 +191,73 @@ def paged_attention_section(report, results):
            f"backend={jax.default_backend()})")
 
 
+def admission_contention_section(report, results, params):
+    """Before/after for the admission-lock sharding: the same
+    submit-heavy multi-tenant workload against ``admission_shards=1``
+    (the old single engine-wide condition, the top contended site in
+    ``contention_report.json``) and the sharded default, acquire-wait
+    totals taken from the instrumented-lock contention report."""
+    from repro.analysis import instrumented
+
+    tenants = [f"t{i}" for i in range(8)]
+    per_thread = 150 if SMOKE else 600
+    prompt = np.arange(8, dtype=np.int32)
+
+    def run(shards):
+        was_installed = instrumented.installed()
+        instrumented.install()
+        instrumented.reset()
+        eng = DecodeScheduler(CFG, params, num_slots=2, max_seq_len=64,
+                              paged=False, admission_shards=shards)
+        stop = threading.Event()
+
+        def drain():
+            # Stand-in for the engine thread's queue side: select, take,
+            # terminal-transition — the lock traffic without the decode.
+            while True:
+                req = eng._select(time.monotonic())
+                if req is not None:
+                    eng._take(req)
+                    req._fail(RuntimeError("drained by contention bench"))
+                    continue
+                if stop.is_set():
+                    return
+                time.sleep(0.0005)
+
+        def client(tenant):
+            for _ in range(per_thread):
+                eng.submit(prompt, max_new=4, tenant=tenant)
+
+        drainer = threading.Thread(target=drain, daemon=True)
+        clients = [threading.Thread(target=client, args=(t,), daemon=True)
+                   for t in tenants]
+        t0 = time.perf_counter()
+        drainer.start()
+        [t.start() for t in clients]
+        [t.join() for t in clients]
+        stop.set()
+        drainer.join(timeout=60)
+        wall = time.perf_counter() - t0
+        rows = [r for r in instrumented.contention_report()
+                if "decode_engine" in r["site"]]
+        if not was_installed:
+            instrumented.uninstall()
+        return {"shards": shards, "wall_s": wall,
+                "submits": len(tenants) * per_thread,
+                "acquires": sum(r["acquires"] for r in rows),
+                "total_wait_s": sum(r["total_wait_s"] for r in rows),
+                "top_sites": rows[:3]}
+
+    before = run(1)
+    after = run(8)
+    results["admission_contention"] = {"before": before, "after": after}
+    ratio = before["total_wait_s"] / max(after["total_wait_s"], 1e-9)
+    report("decode_admission_lock_wait_ms", after["total_wait_s"] * 1e3,
+           f"sharded admission wait {after['total_wait_s'] * 1e3:.1f}ms "
+           f"vs {before['total_wait_s'] * 1e3:.1f}ms single-lock over "
+           f"{before['submits']} submits ({ratio:.1f}x less lock wait)")
+
+
 def main(report):
     params = MD.init_params(jax.random.PRNGKey(0), CFG)
     budget = MD.estimate_pool_cache_bytes(CFG, NUM_SLOTS, MAX_SEQ)
@@ -242,6 +309,7 @@ def main(report):
                f"(paged capacity point)")
         results["bit_identical"] = True
         paged_attention_section(report, results)
+        admission_contention_section(report, results, params)
         out = os.environ.get("REPRO_BENCH_OUT", ".")
         path = os.path.join(out, "BENCH_decode_paged.json")
         with open(path, "w") as f:

@@ -6,9 +6,14 @@ package is the Python equivalent for this reproduction: a declaration
 convention that costs nothing at runtime, an AST checker that enforces
 it (`repro.analysis.guarded`), a static lock-order/deadlock pass
 (`repro.analysis.lockorder`), a resource acquire/release pairing pass
-(`repro.analysis.ownership`), and opt-in runtime validators
-(`repro.analysis.instrumented`, `repro.analysis.leaktrack`) that watch
-real acquisition order and live resources during the test suite.
+(`repro.analysis.ownership`), a shared-state completeness pass that
+infers which attributes are reachable from multiple threads and
+requires a declaration for each (`repro.analysis.shared`), and opt-in
+runtime validators (`repro.analysis.instrumented`,
+`repro.analysis.leaktrack`, `repro.analysis.racecheck` — an
+Eraser-style lockset race detector) that watch real acquisition
+order, live resources, and per-attribute candidate locksets during
+the test suite.
 
 Lock declaration convention
 ---------------------------
@@ -34,6 +39,19 @@ Lock declaration convention
 
    The reason is mandatory; an empty reason is itself an error.
 
+5. Shared-state declarations consumed by `repro.analysis.shared` and
+   the runtime lockset detector (`REPRO_RACE_CHECK=1`)::
+
+       # published-by: start          <- written only by these methods
+       self._thread = None            #    after the publish point
+
+       # shared-ok: engine-private; stop() mutates only after join
+       self._rr = []                  <- deliberately unsynchronized
+
+   Every mutable attribute the completeness pass finds reachable from
+   two or more thread contexts must carry ``GUARDED_BY``, a
+   ``# published-by:``, or a ``# shared-ok:`` — reasons mandatory.
+
 Resource declaration convention
 -------------------------------
 
@@ -57,8 +75,10 @@ Resource declaration convention
    ``# leak-ok: <reason>`` suppresses ownership diagnostics for the
    acquire on that line. The reason is mandatory.
 
-Run the checkers: ``python -m repro.analysis check src`` (locks) and
-``python -m repro.analysis own src`` (ownership).
+Run the checkers individually — ``python -m repro.analysis check src``
+(locks), ``own src`` (ownership), ``shared src`` (shared-state
+completeness), ``graph src`` (lock graph) — or all of them behind one
+exit code: ``python -m repro.analysis all src`` (the CI job).
 """
 from __future__ import annotations
 

@@ -6,6 +6,12 @@ Commands:
                        non-zero on any diagnostic.
     own <paths...>     resource-ownership acquire/release pairing
                        check; exits non-zero on any diagnostic.
+    shared <paths...>  shared-state completeness: every mutable attr
+                       reachable from >= 2 thread contexts must be
+                       GUARDED_BY, '# published-by:', or reasoned
+                       '# shared-ok:'.
+    all <paths...>     check + graph + own + shared with one summary
+                       and one exit code (what CI runs).
     graph <paths...>   dump the static lock-acquisition graph (debug).
 """
 from __future__ import annotations
@@ -15,7 +21,7 @@ import os
 import sys
 from typing import List, Tuple
 
-from repro.analysis import guarded, lockorder, ownership
+from repro.analysis import guarded, lockorder, ownership, shared
 
 # Directories where bare time.time() is banned (deadlines/latency math
 # must use time.monotonic; justified wall stamps use # wall-clock-ok).
@@ -81,6 +87,20 @@ def run_own(paths: List[str]) -> int:
     return 0
 
 
+def run_shared(paths: List[str]) -> int:
+    pairs = _read_all(_collect_files(paths))
+    diags = shared.check_source_files(pairs)
+    for d in diags:
+        print(d)
+    n_files = len(pairs)
+    if diags:
+        print(f"\n{len(diags)} shared-state diagnostic(s) in "
+              f"{n_files} file(s)", file=sys.stderr)
+        return 1
+    print(f"ok: {n_files} file(s) shared-state-complete")
+    return 0
+
+
 def run_graph(paths: List[str]) -> int:
     graph = lockorder.build_graph(_read_all(_collect_files(paths)))
     for (a, b), (path, line) in sorted(graph.edges.items()):
@@ -89,16 +109,55 @@ def run_graph(paths: List[str]) -> int:
     return 0
 
 
+def run_all(paths: List[str], *, no_lockorder: bool = False) -> int:
+    """check + graph + own + shared: one summary, one exit code."""
+    pairs = _read_all(_collect_files(paths))
+    diags: List[guarded.Diagnostic] = []
+    for path, source in pairs:
+        wallclock = any(mark in path for mark in _WALLCLOCK_DIRS)
+        diags.extend(guarded.check_source(source, path,
+                                          wallclock=wallclock))
+    n_guarded = len(diags)
+    if not no_lockorder:
+        diags.extend(lockorder.check_lockorder(pairs))
+    n_order = len(diags) - n_guarded
+    own_diags = ownership.check_files(pairs)
+    shared_diags = shared.check_source_files(pairs)
+    diags.extend(own_diags)
+    diags.extend(shared_diags)
+    for d in sorted(diags, key=lambda d: (d.path, d.line, d.code)):
+        print(d)
+    graph = lockorder.build_graph(pairs)
+    n_files = len(pairs)
+    summary = (f"{n_files} file(s): guarded={n_guarded} "
+               f"lock-order={n_order} ownership={len(own_diags)} "
+               f"shared={len(shared_diags)} diagnostics; "
+               f"lock graph has {len(graph.edges)} edge(s)")
+    if diags:
+        print(f"\nFAIL: {summary}", file=sys.stderr)
+        return 1
+    print(f"ok: {summary}")
+    return 0
+
+
 def main(argv: List[str] | None = None) -> int:
     parser = argparse.ArgumentParser(prog="python -m repro.analysis",
                                      description=__doc__)
     sub = parser.add_subparsers(dest="cmd", required=True)
-    p_check = sub.add_parser("check", help="run all static checks")
+    p_check = sub.add_parser("check", help="guarded/lock-order checks")
     p_check.add_argument("paths", nargs="+")
     p_check.add_argument("--no-lockorder", action="store_true",
                          help="skip the lock-order cycle pass")
     p_own = sub.add_parser("own", help="resource-ownership pairing check")
     p_own.add_argument("paths", nargs="+")
+    p_shared = sub.add_parser(
+        "shared", help="shared-state completeness check")
+    p_shared.add_argument("paths", nargs="+")
+    p_all = sub.add_parser(
+        "all", help="check + graph + own + shared, one exit code")
+    p_all.add_argument("paths", nargs="+")
+    p_all.add_argument("--no-lockorder", action="store_true",
+                       help="skip the lock-order cycle pass")
     p_graph = sub.add_parser("graph", help="dump lock-acquisition graph")
     p_graph.add_argument("paths", nargs="+")
     args = parser.parse_args(argv)
@@ -106,6 +165,10 @@ def main(argv: List[str] | None = None) -> int:
         return run_check(args.paths, no_lockorder=args.no_lockorder)
     if args.cmd == "own":
         return run_own(args.paths)
+    if args.cmd == "shared":
+        return run_shared(args.paths)
+    if args.cmd == "all":
+        return run_all(args.paths, no_lockorder=args.no_lockorder)
     return run_graph(args.paths)
 
 

@@ -43,7 +43,7 @@ __all__ = [
     "InstrumentedLock", "InstrumentedRLock", "InstrumentedCondition",
     "LockOrderViolation", "HoldTimeViolation",
     "install", "uninstall", "installed", "violations", "reset",
-    "contention_report",
+    "contention_report", "held_locks",
 ]
 
 _real_lock = threading.Lock
@@ -129,6 +129,16 @@ def _held() -> list:
     if held is None:
         held = _tls.held = []
     return held
+
+
+def held_locks() -> Dict[int, str]:
+    """Locks the *current thread* holds right now: key -> name.
+
+    The race detector (`repro.analysis.racecheck`) intersects this set
+    per (object, attribute) on every access — the Eraser candidate
+    lockset. A lock suspended inside ``Condition.wait`` is correctly
+    absent (it really is released for the duration)."""
+    return {e.lock._key: e.lock.name for e in _held()}
 
 
 class _Held:

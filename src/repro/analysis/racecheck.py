@@ -1,0 +1,435 @@
+"""Opt-in Eraser-style runtime lockset race detector.
+
+When ``REPRO_RACE_CHECK=1`` is set at import time, ``install()``
+(called from ``tests/conftest.py``) instruments the *annotated*
+classes of the serving stack — any class with a ``GUARDED_BY`` map or
+a ``# published-by:`` declaration — by wrapping ``__setattr__`` /
+``__getattribute__``. Which attributes are tracked, which writes are
+publishes, and which source lines are deliberate lock-free accesses
+all come from `repro.analysis.shared.runtime_class_info`, so the
+static completeness pass and this detector enforce ONE set of
+declarations.
+
+Per (object, attribute) the classic Eraser state machine runs:
+
+- **Exclusive(T)**: only thread T has touched the attribute. No
+  lockset is kept — single-threaded access needs no lock.
+- Ownership *transfers* instead of escalating when a happens-before
+  edge is evident: the new thread was started after the owner's last
+  access (``Thread.start`` is patched to stamp a birth time), or the
+  owner thread has terminated (join/teardown hand-off). This is what
+  keeps init-then-spawn and stop-then-inspect patterns quiet.
+- **Shared / Shared-Modified**: a second thread with no
+  happens-before edge appeared. The candidate lockset is initialised
+  to the locks the accessing thread holds *right now* (PR 8's
+  instrumented-lock held stacks, `instrumented.held_locks`) and
+  refined by intersection on every subsequent access. Writes move the
+  state to Shared-Modified.
+- The moment the candidate lockset goes empty in Shared-Modified —
+  no single lock protected every access — a ``RaceViolation`` is
+  raised carrying both access stacks, and the finding is appended to
+  the global registry (``violations()``) so detections on daemon
+  threads still fail the suite at session end.
+
+Accesses on a ``# unguarded-ok:`` suppressed line are exempt from
+refinement: the static checker already forced a written reason for
+that lock-free access (single-writer reads, snapshot-and-check).
+Writes inside ``__init__``/``__new__`` or a declared publisher method
+re-enter the Exclusive state (the init/publish phase of the attr's
+life).
+
+``race_report()`` summarises per-site access counts and final
+candidate locksets; conftest writes it to ``REPRO_RACE_OUT`` for the
+CI artifact.
+"""
+from __future__ import annotations
+
+import _thread
+import os
+import sys
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Set
+
+from repro.analysis import instrumented
+
+__all__ = [
+    "RaceViolation", "active", "install", "uninstall", "installed",
+    "instrument_class", "deinstrument_class", "violations", "reset",
+    "race_report",
+]
+
+_ACTIVE = os.environ.get("REPRO_RACE_CHECK") == "1"
+
+# Raw C lock: immune to the instrumented monkeypatch; state
+# transitions must not create lock-order edges of their own.
+_mu = _thread.allocate_lock()
+
+_violation_log: List[str] = []
+# "Class.attr" -> {"reads": n, "writes": n, "lockset": [...] | None}
+_sites: Dict[str, dict] = {}
+# co_filename -> frozenset of '# unguarded-ok' suppressed line numbers
+_suppressed: Dict[str, FrozenSet[int]] = {}
+
+_tls = threading.local()
+
+_STATE_SLOT = "_RACE_STATES"
+
+# Default modules instrumented by install(): everything carrying
+# GUARDED_BY / published-by declarations (the annotated stack).
+_MODULES = (
+    "repro.core.rcu",
+    "repro.core.source",
+    "repro.core.manager",
+    "repro.batching.queue",
+    "repro.batching.scheduler",
+    "repro.serving.engine",
+    "repro.serving.api",
+    "repro.serving.generation",
+    "repro.serving.decode_engine",
+    "repro.serving.tenancy",
+    "repro.serving.transport",
+    "repro.hosted.jobs",
+    "repro.hosted.router",
+    "repro.hosted.synchronizer",
+    "repro.hosted.autoscaler",
+    "repro.loadgen.metrics",
+    "repro.loadgen.runner",
+)
+
+
+class RaceViolation(RuntimeError):
+    """The candidate lockset for a shared-modified attribute is empty:
+    no single lock protected every access."""
+
+
+def active() -> bool:
+    """True when REPRO_RACE_CHECK=1 was set at import time."""
+    return _ACTIVE
+
+
+def violations() -> List[str]:
+    with _mu:
+        return list(_violation_log)
+
+
+def race_report() -> List[dict]:
+    """Per-site access counts and final candidate locksets. A
+    ``lockset`` of ``None`` means the attribute never left the
+    Exclusive state (no concurrent sharing observed)."""
+    with _mu:
+        rows = [dict(site=site, **stats)
+                for site, stats in _sites.items()]
+    rows.sort(key=lambda r: (-(r["reads"] + r["writes"]), r["site"]))
+    return rows
+
+
+def reset() -> None:
+    """Clear the violation registry and site stats (tests only)."""
+    with _mu:
+        _violation_log.clear()
+        _sites.clear()
+
+
+# ---------------------------------------------------------------------------
+# per-attribute state machine
+
+_EXCL = 0          # one thread, no lockset
+_SHARED = 1        # multiple readers, candidate lockset kept
+_SHARED_MOD = 2    # multiple threads incl. a writer
+_DEAD = 3          # already reported; stop checking this attr
+
+
+@dataclass
+class _AttrState:
+    state: int = _EXCL
+    owner: Optional[int] = None               # thread ident (EXCL)
+    owner_thread: Optional[threading.Thread] = None
+    owner_last: float = 0.0                   # owner's last access
+    lockset: Optional[Set[int]] = None
+    lock_names: Dict[int, str] = field(default_factory=dict)
+    prev_site: str = "?"
+    prev_stack: Optional[str] = None          # kept near the edge
+    prev_thread: str = "?"
+    prev_thread_prev: str = "?"
+
+
+# Slotted classes can't grow the state attribute; their state lives in
+# an id-keyed side table instead. A recycled id could inherit a stale
+# state, but the new object's first tracked access is in practice an
+# ``__init__`` write, which resets the attribute to Exclusive anyway.
+_id_states: Dict[int, dict] = {}
+
+
+def _states_of(obj) -> dict:
+    try:
+        return object.__getattribute__(obj, _STATE_SLOT)
+    except AttributeError:
+        pass
+    states: dict = {}
+    try:
+        object.__setattr__(obj, _STATE_SLOT, states)
+    except (AttributeError, TypeError):
+        return _id_states.setdefault(id(obj), states)
+    return states
+
+
+def _short_stack(limit: int = 6) -> str:
+    frames = traceback.extract_stack(sys._getframe(3), limit=limit)
+    return "".join(traceback.format_list(frames)).rstrip()
+
+
+def _birth(thread: threading.Thread) -> Optional[float]:
+    return getattr(thread, "_race_birth", None)
+
+
+def _on_access(obj, cls_name: str, attr: str, write: bool,
+               published: Dict[str, FrozenSet[str]]) -> None:
+    if getattr(_tls, "busy", False):
+        return      # re-entrant wrapper (subclass chains, internals)
+    _tls.busy = True
+    try:
+        frame = sys._getframe(2)
+        code = frame.f_code
+        site = f"{code.co_filename}:{frame.f_lineno}"
+        sup = _suppressed.get(code.co_filename)
+        suppressed = sup is not None and frame.f_lineno in sup
+        now = time.monotonic()
+        me = threading.current_thread()
+        held = instrumented.held_locks()
+        skey = f"{cls_name}.{attr}"
+        with _mu:
+            states = _states_of(obj)
+            stats = _sites.get(skey)
+            if stats is None:
+                stats = _sites[skey] = {
+                    "reads": 0, "writes": 0, "lockset": None}
+            stats["writes" if write else "reads"] += 1
+            st = states.get(attr)
+            if st is None:
+                st = states[attr] = _AttrState()
+                st.owner = me.ident
+                st.owner_thread = me
+                st.owner_last = now
+                st.prev_site = site
+                st.prev_thread = me.name
+                return
+            if st.state == _DEAD:
+                return
+            # init / publish phase: the writer re-owns the attribute
+            if write and (code.co_name in ("__init__", "__new__")
+                          or code.co_name in published.get(
+                              attr, frozenset())):
+                st.state = _EXCL
+                st.owner = me.ident
+                st.owner_thread = me
+                st.owner_last = now
+                st.lockset = None
+                st.prev_site = site
+                st.prev_stack = None
+                st.prev_thread = me.name
+                return
+            if st.state == _EXCL:
+                if st.owner == me.ident:
+                    st.owner_last = now
+                    st.prev_site = site
+                    st.prev_thread = me.name
+                    return
+                # happens-before: new thread born after the owner's
+                # last access, or the owner has terminated
+                born = _birth(me)
+                owner_gone = (st.owner_thread is not None
+                              and not st.owner_thread.is_alive())
+                if owner_gone or (born is not None
+                                  and born > st.owner_last):
+                    st.owner = me.ident
+                    st.owner_thread = me
+                    st.owner_last = now
+                    st.prev_site = site
+                    st.prev_thread = me.name
+                    return
+                # genuine concurrent sharing begins
+                if suppressed:
+                    return
+                st.state = _SHARED_MOD if write else _SHARED
+                st.lockset = set(held)
+                st.lock_names = dict(held)
+                stats["lockset"] = sorted(st.lock_names.values())
+                self_desc = _note_edge(st, site, me.name, held)
+                if st.state == _SHARED_MOD and not st.lockset:
+                    _report(skey, st, site, me.name, self_desc)
+                return
+            # SHARED / SHARED_MOD
+            if suppressed:
+                return
+            assert st.lockset is not None
+            st.lockset &= set(held)
+            st.lock_names = {k: v for k, v in st.lock_names.items()
+                             if k in st.lockset}
+            stats["lockset"] = sorted(st.lock_names.values())
+            if write:
+                st.state = _SHARED_MOD
+            if st.state == _SHARED_MOD and not st.lockset:
+                desc = _note_edge(st, site, me.name, held)
+                _report(skey, st, site, me.name, desc)
+                return
+            _note_edge(st, site, me.name, held)
+    finally:
+        _tls.busy = False
+
+
+def _note_edge(st: _AttrState, site: str, tname: str,
+               held: Dict[int, str]) -> Optional[str]:
+    """Update the previous-access record; near the violation edge
+    (candidate lockset down to <= 1) keep a real stack so the report
+    can show BOTH accesses, not just the raising one."""
+    stack = None
+    if st.lockset is not None and len(st.lockset) <= 1:
+        stack = _short_stack()
+    prev = st.prev_stack or st.prev_site
+    st.prev_thread_prev = st.prev_thread
+    st.prev_site = site
+    st.prev_stack = stack
+    st.prev_thread = tname
+    return prev
+
+
+def _report(skey: str, st: _AttrState, site: str, tname: str,
+            prev_desc: Optional[str]) -> None:
+    cur_stack = _short_stack(limit=8)
+    prev_thread = getattr(st, "prev_thread_prev", "?")
+    msg = (f"race on {skey}: candidate lockset is empty — no common "
+           f"lock across accesses\n"
+           f"  access 1 [{prev_thread}]:\n"
+           f"{_indent(prev_desc or st.prev_site)}\n"
+           f"  access 2 [{tname}] at {site}:\n{_indent(cur_stack)}")
+    st.state = _DEAD
+    _violation_log.append(msg)
+    raise RaceViolation(msg)
+
+
+def _indent(text: str) -> str:
+    return "\n".join("    " + ln for ln in text.splitlines())
+
+
+# ---------------------------------------------------------------------------
+# class instrumentation
+
+_instrumented: List[tuple] = []   # (cls, had_set, old_set, had_get, old_get)
+_enabled = False
+
+
+def instrument_class(cls, info, suppressed: FrozenSet[int] = frozenset(),
+                     path: Optional[str] = None) -> None:
+    """Wrap ``cls.__setattr__`` / ``__getattribute__`` to run the
+    lockset state machine for ``info.tracked`` attributes
+    (``info`` is a `shared.RuntimeClassInfo`)."""
+    tracked = info.tracked
+    if not tracked or getattr(cls, "__race_wrapped__", None) is cls:
+        return
+    if path and suppressed:
+        with _mu:
+            _suppressed[path] = _suppressed.get(
+                path, frozenset()) | suppressed
+    published = dict(info.published)
+    old_set = cls.__setattr__
+    old_get = cls.__getattribute__
+    cls_name = cls.__name__
+
+    def __setattr__(self, name, value):
+        if name in tracked and _enabled:
+            _on_access(self, cls_name, name, True, published)
+        old_set(self, name, value)
+
+    def __getattribute__(self, name):
+        if name in tracked and _enabled:
+            _on_access(self, cls_name, name, False, published)
+        return old_get(self, name)
+
+    had_set = "__setattr__" in cls.__dict__
+    had_get = "__getattribute__" in cls.__dict__
+    _instrumented.append((cls, had_set, old_set, had_get, old_get))
+    cls.__setattr__ = __setattr__
+    cls.__getattribute__ = __getattribute__
+    cls.__race_wrapped__ = cls
+
+
+def deinstrument_class(cls) -> None:
+    for i in range(len(_instrumented) - 1, -1, -1):
+        entry = _instrumented[i]
+        if entry[0] is not cls:
+            continue
+        _, had_set, old_set, had_get, old_get = entry
+        if had_set:
+            cls.__setattr__ = old_set
+        else:
+            del cls.__setattr__
+        if had_get:
+            cls.__getattribute__ = old_get
+        else:
+            del cls.__getattribute__
+        if "__race_wrapped__" in cls.__dict__:
+            del cls.__race_wrapped__
+        del _instrumented[i]
+
+
+# ---------------------------------------------------------------------------
+# installation
+
+_orig_thread_start = threading.Thread.start
+
+
+def _stamped_start(self):
+    # Happens-before edge: everything the spawner did before start()
+    # is visible to the child. Stamped BEFORE the OS thread exists so
+    # the child can never observe its own birth as "later".
+    self._race_birth = time.monotonic()
+    return _orig_thread_start(self)
+
+
+def installed() -> bool:
+    return _enabled
+
+
+def install(modules=_MODULES) -> None:
+    """Instrument the annotated classes of ``modules``. Requires the
+    instrumented locks (PR 8) — without their held stacks every
+    lockset would be empty — so installs them first."""
+    global _enabled
+    if _enabled:
+        return
+    import importlib
+    import inspect
+
+    from repro.analysis import shared as _shared
+    instrumented.install()
+    threading.Thread.start = _stamped_start
+    for modname in modules:
+        try:
+            mod = importlib.import_module(modname)
+            src_path = inspect.getsourcefile(mod)
+            if src_path is None:
+                continue
+            with open(src_path, "r", encoding="utf-8") as fh:
+                source = fh.read()
+        except (ImportError, OSError):
+            continue
+        infos, suppressed = _shared.runtime_class_info(source, src_path)
+        for cls_name, info in infos.items():
+            if not (info.guarded or info.published):
+                continue    # only annotated classes are instrumented
+            cls = getattr(mod, cls_name, None)
+            if not isinstance(cls, type):
+                continue
+            instrument_class(cls, info, suppressed, src_path)
+    _enabled = True
+
+
+def uninstall() -> None:
+    global _enabled
+    _enabled = False
+    threading.Thread.start = _orig_thread_start
+    for entry in list(_instrumented):
+        deinstrument_class(entry[0])

@@ -1,0 +1,905 @@
+"""Shared-state completeness analysis.
+
+The guarded-by checker (`repro.analysis.guarded`) only validates
+attributes someone *declared*: an attribute missing from a
+``GUARDED_BY`` map is invisible to it. This pass closes that gap by
+inferring which attributes are thread-shared and requiring every one
+of them to carry a declaration.
+
+Thread contexts are seeded from the ways this codebase actually starts
+concurrency and are propagated through the same call-resolution
+machinery the lock-order pass uses (self-calls, typed-attribute calls,
+annotated/constructed locals, callback pools):
+
+- ``Thread(target=self.m)`` / ``Thread(target=nested_fn)`` — one
+  context per spawn site (engine tick loops, serve threads, stream
+  workers);
+- ``threading.Timer(dt, fn)`` — timer callbacks;
+- ``executor.submit(fn)`` on a ``ThreadPoolExecutor``-typed receiver;
+- HTTP handler classes (a ``BaseHTTPRequestHandler`` base): their
+  ``do_*`` methods run on per-request server threads;
+- ``__del__`` — finalizers run on whatever thread drops the last
+  reference;
+- the **client context**: every public method, callable from the
+  owner's thread. For a class that owns locks the public surface is
+  *advertised* thread-safe, so the client context counts as two
+  threads on its own — a mutable attribute of a lock-owning class
+  must always be declared.
+
+A *mutable* attribute (written outside ``__init__``/``__new__``,
+including container mutation like ``self._q.append(...)`` and writes
+through one-level local aliases) reachable from two or more contexts
+must be
+
+- declared in ``GUARDED_BY`` (or an inline ``# guarded-by:`` comment)
+  — the guarded checker then enforces the lock at every access;
+- declared immutable-after-publish::
+
+      self._thread = None  # published-by: start, stop
+
+  writes are then legal only in ``__init__`` and the named publisher
+  methods (anything else is ``write-after-publish``); or
+- suppressed with a reasoned ``# shared-ok: <why>`` on a line that
+  assigns the attribute. The reason is mandatory.
+
+Diagnostics (``undeclared-shared``, ``write-after-publish``,
+``bad-suppression``, ``bad-declaration``) carry file:line provenance
+and, for undeclared sharing, the two thread-entry paths that reach the
+attribute.
+
+Synchronization primitives (``Lock``/``Event``/``Queue``/... valued
+attributes) are exempt — they synchronize themselves. Attribute
+accesses through *other* objects (``slot.req.x``) are out of scope by
+the package's per-class convention; the runtime lockset detector
+(`repro.analysis.racecheck`) covers those interleavings.
+
+`runtime_class_info` exports this module's per-class model (tracked
+attrs, publisher sets, suppressed lines) to the runtime detector so
+the two passes enforce one set of declarations.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.guarded import Diagnostic
+from repro.analysis.lockorder import (_annotation_class, _callable_params,
+                                      _called_name, _collect_cb_slots,
+                                      _param_types, _self_attr)
+
+__all__ = ["check_files", "check_source_files", "runtime_class_info",
+           "RuntimeClassInfo"]
+
+_MARKER_RE = re.compile(r"#\s*(shared-ok|published-by)\s*:?\s*(.*)$")
+_GUARDED_RE = re.compile(r"#\s*guarded-by\s*:?\s*(.*)$")
+
+_EXEMPT_METHODS = frozenset({"__init__", "__new__"})
+
+# In-place mutation method names: a call self.attr.<m>(...) is a write
+# to the attribute's referent.
+_MUTATORS = frozenset({
+    "append", "appendleft", "extend", "extendleft", "insert", "add",
+    "update", "setdefault", "pop", "popleft", "popitem", "remove",
+    "discard", "clear", "sort", "reverse", "rotate",
+})
+
+# Constructors whose objects synchronize themselves — the attribute
+# needs no declaration of its own.
+_SYNC_CTORS = frozenset({
+    "Lock", "RLock", "Condition", "Event", "Semaphore",
+    "BoundedSemaphore", "Barrier", "Queue", "SimpleQueue", "LifoQueue",
+    "PriorityQueue", "local",
+})
+_LOCKLIKE_CTORS = frozenset({"Lock", "RLock", "Condition"})
+
+_EXECUTOR_TYPES = frozenset({"ThreadPoolExecutor", "ProcessPoolExecutor",
+                             "Executor"})
+
+# Dunders that are part of a class's public callable surface.
+_PUBLIC_DUNDERS = frozenset({
+    "__call__", "__enter__", "__exit__", "__iter__", "__next__",
+    "__contains__", "__len__", "__getitem__", "__setitem__",
+})
+
+
+# ---------------------------------------------------------------------------
+# markers
+
+
+class _Markers:
+    """Per-line ``# shared-ok`` / ``# published-by`` / ``# guarded-by``
+    comments, tokenize-extracted (robust against '#' in strings)."""
+
+    def __init__(self, source: str):
+        self.shared_ok: Dict[int, str] = {}
+        self.published: Dict[int, Tuple[str, ...]] = {}
+        self.guarded_by: Dict[int, str] = {}
+        self.bad: List[Tuple[int, str]] = []
+        comment_only: Dict[int, bool] = {}
+        try:
+            tokens = list(tokenize.generate_tokens(
+                io.StringIO(source).readline))
+        except (tokenize.TokenError, SyntaxError):
+            tokens = []
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            line = tok.start[0]
+            comment_only[line] = tok.line[:tok.start[1]].strip() == ""
+            g = _GUARDED_RE.match(tok.string)
+            if g is not None:
+                lock = g.group(1).strip().removeprefix("self.")
+                if lock:
+                    self.guarded_by[line] = lock
+                continue
+            m = _MARKER_RE.match(tok.string)
+            if not m:
+                continue
+            kind, arg = m.group(1), m.group(2).strip()
+            if kind == "shared-ok":
+                if not arg:
+                    self.bad.append((line, kind))
+                self.shared_ok[line] = arg
+            else:  # the publish marker
+                methods = tuple(
+                    p.strip().removeprefix("self.").rstrip("()")
+                    for p in arg.split(",") if p.strip())
+                if not methods:
+                    self.bad.append((line, kind))
+                self.published[line] = methods
+        self._comment_only = comment_only
+
+    def _lookup(self, table: Dict[int, object], line: int):
+        if line in table:
+            return table[line]
+        if line - 1 in table and self._comment_only.get(line - 1):
+            return table[line - 1]
+        return None
+
+    def shared(self, line: int) -> Optional[str]:
+        return self._lookup(self.shared_ok, line)
+
+    def publishers(self, line: int) -> Optional[Tuple[str, ...]]:
+        return self._lookup(self.published, line)
+
+    def guarded(self, line: int) -> Optional[str]:
+        return self._lookup(self.guarded_by, line)
+
+
+# ---------------------------------------------------------------------------
+# per-class model
+
+
+@dataclass
+class _Meth:
+    qual: str                       # "m" or "outer.<inner>"
+    # (attr, line, is_write)
+    accesses: List[Tuple[str, int, bool]] = field(default_factory=list)
+    # (via, callee, line); via None = self, "type:X" = annotated or
+    # constructed receiver, anything else = self.<via>.<callee>()
+    calls: List[Tuple[Optional[str], str, int]] = field(
+        default_factory=list)
+    cb_invokes: List[int] = field(default_factory=list)
+    # (root-or-pseudo qual, kind, line)
+    spawns: List[Tuple[str, str, int]] = field(default_factory=list)
+
+
+@dataclass
+class _Cls:
+    name: str
+    path: str
+    line: int
+    bases: List[str] = field(default_factory=list)
+    methods: Dict[str, _Meth] = field(default_factory=dict)
+    attr_types: Dict[str, str] = field(default_factory=dict)
+    cb_slots: Set[str] = field(default_factory=set)
+    cb_bindings: List[Tuple[str, str]] = field(default_factory=list)
+    guarded: Set[str] = field(default_factory=set)
+    shared_ok: Dict[str, str] = field(default_factory=dict)
+    published: Dict[str, Tuple[Tuple[str, ...], int]] = field(
+        default_factory=dict)
+    sync_attrs: Set[str] = field(default_factory=set)
+    owns_lock: bool = False
+    is_handler: bool = False
+    # attr -> [(method qual, line, kind)], every write including
+    # __init__; kind "bind" = attribute rebinding, "mut" = in-place
+    # container mutation (subscript store, mutator method call)
+    writes: Dict[str, List[Tuple[str, int, str]]] = field(
+        default_factory=dict)
+    anchor: Dict[str, int] = field(default_factory=dict)
+
+
+def _attr_base(node: ast.AST) -> Optional[str]:
+    """``self.attr`` possibly under subscripts: ``self._q[k]...`` ->
+    ``_q``. Dotted sub-object writes (``self.cfg.x``) are the
+    sub-object's concern, not the attribute's."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    return _self_attr(node)
+
+
+class _ClassCollector:
+    def __init__(self, node: ast.ClassDef, path: str, markers: _Markers):
+        self.cls = _Cls(node.name, path, node.lineno)
+        self.markers = markers
+        cls = self.cls
+        for base in node.bases:
+            bname = _annotation_class(base)
+            if bname:
+                cls.bases.append(bname)
+            if bname and "BaseHTTPRequestHandler" in bname:
+                cls.is_handler = True
+        # class-body declarations
+        for stmt in node.body:
+            if isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name):
+                        if tgt.id == "GUARDED_BY" and \
+                                isinstance(stmt.value, ast.Dict):
+                            for k in stmt.value.keys:
+                                if isinstance(k, ast.Constant) and \
+                                        isinstance(k.value, str):
+                                    cls.guarded.add(k.value)
+                        elif not tgt.id.isupper():
+                            self._note_def(tgt.id, stmt.lineno)
+            elif isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name):
+                if not stmt.target.id.isupper():
+                    self._note_def(stmt.target.id, stmt.lineno)
+                typ = _annotation_class(stmt.annotation)
+                if typ:
+                    cls.attr_types[stmt.target.id] = typ
+        _collect_cb_slots(cls, node)
+        for stmt in node.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_method(stmt, stmt.name)
+        if cls.guarded:
+            cls.owns_lock = True
+
+    # -- attribute bookkeeping --------------------------------------
+    def _note_def(self, attr: str, line: int) -> None:
+        """A line that defines/assigns ``attr`` anchors the attribute
+        and may carry its declaration markers."""
+        cls = self.cls
+        cls.anchor.setdefault(attr, line)
+        reason = self.markers.shared(line)
+        if reason is not None:
+            cls.shared_ok.setdefault(attr, reason)
+        pubs = self.markers.publishers(line)
+        if pubs is not None:
+            cls.published.setdefault(attr, (pubs, line))
+        lock = self.markers.guarded(line)
+        if lock is not None:
+            cls.guarded.add(attr)
+
+    def _note_write(self, attr: str, qual: str, line: int,
+                    kind: str = "bind") -> None:
+        self.cls.writes.setdefault(attr, []).append((qual, line, kind))
+        self._note_def(attr, line)
+
+    # -- method scanning --------------------------------------------
+    def _scan_method(self, fn, qual: str) -> None:
+        cls = self.cls
+        meth = cls.methods[qual] = _Meth(qual)
+        ptypes = _param_types(fn)
+        cb_params = _callable_params(fn)
+        nested: Dict[str, str] = {}          # local name -> pseudo qual
+        local_types: Dict[str, str] = {}     # x = ClassName(...) locals
+        aliases: Dict[str, str] = {}         # local -> self attr it views
+
+        def shallow(node):
+            """Child nodes, not descending into nested defs/classes
+            (lambdas are inlined — they run synchronously here)."""
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.ClassDef)):
+                    continue
+                yield child
+                yield from shallow(child)
+
+        # pass 0: nested defs become pseudo-methods; locals typed by
+        # direct construction; container aliases
+        for stmt in fn.body:
+            for sub in [stmt] + list(shallow(stmt)):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and sub is not fn:
+                    pseudo = f"{qual}.<{sub.name}>"
+                    nested[sub.name] = pseudo
+                    self._scan_method(sub, pseudo)
+        for sub in shallow(fn):
+            if not isinstance(sub, ast.Assign) or len(sub.targets) != 1 \
+                    or not isinstance(sub.targets[0], ast.Name):
+                continue
+            name, val = sub.targets[0].id, sub.value
+            if isinstance(val, ast.Call):
+                ctor = _called_name(val.func)
+                if ctor and ctor[:1].isupper() and \
+                        ctor not in _SYNC_CTORS:
+                    local_types[name] = ctor
+                # x = self._q.get(k) / x = list(self._q) style views
+                fn_ = val.func
+                if isinstance(fn_, ast.Attribute):
+                    base = _attr_base(fn_.value)
+                    if base is not None and fn_.attr in ("get",
+                                                         "setdefault"):
+                        aliases[name] = base
+            else:
+                base = _attr_base(val)
+                if base is not None:
+                    aliases[name] = base
+
+        def note_write_target(tgt) -> None:
+            if isinstance(tgt, (ast.Tuple, ast.List)):
+                for elt in tgt.elts:
+                    note_write_target(elt)
+                return
+            kind = "mut" if isinstance(tgt, ast.Subscript) else "bind"
+            base = _attr_base(tgt)
+            if base is not None:
+                self._note_write(base, qual, tgt.lineno, kind)
+                return
+            # alias[k] = v — a write through a one-level local view
+            t = tgt
+            while isinstance(t, ast.Subscript):
+                t = t.value
+            if isinstance(t, ast.Name) and t.id in aliases \
+                    and t is not tgt:
+                self._note_write(aliases[t.id], qual, tgt.lineno, "mut")
+
+        # pass 1: accesses + calls + spawns
+        for sub in shallow(fn):
+            if isinstance(sub, ast.Assign):
+                for tgt in sub.targets:
+                    note_write_target(tgt)
+            elif isinstance(sub, (ast.AugAssign, ast.AnnAssign)):
+                note_write_target(sub.target)
+            elif isinstance(sub, ast.Delete):
+                for tgt in sub.targets:
+                    note_write_target(tgt)
+            elif isinstance(sub, ast.Attribute):
+                attr = _self_attr(sub)
+                if attr is not None:
+                    write = not isinstance(sub.ctx, ast.Load)
+                    meth.accesses.append((attr, sub.lineno, write))
+                    if write:
+                        self._note_write(attr, qual, sub.lineno)
+            elif isinstance(sub, ast.Call):
+                self._scan_call(sub, meth, qual, ptypes, cb_params,
+                                nested, local_types, aliases)
+
+        # __init__ attribute types + sync-primitive attrs (mirrors the
+        # lock-order pass)
+        if qual == "__init__":
+            ann = dict(ptypes)
+            for sub in shallow(fn):
+                if isinstance(sub, ast.Assign):
+                    targets = sub.targets
+                elif isinstance(sub, ast.AnnAssign) and \
+                        sub.value is not None:
+                    targets = [sub.target]
+                else:
+                    continue
+                for tgt in targets:
+                    attr = _self_attr(tgt)
+                    if attr is None:
+                        continue
+                    val = sub.value
+                    if isinstance(val, ast.Call):
+                        ctor = _called_name(val.func)
+                        if ctor in _SYNC_CTORS:
+                            cls.sync_attrs.add(attr)
+                            if ctor in _LOCKLIKE_CTORS:
+                                cls.owns_lock = True
+                        elif ctor and ctor[:1].isupper():
+                            cls.attr_types.setdefault(attr, ctor)
+                    elif isinstance(val, ast.Name) and val.id in ann:
+                        cls.attr_types.setdefault(attr, ann[val.id])
+
+    def _scan_call(self, sub: ast.Call, meth: _Meth, qual: str,
+                   ptypes: Dict[str, str], cb_params: Set[str],
+                   nested: Dict[str, str], local_types: Dict[str, str],
+                   aliases: Dict[str, str]) -> None:
+        cls = self.cls
+        fn_ = sub.func
+        name = _called_name(fn_)
+        # thread spawns ------------------------------------------------
+        if name == "Thread":
+            for kw in sub.keywords:
+                if kw.arg == "target":
+                    self._note_spawn(kw.value, "Thread", sub.lineno,
+                                     meth, nested)
+        elif name == "Timer":
+            target = None
+            if len(sub.args) >= 2:
+                target = sub.args[1]
+            for kw in sub.keywords:
+                if kw.arg == "function":
+                    target = kw.value
+            if target is not None:
+                self._note_spawn(target, "Timer", sub.lineno, meth,
+                                 nested)
+        elif isinstance(fn_, ast.Attribute) and fn_.attr == "submit":
+            recv = None
+            base = _self_attr(fn_.value)
+            if base is not None:
+                recv = cls.attr_types.get(base)
+            elif isinstance(fn_.value, ast.Name):
+                recv = ptypes.get(fn_.value.id) or \
+                    local_types.get(fn_.value.id)
+            if recv in _EXECUTOR_TYPES and sub.args:
+                self._note_spawn(sub.args[0], "executor.submit",
+                                 sub.lineno, meth, nested)
+        # callback bindings -------------------------------------------
+        self._record_bindings(sub, ptypes, local_types, nested)
+        # mutator calls: self._q.append(x) / view.append(x) -----------
+        if isinstance(fn_, ast.Attribute) and fn_.attr in _MUTATORS:
+            base = _attr_base(fn_.value)
+            if base is None and isinstance(fn_.value, ast.Name):
+                base = aliases.get(fn_.value.id)
+            if base is not None:
+                self._note_write(base, qual, sub.lineno, "mut")
+                meth.accesses.append((base, sub.lineno, True))
+        # dispatch edges ----------------------------------------------
+        if isinstance(fn_, ast.Name):
+            if fn_.id in nested:
+                meth.calls.append((None, nested[fn_.id], sub.lineno))
+            elif fn_.id in cb_params:
+                meth.cb_invokes.append(sub.lineno)
+            return
+        target = _self_attr(fn_)
+        if target is not None:
+            if target in cls.cb_slots:
+                meth.cb_invokes.append(sub.lineno)
+            else:
+                meth.calls.append((None, target, sub.lineno))
+            return
+        if isinstance(fn_, ast.Attribute):
+            attr = _self_attr(fn_.value)
+            if attr is not None:
+                meth.calls.append((attr, fn_.attr, sub.lineno))
+            elif isinstance(fn_.value, ast.Name):
+                typ = ptypes.get(fn_.value.id) or \
+                    local_types.get(fn_.value.id)
+                if typ:
+                    meth.calls.append(("type:" + typ, fn_.attr,
+                                       sub.lineno))
+
+    def _note_spawn(self, target: ast.AST, kind: str, line: int,
+                    meth: _Meth, nested: Dict[str, str]) -> None:
+        attr = _self_attr(target)
+        if attr is not None:
+            meth.spawns.append((attr, kind, line))
+        elif isinstance(target, ast.Name) and target.id in nested:
+            meth.spawns.append((nested[target.id], kind, line))
+
+    def _record_bindings(self, call: ast.Call, ptypes, local_types,
+                         nested) -> None:
+        """Methods (or nested defs) of THIS class passed into a method
+        of a known class — they may later run on that class's
+        dispatching thread (callback pools)."""
+        cls = self.cls
+        fn_ = call.func
+        tgt: Optional[str] = None
+        if isinstance(fn_, ast.Attribute):
+            base = fn_.value
+            if isinstance(base, ast.Name):
+                if base.id == "self":
+                    tgt = cls.name
+                else:
+                    tgt = ptypes.get(base.id) or local_types.get(base.id)
+            else:
+                attr = _self_attr(base)
+                if attr is not None:
+                    tgt = cls.attr_types.get(attr)
+        elif isinstance(fn_, ast.Name) and fn_.id[:1].isupper():
+            tgt = fn_.id
+        if tgt is None:
+            return
+        values = list(call.args) + [k.value for k in call.keywords]
+        for arg in values:
+            attr = _self_attr(arg)
+            if attr is not None:
+                cls.cb_bindings.append((tgt, attr))
+            elif isinstance(arg, ast.Name) and arg.id in nested:
+                cls.cb_bindings.append((tgt, nested[arg.id]))
+            elif isinstance(arg, ast.Lambda):
+                for sub in ast.walk(arg.body):
+                    if isinstance(sub, ast.Call):
+                        m = _self_attr(sub.func)
+                        if m is not None:
+                            cls.cb_bindings.append((tgt, m))
+
+
+# ---------------------------------------------------------------------------
+# the world: classes + MRO + contexts
+
+
+class _World:
+    def __init__(self, files: Sequence[Tuple[str, str]]):
+        self.classes: Dict[str, _Cls] = {}
+        self.markers: Dict[str, _Markers] = {}
+        self.diags: List[Diagnostic] = []
+        for path, source in files:
+            try:
+                tree = ast.parse(source, filename=path)
+            except SyntaxError:
+                continue
+            markers = _Markers(source)
+            self.markers[path] = markers
+            for line, kind in markers.bad:
+                self.diags.append(Diagnostic(
+                    path, line, "bad-suppression",
+                    f"'# {kind}:' requires a reason"))
+            for node in ast.walk(tree):
+                if isinstance(node, ast.ClassDef):
+                    col = _ClassCollector(node, path, markers)
+                    self.classes.setdefault(node.name, col.cls)
+        # callback pools: every bound method ever passed into class C
+        # may be dispatched from any of C's callback-invocation sites
+        self.pools: Dict[str, Set[Tuple[str, str]]] = {}
+        for cname, cls in self.classes.items():
+            for (tgt, mname) in cls.cb_bindings:
+                if tgt in self.classes and mname in cls.methods:
+                    self.pools.setdefault(tgt, set()).add((cname, mname))
+
+    def mro(self, cname: str) -> List[_Cls]:
+        out: List[_Cls] = []
+        seen: Set[str] = set()
+        frontier = [cname]
+        while frontier:
+            nxt: List[str] = []
+            for n in frontier:
+                if n in seen or n not in self.classes:
+                    continue
+                seen.add(n)
+                cls = self.classes[n]
+                out.append(cls)
+                nxt.extend(cls.bases)
+            frontier = nxt
+        return out
+
+    def resolve_method(self, cname: str,
+                       qual: str) -> Optional[Tuple[_Cls, _Meth]]:
+        for cls in self.mro(cname):
+            meth = cls.methods.get(qual)
+            if meth is not None:
+                return cls, meth
+        return None
+
+    def attr_type(self, cname: str, attr: str) -> Optional[str]:
+        for cls in self.mro(cname):
+            typ = cls.attr_types.get(attr)
+            if typ is not None:
+                return typ
+        return None
+
+    def eff_cb_slots(self, cname: str) -> Set[str]:
+        out: Set[str] = set()
+        for cls in self.mro(cname):
+            out |= cls.cb_slots
+        return out
+
+    def pool_members(self, cname: str) -> Set[Tuple[str, str]]:
+        out: Set[Tuple[str, str]] = set()
+        for cls in self.mro(cname):
+            out |= self.pools.get(cls.name, set())
+        return out
+
+
+@dataclass
+class _Context:
+    ctx_id: str
+    desc: str
+    roots: List[Tuple[str, str]]     # (class, method qual)
+    # reached (class, qual) -> (parent or None)
+    visited: Dict[Tuple[str, str], Optional[Tuple[str, str]]] = field(
+        default_factory=dict)
+
+    def path_to(self, node: Tuple[str, str]) -> str:
+        hops: List[str] = []
+        cur: Optional[Tuple[str, str]] = node
+        while cur is not None:
+            cname, qual = cur
+            hops.append(f"{cname}.{qual}" if not hops or
+                        hops[-1].split(".")[0] != cname else qual)
+            cur = self.visited.get(cur)
+        hops.reverse()
+        # re-render: first hop fully qualified, same-class hops bare
+        out: List[str] = []
+        last_cls = None
+        cur = node
+        chain: List[Tuple[str, str]] = []
+        while cur is not None:
+            chain.append(cur)
+            cur = self.visited.get(cur)
+        for cname, qual in reversed(chain):
+            out.append(qual if cname == last_cls else f"{cname}.{qual}")
+            last_cls = cname
+        return " -> ".join(out)
+
+
+def _collect_contexts(world: _World) -> List[_Context]:
+    ctxs: List[_Context] = []
+    # spawned-thread contexts
+    for cname, cls in sorted(world.classes.items()):
+        for qual, meth in sorted(cls.methods.items()):
+            for (target, kind, line) in meth.spawns:
+                root = (cname, target)
+                if world.resolve_method(cname, target) is None:
+                    continue
+                tgt_disp = target if "." in target else \
+                    f"{cname}.{target}"
+                ctxs.append(_Context(
+                    ctx_id=f"{kind}@{cls.path}:{line}",
+                    desc=(f"{kind}(target={tgt_disp}) "
+                          f"at {cls.path}:{line}"),
+                    roots=[root]))
+    # HTTP handler threads: one context, rooted at every handler's
+    # request methods
+    http_roots = [(cname, qual)
+                  for cname, cls in sorted(world.classes.items())
+                  if cls.is_handler
+                  for qual in sorted(cls.methods)
+                  if "." not in qual and qual not in _EXEMPT_METHODS]
+    if http_roots:
+        ctxs.append(_Context("http-handler", "HTTP handler threads",
+                             http_roots))
+    # finalizers
+    del_roots = [(cname, "__del__")
+                 for cname, cls in sorted(world.classes.items())
+                 if "__del__" in cls.methods]
+    if del_roots:
+        ctxs.append(_Context("finalizer",
+                             "__del__ (GC runs on any thread)",
+                             del_roots))
+    # the client context: public surface of every class
+    client_roots = [
+        (cname, qual)
+        for cname, cls in sorted(world.classes.items())
+        for qual in sorted(cls.methods)
+        if "." not in qual
+        and (not qual.startswith("_") or qual in _PUBLIC_DUNDERS)]
+    ctxs.append(_Context("client", "client API", client_roots))
+    return ctxs
+
+
+def _traverse(world: _World, ctx: _Context) -> None:
+    queue: List[Tuple[str, str]] = []
+    for root in ctx.roots:
+        if root not in ctx.visited and \
+                world.resolve_method(*root) is not None:
+            ctx.visited[root] = None
+            queue.append(root)
+    while queue:
+        node = queue.pop()
+        cname, qual = node
+        resolved = world.resolve_method(cname, qual)
+        if resolved is None:
+            continue
+        _, meth = resolved
+
+        def push(nxt: Tuple[str, str]) -> None:
+            if nxt not in ctx.visited and \
+                    world.resolve_method(*nxt) is not None:
+                ctx.visited[nxt] = node
+                queue.append(nxt)
+
+        for (via, callee, _line) in meth.calls:
+            if via is None:
+                if callee in world.eff_cb_slots(cname):
+                    for member in sorted(world.pool_members(cname)):
+                        push(member)
+                else:
+                    push((cname, callee))
+                continue
+            if via.startswith("type:"):
+                tname = via[len("type:"):]
+            else:
+                tname = world.attr_type(cname, via)
+            if tname is None or tname not in world.classes:
+                continue
+            if callee in world.eff_cb_slots(tname):
+                for member in sorted(world.pool_members(tname)):
+                    push(member)
+            else:
+                push((tname, callee))
+        for _line in meth.cb_invokes:
+            for member in sorted(world.pool_members(cname)):
+                push(member)
+
+
+# ---------------------------------------------------------------------------
+# effective (MRO-merged) class view + diagnostics
+
+
+@dataclass
+class _Eff:
+    guarded: Set[str]
+    shared_ok: Dict[str, str]
+    published: Dict[str, Tuple[Tuple[str, ...], int, str]]  # + decl path
+    sync_attrs: Set[str]
+    owns_lock: bool
+    # attr -> [(method qual, line, path, kind)]
+    writes: Dict[str, List[Tuple[str, int, str, str]]]
+    anchor: Dict[str, Tuple[str, int]]              # attr -> (path, line)
+    methods: Set[str]
+
+
+def _effective(world: _World, cname: str) -> _Eff:
+    eff = _Eff(set(), {}, {}, set(), False, {}, {}, set())
+    for cls in world.mro(cname):
+        eff.guarded |= cls.guarded
+        for a, r in cls.shared_ok.items():
+            eff.shared_ok.setdefault(a, r)
+        for a, (pubs, line) in cls.published.items():
+            eff.published.setdefault(a, (pubs, line, cls.path))
+        eff.sync_attrs |= cls.sync_attrs
+        eff.owns_lock = eff.owns_lock or cls.owns_lock
+        for a, ws in cls.writes.items():
+            eff.writes.setdefault(a, []).extend(
+                (q, ln, cls.path, kind) for q, ln, kind in ws)
+        for a, ln in cls.anchor.items():
+            eff.anchor.setdefault(a, (cls.path, ln))
+        eff.methods |= set(cls.methods)
+    return eff
+
+
+def check_source_files(
+        files: Sequence[Tuple[str, str]]) -> List[Diagnostic]:
+    """Run the completeness pass over ``(path, source)`` pairs."""
+    world = _World(files)
+    diags = world.diags
+    contexts = _collect_contexts(world)
+    for ctx in contexts:
+        _traverse(world, ctx)
+
+    # (class, attr) -> ctx_id -> (ctx, node, line, is_write)
+    reach: Dict[Tuple[str, str], Dict[str, tuple]] = {}
+    for ctx in contexts:
+        for node in ctx.visited:
+            cname, qual = node
+            resolved = world.resolve_method(cname, qual)
+            if resolved is None:
+                continue
+            _, meth = resolved
+            for (attr, line, write) in meth.accesses:
+                slot = reach.setdefault((cname, attr), {})
+                prev = slot.get(ctx.ctx_id)
+                if prev is None or (write and not prev[3]):
+                    slot[ctx.ctx_id] = (ctx, node, line, write)
+
+    seen: Set[Tuple[str, int, str]] = set()
+    analyzed = set(world.classes)
+    for cname in sorted(analyzed):
+        eff = _effective(world, cname)
+        handler = any(c.is_handler for c in world.mro(cname))
+        for attr in sorted(eff.writes):
+            post_init = [(q, ln, p) for (q, ln, p, _k) in eff.writes[attr]
+                         if q not in _EXEMPT_METHODS]
+            anchor_path, anchor_line = eff.anchor.get(
+                attr, (world.classes[cname].path, 0))
+            key = (anchor_path, anchor_line, attr)
+            if attr in eff.shared_ok or attr in eff.sync_attrs \
+                    or attr in eff.guarded:
+                continue
+            if attr in eff.published:
+                pubs, decl_line, decl_path = eff.published[attr]
+                unknown = [p for p in pubs if p not in eff.methods]
+                if unknown and (decl_path, decl_line,
+                                attr) not in seen:
+                    seen.add((decl_path, decl_line, attr))
+                    diags.append(Diagnostic(
+                        decl_path, decl_line, "bad-declaration",
+                        f"{cname}.{attr}: '# published-by:' names "
+                        f"unknown method(s) {', '.join(unknown)}"))
+                allowed = set(pubs) | _EXEMPT_METHODS
+                for (q, ln, p) in post_init:
+                    if q not in allowed and (p, ln, attr) not in seen:
+                        seen.add((p, ln, attr))
+                        diags.append(Diagnostic(
+                            p, ln, "write-after-publish",
+                            f"{cname}.{attr} is published by "
+                            f"{', '.join(pubs)} but written in "
+                            f"{q} — extend the publisher list or "
+                            f"guard the attribute"))
+                continue
+            if not post_init:
+                continue        # immutable after __init__
+            # In-place mutations of an object that synchronizes itself
+            # (the attribute's type is a known lock-owning class, e.g.
+            # an RcuMap) are that class's concern — the per-class
+            # convention. Rebinding the reference still counts.
+            if all(k == "mut" for (q, _ln, _p, k) in eff.writes[attr]
+                   if q not in _EXEMPT_METHODS):
+                typ = world.attr_type(cname, attr)
+                if typ is not None and typ in world.classes and \
+                        _effective(world, typ).owns_lock:
+                    continue
+            ctx_hits = dict(reach.get((cname, attr), {}))
+            if handler:
+                # handler instances are born, driven, and dropped by
+                # ONE per-connection server thread; their "public"
+                # methods are not a client-callable surface
+                ctx_hits.pop("client", None)
+            n = len(ctx_hits)
+            client_multi = "client" in ctx_hits and \
+                (eff.owns_lock and not handler)
+            if n + (1 if client_multi else 0) < 2:
+                continue
+            if key in seen:
+                continue
+            seen.add(key)
+            entries = sorted(ctx_hits.values(),
+                             key=lambda t: (t[0].ctx_id != "client",
+                                            t[0].ctx_id))
+            shown = []
+            for (ctx, node, line, write) in entries[:2]:
+                op = "write" if write else "read"
+                shown.append(f"[{ctx.desc}] {ctx.path_to(node)} "
+                             f"({op} at line {line})")
+            if len(entries) == 1 and client_multi:
+                shown.append("[client API] concurrent callers — the "
+                             "class owns a lock, so its public "
+                             "surface is advertised thread-safe")
+            diags.append(Diagnostic(
+                anchor_path, anchor_line, "undeclared-shared",
+                f"{cname}.{attr} is mutable and reachable from "
+                f"{max(n, 2 if client_multi else n)} thread contexts "
+                f"but carries no GUARDED_BY / '# published-by:' / "
+                f"'# shared-ok:' declaration; " + "; ".join(shown)))
+    diags.sort(key=lambda d: (d.path, d.line, d.code))
+    return diags
+
+
+def check_files(files: Sequence[Tuple[str, str]]) -> List[Diagnostic]:
+    return check_source_files(files)
+
+
+# ---------------------------------------------------------------------------
+# runtime export (consumed by repro.analysis.racecheck)
+
+
+@dataclass(frozen=True)
+class RuntimeClassInfo:
+    tracked: FrozenSet[str]
+    published: Dict[str, FrozenSet[str]]
+    guarded: FrozenSet[str]
+    shared_ok: FrozenSet[str]
+
+
+def runtime_class_info(source: str, path: str = "<string>") -> Tuple[
+        Dict[str, RuntimeClassInfo], FrozenSet[int]]:
+    """Per-class declaration model for the runtime lockset detector:
+    which attributes to track (written attrs + guarded, minus
+    shared-ok and sync primitives), each published attribute's
+    publisher set, and the module's ``# unguarded-ok`` suppressed
+    lines (single-writer sites the detector must not treat as
+    lock-free accesses)."""
+    from repro.analysis.guarded import _Markers as _GMarkers
+    out: Dict[str, RuntimeClassInfo] = {}
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError:
+        return out, frozenset()
+    markers = _Markers(source)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        cls = _ClassCollector(node, path, markers).cls
+        tracked = (set(cls.writes) | cls.guarded) \
+            - set(cls.shared_ok) - cls.sync_attrs
+        published = {a: frozenset(pubs)
+                     for a, (pubs, _ln) in cls.published.items()}
+        out[node.name] = RuntimeClassInfo(
+            frozenset(tracked), published, frozenset(cls.guarded),
+            frozenset(cls.shared_ok))
+    gmarkers = _GMarkers(source)
+    suppressed = set(gmarkers.suppress)
+    # a comment-only suppression line annotates the line below
+    suppressed |= {ln + 1 for ln in gmarkers.suppress
+                   if gmarkers._comment_only.get(ln)}
+    return out, frozenset(suppressed)

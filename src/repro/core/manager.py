@@ -101,6 +101,7 @@ class AspiredVersionsManager:
         "_initial_wave": "_mutex", "_ram_committed": "_mutex",
         "_pending_ops": "_mutex", "_labels": "_mutex",
         "_explicit_labels": "_mutex", "_events": "_mutex",
+        "_bg_thread": "_mutex",
     }
 
     def __init__(
@@ -518,16 +519,24 @@ class AspiredVersionsManager:
                 except Exception:  # pragma: no cover
                     log.exception("reconcile failed")
 
-        self._bg_stop.clear()
-        self._bg_thread = threading.Thread(
-            target=run, name="tfs-manage-loop", daemon=True)
-        self._bg_thread.start()
+        with self._mutex:
+            # Idempotent: a second start() must not spawn a second
+            # reconcile loop (two loops double-schedule transitions).
+            if self._bg_thread is not None:
+                return
+            self._bg_stop.clear()
+            thread = threading.Thread(
+                target=run, name="tfs-manage-loop", daemon=True)
+            self._bg_thread = thread
+        thread.start()
 
     def stop(self) -> None:
         self._bg_stop.set()
-        if self._bg_thread is not None:
-            self._bg_thread.join(timeout=5)
+        with self._mutex:
+            thread = self._bg_thread
             self._bg_thread = None
+        if thread is not None:
+            thread.join(timeout=5)
 
     def await_idle(self, timeout_s: float = 10.0) -> bool:
         """Block until no in-flight ops AND a reconcile schedules nothing.

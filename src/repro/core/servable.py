@@ -134,6 +134,9 @@ class ServableHandle:
 
     def __init__(self, entry: "_RefCountedEntry"):
         self._entry = entry
+        # __del__ only runs once every other reference is gone, so
+        # release() cannot race the finalizer's release():
+        # shared-ok: finalizer is mutually exclusive with other callers
         self._released = False
 
     @property
@@ -163,6 +166,8 @@ class ServableHandle:
 
 class _RefCountedEntry:
     """Internal refcount wrapper stored in the manager's RCU map."""
+
+    GUARDED_BY = {"_count": "_lock", "state": "_lock"}
 
     __slots__ = ("servable", "_count", "_lock", "drained", "state",
                  "load_time_s")

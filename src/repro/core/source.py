@@ -117,7 +117,8 @@ class FileSystemSource(Source[str]):
 
     VERSION_RE = re.compile(r"^\d+$")
 
-    GUARDED_BY = {"_dirs": "_poll_lock", "_policies": "_poll_lock"}
+    GUARDED_BY = {"_dirs": "_poll_lock", "_policies": "_poll_lock",
+                  "_timer": "_poll_lock", "_stopped": "_poll_lock"}
 
     def __init__(self, servable_dirs: Dict[str, str],
                  policies: Optional[Dict[str, ServableVersionPolicy]] = None):
@@ -198,22 +199,37 @@ class FileSystemSource(Source[str]):
 
     # -- background polling ------------------------------------------------
     def start_polling(self, interval_s: float) -> None:
-        self._stopped = False
+        with self._poll_lock:
+            self._stopped = False
 
         def tick():
-            if self._stopped:
-                return
+            with self._poll_lock:
+                if self._stopped:
+                    return
             self.poll()
-            self._timer = threading.Timer(interval_s, tick)
-            self._timer.daemon = True
-            self._timer.start()
+            # Re-check under the lock before re-arming: a stop_polling
+            # that ran while poll() was in flight could only cancel the
+            # *previous* timer, so an unconditional re-arm here would
+            # resurrect polling after stop.
+            with self._poll_lock:
+                if self._stopped:
+                    return
+                timer = threading.Timer(interval_s, tick)
+                timer.daemon = True
+                self._timer = timer
+            timer.start()
 
         tick()
 
     def stop_polling(self) -> None:
-        self._stopped = True
-        if self._timer is not None:
-            self._timer.cancel()
+        with self._poll_lock:
+            self._stopped = True
+            timer = self._timer
+            self._timer = None
+        if timer is not None:
+            # cancel() before start() is safe: the timer's finished
+            # event is already set when its thread wakes.
+            timer.cancel()
 
 
 class SourceRouter(Generic[T]):

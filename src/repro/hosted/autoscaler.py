@@ -34,6 +34,7 @@ import time
 from collections import deque
 from typing import Callable, Dict, Optional
 
+from repro.analysis import locks_required
 from repro.hosted.jobs import ServingJob
 
 log = logging.getLogger(__name__)
@@ -67,12 +68,17 @@ class ScaleDecision:
 
 
 class Autoscaler:
+    GUARDED_BY = {"_last_tick": "_mu", "decisions": "_mu",
+                  "_last_scale_up": "_mu", "_cold_ticks": "_mu",
+                  "_timer": "_mu"}
+
     def __init__(self, jobs: Dict[str, ServingJob],
                  cfg: AutoscalerConfig = None,
                  clock: Callable[[], float] = time.monotonic):
         self.jobs = jobs
         self.cfg = cfg or AutoscalerConfig()
         self._clock = clock
+        self._mu = threading.Lock()
         self._last_tick = clock()
         self.decisions: deque = deque(maxlen=self.cfg.max_decisions)
         self._last_scale_up: Dict[str, float] = {}
@@ -82,13 +88,19 @@ class Autoscaler:
 
     # -- the control loop ---------------------------------------------------
     def tick(self) -> Dict[str, int]:
-        """Returns job -> replica count after this tick's decisions."""
-        now = self._clock()
-        dt = max(now - self._last_tick, 1e-3)
-        self._last_tick = now
-        return {jid: self._tick_job(jid, job, now, dt)
-                for jid, job in self.jobs.items()}
+        """Returns job -> replica count after this tick's decisions.
 
+        Serialized under ``_mu``: a manual tick() racing the timer
+        loop would otherwise tear the ``_last_tick`` interval math and
+        the per-job cold-tick counters (dict read-modify-writes)."""
+        with self._mu:
+            now = self._clock()
+            dt = max(now - self._last_tick, 1e-3)
+            self._last_tick = now
+            return {jid: self._tick_job(jid, job, now, dt)
+                    for jid, job in self.jobs.items()}
+
+    @locks_required("_mu")
     def _tick_job(self, jid: str, job: ServingJob, now: float,
                   dt: float) -> int:
         cfg = self.cfg
@@ -166,10 +178,6 @@ class Autoscaler:
     def start(self, interval_s: float = 1.0) -> "Autoscaler":
         """Run ``tick`` every ``interval_s`` on a daemon thread
         (idempotent); the closed-loop deployment shape."""
-        if self._timer is not None:
-            return self
-        self._stop.clear()
-
         def loop():
             while not self._stop.wait(interval_s):
                 try:
@@ -177,13 +185,20 @@ class Autoscaler:
                 except Exception:   # noqa: BLE001 — loop must survive
                     log.exception("autoscaler tick failed")
 
-        self._timer = threading.Thread(target=loop, daemon=True,
-                                       name="tfs2-autoscaler")
-        self._timer.start()
+        with self._mu:
+            if self._timer is not None:
+                return self
+            self._stop.clear()
+            timer = threading.Thread(target=loop, daemon=True,
+                                     name="tfs2-autoscaler")
+            self._timer = timer
+        timer.start()
         return self
 
     def stop(self) -> None:
         self._stop.set()
-        timer, self._timer = self._timer, None
+        with self._mu:
+            timer = self._timer
+            self._timer = None
         if timer is not None:
             timer.join(timeout=5)

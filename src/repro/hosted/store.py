@@ -18,6 +18,9 @@ class TxnConflict(RuntimeError):
 
 
 class TransactionalStore:
+    GUARDED_BY = {"_data": "_lock", "commits": "_lock",
+                  "conflicts": "_lock"}
+
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._data: Dict[str, Tuple[int, Any]] = {}   # key -> (version, val)
@@ -43,7 +46,6 @@ class TransactionalStore:
             result = fn(txn)
             if self._commit(txn):
                 return result
-            self.conflicts += 1
         raise TxnConflict("too many transaction conflicts")
 
     def _commit(self, txn: "Txn") -> bool:
@@ -52,6 +54,11 @@ class TransactionalStore:
                 cur = self._data.get(key)
                 cur_ver = cur[0] if cur else -1
                 if cur_ver != seen_ver:
+                    # Counted under the same lock as the validation:
+                    # a bare `conflicts += 1` in transact() is itself a
+                    # read-modify-write race that loses updates under
+                    # contention.
+                    self.conflicts += 1
                     return False
             for key, val in txn.writes.items():
                 if val is _DELETED:

@@ -76,17 +76,19 @@ transition) and receives per-tenant served/tokens/wait accounting.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import logging
 import threading
 import time
+import zlib
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis import locks_required, releases
+from repro.analysis import releases
 from repro.configs.base import ModelConfig
 from repro.models import model as MD
 from repro.serving.generation import (GenRequest, SamplingParams,
@@ -107,7 +109,9 @@ class DecodeRequest(GenRequest):
     priority: int = 0
     deadline_t: Optional[float] = None   # absolute, time.monotonic()
     _seq: int = 0                        # global arrival order (FIFO mode)
-    _quota_release = None                # set at submit when quotas reserved
+    # Set at submit when quotas are reserved, swapped exactly once:
+    # shared-ok: terminal transitions run only on the engine thread
+    _quota_release = None
 
     def cancel(self) -> None:
         """Mark abandoned: the engine retires the slot (freeing its
@@ -165,6 +169,29 @@ class _Slot:
         return self.pending is None
 
 
+class _AdmissionShard:
+    """One admission shard: a private condition plus the tenant queues
+    hashed onto it. ``submit`` touches only its tenant's shard, so
+    client threads of different tenants no longer serialize on the
+    engine-wide lock — ``DecodeScheduler._cond`` was the top contended
+    site in ``contention_report.json`` before sharding."""
+
+    GUARDED_BY = {"queues": "cond", "qsize": "cond",
+                  "new_tenants": "cond", "requests": "cond"}
+
+    __slots__ = ("cond", "queues", "qsize", "new_tenants", "requests")
+
+    def __init__(self) -> None:
+        self.cond = threading.Condition()
+        # tenant -> priority-ordered FIFO of parked requests
+        self.queues: Dict[str, List["DecodeRequest"]] = {}
+        self.qsize = 0
+        # Tenants whose queue entry was (re)created since the engine
+        # last drained this list into its DRR rotation.
+        self.new_tenants: List[str] = []
+        self.requests = 0
+
+
 class DecodeScheduler:
     """Admits concurrent generate requests into a shared KV slot pool.
 
@@ -173,8 +200,17 @@ class DecodeScheduler:
     one fused ``decode_step`` over all ``num_slots`` rows, then retire
     finished/cancelled sequences (returning their blocks).
 
-    ``self._cond`` guards the queue, the slot list, the free-block list
-    and the stats dict; the device pool itself is touched only by the
+    Admission is SHARDED: tenants hash onto ``admission_shards``
+    independent conditions (``_AdmissionShard``), so concurrent
+    ``submit`` calls from different tenants never contend on one lock
+    (``admission_shards=1`` reproduces the old single-lock behavior —
+    the baseline the contention bench compares against). The engine
+    wakes via ``_wake`` (an Event) instead of a condition notify, and
+    its scheduling state — the DRR rotation ``_rr``, per-tenant
+    ``_deficit`` and the sticky ``_pick`` — is engine-thread private.
+
+    ``self._cond`` still guards the slot list, the free-block list and
+    the stats dict; the device pool itself is touched only by the
     engine thread, never under the lock. The engine thread additionally
     reads ``_slots`` lock-free — it is the sole mutator of slot rows
     (every write publishes under ``_cond`` for the client-side readers),
@@ -182,10 +218,9 @@ class DecodeScheduler:
     """
 
     GUARDED_BY = {
-        "_queues": "_cond", "_rr": "_cond", "_deficit": "_cond",
-        "_qsize": "_cond", "_seq": "_cond", "_pick": "_cond",
         "_slots": "_cond", "_free_blocks": "_cond",
         "_slot_blocks": "_cond", "_stats": "_cond",
+        "_thread": "_cond",
     }
 
     def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 8,
@@ -198,6 +233,7 @@ class DecodeScheduler:
                  prefill_chunk: Optional[int] = None,
                  scheduling: str = "wfq",
                  drr_quantum: float = 16.0,
+                 admission_shards: int = 8,
                  tenancy: Optional[TenancyManager] = None):
         self.cfg = cfg
         self.params = params
@@ -232,14 +268,19 @@ class DecodeScheduler:
         self.prefill_chunk = prefill_chunk
 
         self._cond = threading.Condition()
-        # Per-tenant FIFO admission queues (priority-ordered within a
-        # tenant), the DRR rotation over backlogged tenants, and the
-        # sticky pick (see _select_locked).
-        self._queues: Dict[str, List[DecodeRequest]] = {}
+        if admission_shards < 1:
+            raise ValueError("admission_shards must be >= 1")
+        self._shards = [_AdmissionShard() for _ in range(admission_shards)]
+        self._seq = itertools.count(1)      # next() is GIL-atomic
+        self._wake = threading.Event()
+        # Engine-side scheduling: the DRR rotation over backlogged
+        # tenants, per-tenant deficits, and the sticky pick (see
+        # _select). Only the engine thread touches these while it runs.
+        # shared-ok: engine-private; stop() mutates only after join
         self._rr: "deque[str]" = deque()
+        # shared-ok: engine-private; stop() mutates only after join
         self._deficit: Dict[str, float] = {}
-        self._qsize = 0
-        self._seq = 0
+        # shared-ok: engine-private; stop() mutates only after join
         self._pick: Optional[DecodeRequest] = None
         self._slots: List[Optional[_Slot]] = [None] * num_slots
         self._stop = threading.Event()
@@ -376,20 +417,20 @@ class DecodeScheduler:
             self.tenancy.reserve_decode(tenant, need)
             mgr = self.tenancy
             req._quota_release = lambda: mgr.release_decode(tenant, need)
-        with self._cond:
+        req._seq = next(self._seq)
+        shard = self._shard_for(tenant)
+        with shard.cond:
+            # The stop/enqueue race resolves under the shard lock:
+            # stop() sets _stop BEFORE sweeping the shards, so a submit
+            # that slips past this check lands in a queue the sweep
+            # still fails; one that doesn't raises here.
             if self._stop.is_set():
                 req._release_quota()
                 raise RuntimeError("engine stopped")
-            self._seq += 1
-            req._seq = self._seq
-            q = self._queues.get(tenant)
+            q = shard.queues.get(tenant)
             if q is None:
-                q = self._queues[tenant] = []
-            if not q:
-                if tenant not in self._deficit:
-                    self._deficit[tenant] = 0.0
-                if tenant not in self._rr:
-                    self._rr.append(tenant)
+                q = shard.queues[tenant] = []
+                shard.new_tenants.append(tenant)
             # Higher priority admits first within the tenant; FIFO among
             # equals. Cross-tenant order is the scheduler's fairness, so
             # inflating priority buys nothing against other tenants.
@@ -397,9 +438,9 @@ class DecodeScheduler:
             while j > 0 and q[j - 1].priority < priority:
                 j -= 1
             q.insert(j, req)
-            self._qsize += 1
-            self._stats["requests"] += 1
-            self._cond.notify()
+            shard.qsize += 1
+            shard.requests += 1
+        self._wake.set()
         return req
 
     def generate(self, tokens, max_new: int = 16,
@@ -420,16 +461,24 @@ class DecodeScheduler:
 
     def cancel(self, req: DecodeRequest) -> None:
         req.cancel()
-        with self._cond:
-            self._cond.notify()
+        self._wake.set()
+
+    def _shard_for(self, tenant: str) -> _AdmissionShard:
+        if len(self._shards) == 1:
+            return self._shards[0]
+        return self._shards[zlib.crc32(tenant.encode("utf-8"))
+                            % len(self._shards)]
 
     def active_slots(self) -> int:
         with self._cond:
             return sum(s is not None for s in self._slots)
 
     def queued(self) -> int:
-        with self._cond:
-            return self._qsize
+        total = 0
+        for shard in self._shards:
+            with shard.cond:
+                total += shard.qsize
+        return total
 
     def free_block_count(self) -> int:
         with self._cond:
@@ -438,24 +487,39 @@ class DecodeScheduler:
     @property
     def stats(self) -> Dict[str, float]:
         """Consistent snapshot of the engine counters (engine-thread
-        mutations happen under the same lock)."""
+        mutations happen under the same lock). ``requests`` is summed
+        across the admission shards, which count their own submits."""
         with self._cond:
-            return dict(self._stats)
+            out = dict(self._stats)
+        requests = 0
+        for shard in self._shards:
+            with shard.cond:
+                requests += shard.requests
+        out["requests"] = requests
+        return out
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> None:
-        self._stop.clear()
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name="decode-engine")
-        self._thread.start()
+        with self._cond:
+            # A second start() must not spawn a second engine thread:
+            # two tick loops would both mutate the slot table the
+            # engine reads lock-free as its sole mutator.
+            if self._thread is not None:
+                return
+            self._stop.clear()
+            thread = threading.Thread(target=self._run, daemon=True,
+                                      name="decode-engine")
+            self._thread = thread
+        thread.start()
 
     def stop(self) -> None:
         with self._cond:
             self._stop.set()
-            self._cond.notify_all()
-        if self._thread is not None:
-            self._thread.join(timeout=10)
+            thread = self._thread
             self._thread = None
+        self._wake.set()
+        if thread is not None:
+            thread.join(timeout=10)
         err = RuntimeError("decode engine stopped")
         with self._cond:
             for i, slot in enumerate(self._slots):
@@ -466,22 +530,34 @@ class DecodeScheduler:
                 # slot (admission raced the stop) — always reclaim.
                 self._free_blocks.extend(self._slot_blocks[i])
                 self._slot_blocks[i] = []
-            for q in self._queues.values():
-                for req in q:
-                    req._fail(err)
-            self._queues.clear()
-            self._rr.clear()
-            self._deficit.clear()
-            self._qsize = 0
-            self._pick = None
+        parked: List[DecodeRequest] = []
+        for shard in self._shards:
+            with shard.cond:
+                for q in shard.queues.values():
+                    parked.extend(q)
+                shard.queues.clear()
+                shard.qsize = 0
+                shard.new_tenants = []
+        for req in parked:
+            req._fail(err)
+        # Engine-private scheduling state: safe to touch, the engine
+        # thread is joined.
+        self._rr.clear()
+        self._deficit.clear()
+        self._pick = None
 
     # -- engine loop -------------------------------------------------------
     def _run(self) -> None:
         while not self._stop.is_set():
             with self._cond:
-                if not self._qsize and not any(self._slots):
-                    self._cond.wait(self._idle_wait_s)
-                    continue
+                busy = any(self._slots)
+            if not busy and not self.queued():
+                # Submit/cancel set _wake; a set that lands between the
+                # queued() check and the wait returns immediately, and
+                # the idle timeout bounds any theoretical miss.
+                self._wake.wait(self._idle_wait_s)
+                self._wake.clear()
+                continue
             try:
                 self._retire_cancelled()
                 # Advance BEFORE backfill: a slot admitted this pass got
@@ -530,63 +606,113 @@ class DecodeScheduler:
                     self.tenancy.account_drop(slot.req.tenant)
                 slot.req._fail(RuntimeError("request cancelled"))
 
-    # -- admission scheduling (lock held) ----------------------------------
+    # -- admission scheduling (engine thread) ------------------------------
     def _weight(self, tenant: str) -> float:
         return (self.tenancy.weight_for(tenant)
                 if self.tenancy is not None else 1.0)
 
-    @locks_required("_cond")
-    def _retire_tenant_locked(self, tenant: str) -> None:
-        if tenant in self._queues and not self._queues[tenant]:
-            del self._queues[tenant]
-            self._deficit.pop(tenant, None)
-            try:
-                self._rr.remove(tenant)
-            except ValueError:
-                pass
+    def _absorb_new_tenants(self) -> None:
+        """Pull tenants that became backlogged since the last pass into
+        the engine-private DRR rotation (arrival order across shards)."""
+        for shard in self._shards:
+            with shard.cond:
+                if not shard.new_tenants:
+                    continue
+                fresh, shard.new_tenants = shard.new_tenants, []
+            for tenant in fresh:
+                if tenant not in self._deficit:
+                    self._deficit[tenant] = 0.0
+                if tenant not in self._rr:
+                    self._rr.append(tenant)
 
-    @locks_required("_cond")
-    def _drop_queued_locked(self, req: DecodeRequest, kind: str) -> None:
-        """Fail a still-queued request (cancelled or deadline-expired)
-        without it ever touching a slot or the device."""
-        q = self._queues.get(req.tenant)
-        if q is not None and req in q:
-            q.remove(req)
-            self._qsize -= 1
-            self._retire_tenant_locked(req.tenant)
+    def _retire_tenant(self, tenant: str) -> None:
+        """Drop a tenant from the DRR rotation once its queue is gone
+        (a concurrent submit recreates it via ``new_tenants``, so the
+        engine re-absorbs it on the next pass)."""
+        shard = self._shard_for(tenant)
+        with shard.cond:
+            live = tenant in shard.queues
+        if live:
+            return
+        self._deficit.pop(tenant, None)
+        try:
+            self._rr.remove(tenant)
+        except ValueError:
+            pass
+
+    def _account_drop(self, req: DecodeRequest, kind: str) -> None:
+        """Terminal accounting for a request dropped out of admission
+        (cancelled or deadline-expired). Runs with no shard lock held —
+        the stats update takes ``_cond`` and ``_fail`` wakes waiters."""
         if req is self._pick:
             self._pick = None
         if kind == "deadline":
-            self._stats["deadline_dropped"] += 1
             wait = time.monotonic() - req.enqueue_t
             exc: BaseException = DeadlineExceededError(
                 f"deadline expired after {wait * 1e3:.1f}ms in decode "
                 f"admission queue")
+            key = "deadline_dropped"
         else:
-            self._stats["cancelled"] += 1
             exc = RuntimeError("request cancelled")
+            key = "cancelled"
+        with self._cond:
+            self._stats[key] += 1
         if self.tenancy is not None:
             self.tenancy.account_drop(req.tenant, kind)
         req._fail(exc)
 
-    @locks_required("_cond")
-    def _clean_head_locked(self, tenant: str,
-                           now: float) -> Optional[DecodeRequest]:
+    def _drop_queued(self, req: DecodeRequest, kind: str) -> None:
+        """Fail a still-queued request (cancelled or deadline-expired)
+        without it ever touching a slot or the device."""
+        shard = self._shard_for(req.tenant)
+        with shard.cond:
+            q = shard.queues.get(req.tenant)
+            if q is not None and req in q:
+                q.remove(req)
+                shard.qsize -= 1
+                if not q:
+                    del shard.queues[req.tenant]
+        self._account_drop(req, kind)
+        self._retire_tenant(req.tenant)
+
+    def _clean_head(self, tenant: str,
+                    now: float) -> Optional[DecodeRequest]:
         """Tenant's head after purging dead (cancelled/expired) ones;
         None once the tenant's queue drains (tenant retired)."""
-        while tenant in self._queues and self._queues[tenant]:
-            req = self._queues[tenant][0]
-            if req.cancelled:
-                self._drop_queued_locked(req, "other")
-            elif req.deadline_t is not None and now >= req.deadline_t:
-                self._drop_queued_locked(req, "deadline")
-            else:
-                return req
-        self._retire_tenant_locked(tenant)
-        return None
+        shard = self._shard_for(tenant)
+        drops: List[Tuple[DecodeRequest, str]] = []
+        head = None
+        with shard.cond:
+            q = shard.queues.get(tenant)
+            while q:
+                req = q[0]
+                if req.cancelled:
+                    q.pop(0)
+                    shard.qsize -= 1
+                    drops.append((req, "other"))
+                elif req.deadline_t is not None and now >= req.deadline_t:
+                    q.pop(0)
+                    shard.qsize -= 1
+                    drops.append((req, "deadline"))
+                else:
+                    head = req
+                    break
+            if q is not None and not q:
+                del shard.queues[tenant]
+        for req, kind in drops:
+            self._account_drop(req, kind)
+        if head is None:
+            self._retire_tenant(tenant)
+        return head
 
-    @locks_required("_cond")
-    def _select_locked(self, now: float) -> Optional[DecodeRequest]:
+    def _backlogged_tenants(self) -> List[str]:
+        out: List[str] = []
+        for shard in self._shards:
+            with shard.cond:
+                out.extend(shard.queues)
+        return out
+
+    def _select(self, now: float) -> Optional[DecodeRequest]:
         """Next request to admit. The pick is STICKY: once selected, a
         request short on free blocks stays selected across engine passes
         (overtaking a big head with small requests would starve it — the
@@ -594,18 +720,19 @@ class DecodeScheduler:
         request). ``fifo`` mode is global arrival order; ``wfq`` is
         deficit-round-robin over backlogged tenants with cost
         ``prompt_len + max_new`` tokens."""
+        self._absorb_new_tenants()
         if self._pick is not None:
             req = self._pick
             if req.cancelled:
-                self._drop_queued_locked(req, "other")
+                self._drop_queued(req, "other")
             elif req.deadline_t is not None and now >= req.deadline_t:
-                self._drop_queued_locked(req, "deadline")
+                self._drop_queued(req, "deadline")
             else:
                 return req
         if self.scheduling == "fifo":
             best = None
-            for tenant in list(self._queues):
-                head = self._clean_head_locked(tenant, now)
+            for tenant in self._backlogged_tenants():
+                head = self._clean_head(tenant, now)
                 if head is not None and (best is None
                                          or head._seq < best._seq):
                     best = head
@@ -614,11 +741,11 @@ class DecodeScheduler:
         visits = 0
         # Each visit serves a head, drops dead work, retires a drained
         # tenant, or grows a deficit by quantum*weight — bounded.
-        max_visits = 1000 * (len(self._rr) + 1) + self._qsize
+        max_visits = 1000 * (len(self._rr) + 1) + self.queued()
         while self._rr and visits < max_visits:
             visits += 1
             tenant = self._rr[0]
-            head = self._clean_head_locked(tenant, now)
+            head = self._clean_head(tenant, now)
             if head is None:
                 continue                 # tenant retired, _rr shrank
             cost = float(head.tokens.shape[0] + head.max_new)
@@ -631,19 +758,23 @@ class DecodeScheduler:
             self._rr.rotate(-1)
         return None
 
-    @locks_required("_cond")
-    def _take_locked(self, req: DecodeRequest) -> None:
+    def _take(self, req: DecodeRequest) -> None:
         """Remove the admitted request from its queue + record wait."""
-        q = self._queues.get(req.tenant)
-        if q is not None and req in q:
-            q.remove(req)
-            self._qsize -= 1
-            self._retire_tenant_locked(req.tenant)
+        shard = self._shard_for(req.tenant)
+        with shard.cond:
+            q = shard.queues.get(req.tenant)
+            if q is not None and req in q:
+                q.remove(req)
+                shard.qsize -= 1
+                if not q:
+                    del shard.queues[req.tenant]
         self._pick = None
+        self._retire_tenant(req.tenant)
         wait = time.monotonic() - req.enqueue_t
-        self._stats["queue_wait_s"] += wait
-        self._stats["max_queue_wait_s"] = max(
-            self._stats["max_queue_wait_s"], wait)
+        with self._cond:
+            self._stats["queue_wait_s"] += wait
+            self._stats["max_queue_wait_s"] = max(
+                self._stats["max_queue_wait_s"], wait)
         if self.tenancy is not None:
             self.tenancy.account_queue_wait(req.tenant, wait)
 
@@ -656,16 +787,16 @@ class DecodeScheduler:
         only when the free list covers its worst-case block need
         (reserved up front, so a slot can never stall mid-decode); the
         chosen request waits for retiring slots rather than being
-        overtaken (sticky pick — see ``_select_locked``)."""
+        overtaken (sticky pick — see ``_select``)."""
         for i in range(self.num_slots):
             if self._slots[i] is not None:  # unguarded-ok: engine thread is the sole slot mutator
                 continue
+            req = self._select(time.monotonic())
+            if req is None:
+                return
             blocks: List[int] = []
-            with self._cond:
-                req = self._select_locked(time.monotonic())
-                if req is None:
-                    return
-                if self.paged:
+            if self.paged:
+                with self._cond:
                     need = self._blocks_needed(req.tokens.shape[0],
                                                req.max_new)
                     if need > len(self._free_blocks):
@@ -679,7 +810,7 @@ class DecodeScheduler:
                     # kv_block release).
                     blocks = [self._free_blocks.pop() for _ in range(need)]
                     self._slot_blocks[i] = blocks
-                self._take_locked(req)
+            self._take(req)
             rng = req.sampling.make_rng() if req.sampling else None
             if not self.paged:
                 try:

@@ -181,7 +181,7 @@ class _Handler(BaseHTTPRequestHandler):
             path, _, query = self.path.partition("?")
             if path == "/healthz":
                 self._send_json(200, {"status": "draining"
-                                      if owner.draining else "ok"})
+                                      if owner.is_draining() else "ok"})
                 return
             if path == "/v1/tenants":
                 try:
@@ -353,7 +353,8 @@ class HttpServingServer:
     """
 
     GUARDED_BY = {"_inflight": "_lock", "draining": "_lock",
-                  "requests_served": "_lock"}
+                  "requests_served": "_lock", "_httpd": "_lock",
+                  "_thread": "_lock"}
     RESOURCES = {"enter_request": "exit_request"}
 
     def __init__(self, prediction: Any,
@@ -367,6 +368,7 @@ class HttpServingServer:
         self.drain_timeout_s = drain_timeout_s
         self._httpd: Optional[_Server] = None
         self._thread: Optional[threading.Thread] = None
+        # published-by: start
         self._bound: Optional[Tuple[str, int]] = None
         self._lock = threading.Condition()
         self._inflight = 0
@@ -387,6 +389,10 @@ class HttpServingServer:
             self._inflight -= 1
             self._lock.notify_all()
 
+    def is_draining(self) -> bool:
+        with self._lock:
+            return self.draining
+
     def require_models(self) -> api.ModelService:
         if self.models is None:
             raise api.FailedPrecondition(
@@ -404,23 +410,25 @@ class HttpServingServer:
         return self._bound
 
     def start(self) -> "HttpServingServer":
-        if self._httpd is not None:
-            return self
-        self._httpd = _Server((self._host, self._port), _Handler)
-        self._httpd.owner = self
-        self._bound = self._httpd.server_address[:2]
         with self._lock:
+            if self._httpd is not None:
+                return self
+            httpd = _Server((self._host, self._port), _Handler)
+            httpd.owner = self
+            self._httpd = httpd
+            self._bound = httpd.server_address[:2]
             self.draining = False       # support stop() -> start() reuse
-        self._thread = threading.Thread(
-            target=self._httpd.serve_forever, daemon=True,
-            name=f"http-serving:{self._bound[1]}")
-        self._thread.start()
+            thread = threading.Thread(
+                target=httpd.serve_forever, daemon=True,
+                name=f"http-serving:{self._bound[1]}")
+            self._thread = thread
+        thread.start()
         return self
 
     def stop(self, drain: bool = True) -> None:
-        if self._httpd is None:
-            return
         with self._lock:
+            if self._httpd is None:
+                return
             self.draining = True
             if drain:
                 deadline = time.monotonic() + self.drain_timeout_s
@@ -432,12 +440,21 @@ class HttpServingServer:
                             self._inflight)
                         break
                     self._lock.wait(min(left, 0.1))
-        self._httpd.shutdown()
-        if self._thread is not None:
-            self._thread.join(timeout=10)
+            # A concurrent stop() may have won while we drained (the
+            # condition wait releases the lock): it already shut the
+            # server down and nulled the fields — nothing left to do.
+            httpd = self._httpd
+            if httpd is None:
+                return
+            thread = self._thread
+            self._httpd = None
             self._thread = None
-        self._httpd.server_close()
-        self._httpd = None
+        # Blocking teardown happens outside the lock: serve_forever's
+        # handler threads call enter/exit_request, which need it.
+        httpd.shutdown()
+        if thread is not None:
+            thread.join(timeout=10)
+        httpd.server_close()
 
 
 # ---------------------------------------------------------------------------

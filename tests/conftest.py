@@ -32,6 +32,17 @@ _LEAK_CHECK = os.environ.get("REPRO_LEAK_CHECK") == "1"
 if _LEAK_CHECK:
     os.environ.setdefault("REPRO_LEAK_AGE_S", "900")
 
+# Opt-in Eraser-style race checking (CI runs the suite once with this
+# on): annotated classes get instrumented attribute access that tracks
+# the candidate lockset per (object, attr) and raises RaceViolation
+# when it empties on a shared-modified attribute. Implies the
+# instrumented locks (the lockset IS their per-thread held stack).
+_RACE_CHECK = os.environ.get("REPRO_RACE_CHECK") == "1"
+if _RACE_CHECK:
+    from repro.analysis import racecheck
+
+    racecheck.install()
+
 
 @pytest.fixture(autouse=True, scope="session")
 def _lock_discipline():
@@ -68,10 +79,36 @@ def _resource_ownership():
     leaktrack.assert_empty()
 
 
+@pytest.fixture(autouse=True, scope="session")
+def _race_discipline():
+    """Session-end contract under REPRO_RACE_CHECK=1: no attribute's
+    candidate lockset ever emptied while shared-modified. Detections
+    raised on daemon threads land in the registry too."""
+    yield
+    if not _RACE_CHECK:
+        return
+    from repro.analysis import racecheck
+
+    violations = racecheck.violations()
+    assert not violations, (
+        "lockset race violations observed during the test run:\n"
+        + "\n".join(f"  - {v}" for v in violations))
+
+
 def pytest_sessionfinish(session, exitstatus):
-    """Dump the lock-contention ranking when asked (CI uploads it as an
-    artifact): REPRO_LOCK_CONTENTION_OUT=<path> with REPRO_LOCK_CHECK=1
-    writes the per-creation-site wait totals as JSON."""
+    """Dump runtime-analysis artifacts when asked (CI uploads them):
+    REPRO_LOCK_CONTENTION_OUT=<path> with REPRO_LOCK_CHECK=1 writes the
+    per-creation-site wait totals; REPRO_RACE_OUT=<path> with
+    REPRO_RACE_CHECK=1 writes per-site access counts + final candidate
+    locksets as JSON."""
+    race_out = os.environ.get("REPRO_RACE_OUT")
+    if race_out and _RACE_CHECK:
+        from repro.analysis import racecheck
+
+        with open(race_out, "w", encoding="utf-8") as fh:
+            json.dump({"sites": racecheck.race_report(),
+                       "violations": racecheck.violations()}, fh,
+                      indent=2)
     out = os.environ.get("REPRO_LOCK_CONTENTION_OUT")
     if not out or not _LOCK_CHECK:
         return

@@ -100,7 +100,12 @@ class TestDecodeScheduler:
         try:
             toks = np.arange(10, dtype=np.int32)
             full = eng.generate(toks, max_new=8)
+            # Retune eos only while the engine thread is joined: a bare
+            # write races the engine's per-step eos check (the lockset
+            # detector flags it), and stop()/start() are cheap.
+            eng.stop()
             eng.eos = int(full[1])
+            eng.start()
             out = eng.generate(toks, max_new=8)
             assert out.shape[0] <= 2 or eng.eos not in out[:-1]
             assert eng.active_slots() == 0

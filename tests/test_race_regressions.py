@@ -1,0 +1,185 @@
+"""Regression tests for the true races surfaced by the shared-state
+analysis + lockset detector pass. Each test fails against the pre-fix
+code (double-spawned background threads, a timer re-armed after
+stop_polling, a lock-free drain flag, and a lost conflict counter) and
+pins the fixed behaviour.
+"""
+import itertools
+import sys
+import threading
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core.manager import AspiredVersionsManager
+from repro.core.source import FileSystemSource
+from repro.hosted.store import TransactionalStore
+from repro.models import model as MD
+from repro.serving.decode_engine import DecodeScheduler
+from repro.serving.transport import HttpServingServer
+
+CFG = get_config("tfs-classifier", smoke=True).with_overrides(
+    dtype="float32")
+
+
+def _alive_named(name):
+    return [t for t in threading.enumerate()
+            if t.name == name and t.is_alive()]
+
+
+class TestDoubleStart:
+    """start() used to spawn a second background thread on every call;
+    two loops mutating the same scheduler state is a race all by
+    itself (and the first thread leaked, unjoinable, on stop)."""
+
+    def test_decode_scheduler_start_is_idempotent(self):
+        params = MD.init_params(jax.random.PRNGKey(0), CFG)
+        eng = DecodeScheduler(CFG, params, num_slots=1, max_seq_len=32)
+        before = len(_alive_named("decode-engine"))
+        try:
+            eng.start()
+            eng.start()
+            assert len(_alive_named("decode-engine")) == before + 1
+        finally:
+            eng.stop()
+        assert len(_alive_named("decode-engine")) == before
+
+    def test_manager_start_is_idempotent(self):
+        mgr = AspiredVersionsManager()
+        before = len(_alive_named("tfs-manage-loop"))
+        try:
+            mgr.start(interval_s=30.0)
+            mgr.start(interval_s=30.0)
+            assert len(_alive_named("tfs-manage-loop")) == before + 1
+        finally:
+            mgr.stop()
+        assert len(_alive_named("tfs-manage-loop")) == before
+
+
+class TestPollingStopRace:
+    def test_stop_during_tick_never_rearms(self, tmp_path):
+        """stop_polling concurrent with a tick: the pre-fix tick()
+        re-armed the next Timer unconditionally after poll(), so a stop
+        that landed while poll() was in flight could only cancel the
+        *previous* timer and polling resurrected itself. The fixed tick
+        re-checks ``_stopped`` under ``_poll_lock`` before re-arming."""
+        src = FileSystemSource({"m": str(tmp_path)})
+
+        orig_poll = src.poll
+
+        def poll_then_stop():
+            orig_poll()
+            src.stop_polling()      # races the re-arm in the same tick
+
+        src.poll = poll_then_stop
+        try:
+            # The first tick runs inline, so the race resolves before
+            # start_polling returns.
+            src.start_polling(3600.0)
+            with src._poll_lock:
+                timer, stopped = src._timer, src._stopped
+            assert stopped
+            assert timer is None, "timer re-armed after stop_polling"
+        finally:
+            src.poll = orig_poll
+            src.stop_polling()
+
+
+class TestTransportStopRaces:
+    def test_concurrent_stop_and_inflight_request(self):
+        """A drain-mode stop() racing a second stop(): pre-fix, stop()
+        tore down ``_httpd`` outside ``_lock`` after the drain wait, so
+        the loser shut down an already-closed server."""
+        srv = HttpServingServer(None, port=0, drain_timeout_s=10.0)
+        srv.start()
+        errors = []
+        try:
+            assert srv.enter_request()
+
+            def drain_stop():
+                try:
+                    srv.stop()      # blocks on the in-flight request
+                except Exception as exc:  # noqa: BLE001 — asserted below
+                    errors.append(exc)
+
+            t = threading.Thread(target=drain_stop)
+            t.start()
+            deadline = 5.0
+            while not srv.is_draining() and deadline > 0:
+                threading.Event().wait(0.005)
+                deadline -= 0.005
+            assert srv.is_draining()
+            srv.stop(drain=False)       # concurrent second stop
+            srv.exit_request()          # lets the drain wait wake up
+            t.join(10)
+            assert not t.is_alive()
+            assert errors == []
+        finally:
+            srv.stop(drain=False)
+
+    def test_is_draining_reads_under_lock(self):
+        """/healthz used to read ``draining`` lock-free from handler
+        threads; is_draining() is the locked accessor it now uses."""
+        srv = HttpServingServer(None, port=0)
+        assert srv.is_draining() is False
+        srv.start()
+        try:
+            assert srv.is_draining() is False
+        finally:
+            srv.stop(drain=False)
+        assert srv.is_draining() is True
+
+
+class TestStoreConflictCounter:
+    def test_conflicts_exactly_account_failed_commits(self):
+        """``conflicts += 1`` used to run outside ``_lock`` in the
+        transact retry loop — concurrent increments were lost, so
+        conflicts drifted below attempts - commits. The counter now
+        bumps inside _commit's validation-failure branch, under the
+        same lock as the validation itself."""
+        store = TransactionalStore()
+        store.transact(lambda txn: txn.put("k", 0))
+        attempts = itertools.count()
+        orig_commit = store._commit
+
+        def counted_commit(txn):
+            next(attempts)
+            return orig_commit(txn)
+
+        store._commit = counted_commit
+        n_threads, rounds = 8, 25
+        barrier = threading.Barrier(n_threads)
+        old_interval = sys.getswitchinterval()
+        sys.setswitchinterval(1e-6)     # force interleaving mid-transact
+
+        def bump(txn):
+            v = txn.get("k")
+            time.sleep(0.001)   # widen the read->commit conflict window
+            txn.put("k", v + 1)
+
+        def contend():
+            barrier.wait(10)
+            for _ in range(rounds):
+                store.transact(bump, max_retries=10_000)
+
+        threads = [threading.Thread(target=contend)
+                   for _ in range(n_threads)]
+        try:
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(60)
+        finally:
+            sys.setswitchinterval(old_interval)
+            store._commit = orig_commit
+
+        assert all(not t.is_alive() for t in threads)
+        commits = n_threads * rounds
+        assert store.get("k") == commits
+        total_attempts = next(attempts)
+        # exact bookkeeping: every failed commit is one counted conflict
+        assert store.commits == commits + 1     # +1 seeds "k"
+        assert store.conflicts == total_attempts - commits
+        assert store.conflicts > 0, (
+            "no contention generated — test needs more interleaving")

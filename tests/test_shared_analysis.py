@@ -1,0 +1,590 @@
+"""Shared-state completeness analysis + Eraser-style lockset detector.
+
+Static side: exact-diagnostic fixtures for every `repro.analysis.shared`
+code (undeclared-shared, write-after-publish, bad-suppression,
+bad-declaration) plus the clean shapes that must stay quiet.
+
+Runtime side: unit tests for the lockset state machine (refinement,
+common-lock quiet path, happens-before transfer, publish reset,
+suppressed lines) driven through `racecheck.instrument_class` on
+fixture classes compiled from the SAME source the static pass reads —
+one set of declarations, two enforcers (mirrors
+test_static_and_runtime_agree_on_abba for the lock-order pair).
+"""
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import instrumented, racecheck, shared
+from repro.analysis.__main__ import run_all, run_shared
+
+
+def diag_codes(src, path="mod.py"):
+    return [d.code for d in
+            shared.check_source_files([(path, textwrap.dedent(src))])]
+
+
+def diags(src, path="mod.py"):
+    return shared.check_source_files([(path, textwrap.dedent(src))])
+
+
+# ---------------------------------------------------------------------------
+# static completeness pass: one fixture per diagnostic code
+
+
+class TestSharedDiagnostics:
+    def test_undeclared_shared_thread_vs_client(self):
+        """The canonical miss: a worker thread and the public surface
+        both mutate an attribute nobody declared."""
+        ds = diags("""\
+            import threading
+
+            class Worker:
+                def __init__(self):
+                    self._n = 0
+                    self._lock = threading.Lock()
+
+                def start(self):
+                    threading.Thread(target=self._run).start()
+
+                def _run(self):
+                    self._n += 1
+
+                def bump(self):
+                    with self._lock:
+                        pass
+                    self._n += 1
+            """)
+        assert [d.code for d in ds] == ["undeclared-shared"]
+        msg = ds[0].message
+        assert "Worker._n" in msg
+        # provenance: both thread-entry paths are named
+        assert "client" in msg and "Worker._run" in msg
+
+    def test_timer_callback_context_counts(self):
+        ds = diags("""\
+            import threading
+
+            class Poller:
+                def __init__(self):
+                    self.ticks = 0
+                    self._lock = threading.Lock()
+
+                def arm(self):
+                    threading.Timer(0.1, self._tick).start()
+
+                def _tick(self):
+                    self.ticks += 1
+
+                def snapshot(self):
+                    with self._lock:
+                        pass
+                    self.ticks = 0
+            """)
+        assert [d.code for d in ds] == ["undeclared-shared"]
+
+    def test_guarded_declaration_silences(self):
+        assert diag_codes("""\
+            import threading
+
+            class Worker:
+                GUARDED_BY = {"_n": "_lock"}
+
+                def __init__(self):
+                    self._n = 0
+                    self._lock = threading.Lock()
+
+                def start(self):
+                    threading.Thread(target=self._run).start()
+
+                def _run(self):
+                    with self._lock:
+                        self._n += 1
+
+                def bump(self):
+                    with self._lock:
+                        self._n += 1
+            """) == []
+
+    def test_shared_ok_with_reason_silences(self):
+        assert diag_codes("""\
+            import threading
+
+            class Worker:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    # shared-ok: transitions are mutually exclusive by design
+                    self._n = 0
+
+                def start(self):
+                    threading.Thread(target=self._run).start()
+
+                def _run(self):
+                    self._n += 1
+
+                def bump(self):
+                    with self._lock:
+                        pass
+                    self._n += 1
+            """) == []
+
+    def test_bad_suppression_reason_is_mandatory(self):
+        ds = diags("""\
+            class C:
+                def __init__(self):
+                    # shared-ok:
+                    self._x = 0
+            """)
+        assert [d.code for d in ds] == ["bad-suppression"]
+
+    def test_write_after_publish(self):
+        ds = diags("""\
+            import threading
+
+            class Server:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    # published-by: start
+                    self._t = None
+
+                def start(self):
+                    self._t = threading.Thread(target=self._loop)
+                    self._t.start()
+
+                def poke(self):
+                    self._t = None
+
+                def _loop(self):
+                    pass
+            """)
+        assert [d.code for d in ds] == ["write-after-publish"]
+        assert "poke" in ds[0].message
+
+    def test_publisher_writes_are_legal(self):
+        assert diag_codes("""\
+            import threading
+
+            class Server:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    # published-by: start, stop
+                    self._t = None
+
+                def start(self):
+                    self._t = threading.Thread(target=self._loop)
+                    self._t.start()
+
+                def stop(self):
+                    self._t = None
+
+                def _loop(self):
+                    pass
+            """) == []
+
+    def test_bad_declaration_unknown_publisher(self):
+        ds = diags("""\
+            class Server:
+                def __init__(self):
+                    # published-by: nosuch
+                    self._t = None
+
+                def start(self):
+                    self._t = object()
+            """)
+        codes = [d.code for d in ds]
+        assert "bad-declaration" in codes
+        assert any("nosuch" in d.message for d in ds)
+
+    def test_sync_primitives_exempt(self):
+        assert diag_codes("""\
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._ev = threading.Event()
+
+                def start(self):
+                    threading.Thread(target=self._run).start()
+
+                def _run(self):
+                    self._ev = threading.Event()
+
+                def reset(self):
+                    with self._lock:
+                        pass
+                    self._ev = threading.Event()
+            """) == []
+
+    def test_immutable_after_init_quiet(self):
+        assert diag_codes("""\
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._cfg = {}
+                    self._lock = threading.Lock()
+
+                def start(self):
+                    threading.Thread(target=self._run).start()
+
+                def _run(self):
+                    print(self._cfg)
+
+                def peek(self):
+                    with self._lock:
+                        pass
+                    return self._cfg
+            """) == []
+
+
+# ---------------------------------------------------------------------------
+# runtime lockset detector: unit tests for the state machine
+
+
+@pytest.fixture()
+def racer():
+    """Enable the detector for one test and sandbox its global state:
+    deliberate violations here must never leak into a session-level
+    REPRO_RACE_CHECK assertion, and plain runs must not stay patched."""
+    was = racecheck.installed()
+    lock_was = instrumented.installed()
+    if not was:
+        racecheck.install(modules=())
+    with racecheck._mu:
+        saved_log = list(racecheck._violation_log)
+        saved_sites = dict(racecheck._sites)
+    yield racecheck
+    with racecheck._mu:
+        racecheck._violation_log[:] = saved_log
+        racecheck._sites.clear()
+        racecheck._sites.update(saved_sites)
+    if not was:
+        racecheck.uninstall()
+        if not lock_was:        # racecheck.install() chained this in
+            instrumented.uninstall()
+
+
+def _compile_fixture(src, path, clsname):
+    """Build a fixture class from source so the runtime detector reads
+    the SAME text the static pass would (co_filename/line provenance
+    included), then instrument it."""
+    src = textwrap.dedent(src)
+    ns: dict = {}
+    exec(compile(src, path, "exec"), ns)     # noqa: S102 — test fixture
+    cls = ns[clsname]
+    infos, suppressed = shared.runtime_class_info(src, path)
+    racecheck.instrument_class(cls, infos[clsname], suppressed, path)
+    return cls
+
+
+COUNTER_SRC = """\
+import threading
+
+class Counter:
+    GUARDED_BY = {"_n": "_lock"}
+
+    def __init__(self, lock):
+        self._lock = lock
+        self._n = 0
+
+    def locked_bump(self):
+        with self._lock:
+            self._n += 1
+
+    def raw_bump(self):
+        self._n += 1
+"""
+
+
+class TestLocksetDetector:
+    def _shared_counter(self, cls, lock, *, use_lock_in_worker=True):
+        """Return a Counter plus a parked worker thread that already
+        touched ``_n`` (so the attribute is genuinely shared — the
+        worker is alive and has no happens-before edge to later main-
+        thread accesses)."""
+        c = cls(lock)
+        touched = threading.Event()
+        release = threading.Event()
+
+        def work():
+            if use_lock_in_worker:
+                c.locked_bump()
+            else:
+                c.raw_bump()
+            touched.set()
+            release.wait(5)
+
+        t = threading.Thread(target=work, daemon=True)
+        t.start()
+        assert touched.wait(5)
+        return c, t, release
+
+    def test_empty_lockset_raises_with_both_stacks(self, racer, tmp_path):
+        cls = _compile_fixture(COUNTER_SRC, str(tmp_path / "cnt.py"),
+                               "Counter")
+        try:
+            c, t, release = self._shared_counter(
+                cls, instrumented.InstrumentedLock(), use_lock_in_worker=False)
+            with pytest.raises(racecheck.RaceViolation) as ei:
+                c.raw_bump()            # no common lock: ∅ ∩ ∅
+            release.set()
+            t.join(5)
+            msg = str(ei.value)
+            assert "Counter._n" in msg
+            assert "access 1" in msg and "access 2" in msg
+            assert racer.violations()           # registry, not just raise
+        finally:
+            racecheck.deinstrument_class(cls)
+
+    def test_common_lock_stays_quiet(self, racer, tmp_path):
+        cls = _compile_fixture(COUNTER_SRC, str(tmp_path / "cnt2.py"),
+                               "Counter")
+        try:
+            lock = instrumented.InstrumentedLock()
+            c, t, release = self._shared_counter(cls, lock)
+            c.locked_bump()             # same lock on every access
+            c.locked_bump()
+            with lock:                  # reads need it too
+                n = c._n
+            release.set()
+            t.join(5)
+            assert n == 3
+        finally:
+            racecheck.deinstrument_class(cls)
+
+    def test_lockset_refinement_two_disjoint_locks(self, racer, tmp_path):
+        """Each access IS locked — but never by the same lock. The
+        candidate lockset initializes to the locks held at FIRST
+        sharing, so the second thread's re-access under its own
+        disjoint lock empties the intersection (classic Eraser)."""
+        cls = _compile_fixture(COUNTER_SRC, str(tmp_path / "cnt3.py"),
+                               "Counter")
+        try:
+            lock_a = instrumented.InstrumentedLock()
+            c, t, release = self._shared_counter(cls, lock_a)
+            other = instrumented.InstrumentedLock()
+            with other:                 # first sharing: lockset = {other}
+                c.raw_bump()
+            with other:                 # refined: {other} ∩ {other} — quiet
+                c.raw_bump()
+            assert not racer.violations()
+            with pytest.raises(racecheck.RaceViolation):
+                c.locked_bump()         # {other} ∩ {lock_a} = ∅
+            release.set()
+            t.join(5)
+            assert racer.violations()
+        finally:
+            racecheck.deinstrument_class(cls)
+
+    def test_happens_before_transfer_stays_quiet(self, racer, tmp_path):
+        """init-then-spawn then join-then-inspect: pure handoff, no
+        lock anywhere, no violation — ownership transfers along the
+        happens-before edges instead of escalating to Shared."""
+        cls = _compile_fixture(COUNTER_SRC, str(tmp_path / "cnt4.py"),
+                               "Counter")
+        try:
+            c = cls(instrumented.InstrumentedLock())
+            c.raw_bump()                        # main owns
+            t = threading.Thread(target=c.raw_bump)
+            t.start()                           # child born after ^
+            t.join(5)
+            c.raw_bump()                        # owner thread is dead
+            assert c._n == 3
+            assert not racer.violations()
+        finally:
+            racecheck.deinstrument_class(cls)
+
+    def test_publish_reset_reowns_attribute(self, racer, tmp_path):
+        src = """\
+        import threading
+
+        class Box:
+            def __init__(self):
+                # published-by: flip
+                self._v = 0
+
+            def flip(self):
+                self._v = 1
+
+            def peek(self):
+                return self._v
+        """
+        cls = _compile_fixture(src, str(tmp_path / "box.py"), "Box")
+        try:
+            b = cls()
+            held = threading.Event()
+            release = threading.Event()
+
+            def reader():
+                b.peek()
+                held.set()
+                release.wait(5)
+
+            t = threading.Thread(target=reader, daemon=True)
+            t.start()
+            assert held.wait(5)
+            # a write in a declared publisher re-enters Exclusive even
+            # though the reader is alive and shares no lock
+            b.flip()
+            release.set()
+            t.join(5)
+            assert not racer.violations()
+        finally:
+            racecheck.deinstrument_class(cls)
+
+    def test_unguarded_ok_lines_exempt(self, racer, tmp_path):
+        src = """\
+        import threading
+
+        class Gauge:
+            GUARDED_BY = {"_v": "_lock"}
+
+            def __init__(self, lock):
+                self._lock = lock
+                self._v = 0
+
+            def locked_set(self, v):
+                with self._lock:
+                    self._v = v
+
+            def peek(self):
+                return self._v  # unguarded-ok: snapshot read
+        """
+        cls = _compile_fixture(src, str(tmp_path / "gauge.py"), "Gauge")
+        try:
+            lock = instrumented.InstrumentedLock()
+            g = cls(lock)
+            seen = threading.Event()
+            release = threading.Event()
+
+            def work():
+                g.locked_set(1)
+                seen.set()
+                release.wait(5)
+
+            t = threading.Thread(target=work, daemon=True)
+            t.start()
+            assert seen.wait(5)
+            assert g.peek() == 1        # lock-free but suppressed
+            g.locked_set(2)             # still fine under the common lock
+            release.set()
+            t.join(5)
+            assert not racer.violations()
+        finally:
+            racecheck.deinstrument_class(cls)
+
+
+# ---------------------------------------------------------------------------
+# static + runtime agree on the same seeded fixture
+
+
+class TestStaticAndRuntimeAgree:
+    SRC = """\
+    import threading
+
+    class Tally:
+        def __init__(self, lock):
+            self._lock = lock
+            self._n = 0
+
+        def start(self):
+            threading.Thread(target=self._work).start()
+
+        def _work(self):
+            self._n += 1
+
+        def bump(self):
+            with self._lock:
+                pass
+            self._n += 1
+    """
+
+    DECLARED = SRC.replace(
+        "class Tally:",
+        'class Tally:\n        GUARDED_BY = {"_n": "_lock"}')
+
+    def test_static_flags_undeclared(self):
+        ds = shared.check_source_files(
+            [("tally.py", textwrap.dedent(self.SRC))])
+        assert [d.code for d in ds] == ["undeclared-shared"]
+        assert "Tally._n" in ds[0].message
+
+    def test_runtime_catches_the_same_race_once_declared(
+            self, racer, tmp_path):
+        """Declaring the attr satisfies the static pass — and hands it
+        to the runtime detector, which catches the UNLOCKED access the
+        declaration promised wouldn't happen. Same fixture, both nets."""
+        src = textwrap.dedent(self.DECLARED)
+        assert shared.check_source_files([("tally.py", src)]) == []
+        cls = _compile_fixture(src, str(tmp_path / "tally.py"), "Tally")
+        try:
+            c = cls(instrumented.InstrumentedLock())
+            touched = threading.Event()
+            release = threading.Event()
+
+            def work():
+                c._n += 1               # worker writes without the lock
+                touched.set()
+                release.wait(5)
+
+            t = threading.Thread(target=work, daemon=True)
+            t.start()
+            assert touched.wait(5)
+            with pytest.raises(racecheck.RaceViolation):
+                c.bump()                # bump's += is outside the lock
+            release.set()
+            t.join(5)
+        finally:
+            racecheck.deinstrument_class(cls)
+
+
+# ---------------------------------------------------------------------------
+# unified CLI
+
+
+class TestUnifiedCli:
+    def test_shared_cli_fails_on_seeded_fixture(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text(textwrap.dedent("""\
+            import threading
+
+            class W:
+                def __init__(self):
+                    self._n = 0
+                    self._lock = threading.Lock()
+
+                def start(self):
+                    threading.Thread(target=self._run).start()
+
+                def _run(self):
+                    self._n += 1
+
+                def poke(self):
+                    with self._lock:
+                        pass
+                    self._n += 1
+            """))
+        assert run_shared([str(bad)]) == 1
+        out = capsys.readouterr().out
+        assert "undeclared-shared" in out and "bad.py" in out
+
+    def test_all_aggregates_and_fails_once(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text(textwrap.dedent("""\
+            class C:
+                GUARDED_BY = {"_n": "_lock"}
+
+                def bump(self):
+                    self._n += 1
+            """))
+        assert run_all([str(bad)]) == 1
+        cap = capsys.readouterr()
+        assert "FAIL" in cap.err
+        assert "unguarded-write" in cap.out
+
+    def test_all_clean_tree_exits_zero(self, capsys):
+        assert run_all(["src"]) == 0
+        out = capsys.readouterr().out
+        assert "shared=0" in out and "ok" in out

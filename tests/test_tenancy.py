@@ -217,17 +217,16 @@ def _admission_order(eng):
     (select + take, exactly what _backfill does) and return tenants in
     admission order."""
     order = []
-    with eng._cond:
-        while True:
-            req = eng._select_locked(time.monotonic())
-            if req is None:
-                break
-            eng._take_locked(req)
-            order.append(req.tenant)
-            # Terminal transition for the drained request: the probe
-            # stands in for the engine thread, so it also releases any
-            # quota the submit reserved.
-            req._fail(RuntimeError("drained by admission-order probe"))
+    while True:
+        req = eng._select(time.monotonic())
+        if req is None:
+            break
+        eng._take(req)
+        order.append(req.tenant)
+        # Terminal transition for the drained request: the probe
+        # stands in for the engine thread, so it also releases any
+        # quota the submit reserved.
+        req._fail(RuntimeError("drained by admission-order probe"))
     return order
 
 
@@ -283,8 +282,9 @@ class TestDecodeAdmission:
         a_lo = eng.submit(prompt, max_new=8, tenant="a", priority=0)
         a_hi = eng.submit(prompt, max_new=8, tenant="a", priority=5)
         eng.submit(prompt, max_new=8, tenant="b", priority=100)
-        with eng._cond:
-            q = eng._queues["a"]
+        shard = eng._shard_for("a")
+        with shard.cond:
+            q = shard.queues["a"]
             assert q[0] is a_hi and q[1] is a_lo
         order = _admission_order(eng)
         assert sorted(order) == ["a", "a", "b"]
